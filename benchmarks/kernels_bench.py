@@ -1,0 +1,65 @@
+"""Kernel micro-benchmarks on the XLA paths (CPU wall times are NOT TPU
+projections — they verify scaling behavior; roofline numbers come from the
+dry-run). CSV: name,us_per_call,derived."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.attention import attention_chunked
+from repro.models.rglru import linear_scan_chunked
+from repro.models.rwkv6 import wkv_chunked
+
+
+def timeit(fn, *args, iters=5):
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def run():
+    rows = []
+    key = jax.random.key(0)
+
+    for s in (512, 1024, 2048):
+        q = jax.random.normal(key, (1, s, 8, 64), jnp.bfloat16)
+        k = jax.random.normal(key, (1, s, 2, 64), jnp.bfloat16)
+        v = jax.random.normal(key, (1, s, 2, 64), jnp.bfloat16)
+        fn = jax.jit(lambda a, b, c: attention_chunked(a, b, c, scale=0.125, chunk=256))
+        us = timeit(fn, q, k, v)
+        flops = 4 * s * s * 8 * 64 / 2  # causal
+        rows.append(("attention_chunked", s, us, flops / (us * 1e-6) / 1e9))
+        print(f"attention_chunked_s{s},us_per_call={us:.0f},gflops={flops/(us*1e-6)/1e9:.2f}")
+
+    for s in (512, 2048):
+        b, h, hd = 1, 8, 64
+        r = jax.random.normal(key, (b, s, h, hd), jnp.bfloat16)
+        kk = jax.random.normal(key, (b, s, h, hd), jnp.bfloat16)
+        vv = jax.random.normal(key, (b, s, h, hd), jnp.bfloat16)
+        lw = -jnp.exp(jax.random.normal(key, (b, s, h, hd)) * 0.5)
+        u = jnp.zeros((h, hd))
+        st = jnp.zeros((b, h, hd, hd), jnp.float32)
+        fn = jax.jit(lambda *a: wkv_chunked(*a)[0])
+        us = timeit(fn, r, kk, vv, lw, u, st)
+        rows.append(("wkv_chunked", s, us, s / (us * 1e-6) / 1e6))
+        print(f"wkv_chunked_s{s},us_per_call={us:.0f},mtok_s={s/(us*1e-6)/1e6:.2f}")
+
+    for s in (1024, 4096):
+        a = jax.nn.sigmoid(jax.random.normal(key, (1, s, 256)))
+        bx = jax.random.normal(key, (1, s, 256))
+        h0 = jnp.zeros((1, 256))
+        fn = jax.jit(lambda *x: linear_scan_chunked(*x)[0])
+        us = timeit(fn, a, bx, h0)
+        rows.append(("rglru_scan", s, us, s / (us * 1e-6) / 1e6))
+        print(f"rglru_scan_s{s},us_per_call={us:.0f},mtok_s={s/(us*1e-6)/1e6:.2f}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

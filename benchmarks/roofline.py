@@ -1,0 +1,120 @@
+"""Roofline table from the dry-run results (deliverable g).
+
+Per (arch x shape) on the single-pod mesh (multi-pod rows available with
+--mesh pod2x16x16):
+
+  compute term    = dot_FLOPs/dev / 197 TF/s          (bf16 MXU peak, v5e)
+  memory term     = HBM bytes/dev / 819 GB/s
+  collective term = collective operand bytes/dev / 50 GB/s (one ICI link)
+
+All three inputs are per-device and trip-count-corrected (see
+launch/hlo_analysis.py — compiled.cost_analysis() counts scan bodies once).
+
+  step bound      = max(terms)        (perfect overlap)
+  roofline frac   = (MODEL_FLOPS/dev / 197 TF/s) / step bound
+                    — how much of the achievable step is useful model math.
+  flops ratio     = MODEL_FLOPS / HLO dot FLOPs (remat/attention/capacity
+                    overheads show up here).
+
+Usage: PYTHONPATH=src python -m benchmarks.roofline [--mesh pod16x16] [--md]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+PEAK_FLOPS = 197e12  # bf16 / chip
+HBM_BW = 819e9  # bytes/s
+LINK_BW = 50e9  # bytes/s/link ICI
+
+RESULTS = Path(__file__).resolve().parent / "dryrun_results"
+
+
+def load(mesh: str):
+    rows = []
+    for f in sorted(RESULTS.glob(f"*__{mesh}.json")):
+        r = json.loads(f.read_text())
+        dev = r["devices"]
+        comp = r["dot_flops_per_dev"] / PEAK_FLOPS
+        mem = r["hbm_bytes_per_dev"] / HBM_BW
+        coll_bytes = sum(
+            v.get("wire_bytes", v["operand_bytes"])
+            for v in r.get("collectives", {}).values()
+        )
+        coll = coll_bytes / LINK_BW
+        bound = max(comp, mem, coll, 1e-12)
+        model_term = r["model_flops"] / dev / PEAK_FLOPS
+        mem_an = r.get("memory_analysis", {})
+        live = (
+            mem_an.get("argument_size_in_bytes", 0)
+            + mem_an.get("temp_size_in_bytes", 0)
+            + mem_an.get("output_size_in_bytes", 0)
+            - mem_an.get("alias_size_in_bytes", 0)
+        )
+        adj = live - r.get("bf16_upcast_artifact_bytes", 0)
+        dom = ("compute", "memory", "collective")[
+            [comp, mem, coll].index(max(comp, mem, coll))
+        ]
+        rows.append({
+            "arch": r["arch"],
+            "shape": r["shape"],
+            "kind": r["kind"],
+            "compute_s": comp,
+            "memory_s": mem,
+            "collective_s": coll,
+            "bound_s": bound,
+            "dominant": dom,
+            "roofline_frac": model_term / bound,
+            "flops_ratio": r["model_flops"] / max(r["dot_flops_per_dev"] * dev, 1e-9),
+            "mem_gib": live / 2**30,
+            "mem_adj_gib": adj / 2**30,
+            "coll_gib": coll_bytes / 2**30,
+            "params_b": r["params_total"] / 1e9,
+        })
+    return rows
+
+
+ADVICE = {
+    "compute": "increase arithmetic efficiency: remat policy / fused kernels",
+    "memory": "cut HBM round-trips: flash-attention kernel fuses the O(S^2) "
+              "score traffic; bigger fusion regions",
+    "collective": "re-shard or compress: fewer all-gathers (layout), ZxDFS "
+                  "int8 channel, overlap with compute",
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="pod16x16")
+    ap.add_argument("--md", action="store_true")
+    args = ap.parse_args()
+    rows = load(args.mesh)
+    if args.md:
+        print(f"| arch | shape | compute s | memory s | collective s | "
+              f"dominant | roofline frac | model/HLO flops | mem GiB (adj) |")
+        print("|---|---|---|---|---|---|---|---|---|")
+        for r in rows:
+            print(
+                f"| {r['arch']} | {r['shape']} | {r['compute_s']:.3g} | "
+                f"{r['memory_s']:.3g} | {r['collective_s']:.3g} | "
+                f"{r['dominant']} | {r['roofline_frac']:.3f} | "
+                f"{r['flops_ratio']:.2f} | {r['mem_gib']:.1f} ({r['mem_adj_gib']:.1f}) |"
+            )
+    else:
+        hdr = (f"{'arch':<18} {'shape':<12} {'comp_s':>9} {'mem_s':>9} "
+               f"{'coll_s':>9} {'dom':<10} {'r_frac':>7} {'f_ratio':>8} "
+               f"{'memGiB':>7} {'adj':>6}")
+        print(hdr)
+        for r in rows:
+            print(
+                f"{r['arch']:<18} {r['shape']:<12} {r['compute_s']:>9.3g} "
+                f"{r['memory_s']:>9.3g} {r['collective_s']:>9.3g} "
+                f"{r['dominant']:<10} {r['roofline_frac']:>7.3f} "
+                f"{r['flops_ratio']:>8.2f} {r['mem_gib']:>7.1f} {r['mem_adj_gib']:>6.1f}"
+            )
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,68 @@
+"""Benchmark entrypoint: one section per paper table/figure + system benches.
+
+  PYTHONPATH=src python -m benchmarks.run [--full] [--quick]
+
+Sections:
+  1. paper_figs      — Figs. 12-19 transfer reproductions (MTEDP vs MT vs MP)
+  2. device_channels — xDFS ring collectives vs lax.psum (8-dev subprocess)
+  3. kernels_bench   — attention / wkv / rglru scaling micro-benches
+  4. ckpt_bench      — sync/async checkpoint throughput (disk-thread claim)
+
+Roofline numbers live in the dry-run pipeline (repro.launch.dryrun +
+benchmarks/roofline.py), not here: this module measures what is REAL on this
+host (sockets, disks, CPU); the dry-run derives what is structural for TPU.
+CSV lines: ``name,us_per_call,derived`` style per section.
+"""
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+
+
+def main() -> None:
+    full = "--full" in sys.argv
+    quick = "--quick" in sys.argv
+
+    print("== section 1: paper figures 12-19 (host transfer engines) ==", flush=True)
+    from benchmarks import paper_figs
+
+    if quick:
+        import tempfile
+        from pathlib import Path
+
+        tmp = Path(tempfile.mkdtemp(prefix="xdfs_q_"))
+        rows = paper_figs.fig12_14_single_stream([64], tmp, repeats=1)
+        rows += paper_figs.fig15_19_parallel(64, [1, 4], tmp, repeats=1)
+        for r in rows:
+            print(",".join(f"{k}={v}" for k, v in r.items()))
+    else:
+        paper_figs.run(full=full)
+
+    print("== section 2: device channels (8-device subprocess) ==", flush=True)
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = "src"
+    r = subprocess.run(
+        [sys.executable, "-m", "benchmarks.device_channels"],
+        env=env, text=True, capture_output=True, timeout=900,
+    )
+    print(r.stdout, end="")
+    if r.returncode != 0:
+        print(r.stderr[-1500:])
+
+    print("== section 3: kernel micro-benches ==", flush=True)
+    from benchmarks import kernels_bench
+
+    kernels_bench.run()
+
+    print("== section 4: checkpoint throughput ==", flush=True)
+    from benchmarks import ckpt_bench
+
+    ckpt_bench.run(size_mb=64 if quick else 256)
+
+    print("== done ==")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,50 @@
+"""The literal paper demo: transfer a file over n parallel xDFS channels
+with the MTEDP engine, and compare against the GridFTP-like MP baseline.
+
+  PYTHONPATH=src python examples/xdfs_file_transfer.py --size-mb 256 --channels 8
+"""
+import argparse
+import os
+import tempfile
+from pathlib import Path
+
+from repro.core.transfer import TransferSpec, run_transfer
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--size-mb", type=int, default=256)
+    ap.add_argument("--channels", type=int, default=8)
+    ap.add_argument("--mode", default="upload", choices=["upload", "download"])
+    args = ap.parse_args()
+
+    tmp = Path(tempfile.mkdtemp(prefix="xdfs_demo_"))
+    src = tmp / "payload.bin"
+    print(f"creating {args.size_mb} MiB payload...")
+    with open(src, "wb") as f:
+        blk = os.urandom(4 << 20)
+        for _ in range(args.size_mb // 4):
+            f.write(blk)
+    size = args.size_mb << 20
+
+    for engine, label in (("mtedp", "xDFS (MTEDP)"), ("mt", "MT"), ("mp", "GridFTP-like (MP)")):
+        # one warmup + one measured run
+        for rep in range(2):
+            st = run_transfer(TransferSpec(
+                engine=engine, mode=args.mode, n_channels=args.channels,
+                size=size, src_path=str(src), dst_path=str(tmp / f"out_{engine}.bin"),
+            ))
+        ok = (tmp / f"out_{engine}.bin").read_bytes()[:1024] == src.read_bytes()[:1024]
+        print(
+            f"{label:22s} {args.channels} channels: {st.throughput_mbps:8.0f} Mb/s  "
+            f"server CPU {100 * st.server_cpu_s / st.wall_s:5.1f}%  "
+            f"RSS {st.server_rss_mb:5.0f} MB  vectored-writes {st.writev_calls:4d}  "
+            f"integrity={'OK' if ok else 'FAIL'}"
+        )
+    for f in tmp.glob("*"):
+        f.unlink()
+    tmp.rmdir()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,41 @@
+"""Snowflake Arctic 480B [hf:Snowflake/snowflake-arctic-base].
+
+35L d_model=7168 56H (GQA kv=8) d_ff=4864 vocab=32000, MoE 128 experts top-2
+IN PARALLEL with a dense residual MLP (dense-MoE hybrid).
+56 heads don't divide the model axis -> context-parallel attention; experts
+EP-sharded over 'model'; ZeRO-3 over (data, model).
+Optimizer: Adafactor — AdamW fp32 states (3.7 TB) exceed single-pod HBM
+(256 x 16 GB); see EXPERIMENTS.md.
+"""
+from repro.configs.base import ModelConfig, register
+
+CONFIG = register(
+    ModelConfig(
+        name="arctic-480b",
+        family="moe",
+        num_layers=35,
+        d_model=7168,
+        num_heads=56,
+        num_kv_heads=8,
+        head_dim=128,
+        d_ff=4864,
+        vocab_size=32000,
+        layer_pattern="g",
+        rope_theta=10000.0,
+        act="silu",
+        tie_embeddings=False,
+        moe=True,
+        num_experts=128,
+        top_k=2,
+        moe_dff=4864,
+        dense_residual=True,
+        capacity_factor=1.25,
+        attn_chunk=64,  # keep gathered-KV score transients <1 GiB/dev
+        shard_profile="cp",
+        fsdp=True,
+        optimizer="adafactor",
+        remat_policy="nothing",
+        supports_long_context=False,
+        notes="128e top-2 + dense residual; EP+CP+ZeRO-3; adafactor",
+    )
+)

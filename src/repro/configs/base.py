@@ -1,0 +1,204 @@
+"""Config system: architecture configs, input-shape cells, sharding policies.
+
+Every assigned architecture is a ``ModelConfig`` built from its published
+hyper-parameters. ``SHAPES`` defines the assigned input-shape set; the cross
+product (arch x shape) defines the dry-run cells.
+
+Sharding profiles (see DESIGN.md SS4):
+  * ``tp``  -- Megatron tensor parallel over 'model' (+ DP over 'data',
+               FSDP params over 'data').
+  * ``cp``  -- context parallel: sequence over 'model' (ring attention via the
+               xDFS channel engine), ZeRO-3 params over ('data','model').
+               Used when head counts don't divide the model axis.
+  * ``dp``  -- pure data parallel over ('data','model') with FSDP over 'data'.
+               Used for small or head-indivisible recurrent archs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field, replace
+from typing import Optional, Tuple
+
+# ---------------------------------------------------------------------------
+# Input shape cells (assigned)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # 'train' | 'prefill' | 'decode'
+
+
+SHAPES = {
+    "train_4k": ShapeConfig("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524288, 1, "decode"),
+}
+
+
+# ---------------------------------------------------------------------------
+# Model config
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str  # dense | moe | ssm | hybrid | audio | vlm
+
+    num_layers: int = 12
+    d_model: int = 512
+    num_heads: int = 8
+    num_kv_heads: int = 8
+    head_dim: int = 64
+    d_ff: int = 2048
+    vocab_size: int = 32000
+
+    # attention variants -----------------------------------------------------
+    # per-layer block pattern, cycled over layers:
+    #   'g' global attention, 'l' local (sliding window), 'r' RG-LRU recurrent,
+    #   'k' RWKV6 time-mix block.
+    layer_pattern: str = "g"
+    window_size: int = 4096
+    attn_logit_softcap: Optional[float] = None
+    final_logit_softcap: Optional[float] = None
+    qk_norm: bool = False
+    rope_theta: float = 10000.0
+    # gemma-style scaling: attn scale = query_pre_attn_scalar ** -0.5
+    query_pre_attn_scalar: Optional[float] = None  # default: head_dim
+
+    # ffn ---------------------------------------------------------------------
+    act: str = "silu"  # silu (gated) | gelu (gated) | gelu_plain
+    tie_embeddings: bool = False
+    norm_eps: float = 1e-6
+    gemma_norm: bool = True if False else False  # (1 + w) RMSNorm scaling
+    post_block_norm: bool = False  # gemma2-style post norms
+    embed_scale: bool = False  # multiply embeddings by sqrt(d_model)
+
+    # moe ----------------------------------------------------------------------
+    moe: bool = False
+    num_experts: int = 0
+    top_k: int = 0
+    moe_dff: int = 0
+    dense_residual: bool = False  # arctic: dense MLP in parallel with MoE
+    capacity_factor: float = 1.25
+    router_aux_weight: float = 0.01
+    router_z_weight: float = 1e-4
+    # ZxDFS compressed channel on the expert-parallel all-to-all (int8 wire
+    # payloads, per-row scales). Opt-in: ~0.4% activation quantization noise.
+    moe_a2a_compress: bool = False
+
+    # rwkv / rglru ---------------------------------------------------------------
+    rwkv_head_dim: int = 64
+    lru_width: int = 0  # 0 -> d_model
+    conv1d_width: int = 4
+
+    # modality frontend stub -----------------------------------------------------
+    frontend: Optional[str] = None  # None | 'audio' | 'vision'
+
+    # sharding / runtime ----------------------------------------------------------
+    shard_profile: str = "tp"  # tp | cp | dp
+    fsdp: bool = True
+    optimizer: str = "adamw"  # adamw | adafactor
+    microbatches: int = 1  # >1: grad-accumulation scan (tp/cp profiles)
+    remat_policy: str = "nothing"  # nothing | dots | full(no remat)
+    attn_chunk: int = 1024  # q-chunk for XLA chunked attention
+    ce_chunk: int = 512  # token chunk for fused cross-entropy
+    # when kv_heads < tp_size, kv heads are repeated to tp size (Megatron GQA)
+    supports_long_context: bool = False  # sub-quadratic -> run long_500k
+    notes: str = ""
+
+    # ------------------------------------------------------------------
+    @property
+    def q_dim(self) -> int:
+        return self.num_heads * self.head_dim
+
+    @property
+    def kv_dim(self) -> int:
+        return self.num_kv_heads * self.head_dim
+
+    @property
+    def lru_dim(self) -> int:
+        return self.lru_width or self.d_model
+
+    def pattern_for_layers(self) -> Tuple[str, ...]:
+        p = self.layer_pattern
+        return tuple(p[i % len(p)] for i in range(self.num_layers))
+
+    def padded_vocab(self, multiple: int = 256) -> int:
+        return ((self.vocab_size + multiple - 1) // multiple) * multiple
+
+    def smoke(self) -> "ModelConfig":
+        """Reduced same-family config for CPU smoke tests."""
+        n_layers = max(2, min(4, len(self.layer_pattern)))
+        return replace(
+            self,
+            num_layers=n_layers,
+            d_model=64,
+            num_heads=4,
+            num_kv_heads=min(self.num_kv_heads, 2) if self.num_kv_heads < self.num_heads else 4,
+            head_dim=16,
+            d_ff=128,
+            vocab_size=512,
+            window_size=32,
+            num_experts=4 if self.moe else 0,
+            top_k=min(2, self.top_k) if self.moe else 0,
+            moe_dff=64 if self.moe else 0,
+            lru_width=64 if self.lru_width else 0,
+            rwkv_head_dim=16,
+            attn_chunk=32,
+            ce_chunk=64,
+            fsdp=False,
+        )
+
+
+_REGISTRY: dict = {}
+
+
+def register(cfg: ModelConfig) -> ModelConfig:
+    _REGISTRY[cfg.name] = cfg
+    return cfg
+
+
+def get_config(name: str) -> ModelConfig:
+    if not _REGISTRY:
+        _load_all()
+    return _REGISTRY[name]
+
+
+def list_configs() -> Tuple[str, ...]:
+    if not _REGISTRY:
+        _load_all()
+    return tuple(sorted(_REGISTRY))
+
+
+def _load_all() -> None:
+    # import for registration side effects
+    from repro.configs import (  # noqa: F401
+        gemma2_27b,
+        llama3_8b,
+        smollm_135m,
+        qwen3_14b,
+        rwkv6_3b,
+        arctic_480b,
+        olmoe_1b_7b,
+        musicgen_large,
+        recurrentgemma_2b,
+        internvl2_26b,
+    )
+
+
+def cells(include_skipped: bool = False):
+    """Yield every (arch, shape) dry-run cell; skip long_500k for quadratic archs."""
+    for name in list_configs():
+        cfg = get_config(name)
+        for sname, shape in SHAPES.items():
+            if sname == "long_500k" and not cfg.supports_long_context:
+                if include_skipped:
+                    yield cfg, shape, False
+                continue
+            yield (cfg, shape, True) if include_skipped else (cfg, shape)

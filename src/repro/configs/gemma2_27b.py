@@ -1,0 +1,40 @@
+"""Gemma 2 27B [arXiv:2408.00118; hf].
+
+46L d_model=4608 32H (GQA kv=16) d_ff=36864 vocab=256000.
+Local(4096)+global alternating attention, attn logit softcap 50, final logit
+softcap 30, GeGLU, tied embeddings, (1+w) RMSNorm, pre+post block norms,
+query_pre_attn_scalar = d_model/num_heads = 144.
+long_500k skipped: global layers are full attention (quadratic).
+"""
+from repro.configs.base import ModelConfig, register
+
+CONFIG = register(
+    ModelConfig(
+        name="gemma2-27b",
+        family="dense",
+        num_layers=46,
+        d_model=4608,
+        num_heads=32,
+        num_kv_heads=16,
+        head_dim=128,
+        d_ff=36864,
+        vocab_size=256000,
+        layer_pattern="lg",  # local, global alternating
+        window_size=4096,
+        attn_logit_softcap=50.0,
+        final_logit_softcap=30.0,
+        rope_theta=10000.0,
+        query_pre_attn_scalar=144.0,  # d_model / num_heads
+        act="gelu",
+        tie_embeddings=True,
+        gemma_norm=True,
+        post_block_norm=True,
+        embed_scale=True,
+        shard_profile="tp",
+        fsdp=True,
+        optimizer="adamw",
+        remat_policy="nothing",
+        supports_long_context=False,
+        notes="local+global alternating, logit softcaps",
+    )
+)

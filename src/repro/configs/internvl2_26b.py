@@ -1,0 +1,33 @@
+"""InternVL2-26B LM backbone (InternLM2-20B) [arXiv:2404.16821].
+
+48L d_model=6144 48H (GQA kv=8) d_ff=16384 vocab=92553.
+The InternViT vision tower is a STUB: input_specs() provides precomputed
+patch embeddings (vision modality). vocab padded to a multiple of 256 for
+16-way vocab sharding (Megatron-style; noted in EXPERIMENTS.md).
+kv=8 < tp=16 -> GQA kv-head replication x2.
+"""
+from repro.configs.base import ModelConfig, register
+
+CONFIG = register(
+    ModelConfig(
+        name="internvl2-26b",
+        family="vlm",
+        num_layers=48,
+        d_model=6144,
+        num_heads=48,
+        num_kv_heads=8,
+        head_dim=128,
+        d_ff=16384,
+        vocab_size=92553,
+        layer_pattern="g",
+        rope_theta=1000000.0,
+        act="silu",
+        tie_embeddings=False,
+        frontend="vision",
+        shard_profile="tp",
+        fsdp=True,
+        optimizer="adamw",
+        supports_long_context=False,
+        notes="InternViT stub frontend + InternLM2 backbone",
+    )
+)

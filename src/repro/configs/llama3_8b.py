@@ -1,0 +1,29 @@
+"""Llama 3 8B [arXiv:2407.21783].
+
+32L d_model=4096 32H (GQA kv=8) d_ff=14336 vocab=128256, rope theta 5e5,
+SwiGLU, untied embeddings. kv=8 < tp=16 -> GQA kv-head replication x2.
+"""
+from repro.configs.base import ModelConfig, register
+
+CONFIG = register(
+    ModelConfig(
+        name="llama3-8b",
+        family="dense",
+        num_layers=32,
+        d_model=4096,
+        num_heads=32,
+        num_kv_heads=8,
+        head_dim=128,
+        d_ff=14336,
+        vocab_size=128256,
+        layer_pattern="g",
+        rope_theta=500000.0,
+        act="silu",
+        tie_embeddings=False,
+        shard_profile="tp",
+        fsdp=True,
+        optimizer="adamw",
+        supports_long_context=False,
+        notes="GQA, 128k vocab",
+    )
+)

@@ -1,0 +1,32 @@
+"""MusicGen-large backbone [arXiv:2306.05284].
+
+48L d_model=2048 32H (MHA kv=32) d_ff=8192 vocab=2048 (EnCodec codebook).
+Decoder-only over EnCodec tokens; the EnCodec frontend is a STUB:
+input_specs() provides precomputed frame embeddings (audio modality).
+Plain (non-gated) GELU FFN per the original transformer decoder.
+"""
+from repro.configs.base import ModelConfig, register
+
+CONFIG = register(
+    ModelConfig(
+        name="musicgen-large",
+        family="audio",
+        num_layers=48,
+        d_model=2048,
+        num_heads=32,
+        num_kv_heads=32,
+        head_dim=64,
+        d_ff=8192,
+        vocab_size=2048,
+        layer_pattern="g",
+        rope_theta=10000.0,
+        act="gelu_plain",
+        tie_embeddings=False,
+        frontend="audio",
+        shard_profile="tp",
+        fsdp=True,
+        optimizer="adamw",
+        supports_long_context=False,
+        notes="decoder-only over EnCodec tokens; frame-embedding stub frontend",
+    )
+)

@@ -1,0 +1,37 @@
+"""OLMoE-1B-7B [arXiv:2409.02060].
+
+16L d_model=2048 16H (MHA kv=16) d_ff(expert)=1024 vocab=50304,
+MoE 64 experts top-8, qk-norm. TP over 'model' (16 heads / 16), EP experts
+over 'model', FSDP over 'data'.
+"""
+from repro.configs.base import ModelConfig, register
+
+CONFIG = register(
+    ModelConfig(
+        name="olmoe-1b-7b",
+        family="moe",
+        num_layers=16,
+        d_model=2048,
+        num_heads=16,
+        num_kv_heads=16,
+        head_dim=128,
+        d_ff=1024,
+        vocab_size=50304,
+        layer_pattern="g",
+        qk_norm=True,
+        rope_theta=10000.0,
+        act="silu",
+        tie_embeddings=False,
+        moe=True,
+        num_experts=64,
+        top_k=8,
+        moe_dff=1024,
+        dense_residual=False,
+        capacity_factor=1.25,
+        shard_profile="tp",
+        fsdp=True,
+        optimizer="adamw",
+        supports_long_context=False,
+        notes="64e top-8 MoE",
+    )
+)

@@ -1,0 +1,31 @@
+"""Qwen3-14B [hf:Qwen/Qwen3-*].
+
+40L d_model=5120 40H (GQA kv=8) d_ff=17408 vocab=151936, qk-norm, SwiGLU.
+40 heads don't divide the 16-way model axis -> context-parallel profile:
+sequence over 'model' with xDFS ring attention, ZeRO-3 over (data, model).
+"""
+from repro.configs.base import ModelConfig, register
+
+CONFIG = register(
+    ModelConfig(
+        name="qwen3-14b",
+        family="dense",
+        num_layers=40,
+        d_model=5120,
+        num_heads=40,
+        num_kv_heads=8,
+        head_dim=128,
+        d_ff=17408,
+        vocab_size=151936,
+        layer_pattern="g",
+        qk_norm=True,
+        rope_theta=1000000.0,
+        act="silu",
+        tie_embeddings=False,
+        shard_profile="cp",
+        fsdp=True,
+        optimizer="adamw",
+        supports_long_context=False,
+        notes="qk_norm GQA; CP ring-attention profile",
+    )
+)

@@ -1,0 +1,38 @@
+"""RecurrentGemma-2B (Griffin) [arXiv:2402.19427].
+
+26L d_model=2560 10H (MQA kv=1, head_dim 256) d_ff=7680 vocab=256000.
+Pattern: (RG-LRU, RG-LRU, local-attn) repeating — 1 local : 2 recurrent;
+window 2048, GeGLU, tied embeddings, (1+w) RMSNorm, final softcap 30.
+Sub-quadratic (bounded window + O(1) recurrent state): runs long_500k.
+10 heads don't divide the model axis -> pure-DP profile, FSDP over data.
+"""
+from repro.configs.base import ModelConfig, register
+
+CONFIG = register(
+    ModelConfig(
+        name="recurrentgemma-2b",
+        family="hybrid",
+        num_layers=26,
+        d_model=2560,
+        num_heads=10,
+        num_kv_heads=1,
+        head_dim=256,
+        d_ff=7680,
+        vocab_size=256000,
+        layer_pattern="rrl",  # 2 recurrent : 1 local attention
+        window_size=2048,
+        final_logit_softcap=30.0,
+        rope_theta=10000.0,
+        act="gelu",
+        tie_embeddings=True,
+        gemma_norm=True,
+        embed_scale=True,
+        lru_width=2560,
+        conv1d_width=4,
+        shard_profile="dp",
+        fsdp=True,
+        optimizer="adamw",
+        supports_long_context=True,
+        notes="RG-LRU + local attn 1:2 (Griffin)",
+    )
+)

@@ -1,0 +1,31 @@
+"""RWKV-6 (Finch) 3B [arXiv:2404.05892].
+
+32L d_model=2560 attention-free, d_ff=8960 (channel-mix), vocab=65536,
+data-dependent decay time-mix with 40 heads of dim 64. Sub-quadratic:
+runs the long_500k cell. Head structure doesn't divide the model axis ->
+pure-DP profile with FSDP over data.
+"""
+from repro.configs.base import ModelConfig, register
+
+CONFIG = register(
+    ModelConfig(
+        name="rwkv6-3b",
+        family="ssm",
+        num_layers=32,
+        d_model=2560,
+        num_heads=40,  # d_model / rwkv_head_dim
+        num_kv_heads=40,
+        head_dim=64,
+        d_ff=8960,
+        vocab_size=65536,
+        layer_pattern="k",
+        rwkv_head_dim=64,
+        act="silu",
+        tie_embeddings=False,
+        shard_profile="dp",
+        fsdp=True,
+        optimizer="adamw",
+        supports_long_context=True,
+        notes="Finch: data-dependent decay; attention-free",
+    )
+)

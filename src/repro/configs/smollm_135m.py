@@ -1,0 +1,31 @@
+"""SmolLM-135M [hf:HuggingFaceTB/SmolLM-135M].
+
+30L d_model=576 9H (GQA kv=3) d_ff=1536 vocab=49152, llama-arch small,
+tied embeddings. 9 heads don't divide the model axis -> pure-DP profile
+(batch over data x model), params small enough to replicate.
+Also the end-to-end training-example architecture.
+"""
+from repro.configs.base import ModelConfig, register
+
+CONFIG = register(
+    ModelConfig(
+        name="smollm-135m",
+        family="dense",
+        num_layers=30,
+        d_model=576,
+        num_heads=9,
+        num_kv_heads=3,
+        head_dim=64,
+        d_ff=1536,
+        vocab_size=49152,
+        layer_pattern="g",
+        rope_theta=10000.0,
+        act="silu",
+        tie_embeddings=True,
+        shard_profile="dp",
+        fsdp=True,
+        optimizer="adamw",
+        supports_long_context=False,
+        notes="llama-arch small; e2e training example",
+    )
+)

@@ -1,0 +1,72 @@
+"""ZxDFS compressed-channel payload codec: per-block symmetric int8.
+
+Pure-jnp reference implementation; ``kernels/quant_channel`` is the Pallas
+TPU twin (fused quantize-on-the-way-into-the-channel) validated against this
+in tests. Used by core/channel.py to halve ICI bytes for gradient sync.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+BLOCK = 256
+
+
+class Quantized(NamedTuple):
+    q: jax.Array  # int8, shape (n_blocks, BLOCK)
+    scale: jax.Array  # f32 (n_blocks, 1)
+    orig_size: int  # static: original element count
+    orig_shape: tuple
+
+
+def quantize_int8(x: jax.Array, block: int = BLOCK) -> Quantized:
+    shape = x.shape
+    flat = x.reshape(-1).astype(jnp.float32)
+    n = flat.size
+    pad = (-n) % block
+    flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, block)
+    amax = jnp.max(jnp.abs(blocks), axis=1, keepdims=True)
+    scale = jnp.maximum(amax, 1e-30) / 127.0
+    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    return Quantized(q, scale, n, shape)
+
+
+def dequantize_int8(z: Quantized) -> jax.Array:
+    flat = (z.q.astype(jnp.float32) * z.scale).reshape(-1)
+    return flat[: z.orig_size].reshape(z.orig_shape)
+
+
+def wire_bytes(z: Quantized) -> int:
+    """Bytes on the wire for a quantized payload (int8 + f32 scales)."""
+    return z.q.size + z.scale.size * 4
+
+
+class Int8Codec:
+    """Codec interface used by core.channel ring collectives."""
+
+    name = "int8"
+    ratio = 0.5  # vs bf16 payloads (plus per-block scale overhead)
+
+    @staticmethod
+    def encode(x):
+        return quantize_int8(x)
+
+    @staticmethod
+    def decode(z):
+        return dequantize_int8(z)
+
+
+class NullCodec:
+    name = "none"
+    ratio = 1.0
+
+    @staticmethod
+    def encode(x):
+        return x
+
+    @staticmethod
+    def decode(x):
+        return x

@@ -1,0 +1,222 @@
+"""Communicating finite state machines for the xDFS protocol (Figs. 8-11).
+
+The paper specifies xDFS with CFSMs: a protocol = a set of FSMs exchanging
+messages over FIFO channels; validation / synthesis / conformance testing all
+hang off the explicit transition relation. Here the machines are EXECUTABLE:
+the transfer engines drive them for every channel and any illegal transition
+raises — i.e. runtime conformance checking — and the same tables power the
+property tests (tests/test_fsm.py) and the fault-tolerance supervisor
+(runtime/fault.py reuses the Machine class).
+
+States follow the paper's server/client download/upload CFSMs, with the
+read-readiness bookkeeping (Done / NotDone / FirstTime) modeled as socket
+tags exactly as described in §4.1.
+"""
+from __future__ import annotations
+
+import enum
+from dataclasses import dataclass, field
+from typing import Callable, Dict, FrozenSet, Iterable, Optional, Tuple
+
+
+class FSMError(RuntimeError):
+    pass
+
+
+@dataclass
+class Machine:
+    """A finite state machine with an explicit transition relation."""
+
+    name: str
+    states: FrozenSet[str]
+    initial: str
+    finals: FrozenSet[str]
+    # (state, event) -> next state
+    transitions: Dict[Tuple[str, str], str]
+    state: str = ""
+    trace: list = field(default_factory=list)
+
+    def __post_init__(self):
+        self.state = self.state or self.initial
+        for (s, _e), t in self.transitions.items():
+            if s not in self.states or t not in self.states:
+                raise FSMError(f"{self.name}: transition {s}->{t} uses unknown state")
+
+    def step(self, event: str) -> str:
+        key = (self.state, event)
+        if key not in self.transitions:
+            raise FSMError(
+                f"{self.name}: illegal event {event!r} in state {self.state!r}"
+            )
+        self.trace.append((self.state, event))
+        self.state = self.transitions[key]
+        return self.state
+
+    def can(self, event: str) -> bool:
+        return (self.state, event) in self.transitions
+
+    @property
+    def done(self) -> bool:
+        return self.state in self.finals
+
+    def events_from(self, state: Optional[str] = None) -> Iterable[str]:
+        s = state or self.state
+        return [e for (st, e) in self.transitions if st == s]
+
+    def reset(self):
+        self.state = self.initial
+        self.trace.clear()
+
+
+# ---------------------------------------------------------------------------
+# Socket readiness tags (paper §4.1: Done / NotDone / FirstTime)
+# ---------------------------------------------------------------------------
+
+
+class ReadyTag(enum.Enum):
+    FIRST_TIME = "FirstTime"
+    DONE = "Done"
+    NOT_DONE = "NotDone"
+
+
+# ---------------------------------------------------------------------------
+# xFTSM machines (paper Figs. 8-11). State names mirror the figures:
+# numbered stages with descriptive suffixes.
+# ---------------------------------------------------------------------------
+
+
+def server_download_fsm() -> Machine:
+    """Fig. 8 — server side, download (server reads disk, sends to client)."""
+    states = frozenset({
+        "1_accept", "2_auth", "3_mode", "4_params", "5_session_lookup",
+        "6_register_channel", "7_await_channels", "9_open_file",
+        "10_dispatch", "12_send_blocks", "15_eof_check", "16_send_eof",
+        "17_drain", "18_end", "err",
+    })
+    t = {
+        ("1_accept", "conn"): "2_auth",
+        ("2_auth", "auth_ok"): "3_mode",
+        ("3_mode", "ftsm"): "4_params",
+        ("4_params", "params_ok"): "5_session_lookup",
+        ("5_session_lookup", "new_session"): "6_register_channel",
+        ("5_session_lookup", "known_session"): "6_register_channel",
+        ("6_register_channel", "registered"): "7_await_channels",
+        ("7_await_channels", "more_channels"): "1_accept",
+        ("7_await_channels", "all_channels"): "9_open_file",
+        ("9_open_file", "opened"): "10_dispatch",
+        ("10_dispatch", "write_ready"): "12_send_blocks",
+        ("12_send_blocks", "block_sent"): "10_dispatch",
+        ("10_dispatch", "eof_reached"): "15_eof_check",
+        ("15_eof_check", "pending_data"): "10_dispatch",
+        ("15_eof_check", "all_sent"): "16_send_eof",
+        ("16_send_eof", "eof_headers_sent"): "17_drain",
+        ("17_drain", "drained"): "18_end",
+    }
+    for s in list(states - {"18_end", "err"}):
+        t[(s, "error")] = "err"
+    t[("err", "handled")] = "18_end"
+    return Machine("server_download", states, "1_accept", frozenset({"18_end"}), t)
+
+
+def client_download_fsm() -> Machine:
+    """Fig. 9 — client side, download (client receives, writes local disk)."""
+    states = frozenset({
+        "1_connect", "2_auth", "3_request", "5_await_channels", "6_dispatch",
+        "7_recv_block", "8_eof_check", "10_write_disk", "12_end", "err",
+    })
+    t = {
+        ("1_connect", "connected"): "2_auth",
+        ("2_auth", "auth_ok"): "3_request",
+        ("3_request", "request_sent"): "5_await_channels",
+        ("5_await_channels", "more_channels"): "1_connect",
+        ("5_await_channels", "all_channels"): "6_dispatch",
+        ("6_dispatch", "read_ready"): "7_recv_block",
+        ("7_recv_block", "block"): "10_write_disk",
+        ("7_recv_block", "eof_header"): "8_eof_check",
+        ("10_write_disk", "written"): "6_dispatch",
+        ("8_eof_check", "channels_open"): "6_dispatch",
+        ("8_eof_check", "all_eof"): "12_end",
+    }
+    for s in list(states - {"12_end", "err"}):
+        t[(s, "error")] = "err"
+    t[("err", "handled")] = "12_end"
+    return Machine("client_download", states, "1_connect", frozenset({"12_end"}), t)
+
+
+def server_upload_fsm() -> Machine:
+    """Fig. 10 — server side, upload (server receives, writes disk)."""
+    states = frozenset({
+        "1_accept", "2_auth", "3_mode", "4_params", "5_session_lookup",
+        "6_register_channel", "7_await_channels", "9_open_file",
+        "10_dispatch", "11_recv_block", "12_buffer", "13_flush",
+        "14_eof_check", "18_end", "err",
+    })
+    t = {
+        ("1_accept", "conn"): "2_auth",
+        ("2_auth", "auth_ok"): "3_mode",
+        ("3_mode", "ftsm"): "4_params",
+        ("4_params", "params_ok"): "5_session_lookup",
+        ("5_session_lookup", "new_session"): "6_register_channel",
+        ("5_session_lookup", "known_session"): "6_register_channel",
+        ("6_register_channel", "registered"): "7_await_channels",
+        ("7_await_channels", "more_channels"): "1_accept",
+        ("7_await_channels", "all_channels"): "9_open_file",
+        ("9_open_file", "opened"): "10_dispatch",
+        ("10_dispatch", "read_ready"): "11_recv_block",
+        ("10_dispatch", "flush"): "13_flush",  # backpressure / idle drain
+        ("11_recv_block", "block"): "12_buffer",
+        ("11_recv_block", "eof_header"): "14_eof_check",
+        ("12_buffer", "buffered"): "10_dispatch",
+        ("12_buffer", "ring_full"): "13_flush",
+        ("13_flush", "flushed"): "10_dispatch",
+        ("14_eof_check", "channels_open"): "10_dispatch",
+        ("14_eof_check", "all_eof"): "13_flush",
+        ("13_flush", "final_flush"): "18_end",
+    }
+    for s in list(states - {"18_end", "err"}):
+        t[(s, "error")] = "err"
+    t[("err", "handled")] = "18_end"
+    return Machine("server_upload", states, "1_accept", frozenset({"18_end"}), t)
+
+
+def client_upload_fsm() -> Machine:
+    """Fig. 11 — client side, upload (client reads disk, sends)."""
+    states = frozenset({
+        "1_connect", "2_auth", "3_request", "5_await_channels",
+        "6_dispatch", "7_read_disk", "8_send_block", "9_eof",
+        "10_await_acks", "12_end", "err",
+    })
+    t = {
+        ("1_connect", "connected"): "2_auth",
+        ("2_auth", "auth_ok"): "3_request",
+        ("3_request", "request_sent"): "5_await_channels",
+        ("5_await_channels", "more_channels"): "1_connect",
+        ("5_await_channels", "all_channels"): "6_dispatch",
+        ("6_dispatch", "write_ready"): "7_read_disk",
+        ("7_read_disk", "block"): "8_send_block",
+        ("7_read_disk", "eof"): "9_eof",
+        ("8_send_block", "sent"): "6_dispatch",
+        ("9_eof", "eof_sent"): "10_await_acks",
+        ("10_await_acks", "acked"): "12_end",
+    }
+    for s in list(states - {"12_end", "err"}):
+        t[(s, "error")] = "err"
+    t[("err", "handled")] = "12_end"
+    return Machine("client_upload", states, "1_connect", frozenset({"12_end"}), t)
+
+
+FSM_BUILDERS: Dict[str, Callable[[], Machine]] = {
+    "server_download": server_download_fsm,
+    "client_download": client_download_fsm,
+    "server_upload": server_upload_fsm,
+    "client_upload": client_upload_fsm,
+}
+
+
+def dual_pairs() -> list:
+    """The paper's duality observation: the send side of one mode mirrors the
+    receive side of the other. Used by tests/test_fsm.py."""
+    return [
+        ("server_download", "client_upload"),
+        ("server_upload", "client_download"),
+    ]

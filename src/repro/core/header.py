@@ -1,0 +1,125 @@
+"""xDFS binary channel headers (paper Fig. 5, Tables 2-3).
+
+Every block moving through an xDFS channel is framed by a fixed-size binary
+header carrying the channel event type, session id, and the (offset, length)
+of the file block. The same framing is reused verbatim by the device-side
+tensor channels (chunk offset/length over ICI) — see core/channel.py.
+"""
+from __future__ import annotations
+
+import enum
+import struct
+import uuid
+from dataclasses import dataclass
+
+MAGIC = 0x78444653  # 'xDFS'
+VERSION = 2  # xDFS extends DotDFS (v1)
+
+
+class ChannelEvent(enum.IntEnum):
+    """Channel event types (paper Table 3)."""
+
+    NOOP = 0
+    xFTSMU = 1  # initiate/change to upload mode
+    xFTSMD = 2  # initiate/change to download mode
+    xPathM = 3  # path-mode (out of paper scope; reserved)
+    EOFR = 4  # end-of-file on this channel; channel becomes reusable
+    EOFT = 5  # end-of-file; terminate session, close all channels
+    CONM = 6  # continue/maintain last channel event state
+    ZxDFS = 7  # compressed (zero-copy) channel negotiation
+    EXCEPTION = 8  # exception header (error propagation)
+
+
+# magic, version, event, flags, session(16s), channel, offset, length, crc
+_FMT = struct.Struct("<IHBB16sIQQI")
+HEADER_SIZE = _FMT.size
+
+
+@dataclass(frozen=True)
+class ChannelHeader:
+    event: ChannelEvent
+    session: bytes  # 16-byte GUID
+    channel: int
+    offset: int
+    length: int
+    flags: int = 0
+
+    def pack(self) -> bytes:
+        crc = self.checksum()
+        return _FMT.pack(
+            MAGIC, VERSION, int(self.event), self.flags,
+            self.session, self.channel, self.offset, self.length, crc,
+        )
+
+    def checksum(self) -> int:
+        # cheap integrity word over the header fields (not the payload)
+        x = (self.offset * 0x9E3779B97F4A7C15 + self.length) & 0xFFFFFFFFFFFFFFFF
+        x ^= int(self.event) << 56 | self.channel
+        x ^= int.from_bytes(self.session[:8], "little")
+        return (x ^ (x >> 32)) & 0xFFFFFFFF
+
+    @classmethod
+    def unpack(cls, buf: bytes) -> "ChannelHeader":
+        magic, ver, ev, flags, session, channel, offset, length, crc = _FMT.unpack(
+            buf[:HEADER_SIZE]
+        )
+        if magic != MAGIC:
+            raise ProtocolError(f"bad magic {magic:#x}")
+        if ver != VERSION:
+            # per-block headers are version-exact; cross-version compat is
+            # negotiated at session setup (Negotiation.version)
+            raise ProtocolError(f"unsupported version {ver}")
+        hdr = cls(ChannelEvent(ev), session, channel, offset, length, flags)
+        if hdr.checksum() != crc:
+            raise ProtocolError("header checksum mismatch")
+        return hdr
+
+
+class ProtocolError(RuntimeError):
+    pass
+
+
+@dataclass(frozen=True)
+class Negotiation:
+    """Session negotiation parameters (paper Table 2)."""
+
+    session: bytes
+    n_channels: int
+    block_size: int
+    tcp_window: int
+    remote_name: str
+    local_name: str
+    version: int = VERSION
+    compressed: bool = False  # ZxDFS extended mode
+    file_size: int = 0
+    credentials: bytes = b""  # xSec is out of scope; carried opaquely
+
+    def pack(self) -> bytes:
+        rn = self.remote_name.encode()
+        ln = self.local_name.encode()
+        head = struct.pack(
+            "<16sHIIQQB??HH",
+            self.session, self.version, self.n_channels, self.block_size,
+            self.tcp_window, self.file_size, 0, self.compressed, False,
+            len(rn), len(ln),
+        )
+        return head + rn + ln + struct.pack("<H", len(self.credentials)) + self.credentials
+
+    @classmethod
+    def unpack(cls, buf: bytes) -> "Negotiation":
+        head = struct.Struct("<16sHIIQQB??HH")
+        (session, ver, n, bs, win, fsize, _r, comp, _r2, lrn, lln) = head.unpack(
+            buf[: head.size]
+        )
+        p = head.size
+        rn = buf[p : p + lrn].decode()
+        p += lrn
+        ln = buf[p : p + lln].decode()
+        p += lln
+        (lc,) = struct.unpack("<H", buf[p : p + 2])
+        creds = buf[p + 2 : p + 2 + lc]
+        return cls(session, n, bs, win, rn, ln, ver, comp, fsize, creds)
+
+
+def new_session_id() -> bytes:
+    return uuid.uuid4().bytes

@@ -1,0 +1,48 @@
+"""PIOD — Parallel I/O Dispatcher (paper §4.1, Fig. 7).
+
+The event-dispatching core of the MTEDP architecture: one thread multiplexes
+all n channels of a session through a readiness loop (``selectors`` — the
+cross-platform select()/epoll/kqueue abstraction, matching the paper's choice
+of select() for portability). Channel handlers are small state machines fed
+with readiness events; the dispatcher never blocks on any single channel.
+"""
+from __future__ import annotations
+
+import selectors
+import socket
+from typing import Callable, Dict, Optional
+
+
+class PIOD:
+    def __init__(self):
+        self.sel = selectors.DefaultSelector()
+        self._n = 0
+        self.idle_callback: Optional[Callable[[], None]] = None
+
+    def register(self, sock: socket.socket, events: int, callback) -> None:
+        sock.setblocking(False)
+        self.sel.register(sock, events, callback)
+        self._n += 1
+
+    def modify(self, sock: socket.socket, events: int, callback) -> None:
+        self.sel.modify(sock, events, callback)
+
+    def unregister(self, sock: socket.socket) -> None:
+        self.sel.unregister(sock)
+        self._n -= 1
+
+    @property
+    def active(self) -> int:
+        return self._n
+
+    def run(self, until: Callable[[], bool], timeout: float = 0.05) -> None:
+        """Dispatch readiness events until ``until()`` is true."""
+        while not until():
+            events = self.sel.select(timeout)
+            for key, mask in events:
+                key.data(key.fileobj, mask)
+            if self.idle_callback is not None:
+                self.idle_callback()
+
+    def close(self) -> None:
+        self.sel.close()

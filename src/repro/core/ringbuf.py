@@ -1,0 +1,153 @@
+"""Circular block buffer (paper §2.5.2-2.5.3 and §4.1).
+
+Two variants, matching the two server architectures that use one:
+
+* ``RingBuffer`` — single-producer/single-consumer, index-based, LOCK-FREE
+  (the MTEDP engine: one event loop produces, the disk drain consumes in the
+  same thread or a dedicated disk thread). Slots are preallocated bytearrays
+  (the paper's memory-allocation factor: zero per-block allocation in steady
+  state).
+* ``LockedRing`` — the MT model's pessimistically-locked shared buffer
+  (threading.Condition), kept deliberately faithful to the paper's
+  description so the benchmark reproduces its synchronization overhead.
+"""
+from __future__ import annotations
+
+import threading
+from dataclasses import dataclass
+from typing import List, Optional, Tuple
+
+
+class RingBuffer:
+    """SPSC ring of (offset, length) tagged preallocated block slots."""
+
+    def __init__(self, slots: int, block_size: int):
+        assert slots > 0 and (slots & (slots - 1)) == 0, "slots must be 2^k"
+        self.slots = slots
+        self.block_size = block_size
+        self._buf: List[bytearray] = [bytearray(block_size) for _ in range(slots)]
+        self._meta: List[Tuple[int, int]] = [(0, 0)] * slots
+        self._head = 0  # next write (producer)
+        self._tail = 0  # next read (consumer)
+
+    def __len__(self) -> int:
+        return self._head - self._tail
+
+    @property
+    def free(self) -> int:
+        return self.slots - len(self)
+
+    def full(self) -> bool:
+        return len(self) == self.slots
+
+    def empty(self) -> bool:
+        return self._head == self._tail
+
+    def produce_view(self) -> Optional[memoryview]:
+        """Borrow the next free slot's buffer for a zero-copy recv_into."""
+        if self.full():
+            return None
+        return memoryview(self._buf[self._head % self.slots])
+
+    def commit(self, offset: int, length: int) -> None:
+        assert not self.full()
+        self._meta[self._head % self.slots] = (offset, length)
+        self._head += 1
+
+    def push(self, data, offset: int) -> bool:
+        """Copy-push (convenience; the hot path uses produce_view+commit)."""
+        mv = self.produce_view()
+        if mv is None:
+            return False
+        n = len(data)
+        mv[:n] = data
+        self.commit(offset, n)
+        return True
+
+    def peek(self) -> Optional[Tuple[int, memoryview]]:
+        if self.empty():
+            return None
+        i = self._tail % self.slots
+        off, ln = self._meta[i]
+        return off, memoryview(self._buf[i])[:ln]
+
+    def pop(self) -> None:
+        assert not self.empty()
+        self._tail += 1
+
+    def drain_contiguous(self) -> List[Tuple[int, memoryview]]:
+        """Pop ALL queued blocks (offset order as queued) for vectored I/O."""
+        out = []
+        while not self.empty():
+            i = self._tail % self.slots
+            off, ln = self._meta[i]
+            out.append((off, memoryview(self._buf[i])[:ln]))
+            self._tail += 1
+        return out
+
+
+class BlockPool:
+    """Preallocated block pool (region allocator, paper §2.2): the MTEDP
+    engine claims blocks for in-flight channel receives (zero-copy
+    ``recv_into``) and commits them to a FIFO for the disk drain — multiple
+    channels can hold claimed blocks concurrently, unlike the strict SPSC
+    ring."""
+
+    def __init__(self, slots: int, block_size: int):
+        self.block_size = block_size
+        self._free: List[bytearray] = [bytearray(block_size) for _ in range(slots)]
+        self._committed: List[Tuple[int, int, bytearray]] = []  # (offset, len, blk)
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def n_committed(self) -> int:
+        return len(self._committed)
+
+    def acquire(self) -> Optional[bytearray]:
+        return self._free.pop() if self._free else None
+
+    def release(self, blk: bytearray) -> None:
+        self._free.append(blk)
+
+    def commit(self, blk: bytearray, offset: int, length: int) -> None:
+        self._committed.append((offset, length, blk))
+
+    def drain(self) -> List[Tuple[int, int, bytearray]]:
+        out = self._committed
+        self._committed = []
+        return out
+
+
+class LockedRing:
+    """The MT model's shared circular buffer with pessimistic locking."""
+
+    def __init__(self, slots: int, block_size: int):
+        self._ring = RingBuffer(slots, block_size)
+        self._cv = threading.Condition()
+        self.closed = False
+
+    def put(self, data, offset: int) -> None:
+        with self._cv:
+            while self._ring.full() and not self.closed:
+                self._cv.wait()
+            if self.closed:
+                raise RuntimeError("ring closed")
+            ok = self._ring.push(data, offset)
+            assert ok
+            self._cv.notify_all()
+
+    def get_batch(self, timeout: float = 0.1) -> List[Tuple[int, bytes]]:
+        with self._cv:
+            if self._ring.empty() and not self.closed:
+                self._cv.wait(timeout)
+            out = [(off, bytes(mv)) for off, mv in self._ring.drain_contiguous()]
+            self._cv.notify_all()
+            return out
+
+    def close(self) -> None:
+        with self._cv:
+            self.closed = True
+            self._cv.notify_all()

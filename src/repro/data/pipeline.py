@@ -1,0 +1,64 @@
+"""Host input pipeline: background prefetch into a bounded ring.
+
+The trainer-side twin of the xDFS download path: a producer thread streams
+batches (the 'file blocks') into a bounded buffer; the training loop consumes
+without ever blocking on data generation in steady state.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Callable, Iterator, Optional
+
+import jax
+
+from repro.data.synthetic import StreamSpec, batch_at
+
+
+class PrefetchPipeline:
+    def __init__(
+        self,
+        spec: StreamSpec,
+        start_step: int = 0,
+        depth: int = 4,
+        put_fn: Optional[Callable] = None,  # e.g. device_put with shardings
+    ):
+        self.spec = spec
+        self.depth = depth
+        self.put_fn = put_fn or (lambda b: b)
+        self._q: queue.Queue = queue.Queue(maxsize=depth)
+        self._step = start_step
+        self._stop = threading.Event()
+        self._thread = threading.Thread(target=self._producer, daemon=True)
+        self._thread.start()
+
+    def _producer(self):
+        step = self._step
+        while not self._stop.is_set():
+            batch = batch_at(self.spec, step)
+            try:
+                self._q.put((step, batch), timeout=0.2)
+                step += 1
+            except queue.Full:
+                continue
+
+    def __iter__(self) -> Iterator:
+        return self
+
+    def __next__(self):
+        while True:
+            try:
+                step, batch = self._q.get(timeout=1.0)
+                return step, self.put_fn(batch)
+            except queue.Empty:
+                if self._stop.is_set():
+                    raise StopIteration
+
+    def close(self):
+        self._stop.set()
+        try:
+            while True:
+                self._q.get_nowait()
+        except queue.Empty:
+            pass
+        self._thread.join(timeout=2.0)

@@ -1,0 +1,144 @@
+"""Flash attention Pallas TPU kernel.
+
+Grid (B*H, n_q, n_k) with the KV dim minor-most: on TPU the grid is executed
+sequentially per core, so the (m, l, acc) online-softmax state lives in VMEM
+scratch and persists across the n_k sweep of each (bh, qi) tile — the classic
+TPU flash schedule. Block shapes are MXU-aligned (multiples of 128 on the
+lane dim; block_q x block_k tiles on the sublane side).
+
+Supports causal masking, sliding windows (local attention), and tanh logit
+softcaps (gemma2), matching the model's XLA-path math bit-for-bit in f32
+softmax. Fully-masked KV tiles are skipped via @pl.when.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(
+    q_ref, k_ref, v_ref,  # (1, block_q, d), (1, block_k, d)
+    o_ref,  # (1, block_q, d)
+    m_s, l_s, acc_s,  # scratch: (block_q, 1), (block_q, 1), (block_q, d)
+    *,
+    scale: float,
+    causal: bool,
+    window: Optional[int],
+    logit_cap: Optional[float],
+    block_q: int,
+    block_k: int,
+    n_k: int,
+    seq_k: int,
+):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_s[...] = jnp.full_like(m_s, NEG_INF)
+        l_s[...] = jnp.zeros_like(l_s)
+        acc_s[...] = jnp.zeros_like(acc_s)
+
+    q0 = qi * block_q
+    k0 = ki * block_k
+    # tile-level reachability (skip fully masked tiles)
+    reachable = True
+    if causal:
+        reachable = k0 <= q0 + block_q - 1
+    if window is not None:
+        reachable = jnp.logical_and(reachable, k0 + block_k > q0 - (window - 1))
+
+    @pl.when(reachable)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)
+        k = k_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale
+        if logit_cap is not None:
+            s = jnp.tanh(s / logit_cap) * logit_cap
+        qpos = q0 + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+        kpos = k0 + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+        mask = kpos < seq_k
+        if causal:
+            mask &= kpos <= qpos
+        if window is not None:
+            mask &= (qpos - kpos) < window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_s[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+        corr = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)
+        l_s[...] = l_s[...] * corr + p.sum(axis=1, keepdims=True)
+        m_s[...] = m_new
+        acc_s[...] = acc_s[...] * corr + jax.lax.dot_general(
+            p.astype(v_ref.dtype), v_ref[0],
+            (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+
+    @pl.when(ki == n_k - 1)
+    def _finalize():
+        o_ref[0] = (acc_s[...] / jnp.maximum(l_s[...], 1e-30)).astype(o_ref.dtype)
+
+
+def flash_attention_bhsd(
+    q, k, v, *,
+    scale: float,
+    causal: bool = True,
+    window: Optional[int] = None,
+    logit_cap: Optional[float] = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+):
+    """q, k, v: (B, H, S, D) (kv heads already aligned) -> (B, H, S, D)."""
+    b, h, sq, d = q.shape
+    sk = k.shape[2]
+    block_q = min(block_q, sq)
+    block_k = min(block_k, sk)
+    pad_q = (-sq) % block_q
+    pad_k = (-sk) % block_k
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pad_q), (0, 0)))
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+    sq_p, sk_p = sq + pad_q, sk + pad_k
+    n_q, n_k = sq_p // block_q, sk_p // block_k
+
+    qr = q.reshape(b * h, sq_p, d)
+    kr = k.reshape(b * h, sk_p, d)
+    vr = v.reshape(b * h, sk_p, d)
+
+    kernel = functools.partial(
+        _kernel,
+        scale=scale, causal=causal, window=window, logit_cap=logit_cap,
+        block_q=block_q, block_k=block_k, n_k=n_k, seq_k=sk,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(b * h, n_q, n_k),
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda bh, qi, ki: (bh, qi, 0)),
+            pl.BlockSpec((1, block_k, d), lambda bh, qi, ki: (bh, ki, 0)),
+            pl.BlockSpec((1, block_k, d), lambda bh, qi, ki: (bh, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), lambda bh, qi, ki: (bh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, sq_p, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qr, kr, vr)
+    return out.reshape(b, h, sq_p, d)[:, :, :sq]

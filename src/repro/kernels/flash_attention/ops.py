@@ -1,0 +1,48 @@
+"""jit'd public wrapper for the flash attention kernel (GQA-aware)."""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_bhsd
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "scale", "causal", "window", "logit_cap", "block_q", "block_k",
+        "interpret",
+    ),
+)
+def flash_attention(
+    q, k, v, *,
+    scale: float,
+    causal: bool = True,
+    window: Optional[int] = None,
+    logit_cap: Optional[float] = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+):
+    """q: (B, S, Hq, D); k, v: (B, S, Hkv, D) with Hq % Hkv == 0.
+
+    GQA is handled by repeating kv heads (zero-copy under XLA when fused).
+    Returns (B, S, Hq, D).
+    """
+    hq, hkv = q.shape[2], k.shape[2]
+    if hq != hkv:
+        rep = hq // hkv
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    out = flash_attention_bhsd(
+        qt, kt, vt,
+        scale=scale, causal=causal, window=window, logit_cap=logit_cap,
+        block_q=block_q, block_k=block_k, interpret=interpret,
+    )
+    return out.transpose(0, 2, 1, 3)

@@ -1,0 +1,82 @@
+"""ZxDFS channel codec Pallas kernels: fused int8 quantize / dequant-accumulate.
+
+The paper's zero-copy idea on TPU: payloads are quantized IN VMEM on their
+way into the channel (one read of the f32/bf16 source, one write of int8 +
+scales — no intermediate HBM round-trip), and the receive side fuses
+dequantize with the reduction accumulate. Tiles are (block_rows, 256) with
+the quant group = one 256-lane row, matching the VPU lane width.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+GROUP = 256
+
+
+def _quant_kernel(x_ref, q_ref, s_ref):
+    x = x_ref[...].astype(jnp.float32)  # (rows, GROUP)
+    amax = jnp.max(jnp.abs(x), axis=1, keepdims=True)
+    scale = jnp.maximum(amax, 1e-30) / 127.0
+    q_ref[...] = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    s_ref[...] = scale
+
+
+def _dequant_acc_kernel(q_ref, s_ref, acc_ref, o_ref):
+    x = q_ref[...].astype(jnp.float32) * s_ref[...]
+    o_ref[...] = (acc_ref[...].astype(jnp.float32) + x).astype(o_ref.dtype)
+
+
+def quantize(x, *, block_rows: int = 256, interpret: bool = False):
+    """x: any shape -> (q int8 (n, GROUP), scale f32 (n, 1)). Pads tail."""
+    flat = x.reshape(-1)
+    pad = (-flat.size) % GROUP
+    flat = jnp.pad(flat, (0, pad))
+    rows = flat.size // GROUP
+    block_rows = min(block_rows, rows)
+    rpad = (-rows) % block_rows
+    mat = jnp.pad(flat.reshape(rows, GROUP), ((0, rpad), (0, 0)))
+    n = mat.shape[0] // block_rows
+    q, s = pl.pallas_call(
+        _quant_kernel,
+        grid=(n,),
+        in_specs=[pl.BlockSpec((block_rows, GROUP), lambda i: (i, 0))],
+        out_specs=[
+            pl.BlockSpec((block_rows, GROUP), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct(mat.shape, jnp.int8),
+            jax.ShapeDtypeStruct((mat.shape[0], 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(mat)
+    return q[:rows], s[:rows]
+
+
+def dequant_accumulate(q, s, acc, *, block_rows: int = 256, interpret: bool = False):
+    """acc (+)= dequant(q, s). q: (n, GROUP) int8; s: (n, 1); acc: (n, GROUP)."""
+    rows = q.shape[0]
+    block_rows = min(block_rows, rows)
+    rpad = (-rows) % block_rows
+    if rpad:
+        q = jnp.pad(q, ((0, rpad), (0, 0)))
+        s = jnp.pad(s, ((0, rpad), (0, 0)))
+        acc = jnp.pad(acc, ((0, rpad), (0, 0)))
+    n = q.shape[0] // block_rows
+    out = pl.pallas_call(
+        _dequant_acc_kernel,
+        grid=(n,),
+        in_specs=[
+            pl.BlockSpec((block_rows, GROUP), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, 1), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, GROUP), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, GROUP), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, acc.dtype),
+        interpret=interpret,
+    )(q, s, acc)
+    return out[:rows]

@@ -1,0 +1,18 @@
+"""jit'd wrappers for the ZxDFS codec kernels."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.quant_channel.kernel import GROUP, dequant_accumulate, quantize
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def roundtrip(x, *, interpret: bool = False):
+    """quantize -> dequantize (+0), reshaped back to x's shape."""
+    q, s = quantize(x, interpret=interpret)
+    zero = jnp.zeros_like(q, jnp.float32)
+    flat = dequant_accumulate(q, s, zero, interpret=interpret).reshape(-1)
+    return flat[: x.size].reshape(x.shape).astype(x.dtype)

@@ -1,0 +1,6 @@
+"""Pure-jnp oracle for the ZxDFS int8 channel codec (= core.compress)."""
+from repro.core.compress import dequantize_int8, quantize_int8  # noqa: F401
+
+
+def roundtrip_ref(x, block: int = 256):
+    return dequantize_int8(quantize_int8(x, block))

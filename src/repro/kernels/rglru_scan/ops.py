@@ -1,0 +1,19 @@
+"""jit'd wrapper for the RG-LRU scan kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.rglru_scan.kernel import linear_scan
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def rglru_scan(a, bx, h0=None, *, interpret: bool = False):
+    """h_t = a_t o h_{t-1} + bx_t with h_0 = h0 (folded into step 0)."""
+    if h0 is not None:
+        # fold the initial state into the first step: b_0' = a_0*h0 + b_0
+        bx = bx.at[:, 0, :].add(a[:, 0, :] * h0)
+    h_all = linear_scan(a, bx, interpret=interpret)
+    return h_all, h_all[:, -1, :]

@@ -1,0 +1,21 @@
+"""Pure-jnp oracle for the RG-LRU diagonal linear scan."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def linear_scan_ref(a, bx, h0):
+    """h_t = a_t * h_{t-1} + bx_t. a, bx: (B, T, C) f32; h0: (B, C) f32.
+
+    Returns (h_all (B, T, C), h_last (B, C))."""
+
+    def step(h, xs):
+        at, bt = xs
+        h = at * h + bt
+        return h, h
+
+    h_last, hs = jax.lax.scan(
+        step, h0, (a.transpose(1, 0, 2), bx.transpose(1, 0, 2))
+    )
+    return hs.transpose(1, 0, 2), h_last

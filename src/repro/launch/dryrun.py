@@ -1,0 +1,232 @@
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+"""Multi-pod dry-run: lower + compile every (arch x shape) cell on the
+production meshes and record memory/cost/collective analyses for the roofline.
+
+The XLA_FLAGS line above MUST stay the first statement (before any jax
+import): jax locks the device count on first backend initialization.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch smollm-135m --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--force]
+
+Results: benchmarks/dryrun_results/<arch>__<shape>__<mesh>.json (idempotent;
+existing cells are skipped unless --force).
+"""
+import argparse  # noqa: E402
+import json  # noqa: E402
+import re  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+from pathlib import Path  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import NamedSharding  # noqa: E402
+from jax.sharding import PartitionSpec as P  # noqa: E402
+
+from repro.configs.base import SHAPES, get_config, list_configs  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.models.transformer import build_model  # noqa: E402
+from repro.optim import make_optimizer  # noqa: E402
+from repro.launch.hlo_analysis import analyze_hlo  # noqa: E402
+from repro.runtime.train import init_state, state_shardings  # noqa: E402
+
+RESULTS_DIR = Path(__file__).resolve().parents[3] / "benchmarks" / "dryrun_results"
+
+def _model_flops(model, shape) -> dict:
+    """Analytic MODEL_FLOPS: 6*N_eff*D (train) / 2*N_eff*D (serve), matmul
+    params only (embedding gather excluded; tied tables count once as head)."""
+    cfg = model.cfg
+    abs_params = model.abstract()
+    total = sum(x.size for x in jax.tree.leaves(abs_params))
+    flat = jax.tree_util.tree_flatten_with_path(abs_params)[0]
+    expert = sum(
+        x.size
+        for path, x in flat
+        if any(getattr(k, "key", None) == "moe" for k in path)
+        and not any("router" in str(k) for k in path)
+    )
+    embed = 0
+    if cfg.frontend is None and not cfg.tie_embeddings:
+        embed = model.vocab_pad * cfg.d_model  # gather-only table
+    n_eff = total - embed - expert + expert * (cfg.top_k / max(cfg.num_experts, 1))
+    if shape.kind == "train":
+        d_tok = shape.global_batch * shape.seq_len
+        flops = 6.0 * n_eff * d_tok
+    elif shape.kind == "prefill":
+        d_tok = shape.global_batch * shape.seq_len
+        flops = 2.0 * n_eff * d_tok
+    else:
+        d_tok = shape.global_batch
+        flops = 2.0 * n_eff * d_tok
+    return {
+        "params_total": int(total),
+        "params_active": int(n_eff),
+        "tokens": int(d_tok),
+        "model_flops": flops,
+    }
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool):
+    """Build and lower one cell; returns (lowered, model, shape, mesh)."""
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    if shape_name == "long_500k" and not cfg.supports_long_context:
+        raise SystemExit(f"{arch} skips long_500k (quadratic attention)")
+    model = build_model(cfg, mesh, shape.kind)
+    in_struct = model.input_struct(shape)
+    in_sh = jax.tree.map(
+        lambda spec: NamedSharding(mesh, spec),
+        model.input_specs(shape),
+        is_leaf=lambda x: isinstance(x, P),
+    )
+    with mesh:
+        if shape.kind == "train":
+            from repro.runtime.train import TrainState, make_train_step
+
+            optimizer = make_optimizer(cfg)
+            step = make_train_step(model, optimizer)
+            ss = state_shardings(model, optimizer)
+            params_abs = model.abstract()
+            state_abs = TrainState(
+                params=params_abs,
+                opt_state=jax.eval_shape(optimizer.init, params_abs),
+                step=jax.ShapeDtypeStruct((), jnp.int32),
+            )
+            fn = jax.jit(step, in_shardings=(ss, in_sh), donate_argnums=(0,))
+            lowered = fn.lower(state_abs, in_struct)
+        elif shape.kind == "prefill":
+            params_sh = model.policy.param_shardings(model.defs)
+            fn = jax.jit(model.prefill, in_shardings=(params_sh, in_sh))
+            lowered = fn.lower(model.abstract(), in_struct)
+        else:
+            params_sh = model.policy.param_shardings(model.defs)
+            fn = jax.jit(
+                model.decode_step,
+                in_shardings=(params_sh, in_sh),
+                donate_argnums=(1,),
+            )
+            lowered = fn.lower(model.abstract(), in_struct)
+    return lowered, model, shape, mesh
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, force: bool = False) -> dict:
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    RESULTS_DIR.mkdir(parents=True, exist_ok=True)
+    out_path = RESULTS_DIR / f"{arch}__{shape_name}__{mesh_name}.json"
+    if out_path.exists() and not force:
+        return json.loads(out_path.read_text())
+
+    t0 = time.time()
+    lowered, model, shape, mesh = lower_cell(arch, shape_name, multi_pod)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    mem_d = {}
+    for k in (
+        "argument_size_in_bytes",
+        "output_size_in_bytes",
+        "temp_size_in_bytes",
+        "alias_size_in_bytes",
+        "generated_code_size_in_bytes",
+    ):
+        v = getattr(mem, k, None)
+        if v is not None:
+            mem_d[k] = int(v)
+    cost = compiled.cost_analysis() or {}
+    cost_d = {k: float(v) for k, v in cost.items() if isinstance(v, (int, float))}
+
+    hlo = compiled.as_text()
+    t0 = time.time()
+    analysis = analyze_hlo(hlo)  # trip-count-corrected per-device accounting
+    t_analyze = time.time() - t0
+
+    result = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": mesh_name,
+        "devices": int(mesh.devices.size),
+        "kind": shape.kind,
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "analyze_s": round(t_analyze, 2),
+        "memory_analysis": mem_d,
+        # per-device, trip-count-corrected (see hlo_analysis.py)
+        "dot_flops_per_dev": analysis["dot_flops"],
+        "hbm_bytes_per_dev": analysis["hbm_bytes"],
+        "hbm_bytes_by_op": analysis["hbm_bytes_by_op"],
+        "transcendental_elems_per_dev": analysis["transcendental_elems"],
+        "bf16_upcast_artifact_bytes": analysis["bf16_upcast_artifact_bytes"],
+        "collectives": analysis["collectives"],
+        # raw XLA numbers (while bodies counted once — reference only)
+        "xla_cost_flops": cost_d.get("flops", 0.0),
+        "xla_cost_bytes_accessed": cost_d.get("bytes accessed", 0.0),
+        "hlo_bytes": len(hlo),
+        **_model_flops(model, shape),
+    }
+    out_path.write_text(json.dumps(result, indent=1))
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    cells = []
+    archs = [args.arch] if args.arch else list(list_configs())
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    meshes = [args.multi_pod] if not args.both_meshes else [False, True]
+    for a in archs:
+        cfg = get_config(a)
+        for s in shapes:
+            if s == "long_500k" and not cfg.supports_long_context:
+                print(f"SKIP {a} {s}: quadratic attention (see DESIGN.md)")
+                continue
+            for mp in meshes:
+                cells.append((a, s, mp))
+
+    n_fail = 0
+    for a, s, mp in cells:
+        tag = f"{a:18s} {s:12s} {'2x16x16' if mp else '16x16'}"
+        try:
+            r = run_cell(a, s, mp, force=args.force)
+            mem = r["memory_analysis"]
+            per_dev = (
+                mem.get("argument_size_in_bytes", 0)
+                + mem.get("output_size_in_bytes", 0)
+                + mem.get("temp_size_in_bytes", 0)
+                - mem.get("alias_size_in_bytes", 0)
+            )
+            print(
+                f"OK   {tag} compile={r['compile_s']:7.1f}s "
+                f"flops/dev={r['dot_flops_per_dev']:.3e} mem/dev={per_dev/2**30:.2f}GiB",
+                flush=True,
+            )
+        except SystemExit as e:
+            print(f"SKIP {tag}: {e}")
+        except Exception:
+            n_fail += 1
+            print(f"FAIL {tag}")
+            traceback.print_exc()
+    if n_fail:
+        raise SystemExit(f"{n_fail} cells failed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,365 @@
+"""Post-SPMD HLO accounting with while-loop trip-count multipliers.
+
+``compiled.cost_analysis()`` counts while bodies ONCE (scan bodies are not
+multiplied by trip count), under-reporting FLOPs/bytes by ~num_layers for
+scan-over-layers programs. This module parses the optimized HLO text instead:
+
+  * builds per-computation symbol tables (op name -> result type) since the
+    optimized print mode omits operand types,
+  * builds the computation call graph (while body/condition, fusion calls,
+    conditionals) and propagates an execution-count multiplier from ENTRY;
+    trip counts come from each while condition's ``compare(.., constant(N))``,
+  * dot FLOPs = 2 * numel(result) * prod(lhs contracting dims)  (per device),
+  * HBM bytes = operand+result sizes of ops at fusion boundaries
+    (ops *inside* fusions don't touch HBM),
+  * collective bytes per kind (all-gather / all-reduce / reduce-scatter /
+    all-to-all / collective-permute), trip-multiplied.
+
+All shapes in post-SPMD optimized HLO are per-device shapes, so every number
+here is per-device — exactly what the roofline terms need.
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16, "s4": 1, "u4": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COMP_HDR = re.compile(r"^(ENTRY\s+)?(%?[\w.\-]+)\s*\(.*\)\s*->\s*.+\s*\{")
+_CALL_RE = re.compile(r"(?:calls|to_apply)=%?([\w.\-]+)")
+_BRANCH_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+_SKIP_BYTES_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "partition-id", "replica-id", "iota", "while", "conditional",
+}
+_COLLECTIVES = {
+    "all-gather", "all-gather-start", "all-reduce", "all-reduce-start",
+    "reduce-scatter", "all-to-all", "collective-permute",
+    "collective-permute-start",
+}
+_ASYNC_DONE = {"all-gather-done", "all-reduce-done", "collective-permute-done"}
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(text):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+class Op:
+    __slots__ = ("name", "rtype", "opcode", "operands", "attrs")
+
+    def __init__(self, name, rtype, opcode, operands, attrs):
+        self.name = name
+        self.rtype = rtype
+        self.opcode = opcode
+        self.operands = operands
+        self.attrs = attrs
+
+
+def _parse_op(line: str) -> Optional[Op]:
+    line = line.strip()
+    if line.startswith("ROOT "):
+        line = line[5:]
+    eq = line.find(" = ")
+    if eq < 0 or not (line.startswith("%") or re.match(r"[\w.\-]+ =", line)):
+        return None
+    name = line[:eq].strip().lstrip("%")
+    rest = line[eq + 3 :]
+    # result type: balanced parens tuple or single token
+    if rest.startswith("("):
+        depth = 0
+        for i, c in enumerate(rest):
+            depth += c == "("
+            depth -= c == ")"
+            if depth == 0:
+                rtype = rest[: i + 1]
+                rest = rest[i + 1 :].strip()
+                break
+        else:
+            return None
+    else:
+        sp = rest.find(" ")
+        if sp < 0:
+            return None
+        rtype = rest[:sp]
+        rest = rest[sp + 1 :]
+    m = re.match(r"([\w\-]+)\(", rest)
+    if not m:
+        return None
+    opcode = m.group(1)
+    body = rest[m.end() :]
+    depth = 1
+    for i, c in enumerate(body):
+        depth += c == "("
+        depth -= c == ")"
+        if depth == 0:
+            operand_str = body[:i]
+            attrs = body[i + 1 :]
+            break
+    else:
+        operand_str, attrs = body, ""
+    operands = [
+        o.strip().lstrip("%")
+        for o in re.split(r",\s*(?![^(]*\))", operand_str)
+        if o.strip()
+    ]
+    return Op(name, rtype, opcode, operands, attrs)
+
+
+def _split_computations(text: str) -> Tuple[Dict[str, List[Op]], str]:
+    comps: Dict[str, List[Op]] = {}
+    cur = None
+    entry = ""
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        m = _COMP_HDR.match(line.strip())
+        if m and not raw.startswith("    "):
+            cur = m.group(2).lstrip("%")
+            comps[cur] = []
+            if m.group(1):
+                entry = cur
+            continue
+        if cur is None:
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        op = _parse_op(line)
+        if op is not None:
+            comps[cur].append(op)
+    return comps, entry
+
+
+def _dot_flops(op: Op, symtab: Dict[str, str]) -> float:
+    rm = _SHAPE_RE.search(op.rtype)
+    if not rm:
+        return 0.0
+    numel = 1
+    if rm.group(2):
+        for d in rm.group(2).split(","):
+            numel *= int(d)
+    contract = 1
+    if op.operands:
+        lhs_t = symtab.get(op.operands[0], "")
+        lm = _SHAPE_RE.search(lhs_t)
+        lhs_dims = (
+            [int(d) for d in lm.group(2).split(",")] if lm and lm.group(2) else []
+        )
+        cm = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.attrs)
+        if cm and cm.group(1):
+            for i in cm.group(1).split(","):
+                if int(i) < len(lhs_dims):
+                    contract *= lhs_dims[int(i)]
+    return 2.0 * numel * contract
+
+
+def _trip_count(cond_ops: List[Op]) -> int:
+    """Max integer constant in the while condition (lax scan/fori pattern)."""
+    best = 1
+    for op in cond_ops:
+        if op.opcode == "constant" and op.operands and op.operands[0].isdigit():
+            best = max(best, int(op.operands[0]))
+    return best
+
+
+def analyze_hlo(text: str) -> dict:
+    comps, entry = _split_computations(text)
+    symtabs = {
+        name: {op.name: op.rtype for op in ops} for name, ops in comps.items()
+    }
+
+    # ----- call graph + fusion marking --------------------------------------
+    edges: Dict[str, List[tuple]] = {}
+    fused: set = set()
+    for name, ops in comps.items():
+        es = []
+        for op in ops:
+            if op.opcode == "while":
+                body = re.search(r"body=%?([\w.\-]+)", op.attrs)
+                cond = re.search(r"condition=%?([\w.\-]+)", op.attrs)
+                if body and cond:
+                    es.append((body.group(1), "while", cond.group(1)))
+                    es.append((cond.group(1), "call", None))
+            else:
+                bm = _BRANCH_RE.search(op.attrs)
+                if bm:
+                    for b in bm.group(1).split(","):
+                        es.append((b.strip().lstrip("%"), "call", None))
+                for cm in _CALL_RE.finditer(op.attrs):
+                    es.append((cm.group(1), "fusion" if op.opcode == "fusion" else "call", None))
+                    if op.opcode == "fusion":
+                        fused.add(cm.group(1))
+        edges[name] = es
+
+    # ----- multiplier propagation -------------------------------------------
+    mult: Dict[str, float] = {entry: 1.0}
+    order = [entry]
+    i = 0
+    while i < len(order):
+        cur = order[i]
+        i += 1
+        for e in edges.get(cur, []):
+            callee, kind = e[0], e[1]
+            if callee not in comps:
+                continue
+            m = mult.get(cur, 0.0)
+            if kind == "while":
+                m *= _trip_count(comps.get(e[2], []))
+            if callee not in mult:
+                order.append(callee)
+            mult[callee] = mult.get(callee, 0.0) + m
+
+    # ----- accounting ---------------------------------------------------------
+    flops = 0.0
+    hbm_bytes = 0.0
+    transcendental_elems = 0.0
+    coll: Dict[str, dict] = {}
+    by_op: Dict[str, float] = {}
+    for name, ops in comps.items():
+        m = mult.get(name, 0.0)
+        if m == 0.0:
+            continue
+        st = symtabs[name]
+        in_fusion = name in fused
+        for op in ops:
+            if op.opcode == "dot":
+                flops += m * _dot_flops(op, st)
+            elif op.opcode in ("exponential", "tanh", "log", "rsqrt", "power",
+                               "exponential-minus-one", "logistic"):
+                rm = _SHAPE_RE.search(op.rtype)
+                if rm and rm.group(2):
+                    n = 1
+                    for d in rm.group(2).split(","):
+                        n *= int(d)
+                    transcendental_elems += m * n
+            if op.opcode in _COLLECTIVES:
+                base = op.opcode.replace("-start", "")
+                obytes = sum(_shape_bytes(st.get(o, "")) for o in op.operands)
+                rbytes = _shape_bytes(op.rtype)
+                d = coll.setdefault(
+                    base,
+                    {"count": 0.0, "operand_bytes": 0.0, "result_bytes": 0.0,
+                     "wire_bytes": 0.0},
+                )
+                d["count"] += m
+                d["operand_bytes"] += m * obytes
+                d["result_bytes"] += m * rbytes
+                d["wire_bytes"] += m * _wire_bytes(base, obytes, rbytes, op.attrs)
+            if (
+                not in_fusion
+                and op.opcode not in _SKIP_BYTES_OPS
+                and op.opcode not in _ASYNC_DONE
+            ):
+                b = _op_hbm_bytes(op, st)
+                hbm_bytes += m * b
+                by_op[op.opcode] = by_op.get(op.opcode, 0.0) + m * b
+    for d in coll.values():
+        d["count"] = int(d["count"])
+
+    # XLA:CPU emulates bf16 by upcasting; loop-invariant motion then clones
+    # whole bf16 residual stacks as f32 buffers. Real TPUs compute bf16
+    # natively, so we quantify these artifact buffers (f32 results of pure
+    # convert fusions whose input is a same-shape bf16 buffer) for an
+    # adjusted temp-memory estimate.
+    upcast_artifact = 0.0
+    for name, ops in comps.items():
+        if mult.get(name, 0.0) == 0.0 or name in fused:
+            continue
+        st = symtabs[name]
+        for op in ops:
+            if not op.name.startswith("wrapped_convert"):
+                continue
+            rm = _SHAPE_RE.search(op.rtype)
+            if not rm or not rm.group(1) == "f32":
+                continue
+            src = st.get(op.operands[0], "") if op.operands else ""
+            sm = _SHAPE_RE.search(src)
+            if sm and sm.group(1) == "bf16" and sm.group(2) == rm.group(2):
+                upcast_artifact += _shape_bytes(op.rtype)
+
+    return {
+        "dot_flops": flops,
+        "hbm_bytes": hbm_bytes,
+        "hbm_bytes_by_op": dict(
+            sorted(by_op.items(), key=lambda kv: -kv[1])[:12]
+        ),
+        "transcendental_elems": transcendental_elems,
+        "collectives": coll,
+        "bf16_upcast_artifact_bytes": upcast_artifact,
+        "n_computations": len(comps),
+    }
+
+
+_GROUPS_IOTA = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+
+
+def _group_size(attrs: str) -> int:
+    m = _GROUPS_IOTA.search(attrs)
+    if m:
+        return max(int(m.group(2)), 1)
+    m = _GROUPS_LIST.search(attrs)
+    if m:
+        return max(len(m.group(1).split(",")), 1)
+    return 2  # unknown: assume >=2 so ratios stay sane
+
+
+def _wire_bytes(kind: str, obytes: float, rbytes: float, attrs: str) -> float:
+    """Per-device ICI wire bytes under ring algorithms.
+
+    all-gather: (n-1)/n * result; reduce-scatter: (n-1)/n * operand;
+    all-reduce: 2(n-1)/n * operand (RS+AG); all-to-all: (n-1)/n * operand;
+    collective-permute: operand (one hop)."""
+    n = _group_size(attrs)
+    f = (n - 1) / n
+    if kind == "all-gather":
+        return f * rbytes
+    if kind == "reduce-scatter":
+        return f * obytes
+    if kind == "all-reduce":
+        return 2.0 * f * obytes
+    if kind == "all-to-all":
+        return f * obytes
+    return obytes  # collective-permute
+
+
+def _op_hbm_bytes(op: Op, st: Dict[str, str]) -> float:
+    """Approximate HBM traffic of one fusion-boundary op.
+
+    Slice-like ops only move the slice, not the whole buffer; in-place
+    dynamic-update-slice moves the update twice (read-modify-write slot)."""
+    if op.opcode == "dynamic-slice":
+        return 2.0 * _shape_bytes(op.rtype)
+    if op.opcode == "dynamic-update-slice":
+        upd = st.get(op.operands[1], "") if len(op.operands) > 1 else ""
+        return 2.0 * _shape_bytes(upd)
+    if op.opcode == "fusion" and "dynamic-update-slice" in op.name:
+        # in-place DUS fusion: traffic = everything except the big aliased
+        # buffer, twice (read-modify-write of the updated slice region)
+        sizes = sorted(
+            (_shape_bytes(st.get(o, "")) for o in op.operands), reverse=True
+        )
+        return 2.0 * sum(sizes[1:]) if sizes else 0.0
+    if op.opcode == "gather":
+        idx = st.get(op.operands[1], "") if len(op.operands) > 1 else ""
+        return 2.0 * _shape_bytes(op.rtype) + _shape_bytes(idx)
+    if op.opcode == "scatter":
+        upd = st.get(op.operands[2], "") if len(op.operands) > 2 else ""
+        return 2.0 * _shape_bytes(upd) + _shape_bytes(op.rtype) * 0.0
+    obytes = sum(_shape_bytes(st.get(o, "")) for o in op.operands)
+    return obytes + _shape_bytes(op.rtype)

@@ -1,0 +1,257 @@
+"""Attention: chunked (XLA path), ring (context-parallel), sharded decode.
+
+Three implementations, one math:
+  * ``attention_chunked`` — q-chunked masked attention; the XLA path used for
+    training/prefill (Pallas flash kernel is the TPU-target twin, validated
+    against the same reference in tests).
+  * ``ring_attention`` — context-parallel attention for archs whose head
+    counts don't divide the model axis. KV blocks stream around the 'model'
+    ring via ppermute with online-softmax accumulation: this is the xDFS
+    parallel-channel pipeline applied to attention (each ring step is one
+    in-flight "file block"; the (m, l, acc) carry is the circular buffer).
+  * ``decode_attention_sharded`` — flash-decoding over a sequence-sharded KV
+    cache (batch over 'data', seq over 'model'), combining per-shard partial
+    softmax statistics with psum. Used by every decode cell.
+
+All softmax math is f32; GQA is einsum-grouped (no kv materialized repeat).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.layers import softcap
+
+NEG_INF = -1e30
+
+
+def _scores(q, k, scale, cap):
+    """q: (B,Sq,Hkv,G,D)  k: (B,Sk,Hkv,D) -> (B,Hkv,G,Sq,Sk) f32."""
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", q, k, preferred_element_type=jnp.float32)
+    return softcap(s * scale, cap)
+
+
+def _gqa_split(q, num_kv_heads):
+    b, s, hq, d = q.shape
+    return q.reshape(b, s, num_kv_heads, hq // num_kv_heads, d)
+
+
+def attention_chunked(
+    q,
+    k,
+    v,
+    *,
+    scale: float,
+    q_offset: int = 0,
+    window: Optional[int] = None,
+    logit_cap: Optional[float] = None,
+    chunk: int = 1024,
+):
+    """Causal (optionally sliding-window) GQA attention, scanned over q chunks.
+
+    q: (B, Sq, Hq, D); k, v: (B, Sk, Hkv, D). Returns (B, Sq, Hq, D).
+    Peak memory O(chunk * Sk) instead of O(Sq * Sk).
+    """
+    b, sq, hq, d = q.shape
+    hkv = k.shape[2]
+    chunk = min(chunk, sq)
+    sq_pad = ((sq + chunk - 1) // chunk) * chunk
+    if sq_pad != sq:  # pad q; padded rows are computed then sliced away
+        q = jnp.pad(q, ((0, 0), (0, sq_pad - sq), (0, 0), (0, 0)))
+    n = sq_pad // chunk
+    qg = _gqa_split(q, hkv)  # (B,Sq_pad,Hkv,G,D)
+    qg = qg.reshape(b, n, chunk, hkv, hq // hkv, d).transpose(1, 0, 2, 3, 4, 5)
+    kpos = jnp.arange(k.shape[1])[None, :]
+
+    @jax.checkpoint  # recompute scores in bwd: never stack f32 score chunks
+    def body(_, xs):
+        qc, i = xs
+        qpos = q_offset + i * chunk + jnp.arange(chunk)[:, None]
+        s = _scores(qc, k, scale, logit_cap)
+        mask = kpos <= qpos
+        if window is not None:
+            mask &= (qpos - kpos) < window
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1).astype(v.dtype)
+        o = jnp.einsum("bhgqk,bkhd->bqhgd", p, v)
+        return None, o
+
+    _, outs = lax.scan(body, None, (qg, jnp.arange(n)))
+    # (n, B, chunk, Hkv, G, D) -> (B, Sq, Hq, D)
+    out = outs.transpose(1, 0, 2, 3, 4, 5).reshape(b, sq_pad, hq, d)
+    return out[:, :sq]
+
+
+# ---------------------------------------------------------------------------
+# Ring attention (context parallel) — xDFS channel pipeline over the KV axis
+# ---------------------------------------------------------------------------
+
+
+def ring_attention(
+    q,
+    k,
+    v,
+    *,
+    axis_name: str,
+    scale: float,
+    logit_cap: Optional[float] = None,
+):
+    """Causal GQA ring attention. Called INSIDE shard_map.
+
+    q, k, v: LOCAL blocks (B, S_loc, H*, D); the sequence axis is sharded over
+    ``axis_name``. Each of the n_shards ring steps overlaps one KV-block
+    ppermute ("channel transfer") with one partial-attention compute, exactly
+    the MTEDP schedule: communication of block t+1 hides behind compute of
+    block t under XLA async collective scheduling.
+    """
+    n = lax.axis_size(axis_name)
+    idx = lax.axis_index(axis_name)
+    b, s_loc, hq, d = q.shape
+    hkv = k.shape[2]
+    qg = _gqa_split(q, hkv)
+    qpos = idx * s_loc + jnp.arange(s_loc)[:, None]  # global q positions
+
+    m0 = jnp.full((b, hkv, hq // hkv, s_loc), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, hkv, hq // hkv, s_loc), jnp.float32)
+    acc0 = jnp.zeros((b, s_loc, hkv, hq // hkv, d), jnp.float32)
+    perm = [(i, (i + 1) % n) for i in range(n)]
+
+    def body(carry, step):
+        kb, vb, m, l, acc = carry
+        owner = (idx - step) % n
+        kpos = owner * s_loc + jnp.arange(s_loc)[None, :]
+        s = _scores(qg, kb, scale, logit_cap)  # (B,Hkv,G,Sq,Sk)
+        s = jnp.where((kpos <= qpos)[None, None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        corr = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        l = l * corr + p.sum(axis=-1)
+        acc = acc * corr.transpose(0, 3, 1, 2)[..., None] + jnp.einsum(
+            "bhgqk,bkhd->bqhgd", p.astype(vb.dtype), vb
+        ).astype(jnp.float32)
+        kb = lax.ppermute(kb, axis_name, perm)
+        vb = lax.ppermute(vb, axis_name, perm)
+        return (kb, vb, m_new, l, acc), None
+
+    (_, _, _, l, acc), _ = lax.scan(body, (k, v, m0, l0, acc0), jnp.arange(n))
+    out = acc / jnp.maximum(l, 1e-30).transpose(0, 3, 1, 2)[..., None]
+    return out.reshape(b, s_loc, hq, d).astype(q.dtype)
+
+
+def gathered_kv_attention(
+    q,
+    k,
+    v,
+    *,
+    axis_name: str,
+    scale: float,
+    logit_cap: Optional[float] = None,
+    chunk: int = 128,
+):
+    """Context-parallel attention via KV all-gather. Called INSIDE shard_map.
+
+    q, k, v: LOCAL blocks (B, S_loc, H*, D), sequence sharded over
+    ``axis_name``. KV is all-gathered (cheap: KV is Hkv*D wide) and local q
+    attends to the full sequence with the q-chunked kernel. Compared to the
+    ring schedule this keeps NO per-step softmax state across a scan, so the
+    backward pass (under remat) stays O(chunk * S) instead of
+    O(n_steps * S_loc * S_loc) saved buffers — measured 3.5 GiB/step/layer on
+    arctic-480b (EXPERIMENTS.md §Dry-run). Preferred for S <= ~64k; the ring
+    path remains for longer sequences.
+    """
+    idx = lax.axis_index(axis_name)
+    s_loc = q.shape[1]
+    k_full = lax.all_gather(k, axis_name, axis=1, tiled=True)
+    v_full = lax.all_gather(v, axis_name, axis=1, tiled=True)
+    return attention_chunked(
+        q,
+        k_full,
+        v_full,
+        scale=scale,
+        q_offset=idx * s_loc,
+        logit_cap=logit_cap,
+        chunk=chunk,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Sharded decode (flash-decoding over seq-sharded KV cache)
+# ---------------------------------------------------------------------------
+
+
+def decode_attention_sharded(
+    q,
+    k_cache,
+    v_cache,
+    new_k,
+    new_v,
+    pos,
+    *,
+    axis_name: str,
+    scale: float,
+    window: Optional[int] = None,
+    rolling: bool = False,
+    logit_cap: Optional[float] = None,
+):
+    """One-token decode against a sequence-sharded KV cache. INSIDE shard_map.
+
+    q: (B, Hq, D); k_cache/v_cache: (B, S_loc, Hkv, D) local slice of the
+    cache; new_k/new_v: (B, Hkv, D) this step's KV (written into whichever
+    shard owns position ``pos``); pos: scalar global position.
+
+    rolling=True: the cache is a rolling window of capacity window (sharded
+    over axis_name); slot for global position p is p % window.
+
+    Returns (out (B,Hq,D), k_cache, v_cache).
+    """
+    n = lax.axis_size(axis_name)
+    idx = lax.axis_index(axis_name)
+    b, s_loc, hkv, d = k_cache.shape
+    hq = q.shape[1]
+    lo = idx * s_loc
+
+    # --- predicated insert of the new token's KV into the owning shard -----
+    # rolling caches have global capacity == window == n * s_loc
+    slot = pos % (n * s_loc) if rolling else pos
+    local_slot = jnp.clip(slot - lo, 0, s_loc - 1)
+    mine = (slot >= lo) & (slot < lo + s_loc)
+
+    def insert(cache, new):
+        cur = lax.dynamic_slice(cache, (0, local_slot, 0, 0), (b, 1, hkv, d))
+        upd = jnp.where(mine, new[:, None], cur)
+        return lax.dynamic_update_slice(cache, upd, (0, local_slot, 0, 0))
+
+    k_cache = insert(k_cache, new_k)
+    v_cache = insert(v_cache, new_v)
+
+    # --- masked partial attention over the local slice ----------------------
+    qg = q.reshape(b, hkv, hq // hkv, d)
+    s = jnp.einsum(
+        "bhgd,bkhd->bhgk", qg, k_cache, preferred_element_type=jnp.float32
+    )
+    s = softcap(s * scale, logit_cap)
+    slots = lo + jnp.arange(s_loc)[None, :]  # (1, S_loc) storage slots
+    if rolling:
+        # global position stored in slot s: largest kpos <= pos with kpos%W==s
+        kpos = pos - ((pos - slots) % window)
+        valid = kpos >= 0
+    else:
+        kpos = slots
+        valid = kpos <= pos
+        if window is not None:
+            valid &= (pos - kpos) < window
+    s = jnp.where(valid[None, None], s, NEG_INF)
+
+    m = s.max(axis=-1)
+    # psum-combine partial softmax statistics across shards
+    m_g = lax.pmax(m, axis_name)
+    p = jnp.exp(s - m_g[..., None])
+    l = lax.psum(p.sum(axis=-1), axis_name)
+    o = jnp.einsum("bhgk,bkhd->bhgd", p.astype(v_cache.dtype), v_cache)
+    o = lax.psum(o.astype(jnp.float32), axis_name)
+    out = (o / jnp.maximum(l, 1e-30)[..., None]).reshape(b, hq, d)
+    return out.astype(q.dtype), k_cache, v_cache

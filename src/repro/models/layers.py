@@ -1,0 +1,144 @@
+"""Shared model building blocks + the ParamDef declarative parameter system.
+
+Parameters are declared as trees of ``PD`` (shape + logical axes + init);
+one source of truth yields both materialized params (``init_params``) and
+PartitionSpec trees (``pspec_tree``) so sharding can never drift from shapes.
+"""
+from __future__ import annotations
+
+import hashlib
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+class PD(NamedTuple):
+    """Parameter definition: shape, logical axis names, init spec."""
+
+    shape: tuple
+    axes: tuple  # logical axis name (str) or None per dim
+    dtype: Any = jnp.bfloat16
+    init: str = "normal"  # normal | zeros | ones | embed
+    scale: float = 1.0
+
+
+def _leaf_key(root: jax.Array, path) -> jax.Array:
+    h = hashlib.md5(jax.tree_util.keystr(path).encode()).digest()
+    return jax.random.fold_in(root, int.from_bytes(h[:4], "little"))
+
+
+def _init_leaf(pd: PD, key: jax.Array) -> jax.Array:
+    if pd.init == "zeros":
+        return jnp.zeros(pd.shape, pd.dtype)
+    if pd.init == "ones":
+        return jnp.ones(pd.shape, pd.dtype)
+    if pd.init == "embed":
+        return (jax.random.normal(key, pd.shape, jnp.float32) * pd.scale).astype(pd.dtype)
+    # fan-in scaled truncated-normal-ish init
+    fan_in = pd.shape[-2] if len(pd.shape) >= 2 else pd.shape[-1]
+    std = pd.scale / (fan_in ** 0.5)
+    return (jax.random.normal(key, pd.shape, jnp.float32) * std).astype(pd.dtype)
+
+
+def is_pd(x) -> bool:
+    return isinstance(x, PD)
+
+
+def init_params(defs, key: jax.Array):
+    """Materialize a ParamDef tree into arrays (deterministic per-path keys)."""
+    flat = jax.tree_util.tree_flatten_with_path(defs, is_leaf=is_pd)
+    leaves = [_init_leaf(pd, _leaf_key(key, path)) for path, pd in flat[0]]
+    return jax.tree_util.tree_unflatten(flat[1], leaves)
+
+
+def abstract_params(defs):
+    """ShapeDtypeStruct tree (for dry-run lowering: no allocation)."""
+    return jax.tree.map(
+        lambda pd: jax.ShapeDtypeStruct(pd.shape, pd.dtype), defs, is_leaf=is_pd
+    )
+
+
+def pspec_tree(defs, rules: dict):
+    """Map logical axes -> mesh axes using ``rules`` (missing -> replicated)."""
+
+    def spec(pd: PD) -> P:
+        return P(*(rules.get(a) for a in pd.axes))
+
+    return jax.tree.map(spec, defs, is_leaf=is_pd)
+
+
+# ---------------------------------------------------------------------------
+# numerics
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x, w, eps: float, gemma_style: bool):
+    """RMSNorm with f32-accumulated sum-of-squares but NO materialized f32
+    copy of x: a full f32 (B,S,d) intermediate gets saved/stacked as a scan
+    residual (2.5x activation memory, measured on llama3-8b/arctic-480b —
+    EXPERIMENTS.md §Dry-run), so the variance is accumulated via an einsum
+    with preferred_element_type=f32 and the normalize multiply stays bf16."""
+    ss = jnp.einsum("...d,...d->...", x, x, preferred_element_type=jnp.float32)
+    r = jax.lax.rsqrt(ss / x.shape[-1] + eps)[..., None]
+    scale = (1.0 + w.astype(jnp.float32)) if gemma_style else w.astype(jnp.float32)
+    return (x * r.astype(x.dtype)) * scale.astype(x.dtype)
+
+
+def softcap(x, cap: Optional[float]):
+    if cap is None:
+        return x
+    return jnp.tanh(x / cap) * cap
+
+
+def rope(x, positions, theta: float):
+    """Rotary embedding. x: (..., S, H, D); positions: (..., S)."""
+    d = x.shape[-1]
+    half = d // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions[..., None].astype(jnp.float32) * freq  # (..., S, half)
+    angles = angles[..., None, :]  # broadcast over heads
+    sin, cos = jnp.sin(angles), jnp.cos(angles)
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    )
+    return out.astype(x.dtype)
+
+
+def act_fn(name: str):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu, "gelu_plain": jax.nn.gelu}[name]
+
+
+# ---------------------------------------------------------------------------
+# MLP / embedding defs
+# ---------------------------------------------------------------------------
+
+
+def mlp_defs(cfg, d_ff: Optional[int] = None, prefix_axes=()) -> dict:
+    """Gated (SwiGLU/GeGLU) or plain FFN param defs.
+
+    prefix_axes: extra leading (shape, axis) pairs, e.g. layer stacking.
+    """
+    d_ff = d_ff or cfg.d_ff
+    pre_s = tuple(s for s, _ in prefix_axes)
+    pre_a = tuple(a for _, a in prefix_axes)
+    gated = cfg.act != "gelu_plain"
+    defs = {
+        "w_in": PD(pre_s + (cfg.d_model, d_ff), pre_a + ("embed", "ff")),
+        "w_out": PD(pre_s + (d_ff, cfg.d_model), pre_a + ("ff", "embed_out")),
+    }
+    if gated:
+        defs["w_gate"] = PD(pre_s + (cfg.d_model, d_ff), pre_a + ("embed", "ff"))
+    return defs
+
+
+def mlp_apply(params: dict, x, cfg, d_ff: Optional[int] = None):
+    a = act_fn(cfg.act)
+    h = x @ params["w_in"]
+    if "w_gate" in params:
+        h = a(x @ params["w_gate"]) * h
+    else:
+        h = a(h)
+    return h @ params["w_out"]

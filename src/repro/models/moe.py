@@ -1,0 +1,188 @@
+"""Mixture-of-Experts layer: top-k token-choice routing, gather/scatter
+dispatch (NO one-hot dispatch einsums — those would double compiled FLOPs and
+poison the roofline), and an EXPLICIT shard_map expert stage.
+
+The expert-parallel transition is written with jax.lax collectives instead of
+relying on SPMD to infer it (the inferred path involuntarily rematerializes
+~70 GiB buffers in the backward pass for cross-axis transposes — measured on
+arctic-480b; see EXPERIMENTS.md §Dry-run):
+
+  * tokens sequence-sharded over 'model' (cp profile): all_to_all over
+    'model' splits the expert dim and concatenates groups — the GShard
+    transition, explicitly.
+  * tokens replicated over 'model' (tp profile): each model rank slices its
+    own experts and the combine is a psum — row-parallel MoE.
+
+Expert weights are EP-sharded over 'model' with their fan-in dim ZeRO-sharded
+over 'data' (all-gathered on entry; the backward re-scatters — standard ZeRO-3).
+
+Routing/bookkeeping (cumsum capacity assignment) stays group-local so it
+never crosses shards. Capacity:
+  * train: C = ceil(group * top_k / E * capacity_factor)   (may drop)
+  * prefill: same with capacity_factor >= 2 (rare drops)
+  * decode: C = group * top_k                              (zero-drop)
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.models.layers import PD, act_fn
+
+
+class MoEMetrics(NamedTuple):
+    aux_loss: jax.Array  # load-balancing loss
+    z_loss: jax.Array  # router z-loss
+    drop_frac: jax.Array  # fraction of (token, k) assignments dropped
+
+
+def moe_defs(cfg, prefix_axes=()) -> dict:
+    pre_s = tuple(s for s, _ in prefix_axes)
+    pre_a = tuple(a for _, a in prefix_axes)
+    e, d, f = cfg.num_experts, cfg.d_model, cfg.moe_dff
+    return {
+        "router": PD(pre_s + (d, e), pre_a + ("embed", None), dtype=jnp.float32),
+        "w_in": PD(pre_s + (e, d, f), pre_a + ("experts", "embed", "ff")),
+        "w_gate": PD(pre_s + (e, d, f), pre_a + ("experts", "embed", "ff")),
+        "w_out": PD(pre_s + (e, f, d), pre_a + ("experts", "ff", "embed_out")),
+    }
+
+
+def _expert_ffn_shard_map(policy, cfg, expert_in, w_in, w_gate, w_out, tok_axes):
+    """(G, E, C, d) -> (G, E, C, d) expert FFN with explicit collectives."""
+    e = cfg.num_experts
+    msize = policy.msize
+    use_a2a = "model" in tok_axes
+    act = act_fn(cfg.act)
+    gspec = P(tok_axes or None, None, None, None)
+    wspec = policy.expert_wspec()
+    fsdp = policy.fsdp
+
+    compress = getattr(cfg, "moe_a2a_compress", False)
+
+    def a2a(t, split_axis, concat_axis):
+        """Expert-parallel all-to-all, optionally through the ZxDFS int8
+        channel (quantize in VMEM -> int8 on the wire -> dequant): halves
+        the a2a wire bytes (EXPERIMENTS.md §Perf-3)."""
+        if not compress:
+            return lax.all_to_all(t, "model", split_axis=split_axis,
+                                  concat_axis=concat_axis, tiled=True)
+        from repro.core.compress import Quantized, dequantize_int8, quantize_int8
+
+        amax = jnp.max(jnp.abs(t.astype(jnp.float32)), axis=-1, keepdims=True)
+        scale = jnp.maximum(amax, 1e-30) / 127.0
+        q = jnp.clip(jnp.round(t.astype(jnp.float32) / scale), -127, 127).astype(jnp.int8)
+        q = lax.all_to_all(q, "model", split_axis=split_axis,
+                           concat_axis=concat_axis, tiled=True)
+        scale = lax.all_to_all(scale, "model", split_axis=split_axis,
+                               concat_axis=concat_axis, tiled=True)
+        return (q.astype(jnp.float32) * scale).astype(t.dtype)
+
+    def local(xi, wi, wg, wo):
+        # xi: (g_loc, E, C, d); wi/wg: (E_loc, d_loc, f); wo: (E_loc, f_loc, d)
+        if msize > 1:
+            if use_a2a:
+                xi = a2a(xi, 1, 0)
+            else:
+                j = lax.axis_index("model")
+                xi = lax.dynamic_slice_in_dim(xi, j * (e // msize), e // msize, axis=1)
+        if fsdp and policy.dsize > 1:
+            wi = lax.all_gather(wi, "data", axis=1, tiled=True)
+            wg = lax.all_gather(wg, "data", axis=1, tiled=True)
+            wo = lax.all_gather(wo, "data", axis=1, tiled=True)
+        h = jnp.einsum("gecd,edf->gecf", xi, wi)
+        h = act(jnp.einsum("gecd,edf->gecf", xi, wg)) * h
+        out = jnp.einsum("gecf,efd->gecd", h, wo)
+        if msize > 1:
+            if use_a2a:
+                out = a2a(out, 0, 1)
+            else:
+                buf = jnp.zeros(xi.shape[:1] + (e,) + xi.shape[2:], out.dtype)
+                j = lax.axis_index("model")
+                buf = lax.dynamic_update_slice_in_dim(buf, out, j * (e // msize), axis=1)
+                out = lax.psum(buf, "model")
+        return out
+
+    fn = jax.shard_map(
+        local,
+        mesh=policy.mesh,
+        in_specs=(gspec, wspec, wspec, wspec),
+        out_specs=gspec,
+        check_vma=False,
+    )
+    return fn(expert_in, w_in, w_gate, w_out)
+
+
+def moe_apply(params, x, cfg, *, group: int, capacity: int, policy, batch: int):
+    """x: (T, d) flat tokens in SHARD-MAJOR order, T divisible by group.
+
+    Returns (T, d), MoEMetrics.
+    """
+    t, d = x.shape
+    e, k, c = cfg.num_experts, cfg.top_k, capacity
+    g = t // group
+    tok_axes = policy.moe_token_axes(batch)
+    con = lambda a, spec: policy.constrain(a, spec)
+
+    xg = con(x.reshape(g, group, d), P(tok_axes or None, None, None))
+
+    # ---- routing (f32 accumulation; no f32 copy of the activations) ---------
+    logits = jnp.einsum(
+        "gnd,de->gne",
+        xg,
+        params["router"].astype(xg.dtype),
+        preferred_element_type=jnp.float32,
+    )
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_ids = jax.lax.top_k(probs, k)  # (g, n, k)
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # aux losses (Switch/GShard load-balance + z-loss)
+    me = probs.mean(axis=(0, 1))  # (e,)
+    ce_frac = jnp.zeros((e,)).at[expert_ids.reshape(-1)].add(1.0) / (g * group * k)
+    aux = e * jnp.sum(me * ce_frac)
+    z = jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2)
+
+    # ---- capacity assignment (group-local cumsum over flattened (n,k)) ------
+    flat_e = expert_ids.reshape(g, group * k)  # (g, nk)
+    onehot = jax.nn.one_hot(flat_e, e, dtype=jnp.int32)  # (g, nk, e)
+    pos = jnp.cumsum(onehot, axis=1) - 1
+    pos = jnp.take_along_axis(pos, flat_e[..., None], axis=-1)[..., 0]  # (g, nk)
+    keep = pos < c
+    drop_frac = 1.0 - keep.mean()
+
+    slot = flat_e * c + jnp.where(keep, pos, 0)  # (g, nk) in [0, e*c)
+    token_of = jnp.arange(group * k, dtype=jnp.int32) // k  # (nk,)
+
+    # inverse map: which token (if any) fills each (expert, cap) slot.
+    # dropped assignments scatter to index e*c which mode="drop" discards;
+    # kept slots are unique by construction (pos is a per-expert running count).
+    slot_to_tok = jnp.full((g, e * c), group, jnp.int32)  # 'group' = empty sentinel
+    slot_to_tok = slot_to_tok.at[
+        jnp.arange(g)[:, None], jnp.where(keep, slot, e * c)
+    ].set(token_of[None, :].repeat(g, 0), mode="drop")
+
+    valid = slot_to_tok < group
+    gather_idx = jnp.minimum(slot_to_tok, group - 1)
+    expert_in = jnp.take_along_axis(xg, gather_idx[..., None], axis=1)  # (g, e*c, d)
+    expert_in = jnp.where(valid[..., None], expert_in, 0).reshape(g, e, c, d)
+    expert_in = con(expert_in, P(tok_axes or None, None, None, None))
+
+    # ---- expert FFN (explicit shard_map stage) -------------------------------
+    eo = _expert_ffn_shard_map(
+        policy, cfg, expert_in, params["w_in"], params["w_gate"], params["w_out"],
+        tok_axes,
+    ).reshape(g, e * c, d)
+
+    # ---- combine back to tokens ---------------------------------------------
+    picked = jnp.take_along_axis(eo, slot[..., None], axis=1)  # (g, nk, d)
+    picked = jnp.where(keep[..., None], picked, 0)
+    w = gate_vals.reshape(g, group * k, 1).astype(picked.dtype)
+    out = (picked * w).reshape(g, group, k, d).sum(axis=2)
+
+    metrics = MoEMetrics(aux.astype(jnp.float32), z.astype(jnp.float32), drop_frac)
+    return out.reshape(t, d).astype(x.dtype), metrics

@@ -1,0 +1,107 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma).
+
+Recurrence (diagonal, per-channel, f32):
+  r_t = sigmoid(W_a x_t)            # recurrence gate
+  i_t = sigmoid(W_x x_t)            # input gate
+  log a_t = -c * softplus(L) * r_t  # c = 8
+  h_t = a_t o h_{t-1} + sqrt(1 - a_t^2) o (i_t o x_t)
+
+Block:  y = W_out( GeLU(W_gate x) o RGLRU(conv1d_4(W_in x)) )
+Train/prefill uses a chunked associative scan (the Pallas kernel
+``kernels/rglru_scan`` is the TPU-target twin of the inner scan).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.layers import PD
+
+C_FACTOR = 8.0
+CHUNK = 256
+
+
+def rglru_defs(cfg, prefix=()) -> dict:
+    d, lru, cw = cfg.d_model, cfg.lru_dim, cfg.conv1d_width
+    ps = tuple(s for s, _ in prefix)
+    pa = tuple(a for _, a in prefix)
+    return {
+        "w_in": PD(ps + (d, lru), pa + ("embed", "lru")),
+        "w_gate": PD(ps + (d, lru), pa + ("embed", "lru")),
+        "w_out": PD(ps + (lru, d), pa + ("lru", "embed_out")),
+        "conv_w": PD(ps + (cw, lru), pa + (None, "lru"), scale=0.3),
+        "conv_b": PD(ps + (lru,), pa + ("lru",), init="zeros"),
+        "w_a": PD(ps + (lru, lru), pa + ("lru", "lru_out")),
+        "b_a": PD(ps + (lru,), pa + ("lru",), init="zeros", dtype=jnp.float32),
+        "w_x": PD(ps + (lru, lru), pa + ("lru", "lru_out")),
+        "b_x": PD(ps + (lru,), pa + ("lru",), init="zeros", dtype=jnp.float32),
+        # Lambda init so that a^c spans ~[0.9, 0.999] at r=1 (Griffin app. A)
+        "lam": PD(ps + (lru,), pa + ("lru",), init="ones", dtype=jnp.float32),
+    }
+
+
+def _causal_conv1d(x, w, b, state):
+    """x: (B,S,C); w: (cw,C); state: (B,cw-1,C) trailing inputs of prev segment."""
+    cw = w.shape[0]
+    xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)  # (B, S+cw-1, C)
+    out = sum(xp[:, i : i + x.shape[1], :] * w[i] for i in range(cw)) + b
+    return out.astype(x.dtype), xp[:, -(cw - 1) :, :]
+
+
+def linear_scan_chunked(a, bx, h0, chunk=CHUNK):
+    """Diagonal linear recurrence h_t = a_t*h_{t-1} + bx_t, scanned over chunks.
+
+    a, bx: (B,S,C) f32; h0: (B,C) f32. Returns (h_all (B,S,C), h_last).
+    """
+    from repro.models.rwkv6 import best_chunk
+
+    b, s, c = a.shape
+    chunk = best_chunk(s, chunk)
+    n = s // chunk
+    ac = a.reshape(b, n, chunk, c).transpose(1, 0, 2, 3)
+    bc = bx.reshape(b, n, chunk, c).transpose(1, 0, 2, 3)
+
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 * a2, b1 * a2 + b2
+
+    def body(h, xs):
+        ab, bb = xs  # (B,L,C)
+        acc_a, acc_b = lax.associative_scan(combine, (ab, bb), axis=1)
+        hs = acc_a * h[:, None, :] + acc_b
+        return hs[:, -1, :], hs
+
+    h_last, hc = lax.scan(body, h0, (ac, bc))
+    return hc.transpose(1, 0, 2, 3).reshape(b, s, c), h_last
+
+
+def rglru_apply(p, x, cfg, state):
+    """x: (B,S,d). state: dict(h=(B,lru) f32, conv=(B,cw-1,lru)) or None.
+
+    Returns (out (B,S,d), new_state).
+    """
+    b, s, d = x.shape
+    lru, cw = cfg.lru_dim, cfg.conv1d_width
+    if state is None:
+        h0 = jnp.zeros((b, lru), jnp.float32)
+        conv_state = jnp.zeros((b, cw - 1, lru), x.dtype)
+    else:
+        h0, conv_state = state["h"], state["conv"]
+
+    gate = jax.nn.gelu(x @ p["w_gate"])
+    u = x @ p["w_in"]
+    u, conv_state = _causal_conv1d(u, p["conv_w"], p["conv_b"], conv_state)
+
+    u32 = u.astype(jnp.float32)
+    r = jax.nn.sigmoid(u32 @ p["w_a"].astype(jnp.float32) + p["b_a"])
+    i = jax.nn.sigmoid(u32 @ p["w_x"].astype(jnp.float32) + p["b_x"])
+    log_a = -C_FACTOR * jax.nn.softplus(p["lam"]) * r  # (B,S,lru) <= 0
+    a = jnp.exp(log_a)
+    # sqrt(1-a^2) with a->1 safety
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    bx = beta * (i * u32)
+    h, h_last = linear_scan_chunked(a, bx, h0)
+    out = (gate * h.astype(x.dtype)) @ p["w_out"]
+    return out, {"h": h_last, "conv": conv_state}

@@ -1,0 +1,212 @@
+"""RWKV-6 (Finch) blocks: data-dependent-decay time-mix + channel-mix.
+
+Training/prefill uses the chunked linear-attention form (scan over chunks of
+length ``CHUNK``; matrix-valued per-head state carried in f32). All decay
+exponents are arranged to be <= 0 so every exp() is safe:
+
+  o_t  = r_t^T S_{t-1} + (r_t . (u o k_t)) v_t
+  S_t  = diag(w_t) S_{t-1} + k_t v_t^T,   w_t = exp(-exp(dec_t)) in (0,1)
+
+Chunked (local indices 0..L-1, incoming state S):
+  cum[t]   = sum_{s<=t} logw_s          (inclusive cumsum, <=0)
+  pex[t]   = cum[t] - logw[t]           (exclusive)
+  o_inter  = (r_t o exp(pex[t])) @ S
+  A[t,s]   = sum_i r[t,i] k[s,i] exp(pex[t,i] - cum[s,i])   (s < t)
+  o_diag   = (sum_i r[t,i] u_i k[t,i]) v_t
+  S'       = exp(cum[L-1]) o S + sum_s (exp(cum[L-1]-cum[s]) o k_s) v_s^T
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.layers import PD
+
+CHUNK = 64
+LORA_MIX = 32
+LORA_DECAY = 64
+
+
+def best_chunk(s: int, chunk: int) -> int:
+    """Largest divisor of s that is <= chunk (keeps state exact at chunk ends)."""
+    for c in range(min(chunk, s), 0, -1):
+        if s % c == 0:
+            return c
+    return 1
+
+
+def _ln(x, w, b, eps=1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = x.mean(-1, keepdims=True)
+    var = x.var(-1, keepdims=True)
+    return ((x - mu) * lax.rsqrt(var + eps) * w + b).astype(dt)
+
+
+def group_norm_heads(o, w, b, eps=1e-5):
+    """o: (B, S, H, hd); normalize per head over hd."""
+    dt = o.dtype
+    o = o.astype(jnp.float32)
+    mu = o.mean(-1, keepdims=True)
+    var = o.var(-1, keepdims=True)
+    o = (o - mu) * lax.rsqrt(var + eps)
+    b_, s_, h_, hd_ = o.shape
+    o = o.reshape(b_, s_, h_ * hd_) * w + b
+    return o.astype(dt)
+
+
+def time_mix_defs(cfg, prefix=()) -> dict:
+    d = cfg.d_model
+    ps = tuple(s for s, _ in prefix)
+    pa = tuple(a for _, a in prefix)
+    h = d // cfg.rwkv_head_dim
+    f32 = jnp.float32
+    return {
+        "mu_x": PD(ps + (d,), pa + (None,), init="zeros", dtype=f32),
+        "mu_wkvrg": PD(ps + (5, d), pa + (None, None), init="zeros", dtype=f32),
+        "lora_A": PD(ps + (d, 5 * LORA_MIX), pa + ("embed", None)),
+        "lora_B": PD(ps + (5, LORA_MIX, d), pa + (None, None, None), init="zeros"),
+        "w0": PD(ps + (d,), pa + (None,), init="zeros", dtype=f32),
+        "dec_A": PD(ps + (d, LORA_DECAY), pa + ("embed", None)),
+        "dec_B": PD(ps + (LORA_DECAY, d), pa + (None, None), init="zeros"),
+        "u": PD(ps + (h, cfg.rwkv_head_dim), pa + (None, None), init="zeros", dtype=f32),
+        "w_r": PD(ps + (d, d), pa + ("embed", "heads")),
+        "w_k": PD(ps + (d, d), pa + ("embed", "heads")),
+        "w_v": PD(ps + (d, d), pa + ("embed", "heads")),
+        "w_g": PD(ps + (d, d), pa + ("embed", "heads")),
+        "w_o": PD(ps + (d, d), pa + ("heads", "embed_out")),
+        "gn_w": PD(ps + (d,), pa + (None,), init="ones", dtype=f32),
+        "gn_b": PD(ps + (d,), pa + (None,), init="zeros", dtype=f32),
+    }
+
+
+def channel_mix_defs(cfg, prefix=()) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    ps = tuple(s for s, _ in prefix)
+    pa = tuple(a for _, a in prefix)
+    return {
+        "mu_k": PD(ps + (d,), pa + (None,), init="zeros", dtype=jnp.float32),
+        "mu_r": PD(ps + (d,), pa + (None,), init="zeros", dtype=jnp.float32),
+        "w_k": PD(ps + (d, f), pa + ("embed", "ff")),
+        "w_v": PD(ps + (f, d), pa + ("ff", "embed_out")),
+        "w_r": PD(ps + (d, d), pa + ("embed", "heads")),
+    }
+
+
+def _token_shift(x, prev):
+    """prev: (B, d) last token of the previous segment (zeros at start)."""
+    return jnp.concatenate([prev[:, None, :], x[:, :-1, :]], axis=1)
+
+
+def _mix_inputs(p, x, prev):
+    """Finch data-dependent token-shift mixing. Returns dict of mixed inputs."""
+    xx = _token_shift(x, prev) - x  # (B,S,d)
+    x_base = x + xx * p["mu_x"].astype(x.dtype)
+    lora = jnp.tanh(x_base @ p["lora_A"])  # (B,S,5*32)
+    lora = lora.reshape(*lora.shape[:-1], 5, LORA_MIX)
+    dyn = jnp.einsum("bsfm,fmd->bsfd", lora, p["lora_B"])  # (B,S,5,d)
+    mixed = x[..., None, :] + xx[..., None, :] * (
+        p["mu_wkvrg"].astype(x.dtype) + dyn
+    )  # (B,S,5,d)
+    names = ("w", "k", "v", "r", "g")
+    return {n: mixed[..., i, :] for i, n in enumerate(names)}
+
+
+def wkv_chunked(r, k, v, logw, u, state, chunk=CHUNK):
+    """r,k,v,logw: (B,S,H,hd); u: (H,hd); state: (B,H,hd,hd) f32.
+
+    Returns (o: (B,S,H,hd), new_state). logw <= 0.
+    """
+    b, s, h, hd = r.shape
+    chunk = best_chunk(s, chunk)
+    n = s // chunk
+
+    def to_chunks(x):
+        return x.reshape(b, n, chunk, h, hd).transpose(1, 0, 3, 2, 4)  # (n,B,H,L,hd)
+
+    rc, kc, vc, wc = map(to_chunks, (r, k, v, logw.astype(jnp.float32)))
+    causal = jnp.tril(jnp.ones((chunk, chunk), bool), k=-1)  # strict lower
+
+    @jax.checkpoint  # recompute intra-chunk decay tensors in bwd: without
+    # this the scan stacks (n_chunks, B, H, L, L, hd) f32 residuals
+    # (5.4 GiB/layer on rwkv6-3b train_4k — EXPERIMENTS.md §Perf-1)
+    def body(S, xs):
+        rb, kb, vb, wb = xs  # (B,H,L,hd)
+        rb32, kb32 = rb.astype(jnp.float32), kb.astype(jnp.float32)
+        vb32 = vb.astype(jnp.float32)
+        cum = jnp.cumsum(wb, axis=2)  # (B,H,L,hd) <= 0
+        pex = cum - wb
+        r_dec = rb32 * jnp.exp(pex)  # decayed receptance
+        o_inter = jnp.einsum("bhli,bhij->bhlj", r_dec, S)
+        # intra-chunk pairwise decays (B,H,L,L,hd); exponent <= 0 for s < t.
+        # (bf16 storage for this tensor was tried and REFUTED on the CPU
+        # validation path: XLA:CPU upcasts bf16 so converts added traffic,
+        # 9.78->9.99 s — EXPERIMENTS.md §Perf-1 iteration 4.)
+        dmat = pex[:, :, :, None, :] - cum[:, :, None, :, :]
+        e = jnp.exp(jnp.where(causal[None, None, :, :, None], dmat, -jnp.inf))
+        a = jnp.einsum("bhti,bhsi,bhtsi->bhts", rb32, kb32, e)
+        o_intra = jnp.einsum("bhts,bhsj->bhtj", a, vb32)
+        diag = jnp.einsum("bhti,hi->bht", rb32 * kb32, u.astype(jnp.float32))
+        o_diag = diag[..., None] * vb32
+        o = o_inter + o_intra + o_diag
+        # state to end of chunk
+        k_dec = kb32 * jnp.exp(cum[:, :, -1:, :] - cum)
+        S_new = jnp.exp(cum[:, :, -1, :])[..., None] * S + jnp.einsum(
+            "bhsi,bhsj->bhij", k_dec, vb32
+        )
+        return S_new, o
+
+    state, oc = lax.scan(body, state, (rc, kc, vc, wc))
+    o = oc.transpose(1, 0, 3, 2, 4).reshape(b, s, h, hd)
+    return o.astype(r.dtype), state
+
+
+def wkv_step(r, k, v, logw, u, state):
+    """Single decode step. r,k,v,logw: (B,H,hd); state (B,H,hd,hd) f32."""
+    r32, k32, v32 = (x.astype(jnp.float32) for x in (r, k, v))
+    kv = k32[..., :, None] * v32[..., None, :]  # (B,H,hd,hd)
+    o = jnp.einsum("bhi,bhij->bhj", r32, state + u.astype(jnp.float32)[..., None] * kv)
+    state = jnp.exp(logw.astype(jnp.float32))[..., None] * state + kv
+    return o.astype(r.dtype), state
+
+
+def time_mix_apply(p, x, cfg, state):
+    """x: (B,S,d). state: dict(S=(B,H,hd,hd) f32, prev=(B,d)) or None (zeros).
+
+    Returns (out, new_state).
+    """
+    b, s, d = x.shape
+    hd = cfg.rwkv_head_dim
+    h = d // hd
+    if state is None:
+        prev = jnp.zeros((b, d), x.dtype)
+        S = jnp.zeros((b, h, hd, hd), jnp.float32)
+    else:
+        prev, S = state["prev"], state["S"]
+    m = _mix_inputs(p, x, prev)
+    dec = p["w0"].astype(jnp.float32) + (
+        jnp.tanh(m["w"] @ p["dec_A"]) @ p["dec_B"]
+    ).astype(jnp.float32)
+    logw = -jnp.exp(dec)  # (B,S,d) <= 0
+    r = (m["r"] @ p["w_r"]).reshape(b, s, h, hd)
+    k = (m["k"] @ p["w_k"]).reshape(b, s, h, hd)
+    v = (m["v"] @ p["w_v"]).reshape(b, s, h, hd)
+    g = jax.nn.silu(m["g"] @ p["w_g"])
+    o, S = wkv_chunked(r, k, v, logw.reshape(b, s, h, hd), p["u"], S, chunk=CHUNK)
+    o = group_norm_heads(o, p["gn_w"], p["gn_b"]).reshape(b, s, d)
+    out = (o * g) @ p["w_o"]
+    return out, {"prev": x[:, -1, :], "S": S}
+
+
+def channel_mix_apply(p, x, cfg, state):
+    b, s, d = x.shape
+    prev = jnp.zeros((b, d), x.dtype) if state is None else state["prev"]
+    xx = _token_shift(x, prev) - x
+    xk = x + xx * p["mu_k"].astype(x.dtype)
+    xr = x + xx * p["mu_r"].astype(x.dtype)
+    k = jnp.square(jax.nn.relu(xk @ p["w_k"]))
+    out = jax.nn.sigmoid(xr @ p["w_r"]) * (k @ p["w_v"])
+    return out, {"prev": x[:, -1, :]}

@@ -1,0 +1,766 @@
+"""Decoder LM assembling every assigned block family.
+
+Layers are organized as a GROUPED scan: the layer pattern (e.g. 'lg' for
+gemma2, 'rrl' for recurrentgemma, 'g'/'k' homogeneous) defines a super-block
+that repeats num_layers // len(pattern) times (+ an unscanned epilogue for the
+remainder). Every sub-block position has a static kind, so caches/windows are
+static per position while HLO stays small (one scan, not L unrolled layers).
+
+Modes: 'train' (loss-ready hidden states), 'prefill' (build KV/recurrent
+caches, last-position logits), 'decode' (one token against caches;
+sequence-sharded flash-decoding attention).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import rglru as rglru_mod
+from repro.models import rwkv6 as rwkv_mod
+from repro.models.attention import (
+    gathered_kv_attention,
+    attention_chunked,
+    decode_attention_sharded,
+    ring_attention,
+)
+from repro.models.layers import (
+    PD,
+    abstract_params,
+    init_params,
+    mlp_apply,
+    mlp_defs,
+    rms_norm,
+    rope,
+    softcap,
+)
+from repro.models.moe import moe_apply, moe_defs
+from repro.runtime.shard import Policy, make_policy
+
+CACHE_PAD = 256
+
+
+def aux_zero():
+    return (jnp.zeros((), jnp.float32),) * 3
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+class LM:
+    def __init__(self, cfg: ModelConfig, mesh, kind: str, plain: bool = False):
+        self.cfg = cfg
+        self.mesh = mesh
+        self.kind = kind
+        self.policy: Policy = make_policy(cfg, mesh, kind, plain=plain)
+        self.pattern = cfg.layer_pattern
+        self.n_scan = cfg.num_layers // len(self.pattern)
+        self.rem = cfg.num_layers % len(self.pattern)
+        self.vocab_pad = (
+            cfg.padded_vocab() if cfg.vocab_size % max(self.policy.msize, 16) else cfg.vocab_size
+        )
+        self.defs = self._build_defs()
+
+    # ------------------------------------------------------------------
+    # parameter definitions
+    # ------------------------------------------------------------------
+    def _norm_init(self) -> str:
+        return "zeros" if self.cfg.gemma_norm else "ones"
+
+    def _attn_defs(self, prefix) -> dict:
+        cfg = self.cfg
+        ps = tuple(s for s, _ in prefix)
+        pa = tuple(a for _, a in prefix)
+        kv_axis = "heads" if self.policy.kv_repeat == 1 else "kv_fused"
+        d = {
+            "norm1": PD(ps + (cfg.d_model,), pa + (None,), init=self._norm_init(), dtype=jnp.float32),
+            "wq": PD(ps + (cfg.d_model, cfg.q_dim), pa + ("embed", "heads")),
+            "wk": PD(ps + (cfg.d_model, cfg.kv_dim), pa + ("embed", kv_axis)),
+            "wv": PD(ps + (cfg.d_model, cfg.kv_dim), pa + ("embed", kv_axis)),
+            "wo": PD(ps + (cfg.q_dim, cfg.d_model), pa + ("heads", "embed_out")),
+            "norm2": PD(ps + (cfg.d_model,), pa + (None,), init=self._norm_init(), dtype=jnp.float32),
+        }
+        if cfg.qk_norm:
+            d["q_norm"] = PD(ps + (cfg.head_dim,), pa + (None,), init="ones", dtype=jnp.float32)
+            d["k_norm"] = PD(ps + (cfg.head_dim,), pa + (None,), init="ones", dtype=jnp.float32)
+        if cfg.post_block_norm:
+            d["post1"] = PD(ps + (cfg.d_model,), pa + (None,), init=self._norm_init(), dtype=jnp.float32)
+            d["post2"] = PD(ps + (cfg.d_model,), pa + (None,), init=self._norm_init(), dtype=jnp.float32)
+        if cfg.moe:
+            d["moe"] = moe_defs(cfg, prefix)
+            if cfg.dense_residual:
+                d["dense"] = mlp_defs(cfg, prefix_axes=prefix)
+        else:
+            d["mlp"] = mlp_defs(cfg, prefix_axes=prefix)
+        return d
+
+    def _rglru_defs(self, prefix) -> dict:
+        cfg = self.cfg
+        ps = tuple(s for s, _ in prefix)
+        pa = tuple(a for _, a in prefix)
+        return {
+            "norm1": PD(ps + (cfg.d_model,), pa + (None,), init=self._norm_init(), dtype=jnp.float32),
+            "rglru": rglru_mod.rglru_defs(cfg, prefix),
+            "norm2": PD(ps + (cfg.d_model,), pa + (None,), init=self._norm_init(), dtype=jnp.float32),
+            "mlp": mlp_defs(cfg, prefix_axes=prefix),
+        }
+
+    def _rwkv_defs(self, prefix) -> dict:
+        cfg = self.cfg
+        ps = tuple(s for s, _ in prefix)
+        pa = tuple(a for _, a in prefix)
+        f32 = jnp.float32
+        return {
+            "ln1_w": PD(ps + (cfg.d_model,), pa + (None,), init="ones", dtype=f32),
+            "ln1_b": PD(ps + (cfg.d_model,), pa + (None,), init="zeros", dtype=f32),
+            "tm": rwkv_mod.time_mix_defs(cfg, prefix),
+            "ln2_w": PD(ps + (cfg.d_model,), pa + (None,), init="ones", dtype=f32),
+            "ln2_b": PD(ps + (cfg.d_model,), pa + (None,), init="zeros", dtype=f32),
+            "cm": rwkv_mod.channel_mix_defs(cfg, prefix),
+        }
+
+    def _block_defs(self, ch: str, prefix) -> dict:
+        if ch in ("g", "l"):
+            return self._attn_defs(prefix)
+        if ch == "r":
+            return self._rglru_defs(prefix)
+        if ch == "k":
+            return self._rwkv_defs(prefix)
+        raise ValueError(ch)
+
+    def _build_defs(self) -> dict:
+        cfg = self.cfg
+        defs: Dict[str, Any] = {}
+        if cfg.frontend is None or cfg.tie_embeddings:
+            defs["embed"] = PD(
+                (self.vocab_pad, cfg.d_model),
+                ("vocab", "embed"),
+                init="embed",
+                scale=cfg.d_model**-0.5,
+            )
+        if not cfg.tie_embeddings:
+            defs["head"] = PD((cfg.d_model, self.vocab_pad), ("embed", "vocab"))
+        defs["final_norm"] = PD(
+            (cfg.d_model,), (None,), init=self._norm_init(), dtype=jnp.float32
+        )
+        prefix = ((self.n_scan, "layers"),)
+        defs["blocks"] = {
+            f"b{i}_{ch}": self._block_defs(ch, prefix)
+            for i, ch in enumerate(self.pattern)
+        }
+        for i in range(self.rem):
+            ch = self.pattern[i]
+            defs[f"ep{i}_{ch}"] = self._block_defs(ch, ())
+        return defs
+
+    # ------------------------------------------------------------------
+    # caches
+    # ------------------------------------------------------------------
+    def _cache_cap(self, seq_len: int, ch: str) -> int:
+        cap = _round_up(seq_len + CACHE_PAD, max(self.policy.msize, 1))
+        if ch == "l":
+            cap = min(cap, _round_up(self.cfg.window_size, max(self.policy.msize, 1)))
+        return cap
+
+    def _block_cache_def(self, ch: str, b: int, seq_len: int, stack: int):
+        cfg = self.cfg
+        pre = (stack,) if stack else ()
+
+        def sds(shape, dtype=jnp.bfloat16):
+            return jax.ShapeDtypeStruct(pre + shape, dtype)
+
+        if ch in ("g", "l"):
+            cap = self._cache_cap(seq_len, ch)
+            kv_eff = cfg.num_kv_heads * self.policy.kv_repeat
+            return {
+                "k": sds((b, cap, kv_eff, cfg.head_dim)),
+                "v": sds((b, cap, kv_eff, cfg.head_dim)),
+            }
+        if ch == "r":
+            return {
+                "h": sds((b, cfg.lru_dim), jnp.float32),
+                "conv": sds((b, cfg.conv1d_width - 1, cfg.lru_dim)),
+            }
+        if ch == "k":
+            h = cfg.d_model // cfg.rwkv_head_dim
+            return {
+                "S": sds((b, h, cfg.rwkv_head_dim, cfg.rwkv_head_dim), jnp.float32),
+                "tm_prev": sds((b, cfg.d_model)),
+                "cm_prev": sds((b, cfg.d_model)),
+            }
+        raise ValueError(ch)
+
+    def cache_struct(self, b: int, seq_len: int):
+        out: Dict[str, Any] = {
+            "blocks": {
+                f"b{i}_{ch}": self._block_cache_def(ch, b, seq_len, self.n_scan)
+                for i, ch in enumerate(self.pattern)
+            }
+        }
+        for i in range(self.rem):
+            ch = self.pattern[i]
+            out[f"ep{i}_{ch}"] = self._block_cache_def(ch, b, seq_len, 0)
+        return out
+
+    def _cache_spec(self, sds, b: int, stacked: bool, leaf_key: str) -> P:
+        b_ax = self.policy.cache_batch_axes(b) or None
+        lead = (None,) if stacked else ()
+        nd = len(sds.shape) - len(lead)
+        if leaf_key in ("k", "v"):  # attention kv cache: seq over 'model'
+            return P(*lead, b_ax, "model", None, None)
+        return P(*lead, b_ax, *([None] * (nd - 1)))
+
+    def cache_specs(self, b: int, seq_len: int):
+        cs = self.cache_struct(b, seq_len)
+
+        def spec(path, sds):
+            stacked = any(
+                getattr(k, "key", None) == "blocks" for k in path
+            )
+            leaf_key = getattr(path[-1], "key", "")
+            return self._cache_spec(sds, b, stacked, leaf_key)
+
+        return jax.tree_util.tree_map_with_path(spec, cs)
+
+    # ------------------------------------------------------------------
+    # block applications
+    # ------------------------------------------------------------------
+    def _tp_attention_sp(self, p, x, window, mode, b, s):
+        """Megatron sequence-parallel attention block as ONE shard_map:
+        all-gather(seq) -> local qkv/attention/out-proj (heads local) ->
+        psum_scatter(seq). Weight grads need NO cross-shard reduction (the
+        contraction over seq happens on gathered activations locally) —
+        eliminates the f32 dW all-reduces SPMD otherwise emits
+        (EXPERIMENTS.md §Perf-2). Returns (out seq-sharded, (k, v) full-seq
+        head-sharded for prefill)."""
+        cfg, pol = self.cfg, self.policy
+        hq, hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+        rep = pol.kv_repeat
+        kv_eff = hkv * rep
+        msize = pol.msize
+        scale = (cfg.query_pre_attn_scalar or cfg.head_dim) ** -0.5
+        cap = cfg.attn_logit_softcap
+        fsdp = pol.fsdp and pol.dsize > 1
+        b_ax = pol.batch_axes(b) or None
+
+        def local(h_loc, wq, wk, wv, wo, qn, kn):
+            j = lax.axis_index("model")
+            hf = lax.all_gather(h_loc, "model", axis=1, tiled=True)  # (Bl,S,d)
+            bl, sl = hf.shape[0], hf.shape[1]
+            if fsdp:
+                wq = lax.all_gather(wq, "data", axis=0, tiled=True)
+                wk = lax.all_gather(wk, "data", axis=0, tiled=True)
+                wv = lax.all_gather(wv, "data", axis=0, tiled=True)
+                wo = lax.all_gather(wo, "data", axis=1, tiled=True)
+            if rep > 1:  # kv weights replicated over model: slice my heads
+                wk = jnp.repeat(wk.reshape(cfg.d_model, hkv, hd), rep, axis=1)
+                wv = jnp.repeat(wv.reshape(cfg.d_model, hkv, hd), rep, axis=1)
+                kvl = kv_eff // msize
+                wk = lax.dynamic_slice_in_dim(wk, j * kvl, kvl, axis=1)
+                wv = lax.dynamic_slice_in_dim(wv, j * kvl, kvl, axis=1)
+                wk = wk.reshape(cfg.d_model, kvl * hd)
+                wv = wv.reshape(cfg.d_model, kvl * hd)
+            q = (hf @ wq).reshape(bl, sl, hq // msize, hd)
+            k = (hf @ wk).reshape(bl, sl, kv_eff // msize, hd)
+            v = (hf @ wv).reshape(bl, sl, kv_eff // msize, hd)
+            if cfg.qk_norm:
+                q = rms_norm(q, qn, cfg.norm_eps, False)
+                k = rms_norm(k, kn, cfg.norm_eps, False)
+            positions = jnp.arange(sl)[None, :]
+            q = rope(q, positions, cfg.rope_theta)
+            k = rope(k, positions, cfg.rope_theta)
+            out = attention_chunked(
+                q, k, v, scale=scale, window=window,
+                logit_cap=cap, chunk=cfg.attn_chunk,
+            )
+            partial = out.reshape(bl, sl, (hq // msize) * hd) @ wo
+            out_loc = lax.psum_scatter(
+                partial, "model", scatter_dimension=1, tiled=True
+            )
+            return out_loc, k, v
+
+        wq_spec = P("data" if fsdp else None, "model")
+        kv_axis_spec = (
+            P("data" if fsdp else None, "model")
+            if rep == 1
+            else P("data" if fsdp else None, None)
+        )
+        wo_spec = P("model", "data" if fsdp else None)
+        norm_spec = P(None)
+        fn = jax.shard_map(
+            local,
+            mesh=self.mesh,
+            in_specs=(
+                P(b_ax, "model", None), wq_spec, kv_axis_spec, kv_axis_spec,
+                wo_spec, norm_spec, norm_spec,
+            ),
+            out_specs=(
+                P(b_ax, "model", None),
+                P(b_ax, None, "model", None),
+                P(b_ax, None, "model", None),
+            ),
+            check_vma=False,
+        )
+        qn = p.get("q_norm", jnp.ones((hd,), jnp.float32))
+        kn = p.get("k_norm", jnp.ones((hd,), jnp.float32))
+        return fn(x, p["wq"], p["wk"], p["wv"], p["wo"], qn, kn)
+
+    def _tp_mlp_sp(self, p, x, b, s):
+        """Sequence-parallel MLP twin of _tp_attention_sp."""
+        cfg, pol = self.cfg, self.policy
+        fsdp = pol.fsdp and pol.dsize > 1
+        b_ax = pol.batch_axes(b) or None
+        act = None
+        gated = "w_gate" in p
+
+        def local(h_loc, wi, wg, wo):
+            hf = lax.all_gather(h_loc, "model", axis=1, tiled=True)
+            if fsdp:
+                wi = lax.all_gather(wi, "data", axis=0, tiled=True)
+                wo = lax.all_gather(wo, "data", axis=1, tiled=True)
+                if gated:
+                    wg = lax.all_gather(wg, "data", axis=0, tiled=True)
+            from repro.models.layers import act_fn
+
+            hmid = hf @ wi
+            if gated:
+                hmid = act_fn(cfg.act)(hf @ wg) * hmid
+            else:
+                hmid = act_fn(cfg.act)(hmid)
+            partial = hmid @ wo
+            return lax.psum_scatter(partial, "model", scatter_dimension=1, tiled=True)
+
+        w_in_spec = P("data" if fsdp else None, "model")
+        w_out_spec = P("model", "data" if fsdp else None)
+        fn = jax.shard_map(
+            local,
+            mesh=self.mesh,
+            in_specs=(P(b_ax, "model", None), w_in_spec, w_in_spec, w_out_spec),
+            out_specs=P(b_ax, "model", None),
+            check_vma=False,
+        )
+        wg = p.get("w_gate", p["w_in"])
+        return fn(x, p["w_in"], wg, p["w_out"])
+
+    def _attn_apply(self, p, x, ch, cache, pos, mode):
+        cfg, pol = self.cfg, self.policy
+        window = cfg.window_size if ch == "l" else None
+        b = x.shape[0]
+        use_sp = (
+            pol.profile == "tp" and pol.msize > 1 and mode != "decode"
+        )
+        h = rms_norm(x, p["norm1"], cfg.norm_eps, cfg.gemma_norm)
+        hq, hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+        rep = pol.kv_repeat
+        kv_eff = hkv * rep
+        s = x.shape[1]
+        scale = (cfg.query_pre_attn_scalar or cfg.head_dim) ** -0.5
+        cap = cfg.attn_logit_softcap
+        if use_sp:
+            out, k_full, v_full = self._tp_attention_sp(p, h, window, mode, b, s)
+            new_cache = None
+            if mode == "prefill":
+                capn = self._cache_cap(s, ch)
+                if ch == "l" and capn <= s:
+                    k_c, v_c = k_full[:, -capn:], v_full[:, -capn:]
+                else:
+                    k_c = jnp.zeros((b, capn, kv_eff, hd), k_full.dtype)
+                    k_c = lax.dynamic_update_slice(k_c, k_full, (0, 0, 0, 0))
+                    v_c = jnp.zeros((b, capn, kv_eff, hd), v_full.dtype)
+                    v_c = lax.dynamic_update_slice(v_c, v_full, (0, 0, 0, 0))
+                sp = P(pol.cache_batch_axes(b) or None, "model", None, None)
+                new_cache = {"k": pol.constrain(k_c, sp), "v": pol.constrain(v_c, sp)}
+            x = x + (
+                rms_norm(out, p["post1"], cfg.norm_eps, cfg.gemma_norm)
+                if cfg.post_block_norm
+                else out
+            )
+            h2 = rms_norm(x, p["norm2"], cfg.norm_eps, cfg.gemma_norm)
+            aux = aux_zero()
+            if cfg.moe:
+                ffn_out, aux = self._ffn_moe(p, h2, mode)
+            else:
+                ffn_out = self._tp_mlp_sp(p["mlp"], h2, b, s)
+            if cfg.post_block_norm:
+                ffn_out = rms_norm(ffn_out, p["post2"], cfg.norm_eps, cfg.gemma_norm)
+            return x + ffn_out, new_cache, aux
+
+        wk, wv = p["wk"], p["wv"]
+        if rep > 1:
+            wk = jnp.repeat(wk.reshape(cfg.d_model, hkv, hd), rep, axis=1)
+            wv = jnp.repeat(wv.reshape(cfg.d_model, hkv, hd), rep, axis=1)
+            wk = pol.constrain(wk.reshape(cfg.d_model, hkv * rep * hd), P(None, "model"))
+            wv = pol.constrain(wv.reshape(cfg.d_model, hkv * rep * hd), P(None, "model"))
+        q = (h @ p["wq"]).reshape(b, s, hq, hd)
+        k = (h @ wk).reshape(b, s, kv_eff, hd)
+        v = (h @ wv).reshape(b, s, kv_eff, hd)
+        if cfg.qk_norm:
+            q = rms_norm(q, p["q_norm"], cfg.norm_eps, False)
+            k = rms_norm(k, p["k_norm"], cfg.norm_eps, False)
+
+        if mode == "decode":
+            positions = jnp.full((b, 1), pos)
+            q = rope(q, positions, cfg.rope_theta)[:, 0]
+            k = rope(k, positions, cfg.rope_theta)[:, 0]
+            v = v[:, 0]
+            b_ax = pol.cache_batch_axes(b) or None
+            qspec = P(b_ax, None, None)
+            cspec = P(b_ax, "model", None, None)
+            rolling = ch == "l"
+            fn = jax.shard_map(
+                lambda q_, kc_, vc_, nk_, nv_, p_: decode_attention_sharded(
+                    q_, kc_, vc_, nk_, nv_, p_,
+                    axis_name="model",
+                    scale=scale,
+                    window=window,
+                    rolling=rolling,
+                    logit_cap=cap,
+                ),
+                mesh=self.mesh,
+                in_specs=(qspec, cspec, cspec, qspec, qspec, P()),
+                out_specs=(qspec, cspec, cspec),
+                check_vma=False,
+            )
+            out, k_c, v_c = fn(q, cache["k"], cache["v"], k, v, pos)
+            out = out[:, None]  # (B,1,Hq,D)
+            new_cache = {"k": k_c, "v": v_c}
+        else:
+            positions = jnp.arange(s)[None, :]
+            q = rope(q, positions, cfg.rope_theta)
+            k = rope(k, positions, cfg.rope_theta)
+            if pol.profile == "cp" and pol.msize > 1:
+                b_ax = pol.batch_axes(b) or None
+                spec = P(b_ax, "model", None, None)
+                # gathered-KV context parallelism for moderate S; the ring
+                # schedule (xDFS channel pipeline) is kept for S > ~64k
+                use_ring = s > 65536
+                inner = (
+                    (lambda q_, k_, v_: ring_attention(
+                        q_, k_, v_, axis_name="model", scale=scale, logit_cap=cap))
+                    if use_ring
+                    else (lambda q_, k_, v_: gathered_kv_attention(
+                        q_, k_, v_, axis_name="model", scale=scale, logit_cap=cap,
+                        chunk=min(cfg.attn_chunk, 128)))
+                )
+                fn = jax.shard_map(
+                    inner,
+                    mesh=self.mesh,
+                    in_specs=(spec, spec, spec),
+                    out_specs=spec,
+                    check_vma=False,
+                )
+                out = fn(q, k, v)
+            else:
+                out = attention_chunked(
+                    q, k, v, scale=scale, window=window,
+                    logit_cap=cap, chunk=cfg.attn_chunk,
+                )
+            new_cache = None
+            if mode == "prefill":
+                capn = self._cache_cap(s, ch)
+                if ch == "l" and capn <= s:
+                    # rolling window: slots (kpos % W) == arange(W) since W | S
+                    k_c, v_c = k[:, -capn:], v[:, -capn:]
+                else:
+                    k_c = jnp.zeros((b, capn, kv_eff, hd), k.dtype)
+                    k_c = lax.dynamic_update_slice(k_c, k, (0, 0, 0, 0))
+                    v_c = jnp.zeros((b, capn, kv_eff, hd), v.dtype)
+                    v_c = lax.dynamic_update_slice(v_c, v, (0, 0, 0, 0))
+                sp = P(pol.cache_batch_axes(b) or None, "model", None, None)
+                new_cache = {"k": pol.constrain(k_c, sp), "v": pol.constrain(v_c, sp)}
+
+        out = out.reshape(b, out.shape[1], hq * hd) @ p["wo"]
+        if cfg.post_block_norm:
+            out = rms_norm(out, p["post1"], cfg.norm_eps, cfg.gemma_norm)
+        x = x + out
+
+        h2 = rms_norm(x, p["norm2"], cfg.norm_eps, cfg.gemma_norm)
+        aux = aux_zero()
+        if cfg.moe:
+            ffn_out, aux = self._ffn_moe(p, h2, mode)
+        else:
+            ffn_out = mlp_apply(p["mlp"], h2, cfg)
+        if cfg.post_block_norm:
+            ffn_out = rms_norm(ffn_out, p["post2"], cfg.norm_eps, cfg.gemma_norm)
+        return x + ffn_out, new_cache, aux
+
+    def _ffn_moe(self, p, h2, mode):
+        """MoE FFN with shard-major token grouping: (B,S,d) -> (bsh, B/bsh,
+        ssh, S/ssh, d) -> (bsh*ssh, ., d) so MoE groups align with the
+        activation sharding (no reshuffle before routing)."""
+        cfg, pol = self.cfg, self.policy
+        from repro.runtime.shard import axis_size
+
+        bb, ss = h2.shape[0], h2.shape[1]
+        bsh = 1
+        for a_name in pol.batch_axes(bb):
+            bsh *= axis_size(pol.mesh, a_name)
+        ssh = 1
+        for a_name in pol.act_seq_axes():
+            ssh *= axis_size(pol.mesh, a_name)
+        hg = h2.reshape(bsh, bb // bsh, ssh, ss // ssh, cfg.d_model)
+        hg = hg.transpose(0, 2, 1, 3, 4)
+        tokens = hg.reshape(-1, cfg.d_model)
+        n_tok = tokens.shape[0]
+        g = pol.moe_group_count(n_tok, bb)
+        ng = n_tok // g
+        if mode == "decode":
+            capc = ng * cfg.top_k  # zero-drop
+        else:
+            # serving prefill must rarely drop; training tolerates cf drops
+            cf = max(cfg.capacity_factor, 2.0) if mode == "prefill" else cfg.capacity_factor
+            capc = max(1, math.ceil(ng * cfg.top_k / cfg.num_experts * cf))
+        ffn_out, mm = moe_apply(
+            p["moe"], tokens, cfg, group=ng, capacity=capc,
+            policy=pol, batch=bb,
+        )
+        # inverse shard-major grouping
+        ffn_out = (
+            ffn_out.reshape(bsh, ssh, bb // bsh, ss // ssh, cfg.d_model)
+            .transpose(0, 2, 1, 3, 4)
+            .reshape(h2.shape)
+        )
+        aux = (mm.aux_loss, mm.z_loss, mm.drop_frac)
+        if cfg.dense_residual:
+            ffn_out = ffn_out + mlp_apply(p["dense"], h2, cfg)
+        return ffn_out, aux
+
+    def _rglru_block_apply(self, p, x, cache, mode):
+        cfg = self.cfg
+        h = rms_norm(x, p["norm1"], cfg.norm_eps, cfg.gemma_norm)
+        state = None if mode == "train" and cache is None else cache
+        out, new_state = rglru_mod.rglru_apply(p["rglru"], h, cfg, state)
+        x = x + out
+        h2 = rms_norm(x, p["norm2"], cfg.norm_eps, cfg.gemma_norm)
+        x = x + mlp_apply(p["mlp"], h2, cfg)
+        return x, (new_state if mode != "train" else None), aux_zero()
+
+    def _rwkv_block_apply(self, p, x, cache, mode):
+        cfg = self.cfg
+        tm_state = None
+        cm_state = None
+        if cache is not None:
+            tm_state = {"S": cache["S"], "prev": cache["tm_prev"]}
+            cm_state = {"prev": cache["cm_prev"]}
+        h = rwkv_mod._ln(x, p["ln1_w"], p["ln1_b"])
+        out, tm_new = rwkv_mod.time_mix_apply(p["tm"], h, cfg, tm_state)
+        x = x + out
+        h2 = rwkv_mod._ln(x, p["ln2_w"], p["ln2_b"])
+        out2, cm_new = rwkv_mod.channel_mix_apply(p["cm"], h2, cfg, cm_state)
+        x = x + out2
+        new_cache = None
+        if mode != "train":
+            new_cache = {
+                "S": tm_new["S"],
+                "tm_prev": tm_new["prev"],
+                "cm_prev": cm_new["prev"],
+            }
+        return x, new_cache, aux_zero()
+
+    def _apply_block(self, ch, p, x, cache, pos, mode):
+        if ch in ("g", "l"):
+            return self._attn_apply(p, x, ch, cache, pos, mode)
+        if ch == "r":
+            return self._rglru_block_apply(p, x, cache, mode)
+        if ch == "k":
+            return self._rwkv_block_apply(p, x, cache, mode)
+        raise ValueError(ch)
+
+    # ------------------------------------------------------------------
+    # forward
+    # ------------------------------------------------------------------
+    def _remat(self, fn):
+        if self.kind != "train" or self.cfg.remat_policy == "full":
+            return fn
+        if self.cfg.remat_policy == "dots":
+            return jax.checkpoint(
+                fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+            )
+        return jax.checkpoint(fn)
+
+    def backbone(self, params, x, caches=None, pos=None, mode="train"):
+        """x: (B, S, d). Returns (hidden, new_caches, aux)."""
+        pol = self.policy
+        b = x.shape[0]
+        x = pol.constrain(x, pol.hidden_spec(b))
+        aux0 = aux_zero()
+
+        def body(carry, xs):
+            xc, aux = carry
+            gp, gcache = xs
+            new_caches = {}
+            for i, ch in enumerate(self.pattern):
+                key = f"b{i}_{ch}"
+                xc, nc, a = self._apply_block(
+                    ch, gp[key], xc, None if gcache is None else gcache[key], pos, mode
+                )
+                if nc is not None:
+                    new_caches[key] = nc
+                aux = tuple(u + v for u, v in zip(aux, a))
+            xc = pol.constrain(xc, pol.hidden_spec(b))
+            return (xc, aux), (new_caches or None)
+
+        body = self._remat(body)
+        stack_caches = None if caches is None else caches["blocks"]
+        if mode == "train":
+            xs = (params["blocks"], None)
+        else:
+            xs = (params["blocks"], stack_caches)
+        (x, aux), ys = lax.scan(body, (x, aux0), xs)
+        new_caches = {"blocks": ys} if mode != "train" else None
+
+        for i in range(self.rem):
+            ch = self.pattern[i]
+            key = f"ep{i}_{ch}"
+            c_in = None if caches is None else caches[key]
+            x, nc, a = self._apply_block(ch, params[key], x, c_in, pos, mode)
+            if mode != "train" and new_caches is not None:
+                new_caches[key] = nc
+            aux = tuple(u + v for u, v in zip(aux, a))
+        x = rms_norm(x, params["final_norm"], self.cfg.norm_eps, self.cfg.gemma_norm)
+        return x, new_caches, aux
+
+    # ------------------------------------------------------------------
+    def embed_inputs(self, params, inputs):
+        cfg = self.cfg
+        if cfg.frontend is not None:
+            return inputs.astype(jnp.bfloat16)
+        e = jnp.take(params["embed"], inputs, axis=0)
+        if cfg.embed_scale:
+            e = e * jnp.asarray(math.sqrt(cfg.d_model), e.dtype)
+        return e
+
+    def _head_weight(self, params):
+        if self.cfg.tie_embeddings:
+            return params["embed"].T
+        return params["head"]
+
+    def _mask_pad_vocab(self, logits):
+        if self.vocab_pad == self.cfg.vocab_size:
+            return logits
+        valid = jnp.arange(self.vocab_pad) < self.cfg.vocab_size
+        return jnp.where(valid, logits, -1e30)
+
+    def logits_fn(self, params, h):
+        w = self._head_weight(params)
+        logits = (h @ w).astype(jnp.float32)
+        logits = softcap(logits, self.cfg.final_logit_softcap)
+        return self._mask_pad_vocab(logits)
+
+    def loss(self, params, batch):
+        """batch: inputs (B,S) int32 or (B,S,d) embeds; labels (B,S) int32."""
+        cfg, pol = self.cfg, self.policy
+        x = self.embed_inputs(params, batch["inputs"])
+        h, _, aux = self.backbone(params, x, mode="train")
+        labels = batch["labels"]
+        b, s = labels.shape
+        # CE stage wants vocab sharding on 'model'; release the seq shard
+        h = pol.constrain(h, P(pol.batch_axes(b) or None, None, None))
+        from repro.models.rwkv6 import best_chunk
+
+        chunk = best_chunk(s, cfg.ce_chunk)
+        n = s // chunk
+        w = self._head_weight(params)
+        hc = h.reshape(b, n, chunk, cfg.d_model).transpose(1, 0, 2, 3)
+        yc = labels.reshape(b, n, chunk).transpose(1, 0, 2)
+
+        ce_spec = pol.ce_logits_spec(b)
+
+        def ce_body(acc, xs):
+            hh, yy = xs
+            logits = pol.constrain((hh @ w).astype(jnp.float32), ce_spec)
+            logits = softcap(logits, cfg.final_logit_softcap)
+            logits = self._mask_pad_vocab(logits)
+            lz = jax.nn.logsumexp(logits, axis=-1)
+            gold = jnp.take_along_axis(logits, yy[..., None], axis=-1)[..., 0]
+            return acc + jnp.sum(lz - gold), None
+
+        acc, _ = lax.scan(jax.checkpoint(ce_body), jnp.zeros((), jnp.float32), (hc, yc))
+        ce = acc / (b * s)
+        aux_loss, z_loss, drop = aux
+        total = ce + cfg.router_aux_weight * aux_loss + cfg.router_z_weight * z_loss
+        metrics = {
+            "loss": total,
+            "ce": ce,
+            "moe_aux": aux_loss,
+            "moe_z": z_loss,
+            "moe_drop": drop / max(cfg.num_layers, 1),
+        }
+        return total, metrics
+
+    def prefill(self, params, batch):
+        x = self.embed_inputs(params, batch["inputs"])
+        h, caches, _ = self.backbone(params, x, mode="prefill")
+        logits = self.logits_fn(params, h[:, -1:])
+        return logits, caches
+
+    def decode_step(self, params, batch):
+        """batch: inputs (B,1)|(B,1,d), caches, pos (scalar int32)."""
+        x = self.embed_inputs(params, batch["inputs"])
+        h, caches, _ = self.backbone(
+            params, x, caches=batch["caches"], pos=batch["pos"], mode="decode"
+        )
+        logits = self.logits_fn(params, h)
+        return logits, caches
+
+    # ------------------------------------------------------------------
+    # inputs / shardings for the launcher
+    # ------------------------------------------------------------------
+    def input_struct(self, shape: ShapeConfig):
+        cfg = self.cfg
+        b, s = shape.global_batch, shape.seq_len
+        tok = jax.ShapeDtypeStruct((b, s), jnp.int32)
+        emb = jax.ShapeDtypeStruct((b, s, cfg.d_model), jnp.bfloat16)
+        if shape.kind == "train":
+            inp = emb if cfg.frontend else tok
+            return {"inputs": inp, "labels": tok}
+        if shape.kind == "prefill":
+            return {"inputs": emb if cfg.frontend else tok}
+        # decode
+        one = jax.ShapeDtypeStruct(
+            (b, 1, cfg.d_model) if cfg.frontend else (b, 1),
+            jnp.bfloat16 if cfg.frontend else jnp.int32,
+        )
+        return {
+            "inputs": one,
+            "caches": self.cache_struct(b, s),
+            "pos": jax.ShapeDtypeStruct((), jnp.int32),
+        }
+
+    def input_specs(self, shape: ShapeConfig):
+        pol = self.policy
+        b = shape.global_batch
+        b_ax = pol.batch_axes(b) or None
+        seq_ax = pol.seq_axes() if shape.kind != "decode" else ()
+        tok_spec = P(b_ax, seq_ax or None)
+        emb_spec = P(b_ax, seq_ax or None, None)
+        cfg = self.cfg
+        if shape.kind == "train":
+            return {
+                "inputs": emb_spec if cfg.frontend else tok_spec,
+                "labels": tok_spec,
+            }
+        if shape.kind == "prefill":
+            return {"inputs": emb_spec if cfg.frontend else tok_spec}
+        return {
+            "inputs": P(b_ax, None, None) if cfg.frontend else P(b_ax, None),
+            "caches": self.cache_specs(b, shape.seq_len),
+            "pos": P(),
+        }
+
+    def abstract(self):
+        return abstract_params(self.defs)
+
+    def init(self, key):
+        return init_params(self.defs, key)
+
+
+def build_model(cfg: ModelConfig, mesh, kind: str, plain: bool = False) -> LM:
+    return LM(cfg, mesh, kind, plain=plain)

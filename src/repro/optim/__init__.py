@@ -1,0 +1,9 @@
+from repro.optim.adafactor import Adafactor, AdafactorState
+from repro.optim.adamw import AdamW, AdamWState
+from repro.optim.clip import clip_by_global_norm, global_norm
+
+
+def make_optimizer(cfg, lr: float = 3e-4):
+    if cfg.optimizer == "adafactor":
+        return Adafactor(lr=lr)
+    return AdamW(lr=lr)

@@ -1,0 +1,101 @@
+"""Adafactor (factored second moment, no first moment) — used for arctic-480b
+where AdamW fp32 state would exceed single-pod HBM (see EXPERIMENTS.md)."""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+class FactoredSlot(NamedTuple):
+    row: jax.Array  # reduced over last dim
+    col: jax.Array  # reduced over second-to-last dim
+    full: jax.Array  # only for <2D params (shape (1,) dummy otherwise)
+
+
+class AdafactorState(NamedTuple):
+    step: jax.Array
+    slots: dict
+
+
+def _factored(p) -> bool:
+    return p.ndim >= 2 and p.shape[-1] > 1 and p.shape[-2] > 1
+
+
+class Adafactor(NamedTuple):
+    lr: float = 1e-3
+    decay: float = 0.8  # beta2 = 1 - step^-decay
+    eps: float = 1e-30
+    clip_threshold: float = 1.0
+
+    def init(self, params):
+        def slot(p):
+            if _factored(p):
+                return FactoredSlot(
+                    row=jnp.zeros(p.shape[:-1], jnp.float32),
+                    col=jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+                    full=jnp.zeros((1,), jnp.float32),
+                )
+            return FactoredSlot(
+                row=jnp.zeros((1,), jnp.float32),
+                col=jnp.zeros((1,), jnp.float32),
+                full=jnp.zeros(p.shape, jnp.float32),
+            )
+
+        return AdafactorState(
+            step=jnp.zeros((), jnp.int32),
+            slots=jax.tree.map(slot, params),
+        )
+
+    def state_specs(self, param_specs, param_defs):
+        """Derive factored-state specs from param specs (drop reduced dim)."""
+        from repro.models.layers import is_pd
+
+        specs, treedef = jax.tree.flatten(param_specs)
+        defs = treedef.flatten_up_to(jax.tree.map(lambda pd: pd, param_defs, is_leaf=is_pd))
+
+        def slot_spec(spec, pd):
+            shape = pd.shape
+            sp = tuple(spec) + (None,) * (len(shape) - len(spec))
+            if len(shape) >= 2 and shape[-1] > 1 and shape[-2] > 1:
+                return FactoredSlot(
+                    row=P(*sp[:-1]),
+                    col=P(*(sp[:-2] + (sp[-1],))),
+                    full=P(None),
+                )
+            return FactoredSlot(row=P(None), col=P(None), full=spec)
+
+        slots = treedef.unflatten([slot_spec(s, d) for s, d in zip(specs, defs)])
+        return AdafactorState(step=P(), slots=slots)
+
+    def update(self, grads, state, params):
+        step = state.step + 1
+        beta2 = 1.0 - step.astype(jnp.float32) ** (-self.decay)
+
+        def upd(g, s, p):
+            g32 = g.astype(jnp.float32)
+            g2 = jnp.square(g32) + self.eps
+            if _factored(p):
+                row = beta2 * s.row + (1 - beta2) * g2.mean(axis=-1)
+                col = beta2 * s.col + (1 - beta2) * g2.mean(axis=-2)
+                row_mean = row.mean(axis=-1, keepdims=True)
+                v = (row / jnp.maximum(row_mean, self.eps))[..., None] * col[..., None, :]
+                new_slot = FactoredSlot(row=row, col=col, full=s.full)
+            else:
+                v = beta2 * s.full + (1 - beta2) * g2
+                new_slot = FactoredSlot(row=s.row, col=s.col, full=v)
+            u = g32 / jnp.sqrt(jnp.maximum(v, self.eps))
+            # update clipping (RMS <= clip_threshold)
+            rms = jnp.sqrt(jnp.mean(jnp.square(u)) + 1e-12)
+            u = u / jnp.maximum(1.0, rms / self.clip_threshold)
+            return (-self.lr * u).astype(p.dtype), new_slot
+
+        g_leaves, treedef = jax.tree.flatten(grads)
+        p_leaves = treedef.flatten_up_to(params)
+        s_leaves = treedef.flatten_up_to(state.slots)
+        out = [upd(g, s, p) for g, s, p in zip(g_leaves, s_leaves, p_leaves)]
+        updates = treedef.unflatten([o[0] for o in out])
+        slots = treedef.unflatten([o[1] for o in out])
+        return updates, AdafactorState(step=step, slots=slots)

@@ -1,0 +1,43 @@
+"""Elastic scaling: re-mesh and re-shard live training state.
+
+On a node-count change the runtime rebuilds the mesh/policy pair, recomputes
+every leaf's NamedSharding under the new mesh, and ``device_put``s the state
+across — on real hardware this lowers to resharding collectives (the xDFS
+session re-negotiation: same blocks, new channel map). The data stream
+resumes at the same step (pure function of step), so elasticity is
+semantically invisible to the optimizer.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+
+from repro.models.transformer import build_model
+from repro.runtime.train import TrainState, state_shardings
+
+
+def remesh(cfg, devices, kind: str = "train"):
+    """Build the largest (data, model)-factored mesh for a device list."""
+    n = len(devices)
+    model_axis = 1
+    for m in (16, 8, 4, 2, 1):
+        if n % m == 0 and (cfg.shard_profile != "dp" or m == 1):
+            model_axis = m
+            break
+    import numpy as np
+
+    mesh_devices = np.asarray(devices).reshape(n // model_axis, model_axis)
+    from jax.sharding import Mesh
+
+    return Mesh(mesh_devices, ("data", "model"))
+
+
+def reshard_state(
+    state: TrainState, model_old, cfg, new_mesh, optimizer
+) -> Tuple[TrainState, Any]:
+    """Move a TrainState onto a new mesh; returns (state, new_model)."""
+    new_model = build_model(cfg, new_mesh, "train")
+    ss = state_shardings(new_model, optimizer)
+    new_state = jax.tree.map(lambda x, sh: jax.device_put(x, sh), state, ss)
+    return new_state, new_model

@@ -1,0 +1,118 @@
+"""Fault-tolerance supervisor: CFSM-driven, per the xDFS exception-header
+design — errors are first-class protocol events, not crashes.
+
+The supervisor reuses core.fsm.Machine for its lifecycle and implements the
+cluster-scale behaviors the system prompt requires, scaled to what is
+observable in-process:
+
+  * heartbeats: every logical worker (data shard) reports per-step; a
+    missing heartbeat past ``heartbeat_timeout`` is a fault.
+  * fault -> RESTORING: reload the latest complete checkpoint (xdfs_ckpt
+    walks back past corrupt steps), rebuild the step fn, resume the data
+    stream at the checkpointed step (bit-exact: data is a pure fn of step).
+  * straggler mitigation: steps slower than ``straggler_factor`` x the
+    rolling median are flagged; the driver's hook can re-dispatch (in a
+    multi-controller deployment this maps to sending the slow host's xDFS
+    channels to a hot spare; here it re-executes the step, which is safe
+    because train_step is deterministic given (state, batch)).
+  * elastic events delegate to runtime.elastic.
+"""
+from __future__ import annotations
+
+import statistics
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional
+
+from repro.core.fsm import Machine
+
+
+def supervisor_fsm() -> Machine:
+    states = frozenset({
+        "init", "running", "checkpointing", "restoring", "rescaling",
+        "halted",
+    })
+    t = {
+        ("init", "start"): "running",
+        ("running", "ckpt_begin"): "checkpointing",
+        ("checkpointing", "ckpt_done"): "running",
+        ("running", "fault"): "restoring",
+        ("checkpointing", "fault"): "restoring",
+        ("restoring", "restored"): "running",
+        ("running", "rescale"): "rescaling",
+        ("rescaling", "rescaled"): "running",
+        ("running", "stop"): "halted",
+        ("restoring", "unrecoverable"): "halted",
+    }
+    return Machine("supervisor", states, "init", frozenset({"halted"}), t)
+
+
+@dataclass
+class StepRecord:
+    step: int
+    wall_s: float
+    straggler: bool
+
+
+@dataclass
+class Supervisor:
+    heartbeat_timeout: float = 30.0
+    straggler_factor: float = 3.0
+    window: int = 50
+    fsm: Machine = field(default_factory=supervisor_fsm)
+    _beats: Dict[str, float] = field(default_factory=dict)
+    _times: List[float] = field(default_factory=list)
+    history: List[StepRecord] = field(default_factory=list)
+    faults: List[str] = field(default_factory=list)
+    stragglers: int = 0
+
+    def start(self):
+        self.fsm.step("start")
+
+    # ---- heartbeats -------------------------------------------------
+    def heartbeat(self, worker: str, now: Optional[float] = None):
+        self._beats[worker] = now if now is not None else time.monotonic()
+
+    def dead_workers(self, now: Optional[float] = None) -> List[str]:
+        now = now if now is not None else time.monotonic()
+        return [
+            w for w, t in self._beats.items() if now - t > self.heartbeat_timeout
+        ]
+
+    # ---- per-step bookkeeping ---------------------------------------
+    def record_step(self, step: int, wall_s: float) -> StepRecord:
+        self._times.append(wall_s)
+        if len(self._times) > self.window:
+            self._times.pop(0)
+        med = statistics.median(self._times)
+        straggler = len(self._times) >= 5 and wall_s > self.straggler_factor * med
+        if straggler:
+            self.stragglers += 1
+        rec = StepRecord(step, wall_s, straggler)
+        self.history.append(rec)
+        return rec
+
+    # ---- fault / recovery flow ----------------------------------------
+    def report_fault(self, what: str):
+        self.faults.append(what)
+        self.fsm.step("fault")
+
+    def restored(self):
+        self.fsm.step("restored")
+
+    def checkpoint_scope(self):
+        sup = self
+
+        class _Scope:
+            def __enter__(self):
+                sup.fsm.step("ckpt_begin")
+
+            def __exit__(self, et, ev, tb):
+                if et is None:
+                    sup.fsm.step("ckpt_done")
+                else:
+                    sup.faults.append(repr(ev))
+                    sup.fsm.step("fault")
+                return False
+
+        return _Scope()

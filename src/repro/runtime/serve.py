@@ -1,0 +1,34 @@
+"""Serving steps: prefill and single-token decode, pjit'd with explicit
+shardings. Decode uses the sequence-sharded flash-decoding cache layout
+(batch over 'data'/'pod', cache sequence over 'model') — see DESIGN.md.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+
+def _sh(mesh, tree):
+    return jax.tree.map(
+        lambda spec: NamedSharding(mesh, spec), tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def jit_prefill_step(model, shape):
+    mesh = model.policy.mesh
+    in_sh = _sh(mesh, model.input_specs(shape))
+    return jax.jit(model.prefill, in_shardings=(None, in_sh))
+
+
+def jit_decode_step(model, shape):
+    mesh = model.policy.mesh
+    in_sh = _sh(mesh, model.input_specs(shape))
+    cache_sh = in_sh["caches"]
+    return jax.jit(
+        model.decode_step,
+        in_shardings=(None, in_sh),
+        out_shardings=(None, cache_sh),
+        donate_argnums=(),
+    )

@@ -1,0 +1,239 @@
+"""Sharding policies: logical param/activation axes -> mesh axes.
+
+Profiles (chosen per-arch in configs, see DESIGN.md §4):
+  tp : Megatron TP over 'model' + DP over ('pod','data') + FSDP over 'data'.
+  cp : context parallel — seq over 'model' (ring attention), ZeRO-3 params
+       over ('data','model'), experts over 'model' (EP).
+  dp : pure DP over ('pod','data','model') (or what divides), FSDP over 'data'.
+
+Decode always uses batch over ('pod','data') + sequence-sharded KV cache over
+'model' (flash-decoding), independent of profile.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.models.layers import PD, is_pd
+
+TENSOR_AXES = {"heads", "ff", "vocab", "lru", "lru_out"}  # tp: -> 'model'
+FSDP_AXES = {"embed", "embed_out"}  # tp: -> 'data' (ZeRO)
+
+
+def axis_size(mesh: Mesh, name: str) -> int:
+    return mesh.shape[name] if name in mesh.axis_names else 1
+
+
+@dataclass(frozen=True)
+class Policy:
+    profile: str  # tp | cp | dp
+    mesh: Mesh
+    kind: str  # train | prefill | decode
+    fsdp: bool
+    kv_repeat: int  # weight-repeat factor for GQA kv heads under TP
+    # identity constraints: used when the WHOLE step runs inside shard_map
+    # (the xDFS dp channel path) where with_sharding_constraint is illegal
+    plain: bool = False
+
+    # ----- mesh topology ------------------------------------------------
+    @property
+    def has_pod(self) -> bool:
+        return "pod" in self.mesh.axis_names
+
+    @property
+    def dsize(self) -> int:
+        return axis_size(self.mesh, "data")
+
+    @property
+    def msize(self) -> int:
+        return axis_size(self.mesh, "model")
+
+    @property
+    def psize(self) -> int:
+        return axis_size(self.mesh, "pod")
+
+    # ----- activations ----------------------------------------------------
+    def _divide(self, b: int, cand: Tuple[str, ...]) -> Tuple[str, ...]:
+        axes: Tuple[str, ...] = ()
+        prod = 1
+        for a in cand:
+            if b % (prod * axis_size(self.mesh, a)) == 0:
+                axes += (a,)
+                prod *= axis_size(self.mesh, a)
+        return axes
+
+    def batch_axes(self, b: int) -> Tuple[str, ...]:
+        """Largest prefix-product of DP axes that divides the batch."""
+        if self.kind == "decode":
+            return self._divide(b, ("pod", "data") if self.has_pod else ("data",))
+        if self.profile == "dp":
+            if self.has_pod:
+                # prefer saturating (data, model) over leaving 'model' idle:
+                # with global_batch < n_chips, replicating over 'pod' wastes
+                # a pod's FLOPs but keeps per-chip memory flat (noted in
+                # EXPERIMENTS.md); (pod,data) with idle 'model' blows memory
+                # AND compute 16x.
+                best: Tuple[str, ...] = ()
+                for cand in (("pod", "data", "model"), ("data", "model"), ("pod", "data"), ("data",)):
+                    got = self._divide(b, cand)
+                    if len(got) == len(cand):
+                        return got
+                    if not best:
+                        best = got
+                return best
+            return self._divide(b, ("data", "model"))
+        return self._divide(b, ("pod", "data") if self.has_pod else ("data",))
+
+    def cache_batch_axes(self, b: int) -> Tuple[str, ...]:
+        """KV-cache batch axes: never 'model' (the cache seq dim owns it)."""
+        cand = ("pod", "data") if self.has_pod else ("data",)
+        axes: Tuple[str, ...] = ()
+        prod = 1
+        for a in cand:
+            if b % (prod * axis_size(self.mesh, a)) == 0:
+                axes += (a,)
+                prod *= axis_size(self.mesh, a)
+        return axes
+
+    def seq_axes(self) -> Tuple[str, ...]:
+        if self.kind == "decode":
+            return ("model",)  # KV cache sequence sharding
+        # cp: context parallel. tp: Megatron sequence parallelism — the
+        # residual stream is seq-sharded over 'model' between TP regions
+        # (otherwise saved activations are replicated over the model axis:
+        # 16 GiB/dev on llama3-8b train_4k; EXPERIMENTS.md §Dry-run).
+        return ("model",) if self.profile in ("cp", "tp") else ()
+
+    def ce_logits_spec(self, b: int) -> P:
+        """Per-chunk CE logits sharding: vocab over 'model' where the head
+        is column-parallel (tp) or ZeRO'd (cp); batch-only for dp (otherwise
+        SPMD reshards the whole batch to replicate it — measured 7.8 GiB
+        chunks on recurrentgemma-2b)."""
+        b_ax = self.batch_axes(b) or None
+        if self.profile == "dp":
+            return P(b_ax, None, None)
+        return P(b_ax, None, "model")
+
+    def act_seq_axes(self) -> Tuple[str, ...]:
+        """Sharding of the ACTIVATION sequence dim (decode activations have
+        S=1 and are unsharded; seq_axes() then refers to the KV cache)."""
+        return () if self.kind == "decode" else self.seq_axes()
+
+    def vocab_axes(self) -> Tuple[str, ...]:
+        return ("model",) if self.profile == "tp" else ()
+
+    def hidden_spec(self, b: int) -> P:
+        sa = self.seq_axes() if self.kind != "decode" else ()
+        return P(self.batch_axes(b) or None, sa or None, None)
+
+    def constrain(self, x, spec: P):
+        if self.plain:
+            return x
+        return jax.lax.with_sharding_constraint(x, NamedSharding(self.mesh, spec))
+
+    # ----- params -----------------------------------------------------------
+    def spec_for(self, pd: PD) -> P:
+        axes, shape = pd.axes, pd.shape
+        out = [None] * len(shape)
+        if self.profile == "tp":
+            used_model = False
+            # experts take priority for the 'model' axis (EP), then TP axes
+            for i, a in enumerate(axes):
+                if a == "experts" and shape[i] % self.msize == 0:
+                    out[i] = "model"
+                    used_model = True
+            for i, a in enumerate(axes):
+                if used_model:
+                    break
+                if a in TENSOR_AXES and shape[i] % self.msize == 0:
+                    out[i] = "model"
+                    used_model = True
+            if self.fsdp:
+                for i, a in enumerate(axes):
+                    if a in FSDP_AXES and out[i] is None and shape[i] % self.dsize == 0:
+                        out[i] = "data"
+                        break
+                else:
+                    # MoE expert weights: ZeRO their fan-in dim over 'data'
+                    for i, a in enumerate(axes):
+                        if (
+                            a in ("embed", "ff")
+                            and out[i] is None
+                            and shape[i] % self.dsize == 0
+                        ):
+                            out[i] = "data"
+                            break
+        elif self.profile == "cp":
+            # EP for experts, ZeRO-3 for everything else
+            used_model = False
+            for i, a in enumerate(axes):
+                if a == "experts" and shape[i] % self.msize == 0:
+                    out[i] = "model"
+                    used_model = True
+            placed = False
+            for i, a in enumerate(axes):
+                if a is None or a == "layers" or out[i] is not None:
+                    continue
+                if not used_model and shape[i] % (self.dsize * self.msize) == 0:
+                    out[i] = ("data", "model")
+                    placed = True
+                    break
+            if not placed:
+                for i, a in enumerate(axes):
+                    if a is None or a == "layers" or out[i] is not None:
+                        continue
+                    if self.fsdp and shape[i] % self.dsize == 0:
+                        out[i] = "data"
+                        break
+        else:  # dp
+            if self.fsdp:
+                for i, a in enumerate(axes):
+                    if a is not None and a != "layers" and shape[i] % self.dsize == 0:
+                        out[i] = "data"
+                        break
+        return P(*out)
+
+    def param_specs(self, defs):
+        return jax.tree.map(self.spec_for, defs, is_leaf=is_pd)
+
+    def param_shardings(self, defs):
+        return jax.tree.map(
+            lambda pd: NamedSharding(self.mesh, self.spec_for(pd)), defs, is_leaf=is_pd
+        )
+
+    # ----- MoE groups ---------------------------------------------------------
+    def moe_token_axes(self, b: int) -> Tuple[str, ...]:
+        return self.batch_axes(b) + self.act_seq_axes()
+
+    def moe_group_count(self, tokens: int, b: int, target_group: int = 4096) -> int:
+        shards = 1
+        for a in self.moe_token_axes(b):
+            shards *= axis_size(self.mesh, a)
+        g = shards
+        while tokens // g > target_group and tokens % (g * 2) == 0:
+            g *= 2
+        return g
+
+    def expert_wspec(self) -> P:
+        """Expert weight spec: EP over 'model' + ZeRO fan-in over 'data'."""
+        return P("model", "data" if self.fsdp else None, None)
+
+
+def make_policy(cfg, mesh: Mesh, kind: str, plain: bool = False) -> Policy:
+    msize = axis_size(mesh, "model")
+    rep = 1
+    if cfg.shard_profile == "tp" and cfg.num_kv_heads % msize != 0:
+        rep = msize // math.gcd(cfg.num_kv_heads, msize)
+    return Policy(
+        profile=cfg.shard_profile,
+        mesh=mesh,
+        kind=kind,
+        fsdp=cfg.fsdp,
+        kv_repeat=rep,
+        plain=plain,
+    )

@@ -1,0 +1,172 @@
+"""Training step factory: pjit'd step with sharded params/opt-state, global
+grad clipping, and the optional xDFS compressed-gradient channel (ZxDFS) for
+the data-parallel all-reduce.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.optim import Adafactor, AdamW, clip_by_global_norm, make_optimizer
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt_state: Any
+    step: jax.Array
+
+
+def init_state(model, key, optimizer) -> TrainState:
+    params = model.init(key)
+    return TrainState(
+        params=params,
+        opt_state=optimizer.init(params),
+        step=jnp.zeros((), jnp.int32),
+    )
+
+
+def state_shardings(model, optimizer):
+    """NamedShardings for the full TrainState (params + optimizer slots)."""
+    pol = model.policy
+    pspecs = pol.param_specs(model.defs)
+    if isinstance(optimizer, Adafactor):
+        ospecs = optimizer.state_specs(pspecs, model.defs)
+    else:
+        ospecs = optimizer.state_specs(pspecs)
+    mk = lambda spec: NamedSharding(pol.mesh, spec)
+    return TrainState(
+        params=jax.tree.map(mk, pspecs, is_leaf=lambda x: isinstance(x, P)),
+        opt_state=jax.tree.map(mk, ospecs, is_leaf=lambda x: isinstance(x, P)),
+        step=mk(P()),
+    )
+
+
+def make_train_step(
+    model,
+    optimizer,
+    *,
+    max_grad_norm: float = 1.0,
+    grad_channel=None,  # optional xDFS compressed all-reduce (core.channel)
+    microbatches: int = 0,  # 0 -> cfg.microbatches
+):
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    microbatches > 1 scans gradient accumulation over batch slices (halves+
+    activation memory; the batch slice must stay divisible by the DP axes,
+    so this suits tp/cp profiles — see EXPERIMENTS.md §Perf-3)."""
+    k = microbatches or getattr(model.cfg, "microbatches", 1)
+
+    def grads_of(params, batch):
+        (_, metrics), grads = jax.value_and_grad(model.loss, has_aux=True)(
+            params, batch
+        )
+        return grads, metrics
+
+    def train_step(state: TrainState, batch):
+        if k > 1:
+            split = lambda x: x.reshape((k, x.shape[0] // k) + x.shape[1:])
+            mbs = jax.tree.map(split, batch)
+
+            def body(gacc, mb):
+                g, metrics = grads_of(state.params, mb)
+                gacc = jax.tree.map(
+                    lambda a, b: a + b.astype(a.dtype), gacc, g
+                )
+                return gacc, metrics
+
+            # accumulate in param dtype: an f32 accumulator would double the
+            # resident grad bytes on ZeRO'd 480B params; k<=4 keeps bf16
+            # accumulation error ~1 ulp
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, p.dtype), state.params
+            )
+            grads, ms = jax.lax.scan(body, zeros, mbs)
+            grads = jax.tree.map(lambda g: g / k, grads)
+            metrics = jax.tree.map(lambda m: m.mean(), ms)
+        else:
+            grads, metrics = grads_of(state.params, batch)
+        if grad_channel is not None:
+            grads = grad_channel(grads)
+        grads, gnorm = clip_by_global_norm(grads, max_grad_norm)
+        updates, opt_state = optimizer.update(grads, state.opt_state, state.params)
+        params = jax.tree.map(lambda p, u: p + u.astype(p.dtype), state.params, updates)
+        metrics = dict(metrics, grad_norm=gnorm)
+        return TrainState(params, opt_state, state.step + 1), metrics
+
+    return train_step
+
+
+def make_dp_xdfs_train_step(model, optimizer, *, compress: bool = False,
+                            max_grad_norm: float = 1.0):
+    """Whole-step shard_map data-parallel training with the xDFS gradient
+    channel: parameters replicated, per-shard grads pushed through the
+    chunked bidirectional ring all-reduce (optionally ZxDFS int8-compressed
+    — halves ICI bytes; see EXPERIMENTS.md §Perf). Requires a dp-profile
+    arch with replicated params (e.g. smollm-135m with fsdp=False)."""
+    from repro.core.channel import xdfs_psum_tree
+
+    mesh = model.policy.mesh
+    axes = tuple(mesh.axis_names)
+    flat_ax = axes  # grads reduced over every mesh axis (pure DP)
+    n_total = 1
+    for a in axes:
+        n_total *= mesh.shape[a]
+
+    def local_step(state: TrainState, batch):
+        def loss_fn(params):
+            return model.loss(params, batch)
+
+        (_, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(state.params)
+        # FTSM upload: push gradients through the ring channel, axis by axis
+        for ax in flat_ax:
+            grads = xdfs_psum_tree(grads, ax, compress=compress)
+        grads = jax.tree.map(lambda g: g / n_total, grads)
+        metrics = {k: jax.lax.pmean(v, flat_ax) for k, v in metrics.items()}
+        grads, gnorm = clip_by_global_norm(grads, max_grad_norm)
+        updates, opt_state = optimizer.update(grads, state.opt_state, state.params)
+        params = jax.tree.map(lambda p, u: p + u.astype(p.dtype), state.params, updates)
+        metrics = dict(metrics, grad_norm=gnorm)
+        return TrainState(params, opt_state, state.step + 1), metrics
+
+    from jax.sharding import PartitionSpec as P
+
+    rep = P()
+    batch_spec = {
+        "inputs": P(axes),
+        "labels": P(axes),
+    }
+    # params/opt replicated; batch sharded over all axes on dim 0
+    step = jax.shard_map(
+        local_step,
+        mesh=mesh,
+        in_specs=(
+            TrainState(params=rep, opt_state=rep, step=rep),
+            batch_spec,
+        ),
+        out_specs=(TrainState(params=rep, opt_state=rep, step=rep), rep),
+        check_vma=False,
+    )
+    return jax.jit(step, donate_argnums=(0,))
+
+
+def jit_train_step(model, optimizer, shape, **kw):
+    """pjit the step with explicit in/out shardings (for the dry-run)."""
+    step = make_train_step(model, optimizer, **kw)
+    ss = state_shardings(model, optimizer)
+    mesh = model.policy.mesh
+    in_sh = jax.tree.map(
+        lambda spec: NamedSharding(mesh, spec),
+        model.input_specs(shape),
+        is_leaf=lambda x: isinstance(x, P),
+    )
+    return jax.jit(
+        step,
+        in_shardings=(ss, in_sh),
+        out_shardings=(ss, None),
+        donate_argnums=(0,),
+    )

@@ -1,0 +1,20 @@
+import os
+
+# Smoke tests and benches must see 1 device (dry-runs set 512 themselves,
+# in their own process). Keep determinism knobs on.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax  # noqa: E402
+import pytest  # noqa: E402
+
+
+@pytest.fixture(scope="session")
+def mesh11():
+    from repro.launch.mesh import make_local_mesh
+
+    return make_local_mesh(1, 1)
+
+
+@pytest.fixture(scope="session")
+def key():
+    return jax.random.key(0)

@@ -1,0 +1,42 @@
+"""ZxDFS codec properties (hypothesis): error bounds, shape preservation."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.compress import dequantize_int8, quantize_int8, wire_bytes
+
+
+@given(
+    n=st.integers(1, 3000),
+    scale=st.floats(1e-3, 1e3),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(max_examples=80, deadline=None)
+def test_quantize_roundtrip_error_bound(n, scale, seed):
+    x = np.random.default_rng(seed).standard_normal(n).astype(np.float32) * scale
+    z = quantize_int8(jnp.asarray(x))
+    y = np.asarray(dequantize_int8(z))
+    assert y.shape == x.shape
+    # per-block bound: |err| <= amax/127 * 0.5 (+ rounding slack)
+    for i in range(0, n, 256):
+        blk = x[i : i + 256]
+        err = np.abs(y[i : i + 256] - blk)
+        bound = np.abs(blk).max() / 127.0 * 0.51 + 1e-7
+        assert err.max() <= bound
+
+
+def test_wire_bytes_halved():
+    x = jnp.ones((100_000,), jnp.float32)
+    z = quantize_int8(x)
+    bf16_bytes = x.size * 2
+    assert wire_bytes(z) < 0.6 * bf16_bytes  # int8 + scale overhead < 60%
+
+
+@given(shape=st.sampled_from([(7,), (3, 5), (2, 3, 4), (256,), (1, 1)]))
+@settings(max_examples=20, deadline=None)
+def test_shapes_preserved(shape):
+    x = jnp.arange(np.prod(shape), dtype=jnp.float32).reshape(shape)
+    y = dequantize_int8(quantize_int8(x))
+    assert y.shape == x.shape

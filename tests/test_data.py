@@ -1,0 +1,36 @@
+"""Data stream determinism + prefetch pipeline resume semantics."""
+import numpy as np
+
+from repro.data.pipeline import PrefetchPipeline
+from repro.data.synthetic import StreamSpec, batch_at
+
+
+def test_stream_pure_function_of_step():
+    spec = StreamSpec(vocab_size=1000, seq_len=16, global_batch=4, seed=7)
+    a = batch_at(spec, 42)
+    b = batch_at(spec, 42)
+    np.testing.assert_array_equal(a["inputs"], b["inputs"])
+    c = batch_at(spec, 43)
+    assert not np.array_equal(a["inputs"], c["inputs"])
+    assert a["inputs"].max() < 1000 and a["inputs"].min() >= 0
+
+
+def test_pipeline_resume_bit_exact():
+    spec = StreamSpec(vocab_size=512, seq_len=8, global_batch=2, seed=1)
+    p1 = PrefetchPipeline(spec, start_step=0)
+    first = [next(p1) for _ in range(6)]
+    p1.close()
+    # resume at step 3: must replay the same batches
+    p2 = PrefetchPipeline(spec, start_step=3)
+    resumed = [next(p2) for _ in range(3)]
+    p2.close()
+    for (s1, b1), (s2, b2) in zip(first[3:], resumed):
+        assert s1 == s2
+        np.testing.assert_array_equal(b1["labels"], b2["labels"])
+
+
+def test_embed_mode_for_stub_frontends():
+    spec = StreamSpec(vocab_size=512, seq_len=8, global_batch=2, embed_dim=32)
+    b = batch_at(spec, 0)
+    assert b["inputs"].shape == (2, 8, 32)
+    assert b["labels"].shape == (2, 8)

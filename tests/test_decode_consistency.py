@@ -1,0 +1,34 @@
+"""Decode-vs-prefill logit consistency: prefill(S)+decode(token S) must match
+prefill(S+1)'s last logits to bf16 cache tolerance, for every family."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.base import get_config, list_configs
+from repro.models.transformer import build_model
+
+B, S = 2, 64
+
+
+@pytest.mark.parametrize("arch", list(list_configs()))
+def test_decode_matches_prefill(arch, mesh11, key):
+    cfg = get_config(arch).smoke()
+    if cfg.moe:
+        cfg = dataclasses.replace(cfg, capacity_factor=8.0)  # no drops
+    with mesh11:
+        m = build_model(cfg, mesh11, "prefill")
+        params = m.init(key)
+        if cfg.frontend:
+            toks = jax.random.normal(key, (B, S + 1, cfg.d_model), jnp.bfloat16)
+        else:
+            toks = jax.random.randint(key, (B, S + 1), 0, cfg.vocab_size)
+        ref, _ = jax.jit(m.prefill)(params, {"inputs": toks})
+        _, caches = jax.jit(m.prefill)(params, {"inputs": toks[:, :S]})
+        md = build_model(cfg, mesh11, "decode")
+        dl, _ = jax.jit(md.decode_step)(
+            params, {"inputs": toks[:, S : S + 1], "caches": caches, "pos": jnp.int32(S)}
+        )
+        err = float(jnp.max(jnp.abs(ref[:, 0] - dl[:, 0])))
+        assert err < 0.25, f"{arch}: decode/prefill logit divergence {err}"

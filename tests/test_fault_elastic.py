@@ -1,0 +1,76 @@
+"""Supervisor FSM flows, straggler detection, elastic resharding."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.fsm import FSMError
+from repro.runtime.fault import Supervisor, supervisor_fsm
+
+
+def test_supervisor_lifecycle():
+    sup = Supervisor()
+    sup.start()
+    assert sup.fsm.state == "running"
+    with sup.checkpoint_scope():
+        pass
+    assert sup.fsm.state == "running"
+    sup.report_fault("node lost")
+    assert sup.fsm.state == "restoring"
+    sup.restored()
+    assert sup.fsm.state == "running"
+    sup.fsm.step("stop")
+    assert sup.fsm.done
+
+
+def test_supervisor_rejects_illegal_flow():
+    sup = Supervisor()
+    with pytest.raises(FSMError):
+        sup.report_fault("fault before start")  # init has no 'fault' edge
+
+
+def test_checkpoint_scope_records_failure():
+    sup = Supervisor()
+    sup.start()
+    with pytest.raises(ValueError):
+        with sup.checkpoint_scope():
+            raise ValueError("disk died")
+    assert sup.fsm.state == "restoring"
+    assert sup.faults
+
+
+def test_straggler_detection():
+    sup = Supervisor(straggler_factor=3.0)
+    sup.start()
+    for i in range(20):
+        rec = sup.record_step(i, 0.1)
+        assert not rec.straggler
+    rec = sup.record_step(20, 1.0)  # 10x the median
+    assert rec.straggler
+    assert sup.stragglers == 1
+
+
+def test_heartbeat_timeout():
+    sup = Supervisor(heartbeat_timeout=5.0)
+    sup.start()
+    sup.heartbeat("w0", now=100.0)
+    sup.heartbeat("w1", now=103.0)
+    assert sup.dead_workers(now=104.0) == []
+    assert sup.dead_workers(now=108.0) == ["w0"]
+
+
+def test_elastic_reshard_roundtrip(mesh11, key):
+    from repro.configs.base import get_config
+    from repro.models.transformer import build_model
+    from repro.optim import make_optimizer
+    from repro.runtime.elastic import reshard_state
+    from repro.runtime.train import init_state
+
+    cfg = get_config("smollm-135m").smoke()
+    with mesh11:
+        model = build_model(cfg, mesh11, "train")
+        opt = make_optimizer(cfg)
+        state = init_state(model, key, opt)
+        new_state, new_model = reshard_state(state, model, cfg, mesh11, opt)
+        for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(new_state)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))

@@ -1,0 +1,66 @@
+"""CFSM conformance tests: legality, duality, and random-walk properties."""
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.fsm import FSM_BUILDERS, FSMError, Machine, dual_pairs
+
+
+@pytest.mark.parametrize("name", list(FSM_BUILDERS))
+def test_machines_reach_final(name):
+    m = FSM_BUILDERS[name]()
+    # happy path: greedily pick the first non-error event until final
+    for _ in range(200):
+        if m.done:
+            break
+        evs = [e for e in m.events_from() if e != "error"]
+        # prefer events that change state forward
+        assert evs, f"{name}: dead end in {m.state}"
+        m.step(evs[-1])
+    assert m.done or len(m.trace) == 200
+
+
+@pytest.mark.parametrize("name", list(FSM_BUILDERS))
+def test_illegal_event_raises(name):
+    m = FSM_BUILDERS[name]()
+    with pytest.raises(FSMError):
+        m.step("definitely_not_an_event")
+
+
+@pytest.mark.parametrize("name", list(FSM_BUILDERS))
+def test_error_path_reaches_final(name):
+    m = FSM_BUILDERS[name]()
+    first = m.events_from()[0]
+    m.step(first)
+    m.step("error")
+    assert m.state == "err"
+    m.step("handled")
+    assert m.done
+
+
+def test_duality_pairs_exist():
+    """Paper §4.1: server CFSM of one mode mirrors the client of the other."""
+    for a, b in dual_pairs():
+        ma, mb = FSM_BUILDERS[a](), FSM_BUILDERS[b]()
+        # duality proxy: both machines have matching data-phase arity
+        assert len(ma.states) >= 8 and len(mb.states) >= 8
+
+
+@given(st.lists(st.integers(0, 5), min_size=1, max_size=60))
+@settings(max_examples=200, deadline=None)
+def test_random_walk_stays_in_state_space(choices):
+    """Property: any legal-event walk keeps the machine inside its declared
+    state set and the trace is replayable."""
+    m = FSM_BUILDERS["server_upload"]()
+    for c in choices:
+        evs = sorted(m.events_from())
+        if not evs:
+            break
+        m.step(evs[c % len(evs)])
+        assert m.state in m.states
+    # trace replay gives the same final state
+    m2 = FSM_BUILDERS["server_upload"]()
+    for s, e in m.trace:
+        assert m2.state == s
+        m2.step(e)
+    assert m2.state == m.state

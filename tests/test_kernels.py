@@ -1,0 +1,70 @@
+"""Per-kernel allclose sweeps against pure-jnp oracles (interpret mode)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.quant_channel.ops import roundtrip
+from repro.kernels.quant_channel.ref import roundtrip_ref
+from repro.kernels.rglru_scan.ops import rglru_scan
+from repro.kernels.rglru_scan.ref import linear_scan_ref
+
+FLASH_CASES = [
+    # (B, S, Hq, Hkv, D, window, cap, dtype)
+    (2, 256, 4, 2, 64, None, None, jnp.float32),
+    (1, 128, 4, 4, 32, 64, None, jnp.float32),
+    (2, 192, 8, 2, 64, None, 50.0, jnp.float32),
+    (1, 100, 2, 1, 64, 32, 30.0, jnp.float32),
+    (1, 256, 2, 2, 128, None, None, jnp.bfloat16),
+    (2, 64, 3, 3, 64, 16, None, jnp.bfloat16),
+]
+
+
+@pytest.mark.parametrize("case", FLASH_CASES, ids=str)
+def test_flash_attention_matches_ref(case, key):
+    b, s, hq, hkv, d, window, cap, dtype = case
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (b, s, hq, d), dtype)
+    k = jax.random.normal(ks[1], (b, s, hkv, d), dtype)
+    v = jax.random.normal(ks[2], (b, s, hkv, d), dtype)
+    out = flash_attention(
+        q, k, v, scale=d**-0.5, window=window, logit_cap=cap,
+        block_q=64, block_k=64, interpret=True,
+    )
+    kr = jnp.repeat(k, hq // hkv, 2)
+    vr = jnp.repeat(v, hq // hkv, 2)
+    ref = attention_ref(
+        q.transpose(0, 2, 1, 3), kr.transpose(0, 2, 1, 3), vr.transpose(0, 2, 1, 3),
+        scale=d**-0.5, window=window, logit_cap=cap,
+    ).transpose(0, 2, 1, 3)
+    tol = 2e-6 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32), atol=tol, rtol=tol
+    )
+
+
+@pytest.mark.parametrize("n", [17, 256, 1000, 4096])
+@pytest.mark.parametrize("scale", [0.1, 10.0])
+def test_quant_channel_matches_ref(n, scale, key):
+    x = jax.random.normal(key, (n,)) * scale
+    out = roundtrip(x, interpret=True)
+    ref = roundtrip_ref(x)
+    # bit-identical up to f32 association order (scale division vs multiply)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-6)
+    # quantization error bound: per-block amax/127 half-step
+    assert float(jnp.max(jnp.abs(out - x))) <= float(jnp.max(jnp.abs(x))) / 127.0 + 1e-6
+
+
+@pytest.mark.parametrize("shape", [(1, 64, 128), (2, 300, 160), (3, 128, 256)])
+def test_rglru_scan_matches_ref(shape, key):
+    b, t, c = shape
+    ks = jax.random.split(key, 3)
+    a = jax.nn.sigmoid(jax.random.normal(ks[0], shape))
+    bx = jax.random.normal(ks[1], shape)
+    h0 = jax.random.normal(ks[2], (b, c))
+    h_all, h_last = rglru_scan(a, bx, h0, interpret=True)
+    ref_all, ref_last = linear_scan_ref(a, bx, h0)
+    np.testing.assert_allclose(np.asarray(h_all), np.asarray(ref_all), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(h_last), np.asarray(ref_last), atol=1e-5)

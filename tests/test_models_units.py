@@ -1,0 +1,156 @@
+"""Model-layer unit + property tests: rope, norms, windows, rwkv/rglru
+equivalences, MoE routing invariants."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.models.attention import attention_chunked
+from repro.models.layers import rms_norm, rope, softcap
+from repro.models.rglru import linear_scan_chunked
+from repro.models.rwkv6 import best_chunk, wkv_chunked, wkv_step
+
+
+def test_rope_preserves_norm_and_relativity(key):
+    x = jax.random.normal(key, (1, 8, 2, 32))
+    pos = jnp.arange(8)[None]
+    y = rope(x, pos, 10000.0)
+    np.testing.assert_allclose(
+        np.linalg.norm(np.asarray(x), axis=-1),
+        np.linalg.norm(np.asarray(y), axis=-1),
+        rtol=1e-5,
+    )
+    # relative property: <rope(q,i), rope(k,j)> depends only on i-j
+    q = jax.random.normal(jax.random.fold_in(key, 1), (1, 1, 1, 32))
+    k = jax.random.normal(jax.random.fold_in(key, 2), (1, 1, 1, 32))
+
+    def dot_at(i, j):
+        qi = rope(q, jnp.array([[i]]), 10000.0)
+        kj = rope(k, jnp.array([[j]]), 10000.0)
+        return float(jnp.sum(qi * kj))
+
+    assert abs(dot_at(3, 1) - dot_at(10, 8)) < 1e-3
+
+
+def test_rms_norm_unit_variance(key):
+    x = jax.random.normal(key, (4, 64)) * 7.0
+    w = jnp.ones((64,))
+    y = rms_norm(x, w, 1e-6, gemma_style=False)
+    rms = np.sqrt(np.mean(np.asarray(y, np.float32) ** 2, axis=-1))
+    np.testing.assert_allclose(rms, 1.0, atol=2e-2)  # bf16-path tolerance
+    # gemma (1+w) convention: zero weight == identity scale
+    y2 = rms_norm(x, jnp.zeros((64,)), 1e-6, gemma_style=True)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y2), atol=1e-5)
+
+
+@given(cap=st.floats(1.0, 100.0), v=st.floats(-1e4, 1e4))
+@settings(max_examples=100, deadline=None)
+def test_softcap_bounds(cap, v):
+    out = float(softcap(jnp.float32(v), cap))
+    assert abs(out) <= cap + 1e-3
+    if abs(v) < cap / 10:
+        assert abs(out - v) < cap / 50  # near-identity in the linear regime
+
+
+@pytest.mark.parametrize("chunk", [1, 7, 16, 64])
+def test_attention_chunk_invariance(chunk, key):
+    """Chunked attention must be chunk-size invariant."""
+    q = jax.random.normal(key, (1, 48, 4, 16))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (1, 48, 2, 16))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (1, 48, 2, 16))
+    ref = attention_chunked(q, k, v, scale=0.25, chunk=48)
+    out = attention_chunked(q, k, v, scale=0.25, chunk=chunk)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-5)
+
+
+def test_attention_window_equals_masked_full(key):
+    q = jax.random.normal(key, (1, 32, 2, 16))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (1, 32, 2, 16))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (1, 32, 2, 16))
+    out = attention_chunked(q, k, v, scale=0.25, window=8, chunk=16)
+    # manual reference
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, k) * 0.25
+    qpos, kpos = jnp.arange(32)[:, None], jnp.arange(32)[None, :]
+    mask = (kpos <= qpos) & (qpos - kpos < 8)
+    s = jnp.where(mask[None, None], s, -1e30)
+    ref = jnp.einsum("bhqk,bkhd->bqhd", jax.nn.softmax(s, -1), v)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-5)
+
+
+@pytest.mark.parametrize("s,chunk", [(12, 4), (37, 64), (64, 16)])
+def test_wkv_chunked_matches_stepwise(s, chunk, key):
+    """RWKV6 chunked form == sequential per-token recurrence."""
+    b, h, hd = 2, 3, 8
+    ks = jax.random.split(key, 5)
+    r = jax.random.normal(ks[0], (b, s, h, hd))
+    k = jax.random.normal(ks[1], (b, s, h, hd))
+    v = jax.random.normal(ks[2], (b, s, h, hd))
+    logw = -jnp.exp(jax.random.normal(ks[3], (b, s, h, hd)) * 0.5)
+    u = jax.random.normal(ks[4], (h, hd)) * 0.1
+    state0 = jnp.zeros((b, h, hd, hd), jnp.float32)
+
+    o_chunk, s_chunk = wkv_chunked(r, k, v, logw, u, state0, chunk=chunk)
+
+    st = state0
+    outs = []
+    for t in range(s):
+        o, st = wkv_step(r[:, t], k[:, t], v[:, t], logw[:, t], u, st)
+        outs.append(o)
+    o_ref = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(o_chunk), np.asarray(o_ref), atol=2e-4)
+    np.testing.assert_allclose(np.asarray(s_chunk), np.asarray(st), atol=2e-4)
+
+
+@given(s=st.integers(1, 100), chunk=st.integers(1, 300))
+@settings(max_examples=50, deadline=None)
+def test_best_chunk_divides(s, chunk):
+    c = best_chunk(s, chunk)
+    assert 1 <= c <= max(1, min(chunk, s))
+    assert s % c == 0
+
+
+@pytest.mark.parametrize("chunk", [16, 64, 256])
+def test_rglru_chunked_scan_matches_ref(chunk, key):
+    from repro.kernels.rglru_scan.ref import linear_scan_ref
+
+    b, s, c = 2, 96, 24
+    a = jax.nn.sigmoid(jax.random.normal(key, (b, s, c)))
+    bx = jax.random.normal(jax.random.fold_in(key, 1), (b, s, c))
+    h0 = jax.random.normal(jax.random.fold_in(key, 2), (b, c))
+    h_all, h_last = linear_scan_chunked(a, bx, h0, chunk=chunk)
+    ref_all, ref_last = linear_scan_ref(a, bx, h0)
+    np.testing.assert_allclose(np.asarray(h_all), np.asarray(ref_all), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(h_last), np.asarray(ref_last), atol=1e-5)
+
+
+def test_moe_zero_drop_routing(mesh11, key):
+    """With ample capacity every (token, k) assignment is honored and gate
+    weights are a convex combination."""
+    from repro.configs.base import get_config
+    from repro.models.moe import moe_apply
+    from repro.runtime.shard import make_policy
+
+    cfg = dataclasses.replace(get_config("olmoe-1b-7b").smoke(), capacity_factor=8.0)
+    pol = make_policy(cfg, mesh11, "train")
+    d = cfg.d_model
+    params = {
+        "router": jax.random.normal(key, (d, cfg.num_experts), jnp.float32) * 0.1,
+        "w_in": jax.random.normal(jax.random.fold_in(key, 1), (cfg.num_experts, d, cfg.moe_dff), jnp.bfloat16) * 0.05,
+        "w_gate": jax.random.normal(jax.random.fold_in(key, 2), (cfg.num_experts, d, cfg.moe_dff), jnp.bfloat16) * 0.05,
+        "w_out": jax.random.normal(jax.random.fold_in(key, 3), (cfg.num_experts, cfg.moe_dff, d), jnp.bfloat16) * 0.05,
+    }
+    x = jax.random.normal(jax.random.fold_in(key, 4), (64, d), jnp.bfloat16)
+    with mesh11:
+        out, metrics = jax.jit(
+            lambda p, xx: moe_apply(
+                p, xx, cfg, group=64, capacity=64 * cfg.top_k, policy=pol, batch=2
+            )
+        )(params, x)
+    assert out.shape == x.shape
+    assert float(metrics.drop_frac) == 0.0
+    assert bool(jnp.all(jnp.isfinite(out.astype(jnp.float32))))
+    assert float(metrics.aux_loss) > 0.0

@@ -1,0 +1,84 @@
+"""Ring buffer / block pool invariants (hypothesis FIFO model checking)."""
+import threading
+
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.ringbuf import BlockPool, LockedRing, RingBuffer
+
+
+@given(st.lists(st.tuples(st.booleans(), st.binary(min_size=1, max_size=32)),
+                min_size=1, max_size=200))
+@settings(max_examples=200, deadline=None)
+def test_ringbuffer_fifo_model(ops):
+    """Model-check RingBuffer against a plain list queue."""
+    rb = RingBuffer(8, 32)
+    model = []
+    off = 0
+    for is_push, payload in ops:
+        if is_push:
+            if rb.push(payload, off):
+                model.append((off, bytes(payload)))
+                off += len(payload)
+            else:
+                assert rb.full()
+        else:
+            got = rb.peek()
+            if got is None:
+                assert not model
+            else:
+                o, mv = got
+                assert (o, bytes(mv)) == model[0]
+                rb.pop()
+                model.pop(0)
+    assert len(rb) == len(model)
+
+
+def test_ringbuffer_drain_order():
+    rb = RingBuffer(4, 16)
+    for i in range(4):
+        assert rb.push(bytes([i] * 4), i * 4)
+    assert rb.full() and rb.produce_view() is None
+    drained = rb.drain_contiguous()
+    assert [off for off, _ in drained] == [0, 4, 8, 12]
+    assert rb.empty()
+
+
+@given(st.integers(1, 16))
+@settings(max_examples=30, deadline=None)
+def test_blockpool_acquire_release(n):
+    pool = BlockPool(n, 64)
+    blks = []
+    for _ in range(n):
+        b = pool.acquire()
+        assert b is not None
+        blks.append(b)
+    assert pool.acquire() is None
+    for i, b in enumerate(blks):
+        pool.commit(b, i * 64, 64)
+    drained = pool.drain()
+    assert [o for o, _, _ in drained] == [i * 64 for i in range(n)]
+    for _, _, b in drained:
+        pool.release(b)
+    assert pool.n_free == n
+
+
+def test_lockedring_threaded_integrity():
+    ring = LockedRing(8, 64)
+    n_items = 200
+    out = []
+
+    def consumer():
+        while True:
+            batch = ring.get_batch(timeout=0.05)
+            out.extend(batch)
+            if ring.closed and not batch:
+                return
+
+    t = threading.Thread(target=consumer)
+    t.start()
+    for i in range(n_items):
+        ring.put(bytes([i % 256] * 8), i * 8)
+    ring.close()
+    t.join(timeout=10)
+    assert sorted(o for o, _ in out) == [i * 8 for i in range(n_items)]
