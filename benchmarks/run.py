@@ -1,8 +1,12 @@
 """Benchmark entrypoint: one section per paper table/figure + system benches.
 
-  PYTHONPATH=src python -m benchmarks.run [--full] [--quick]
+  PYTHONPATH=src python -m benchmarks.run [--full] [--quick] [--smoke]
+
+``--smoke`` runs ONLY the session-reuse microbenchmark (one negotiated
+multi-file session vs N one-shot transfers) — the CI fast path.
 
 Sections:
+  0. session_reuse   — §2.5.3 amortization: EOFR channel reuse vs one-shot
   1. paper_figs      — Figs. 12-19 transfer reproductions (MTEDP vs MT vs MP)
   2. device_channels — xDFS ring collectives vs lax.psum (8-dev subprocess)
   3. kernels_bench   — attention / wkv / rglru scaling micro-benches
@@ -23,6 +27,14 @@ import sys
 def main() -> None:
     full = "--full" in sys.argv
     quick = "--quick" in sys.argv
+
+    print("== section 0: session reuse (EOFR amortization) ==", flush=True)
+    from benchmarks import session_reuse
+
+    session_reuse.run(n_files=8, size_kb=64 if "--smoke" in sys.argv else 256)
+    if "--smoke" in sys.argv:
+        print("== done (smoke) ==")
+        return
 
     print("== section 1: paper figures 12-19 (host transfer engines) ==", flush=True)
     from benchmarks import paper_figs

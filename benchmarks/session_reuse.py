@@ -1,0 +1,83 @@
+"""Session-reuse microbenchmark (paper §2.5.3 / Table 3 amortization).
+
+Moves N small files two ways and reports wall-clock per file:
+
+* ``session``  — ONE ``XdfsClient`` session: negotiate once, stream all N
+  files over the same n channels with EOFR reuse;
+* ``one-shot`` — N ``run_transfer`` calls: every file pays fork +
+  negotiation + teardown (the per-transfer overhead GridFTP-style tools
+  pay, which dominates small-file workloads).
+
+  PYTHONPATH=src python -m benchmarks.session_reuse [--files 8] [--kb 256]
+"""
+from __future__ import annotations
+
+import os
+import tempfile
+import time
+from pathlib import Path
+
+from repro.core.api import XdfsClient, XdfsServer
+from repro.core.transfer import TransferSpec, run_transfer
+
+
+def run(n_files: int = 8, size_kb: int = 256, n_channels: int = 4,
+        engine: str = "mtedp") -> dict:
+    tmp = Path(tempfile.mkdtemp(prefix="xdfs_sess_"))
+    size = size_kb << 10
+    files = []
+    for i in range(n_files):
+        p = tmp / f"f{i}.bin"
+        p.write_bytes(os.urandom(size))
+        files.append(p)
+
+    t0 = time.perf_counter()
+    with XdfsServer(engine=engine, root=str(tmp / "srv")) as srv:
+        with XdfsClient.connect(srv.address, n_channels=n_channels,
+                                engine=engine, block_size=1 << 17) as cli:
+            for r in cli.put_many([(str(p), p.name) for p in files]):
+                r.result()
+        srv.wait_closed_sessions(1, timeout=120)
+    t_session = time.perf_counter() - t0
+    negotiations = srv.stats["negotiations"]
+    eofr = srv.stats["eofr_frames"]
+
+    t0 = time.perf_counter()
+    for p in files:
+        run_transfer(TransferSpec(
+            engine=engine, mode="upload", n_channels=n_channels, size=size,
+            src_path=str(p), dst_path=str(tmp / "out.bin"), block_size=1 << 17,
+        ))
+    t_oneshot = time.perf_counter() - t0
+
+    row = {
+        "engine": engine, "files": n_files, "size_kb": size_kb,
+        "channels": n_channels, "negotiations": negotiations,
+        "eofr_frames": eofr,
+        "session_s": round(t_session, 4),
+        "oneshot_s": round(t_oneshot, 4),
+        "session_ms_per_file": round(1e3 * t_session / n_files, 2),
+        "oneshot_ms_per_file": round(1e3 * t_oneshot / n_files, 2),
+        "speedup": round(t_oneshot / t_session, 2),
+    }
+    print(",".join(f"{k}={v}" for k, v in row.items()))
+    if t_session < t_oneshot:
+        print(f"session reuse beats {n_files}x one-shot by "
+              f"{row['speedup']}x (1 negotiation vs {n_files})")
+    else:
+        print("WARNING: session reuse did NOT beat one-shot on this host")
+    import shutil
+    shutil.rmtree(tmp)
+    return row
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--files", type=int, default=8)
+    ap.add_argument("--kb", type=int, default=256)
+    ap.add_argument("--channels", type=int, default=4)
+    ap.add_argument("--engine", default="mtedp")
+    args = ap.parse_args()
+    run(args.files, args.kb, args.channels, args.engine)

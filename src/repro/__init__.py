@@ -1,0 +1,27 @@
+"""repro — xDFS reproduction grown toward a production-scale system.
+
+Cross-version jax compatibility: ``jax.shard_map`` is the public name on
+newer jax, but this container ships a jax where it still lives in
+``jax.experimental.shard_map``. Alias it here (the package root imports
+before any model/runtime module) so call sites can use the public name.
+"""
+import functools
+
+import jax
+from jax import lax as _lax
+
+if not hasattr(jax, "shard_map"):  # jax < 0.6 compatibility
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    @functools.wraps(_shard_map)
+    def _compat_shard_map(*args, **kwargs):
+        if "check_vma" in kwargs:  # renamed from check_rep in newer jax
+            kwargs["check_rep"] = kwargs.pop("check_vma")
+        return _shard_map(*args, **kwargs)
+
+    jax.shard_map = _compat_shard_map
+
+if not hasattr(_lax, "axis_size"):  # jax < 0.4.32 compatibility
+    import jax.core as _core
+
+    _lax.axis_size = _core.axis_frame  # returns the named axis size

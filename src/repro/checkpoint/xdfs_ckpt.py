@@ -1,9 +1,11 @@
-"""Sharded checkpointing over the xDFS transfer machinery.
+"""Sharded checkpointing over the xDFS session API.
 
-Save = FTSM upload (device -> host -> disk): each pytree leaf is written in
-block_size chunks through a single-writer sink with coalesced vectored I/O
-(core.transfer.Sink), framed by a JSON manifest carrying the tree structure,
-shapes/dtypes, the step, and per-leaf checksums. Restore = download.
+Save = one persistent upload session: every pytree leaf (and the JSON
+manifest) is ``put`` through an ``XdfsClient`` as an in-memory source, so
+all checkpoint bytes flow through the negotiated multi-channel session —
+one negotiation per save, EOFR channel reuse between leaves, and the
+MTEDP single-writer vectored sink on the server side. Restore = one
+download session: ``get_bytes`` futures pipeline the leaf reads.
 
 Layout:
   <dir>/step_<N>.tmp/...   (in-flight)
@@ -21,16 +23,32 @@ import json
 import os
 import shutil
 import zlib
+from contextlib import contextmanager
 from pathlib import Path
 from typing import Any, Optional
 
 import jax
 import numpy as np
 
-from repro.core.ringbuf import BlockPool
-from repro.core.transfer import Sink
-
 BLOCK = 4 << 20
+N_CHANNELS = 2
+ENGINE = "mtedp"
+
+
+@contextmanager
+def _session(root: Path):
+    """A loopback xDFS session rooted at ``root`` (server + client pair)."""
+    from repro.core.api import XdfsClient, XdfsServer
+
+    srv = XdfsServer(engine=ENGINE, root=str(root)).start()
+    cli = XdfsClient.connect(
+        srv.address, n_channels=N_CHANNELS, engine=ENGINE, block_size=BLOCK
+    )
+    try:
+        yield cli
+    finally:
+        cli.close()
+        srv.stop()
 
 
 def _leaf_files(tree):
@@ -46,34 +64,38 @@ def save(tree: Any, directory: str, step: int, keep_last: int = 3) -> str:
     """Blocking sharded save; returns the committed directory."""
     base = Path(directory)
     base.mkdir(parents=True, exist_ok=True)
-    tmp = base / f"step_{step:08d}.tmp"
+    rel = f"step_{step:08d}.tmp"
+    tmp = base / rel
     final = base / f"step_{step:08d}"
     if tmp.exists():
         shutil.rmtree(tmp)
     tmp.mkdir()
     manifest = {"step": step, "leaves": []}
-    for keypath, fname, leaf in _leaf_files(tree):
-        arr = np.asarray(jax.device_get(leaf))
-        raw = arr.tobytes()
-        sink = Sink(str(tmp / fname), len(raw))
-        # stream in xDFS blocks through the single-writer vectored path
-        blocks = [
-            (off, min(BLOCK, len(raw) - off), bytearray(raw[off : off + BLOCK]))
-            for off in range(0, max(len(raw), 1), BLOCK)
-            if off < len(raw)
-        ]
-        sink.writev_coalesced(blocks)
-        sink.close()
-        manifest["leaves"].append(
-            {
-                "key": keypath,
-                "file": fname,
-                "shape": list(arr.shape),
-                "dtype": str(arr.dtype),
-                "crc32": zlib.crc32(raw) & 0xFFFFFFFF,
-            }
-        )
-    (tmp / "manifest.json").write_text(json.dumps(manifest))
+    with _session(base) as cli:
+        # one negotiation for the whole step; leaves pipeline depth-2
+        # through the session worker (bounded host memory: only the leaf in
+        # flight and the one being prepared are materialized)
+        prev = None
+        for keypath, fname, leaf in _leaf_files(tree):
+            arr = np.asarray(jax.device_get(leaf))
+            raw = arr.tobytes()
+            manifest["leaves"].append(
+                {
+                    "key": keypath,
+                    "file": fname,
+                    "shape": list(arr.shape),
+                    "dtype": str(arr.dtype),
+                    "crc32": zlib.crc32(raw) & 0xFFFFFFFF,
+                }
+            )
+            fut = cli.put(None, f"{rel}/{fname}", data=raw)
+            if prev is not None:
+                prev.result()
+            prev = fut
+        if prev is not None:
+            prev.result()
+        cli.put(None, f"{rel}/manifest.json",
+                data=json.dumps(manifest).encode()).result()
     if final.exists():  # re-save after fault recovery: replace the old step
         shutil.rmtree(final)
     os.replace(tmp, final)  # atomic commit
@@ -132,14 +154,22 @@ def _restore_one(d: Path, like: Any, shardings: Any):
         raise ValueError(
             f"leaf count mismatch: ckpt {len(manifest['leaves'])} vs {len(leaves_like)}"
         )
-    out = []
-    for meta, like_leaf, sh in zip(manifest["leaves"], leaves_like, sh_leaves):
-        raw = (d / meta["file"]).read_bytes()
+    def finish(meta, raw, sh):
         if (zlib.crc32(raw) & 0xFFFFFFFF) != meta["crc32"]:
             raise IOError(f"checksum mismatch in {meta['file']}")
         arr = np.frombuffer(raw, dtype=meta["dtype"]).reshape(meta["shape"])
-        if sh is not None:
-            out.append(jax.device_put(arr, sh))
-        else:
-            out.append(jax.device_put(arr))
+        return jax.device_put(arr, sh) if sh is not None else jax.device_put(arr)
+
+    out = []
+    with _session(d) as cli:
+        # depth-2 pipeline: leaf k+1 streams while leaf k is checksummed
+        # and placed on device, so only ~one leaf is resident at a time
+        fut = prev = None
+        for meta, sh in zip(manifest["leaves"], sh_leaves):
+            nxt = cli.get_bytes(meta["file"])
+            if fut is not None:
+                out.append(finish(prev[0], fut.result().data, prev[1]))
+            fut, prev = nxt, (meta, sh)
+        if fut is not None:
+            out.append(finish(prev[0], fut.result().data, prev[1]))
     return jax.tree_util.tree_unflatten(treedef, out)

@@ -1,0 +1,504 @@
+"""xDFS public API: persistent servers, multi-file client sessions, futures.
+
+The paper's throughput wins come from amortizing protocol overhead across
+a long-lived session (§2.5.3): negotiate once, keep n channels open, and
+stream many files through them with ``EOFR`` (channel reusable) frames.
+This module is the object model for that:
+
+* :class:`XdfsServer` — a persistent in-process server that accepts many
+  concurrent sessions and dispatches each through a registry engine
+  (``mtedp`` / ``mt`` / ``mp`` or anything registered at runtime);
+* :class:`XdfsClient` — ``connect()`` negotiates once; ``put`` / ``get`` /
+  ``put_many`` / ``get_many`` reuse the same n channels for every file;
+* :class:`TransferResult` — a future per file, so callers pipeline
+  requests without blocking on each transfer.
+
+Quickstart::
+
+    with XdfsServer(engine="mtedp", root="/srv/data") as srv:
+        with XdfsClient.connect(srv.address, n_channels=8) as cli:
+            results = cli.put_many([(f, f"in/{os.path.basename(f)}")
+                                    for f in local_files])
+            total = sum(r.result().bytes for r in results)
+
+``run_transfer`` in ``core/transfer.py`` remains as a one-shot
+compatibility shim over these objects.
+"""
+from __future__ import annotations
+
+import os
+import queue
+import socket
+import threading
+import time
+from concurrent.futures import Future
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Tuple, Union
+
+from repro.core.engines import Engine, Sink, Source, get_engine
+from repro.core.header import ChannelEvent, Negotiation, new_session_id
+from repro.core.session import (
+    CTRL_CHANNEL,
+    DEFAULT_BLOCK,
+    ServerSession,
+    SessionError,
+    recv_ctrl,
+    recv_hello,
+    recv_negotiation,
+    send_ctrl,
+    send_hello,
+    send_negotiation,
+)
+
+HANDSHAKE_TIMEOUT = 15.0
+
+
+@dataclass(frozen=True)
+class FileResult:
+    """Outcome of one file transfer inside a session."""
+
+    remote: Optional[str]
+    bytes: int
+    wall_s: float
+    data: Optional[bytes] = None  # populated by get_bytes
+
+    @property
+    def throughput_mbps(self) -> float:
+        return self.bytes * 8 / self.wall_s / 1e6 if self.wall_s else 0.0
+
+
+class TransferResult:
+    """Future handle for one queued transfer. ``result()`` blocks until the
+    session worker finishes the file and returns a :class:`FileResult`."""
+
+    def __init__(self):
+        self._future: Future = Future()
+
+    def result(self, timeout: Optional[float] = None) -> FileResult:
+        return self._future.result(timeout)
+
+    def exception(self, timeout: Optional[float] = None):
+        return self._future.exception(timeout)
+
+    def done(self) -> bool:
+        return self._future.done()
+
+    def add_done_callback(self, fn) -> None:
+        self._future.add_done_callback(lambda f: fn(self))
+
+
+# ---------------------------------------------------------------------------
+# server
+# ---------------------------------------------------------------------------
+
+
+class XdfsServer:
+    """Persistent xDFS server: accepts many concurrent sessions, each a
+    long-lived set of n channels carrying many files (EOFR reuse)."""
+
+    def __init__(self, engine: Union[str, Engine] = "mtedp",
+                 root: Optional[str] = None, host: str = "127.0.0.1",
+                 port: int = 0, pool_slots: int = 32, backlog: int = 128):
+        self.engine = get_engine(engine)  # fail fast on unknown engines
+        self.root = root
+        self.host = host
+        self._port = port
+        self.pool_slots = pool_slots
+        self.backlog = backlog
+        self._lsock: Optional[socket.socket] = None
+        self._accept_thread: Optional[threading.Thread] = None
+        self._session_threads: List[threading.Thread] = []
+        self._pending: Dict[bytes, Dict[int, socket.socket]] = {}
+        self._pending_neg: Dict[bytes, Negotiation] = {}
+        self._pending_since: Dict[bytes, float] = {}
+        self._lock = threading.Lock()
+        self._closed_cv = threading.Condition(self._lock)
+        self._stopping = False
+        self.errors: List[BaseException] = []  # session failures
+        self.handshake_errors: List[BaseException] = []  # stray/bad connects
+        self.stats: Dict[str, int] = {
+            "sessions": 0, "sessions_closed": 0, "negotiations": 0,
+            "files": 0, "bytes": 0, "eofr_frames": 0, "eoft_frames": 0,
+            "writev_calls": 0,
+        }
+
+    # -- lifecycle ---------------------------------------------------------
+
+    def start(self) -> "XdfsServer":
+        lsock = socket.socket()
+        lsock.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+        lsock.bind((self.host, self._port))
+        lsock.listen(self.backlog)
+        # a timeout so the accept loop notices _stopping: close() alone does
+        # not wake a thread blocked in accept()
+        lsock.settimeout(0.25)
+        self._lsock = lsock
+        self._accept_thread = threading.Thread(
+            target=self._accept_loop, name="xdfs-accept", daemon=True
+        )
+        self._accept_thread.start()
+        return self
+
+    @property
+    def address(self) -> Tuple[str, int]:
+        assert self._lsock is not None, "server not started"
+        return self._lsock.getsockname()[:2]
+
+    def stop(self, timeout: float = 10.0) -> None:
+        self._stopping = True
+        if self._lsock is not None:
+            try:
+                self._lsock.close()
+            except OSError:
+                pass
+        if self._accept_thread is not None:
+            self._accept_thread.join(timeout)
+        with self._lock:
+            live = list(self._session_threads)
+        for t in live:
+            t.join(timeout)
+
+    def wait_closed_sessions(self, n: int = 1, timeout: float = 600.0) -> bool:
+        """Block until ``n`` sessions have completed (shim + tests)."""
+        deadline = time.monotonic() + timeout
+        with self._closed_cv:
+            while self.stats["sessions_closed"] < n:
+                left = deadline - time.monotonic()
+                if left <= 0:
+                    return False
+                self._closed_cv.wait(left)
+        return True
+
+    def __enter__(self) -> "XdfsServer":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.stop()
+
+    # -- accept / handshake ------------------------------------------------
+
+    def _accept_loop(self) -> None:
+        while not self._stopping:
+            try:
+                conn, _ = self._lsock.accept()
+            except socket.timeout:
+                self._prune_stale_handshakes()
+                continue
+            except OSError:
+                break  # listener closed by stop()
+            threading.Thread(
+                target=self._handshake, args=(conn,), daemon=True
+            ).start()
+
+    def _prune_stale_handshakes(self) -> None:
+        """Drop sessions whose remaining channels never arrived (client died
+        mid-connect) so parked sockets and negotiations don't leak."""
+        now = time.monotonic()
+        with self._lock:
+            stale = [sid for sid, t0 in self._pending_since.items()
+                     if now - t0 > HANDSHAKE_TIMEOUT]
+            dropped = []
+            for sid in stale:
+                dropped.extend(self._pending.pop(sid, {}).values())
+                self._pending_neg.pop(sid, None)
+                self._pending_since.pop(sid, None)
+        for s in dropped:
+            try:
+                s.close()
+            except OSError:
+                pass
+
+    def _handshake(self, conn: socket.socket) -> None:
+        """Read the channel hello (+ negotiation on the control channel),
+        park the socket under its session id, and launch the session once
+        all n channels have arrived. Channels of concurrent sessions may
+        interleave arbitrarily."""
+        try:
+            conn.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+            conn.settimeout(HANDSHAKE_TIMEOUT)
+            hello = recv_hello(conn)
+            if hello.channel == CTRL_CHANNEL:
+                neg = recv_negotiation(conn)
+                with self._lock:
+                    self._pending_neg[hello.session] = neg
+                    self.stats["negotiations"] += 1
+            conn.settimeout(None)
+            with self._lock:
+                self._pending.setdefault(hello.session, {})[hello.channel] = conn
+                self._pending_since.setdefault(hello.session, time.monotonic())
+            self._maybe_start_session(hello.session)
+        except Exception as e:  # noqa: BLE001 - a bad/stray connection must
+            # not take the server down, and is NOT a session failure
+            self.handshake_errors.append(e)
+            try:
+                conn.close()
+            except OSError:
+                pass
+
+    def _maybe_start_session(self, session_id: bytes) -> None:
+        with self._lock:
+            neg = self._pending_neg.get(session_id)
+            chans = self._pending.get(session_id, {})
+            if neg is None or len(chans) < neg.n_channels:
+                return
+            del self._pending_neg[session_id]
+            del self._pending[session_id]
+            self._pending_since.pop(session_id, None)
+            self.stats["sessions"] += 1
+            socks = [chans[i] for i in range(neg.n_channels)]
+            t = threading.Thread(
+                target=self._run_session, args=(socks, neg),
+                name="xdfs-session", daemon=True,
+            )
+            self._session_threads.append(t)
+        t.start()
+
+    def _run_session(self, socks, neg: Negotiation) -> None:
+        sess = ServerSession(socks, neg, self.engine, self.root, self.pool_slots)
+        try:
+            sess.run()
+        except BaseException as e:  # noqa: BLE001 - keep the server alive
+            self.errors.append(e)
+        finally:
+            for s in socks:
+                try:
+                    s.close()
+                except OSError:
+                    pass
+            with self._closed_cv:
+                st = sess.stats
+                self.stats["files"] += st.files
+                self.stats["bytes"] += st.bytes
+                self.stats["eofr_frames"] += st.eofr_frames
+                self.stats["eoft_frames"] += st.eoft_frames
+                self.stats["writev_calls"] += st.writev_calls
+                self.stats["sessions_closed"] += 1
+                # prune finished threads so a long-lived server stays bounded
+                me = threading.current_thread()
+                self._session_threads = [
+                    t for t in self._session_threads
+                    if t is not me and t.is_alive()
+                ]
+                self._closed_cv.notify_all()
+
+
+# ---------------------------------------------------------------------------
+# client
+# ---------------------------------------------------------------------------
+
+
+class XdfsClient:
+    """One persistent session: negotiate once, stream many files over the
+    same n channels. Operations are queued to a session worker thread and
+    return :class:`TransferResult` futures, so callers can pipeline."""
+
+    def __init__(self, socks: List[socket.socket], session_id: bytes,
+                 engine: Engine, n_channels: int, block_size: int):
+        self.socks = socks
+        self.session_id = session_id
+        self.engine = engine
+        self.n_channels = n_channels
+        self.block_size = block_size
+        self.stats: Dict[str, int] = {
+            "negotiations": 1, "files": 0, "bytes": 0, "eofr_sent": 0,
+        }
+        self._ops: "queue.Queue" = queue.Queue()
+        self._submit_lock = threading.Lock()
+        self._closed = False
+        self._broken: Optional[BaseException] = None
+        self._recv_pool = None  # BlockPool reused across this session's gets
+        self._worker = threading.Thread(
+            target=self._drain_ops, name="xdfs-client", daemon=True
+        )
+        self._worker.start()
+
+    # -- connection --------------------------------------------------------
+
+    @classmethod
+    def connect(cls, address: Tuple[str, int], n_channels: int = 4,
+                engine: Union[str, Engine] = "mtedp",
+                block_size: int = DEFAULT_BLOCK,
+                timeout: float = HANDSHAKE_TIMEOUT) -> "XdfsClient":
+        eng = get_engine(engine)
+        session_id = new_session_id()
+        socks: List[socket.socket] = []
+        try:
+            for i in range(n_channels):
+                s = socket.create_connection(address, timeout=timeout)
+                s.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+                send_hello(s, session_id, i)
+                if i == CTRL_CHANNEL:
+                    send_negotiation(s, Negotiation(
+                        session_id, n_channels, block_size, 1 << 20,
+                        "", "", file_size=0,
+                    ))
+                socks.append(s)
+        except BaseException:
+            for s in socks:
+                s.close()
+            raise
+        for s in socks:
+            s.settimeout(None)
+        return cls(socks, session_id, eng, n_channels, block_size)
+
+    # -- public operations (pipelined) -------------------------------------
+
+    def put(self, src: Optional[str], dst: Optional[str] = None,
+            size: Optional[int] = None,
+            data: Optional[bytes] = None) -> TransferResult:
+        """Upload ``src`` (or in-memory ``data``; or ``size`` zero bytes in
+        mem-to-mem mode) to remote name ``dst`` (None discards server-side).
+        An explicit ``size`` bounds how much of ``src``/``data`` is sent."""
+        if size is None:
+            if data is not None:
+                size = len(data)
+            elif src is not None:
+                size = os.path.getsize(src)
+            else:
+                raise ValueError("mem-mode put needs an explicit size")
+        elif data is not None and size > len(data):
+            # an oversized frame would stall the receiver waiting for
+            # payload bytes that never come — fail before touching the wire
+            raise ValueError(f"size {size} exceeds len(data) {len(data)}")
+        elif src is not None and size > os.path.getsize(src):
+            raise ValueError(f"size {size} exceeds file size of {src!r}")
+        return self._submit(self._do_put, src, dst, size, data)
+
+    def get(self, src: Optional[str], dst: Optional[str] = None,
+            size: Optional[int] = None) -> TransferResult:
+        """Download remote ``src`` into local path ``dst`` (None discards).
+        ``src=None`` is mem-to-mem mode and needs ``size``."""
+        if src is None and size is None:
+            raise ValueError("mem-mode get needs an explicit size")
+        return self._submit(self._do_get, src, dst, size, False)
+
+    def get_bytes(self, src: str) -> TransferResult:
+        """Download remote ``src`` into memory; the FileResult carries it
+        in ``.data``."""
+        return self._submit(self._do_get, src, None, None, True)
+
+    def put_many(self, items: Sequence) -> List[TransferResult]:
+        """Queue many uploads over the SAME channels: one negotiation total,
+        EOFR between files. Items are ``(src, dst)`` tuples or dicts with
+        ``src``/``dst``/``size``/``data`` keys."""
+        out = []
+        for item in items:
+            if isinstance(item, dict):
+                out.append(self.put(item.get("src"), item.get("dst"),
+                                    item.get("size"), item.get("data")))
+            else:
+                src, dst = item
+                out.append(self.put(src, dst))
+        return out
+
+    def get_many(self, items: Sequence) -> List[TransferResult]:
+        """Queue many downloads; items are ``(src, dst)`` tuples or dicts."""
+        out = []
+        for item in items:
+            if isinstance(item, dict):
+                out.append(self.get(item.get("src"), item.get("dst"),
+                                    item.get("size")))
+            else:
+                src, dst = item
+                out.append(self.get(src, dst))
+        return out
+
+    def close(self) -> None:
+        """Drain queued operations, send the terminal EOFT, close channels."""
+        with self._submit_lock:
+            if self._closed:
+                return
+            self._closed = True
+            fin = TransferResult()
+            self._ops.put((self._do_close, (), fin))
+            self._ops.put(None)
+        self._worker.join()
+        for s in self.socks:
+            try:
+                s.close()
+            except OSError:
+                pass
+        exc = fin.exception()
+        if exc is not None and self._broken is None:
+            raise exc
+
+    def __enter__(self) -> "XdfsClient":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    # -- worker ------------------------------------------------------------
+
+    def _submit(self, fn, *args) -> TransferResult:
+        # the lock orders submits against close(): nothing can land in the
+        # queue after close() has enqueued the worker-stopping sentinel
+        with self._submit_lock:
+            if self._closed:
+                raise SessionError("session is closed")
+            res = TransferResult()
+            self._ops.put((fn, args, res))
+            return res
+
+    def _drain_ops(self) -> None:
+        while True:
+            item = self._ops.get()
+            if item is None:
+                return
+            fn, args, res = item
+            if self._broken is not None:
+                res._future.set_exception(self._broken)
+                continue
+            try:
+                res._future.set_result(fn(*args))
+            except BaseException as e:  # noqa: BLE001
+                if not isinstance(e, SessionError):
+                    self._broken = e  # transport is gone; fail the rest fast
+                res._future.set_exception(e)
+
+    def _do_put(self, src, dst, size, data) -> FileResult:
+        ctrl = self.socks[CTRL_CHANNEL]
+        t0 = time.perf_counter()
+        send_ctrl(ctrl, ChannelEvent.xFTSMU, self.session_id,
+                  {"remote": dst, "size": size, "block_size": self.block_size})
+        recv_ctrl(ctrl)  # OK, or raises SessionError on EXCEPTION
+        source = Source(src, size, self.block_size, data=data)
+        try:
+            self.engine.send(self.socks, source, self.session_id, reusable=True)
+        finally:
+            source.close()
+        self.stats["files"] += 1
+        self.stats["bytes"] += size
+        self.stats["eofr_sent"] += self.n_channels
+        return FileResult(dst, size, time.perf_counter() - t0)
+
+    def _do_get(self, src, dst, size, capture) -> FileResult:
+        ctrl = self.socks[CTRL_CHANNEL]
+        t0 = time.perf_counter()
+        send_ctrl(ctrl, ChannelEvent.xFTSMD, self.session_id,
+                  {"remote": src, "size": size, "block_size": self.block_size})
+        _, resp = recv_ctrl(ctrl)
+        size = int(resp["size"])
+        sink = Sink(dst, size, capture=capture)
+        if self.engine.uses_pool and (
+            self._recv_pool is None
+            or self._recv_pool.block_size != self.block_size
+        ):
+            from repro.core.ringbuf import BlockPool
+
+            self._recv_pool = BlockPool(32, self.block_size)
+        try:
+            self.engine.receive(
+                self.socks, sink, self.block_size, reusable=True,
+                pool=self._recv_pool,
+            )
+            payload = sink.data if capture else None
+        finally:
+            sink.close()
+        self.stats["files"] += 1
+        self.stats["bytes"] += size
+        return FileResult(src, size, time.perf_counter() - t0, data=payload)
+
+    def _do_close(self) -> FileResult:
+        send_ctrl(self.socks[CTRL_CHANNEL], ChannelEvent.EOFT, self.session_id)
+        return FileResult(None, 0, 0.0)

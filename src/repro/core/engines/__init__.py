@@ -1,0 +1,39 @@
+"""xDFS transfer engines behind a pluggable registry.
+
+The three server architectures from the paper register themselves on
+import; ``get_engine(name)`` is the single dispatch point used by the
+session layer, ``run_transfer``, and the benchmarks. Third-party engines
+register with::
+
+    from repro.core.engines import Engine, register_engine
+    register_engine(Engine("myengine", my_receive, my_send, "..."))
+"""
+from repro.core.engines.base import (  # noqa: F401
+    ACK,
+    IOV_MAX,
+    RecvStats,
+    Sink,
+    Source,
+    recv_exact,
+    send_all,
+)
+from repro.core.engines.registry import (  # noqa: F401
+    Engine,
+    UnknownEngineError,
+    available_engines,
+    get_engine,
+    register_engine,
+)
+
+# importing the engine modules populates the registry
+from repro.core.engines import mtedp, mt, mp  # noqa: F401, E402
+from repro.core.engines.mtedp import event_send, mtedp_receive  # noqa: F401
+from repro.core.engines.mt import mt_receive, worker_send  # noqa: F401
+from repro.core.engines.mp import mp_receive  # noqa: F401
+
+__all__ = [
+    "ACK", "IOV_MAX", "RecvStats", "Sink", "Source", "recv_exact", "send_all",
+    "Engine", "UnknownEngineError", "available_engines", "get_engine",
+    "register_engine", "mtedp_receive", "event_send", "mt_receive",
+    "worker_send", "mp_receive",
+]

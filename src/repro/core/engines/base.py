@@ -1,0 +1,163 @@
+"""Shared transfer-engine plumbing: wire helpers, Source/Sink, RecvStats.
+
+Engines (engines/{mtedp,mt,mp}.py) move blocks between a ``Source`` and a
+``Sink`` over framed TCP channels. Sources can be backed by a file, an
+in-memory buffer (checkpoint leaves), or zeros (the paper's /dev/zero
+mem-to-mem mode); sinks by a file, a capture buffer, or /dev/null-style
+discard.
+"""
+from __future__ import annotations
+
+import os
+import socket
+from dataclasses import dataclass
+from typing import List, Optional, Tuple
+
+from repro.core.header import ChannelEvent
+
+ACK = b"\x06"
+IOV_MAX = 512
+
+# the one definition of which frame events end a channel's file stream
+END_EVENTS = (ChannelEvent.EOFR, ChannelEvent.EOFT)
+
+
+# ---------------------------------------------------------------------------
+# wire helpers
+# ---------------------------------------------------------------------------
+
+
+def send_all(sock: socket.socket, data) -> None:
+    view = memoryview(data)
+    while view:
+        n = sock.send(view)
+        view = view[n:]
+
+
+def recv_exact(sock: socket.socket, n: int, buf: Optional[memoryview] = None):
+    out = memoryview(bytearray(n)) if buf is None else buf[:n]
+    got = 0
+    while got < n:
+        r = sock.recv_into(out[got:], n - got)
+        if r == 0:
+            raise ConnectionError("peer closed")
+        got += r
+    return out
+
+
+# ---------------------------------------------------------------------------
+# sources and sinks
+# ---------------------------------------------------------------------------
+
+
+class Source:
+    """Reads blocks from a file, an in-memory buffer, or serves zeros."""
+
+    def __init__(self, path: Optional[str], size: int, block_size: int,
+                 data: Optional[bytes] = None):
+        self.size = size
+        self.block_size = block_size
+        self.n_blocks = (size + block_size - 1) // block_size
+        self.path = path
+        self.data = data
+        self._fd = os.open(path, os.O_RDONLY) if path else -1
+        self._mem = memoryview(data) if (path is None and data is not None) else None
+        self._zeros = bytes(block_size) if (path is None and data is None) else None
+
+    def open_worker(self) -> "Source":
+        """A worker-private handle (MP/MT senders use one fd per worker)."""
+        return Source(self.path, self.size, self.block_size, data=self.data)
+
+    def block_len(self, i: int) -> int:
+        return min(self.block_size, self.size - i * self.block_size)
+
+    def read_block(self, i: int) -> bytes:
+        ln = self.block_len(i)
+        if self._fd >= 0:
+            return os.pread(self._fd, ln, i * self.block_size)
+        if self._mem is not None:
+            off = i * self.block_size
+            return self._mem[off : off + ln]
+        return self._zeros[:ln]
+
+    def close(self):
+        if self._fd >= 0:
+            os.close(self._fd)
+
+
+class Sink:
+    """Writes blocks to a file (pwrite / coalesced pwritev), captures them
+    into memory, or discards them."""
+
+    def __init__(self, path: Optional[str], size: int, capture: bool = False):
+        self.path = path
+        self.size = size
+        self.capture = capture
+        if path:
+            self._fd = os.open(path, os.O_WRONLY | os.O_CREAT, 0o644)
+            os.ftruncate(self._fd, size)
+            self._cap = None
+        else:
+            self._fd = -1
+            self._cap = memoryview(bytearray(size)) if capture else None
+
+    @property
+    def data(self) -> bytes:
+        """The captured payload (capture sinks only)."""
+        if self._cap is None:
+            raise ValueError("not a capture sink")
+        return bytes(self._cap)
+
+    def open_worker(self) -> "Sink":
+        if self.capture:
+            raise ValueError("capture sinks cannot be shared with forked workers")
+        return Sink(self.path, self.size)
+
+    def write_at(self, offset: int, data) -> None:
+        if self._fd >= 0:
+            os.pwrite(self._fd, data, offset)
+        elif self._cap is not None:
+            self._cap[offset : offset + len(data)] = data
+
+    def writev_coalesced(self, blocks: List[Tuple[int, int, bytearray]]) -> int:
+        """Sort by offset, group contiguous runs, one pwritev per run.
+
+        Returns the number of vectored syscalls issued (the seek-reduction
+        metric from the paper)."""
+        if not blocks or (self._fd < 0 and self._cap is None):
+            return 0
+        if self._cap is not None:
+            for off, ln, blk in blocks:
+                self._cap[off : off + ln] = memoryview(blk)[:ln]
+            return 1
+        blocks.sort(key=lambda b: b[0])
+        calls = 0
+        run: List[memoryview] = []
+        run_start = run_end = -1
+        for off, ln, blk in blocks:
+            if off == run_end and len(run) < IOV_MAX:
+                run.append(memoryview(blk)[:ln])
+                run_end += ln
+            else:
+                if run:
+                    os.pwritev(self._fd, run, run_start)
+                    calls += 1
+                run = [memoryview(blk)[:ln]]
+                run_start, run_end = off, off + ln
+        if run:
+            os.pwritev(self._fd, run, run_start)
+            calls += 1
+        return calls
+
+    def close(self):
+        if self._fd >= 0:
+            os.close(self._fd)
+
+
+@dataclass
+class RecvStats:
+    bytes: int = 0
+    writev_calls: int = 0
+    flushes: int = 0
+    eofr_frames: int = 0  # EOFR end-frames seen (channel stays reusable)
+    eoft_frames: int = 0  # EOFT end-frames seen (session terminates)

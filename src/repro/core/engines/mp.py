@@ -1,0 +1,98 @@
+"""MP — multi-processed engine (paper §2.5.1, the GridFTP model).
+
+Fork per channel, n independent file handles, per-block pwrite at
+scattered offsets — no coalescing, no shared state. Each forked child
+pipes its byte/end-frame counts back to the parent so ``RecvStats`` is
+accurate across the process boundary.
+"""
+from __future__ import annotations
+
+import json
+import os
+import socket
+from typing import List
+
+from repro.core.engines.base import (
+    ACK,
+    END_EVENTS,
+    RecvStats,
+    Sink,
+    Source,
+    recv_exact,
+    send_all,
+)
+from repro.core.engines.mt import worker_send
+from repro.core.engines.registry import Engine, register_engine
+from repro.core.header import HEADER_SIZE, ChannelEvent, ChannelHeader
+
+
+def mp_receive(
+    socks: List[socket.socket],
+    sink: Sink,
+    block_size: int,
+    reusable: bool = False,
+) -> RecvStats:
+    """MP model (GridFTP-like): fork per channel, n file handles, per-block
+    pwrite at scattered offsets — no coalescing, no shared state. Per-child
+    counters travel back over a pipe and are summed into the parent stats."""
+    if sink.capture:
+        raise ValueError("mp engine cannot receive into a capture sink "
+                         "(forked children do not share parent memory)")
+    stats = RecvStats()
+    procs = []
+    for s in socks:
+        r_cnt, w_cnt = os.pipe()
+        pid = os.fork()
+        if pid == 0:  # child
+            os.close(r_cnt)
+            try:
+                wsink = sink.open_worker()
+                hdr_buf = memoryview(bytearray(HEADER_SIZE))
+                child = {"bytes": 0, "eofr": 0, "eoft": 0}
+                while True:
+                    recv_exact(s, HEADER_SIZE, hdr_buf)
+                    hdr = ChannelHeader.unpack(bytes(hdr_buf))
+                    if hdr.event in END_EVENTS:
+                        key = "eofr" if hdr.event == ChannelEvent.EOFR else "eoft"
+                        child[key] += 1
+                        break
+                    payload = recv_exact(s, hdr.length)
+                    wsink.write_at(hdr.offset, payload)
+                    child["bytes"] += hdr.length
+                wsink.close()
+                os.write(w_cnt, json.dumps(child).encode())
+                os.close(w_cnt)
+                send_all(s, ACK)
+                os._exit(0)
+            except BaseException:
+                os._exit(1)
+        os.close(w_cnt)
+        procs.append((pid, r_cnt))
+    for pid, r_cnt in procs:
+        raw = os.read(r_cnt, 4096)
+        os.close(r_cnt)
+        _, status = os.waitpid(pid, 0)
+        if os.waitstatus_to_exitcode(status) != 0:
+            raise RuntimeError("mp receiver child failed")
+        child = json.loads(raw.decode())
+        stats.bytes += child["bytes"]
+        stats.eofr_frames += child["eofr"]
+        stats.eoft_frames += child["eoft"]
+    return stats
+
+
+def _receive(socks, sink, block_size, *, pool_slots=32, fsm=None,
+             conformance=True, reusable=False, pool=None):
+    return mp_receive(socks, sink, block_size, reusable=reusable)
+
+
+def _send(socks, source, session, *, reusable=False):
+    return worker_send(socks, source, session, use_processes=True,
+                       reusable=reusable)
+
+
+ENGINE = register_engine(Engine(
+    "mp", _receive, _send,
+    "multi-processed (GridFTP-like baseline): fork per channel, private "
+    "file handles, scattered per-block pwrite",
+))

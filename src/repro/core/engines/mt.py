@@ -1,0 +1,149 @@
+"""MT — multi-threaded engine (paper §2.5.2).
+
+Thread per channel + pessimistically locked shared ring + one disk thread
+(single handle). The sender is a blocking worker thread per channel, each
+with a private fd reading its stripe.
+"""
+from __future__ import annotations
+
+import socket
+import threading
+from typing import List
+
+from repro.core.engines.base import (
+    ACK,
+    END_EVENTS,
+    RecvStats,
+    Sink,
+    Source,
+    recv_exact,
+    send_all,
+)
+from repro.core.engines.registry import Engine, register_engine
+from repro.core.header import HEADER_SIZE, ChannelEvent, ChannelHeader
+
+
+def mt_receive(
+    socks: List[socket.socket],
+    sink: Sink,
+    block_size: int,
+    ring_slots: int = 32,
+    reusable: bool = False,
+) -> RecvStats:
+    """MT model: thread per channel + locked shared ring + disk thread."""
+    from repro.core.ringbuf import LockedRing
+
+    stats = RecvStats()
+    ring = LockedRing(ring_slots, block_size)
+    lock = threading.Lock()
+
+    def rx(sock):
+        hdr_buf = memoryview(bytearray(HEADER_SIZE))
+        while True:
+            recv_exact(sock, HEADER_SIZE, hdr_buf)
+            hdr = ChannelHeader.unpack(bytes(hdr_buf))
+            if hdr.event in END_EVENTS:
+                with lock:
+                    if hdr.event == ChannelEvent.EOFR:
+                        stats.eofr_frames += 1
+                    else:
+                        stats.eoft_frames += 1
+                return
+            payload = recv_exact(sock, hdr.length)
+            ring.put(payload, hdr.offset)
+            with lock:
+                stats.bytes += hdr.length
+
+    def disk():
+        while True:
+            batch = ring.get_batch()
+            if batch:
+                blocks = [(off, len(d), bytearray(d)) for off, d in batch]
+                stats.writev_calls += sink.writev_coalesced(blocks)
+                stats.flushes += 1
+            elif ring.closed:
+                return
+
+    dt = threading.Thread(target=disk)
+    dt.start()
+    threads = [threading.Thread(target=rx, args=(s,)) for s in socks]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    ring.close()
+    dt.join()
+    for s in socks:
+        send_all(s, ACK)
+    return stats
+
+
+def worker_send(
+    socks: List[socket.socket],
+    source: Source,
+    session: bytes,
+    use_processes: bool,
+    mode_event: ChannelEvent = ChannelEvent.xFTSMU,
+    reusable: bool = False,
+) -> int:
+    """Baseline sender: blocking worker (thread or fork) per channel, each
+    with a PRIVATE fd reading its stripe (seek-heavy, GridFTP-like)."""
+    import os
+
+    n = len(socks)
+    end_event = ChannelEvent.EOFR if reusable else ChannelEvent.EOFT
+
+    def tx(i: int, sock: socket.socket):
+        src = source.open_worker()
+        b = i
+        while b < src.n_blocks:
+            ln = src.block_len(b)
+            hdr = ChannelHeader(mode_event, session, i, b * src.block_size, ln)
+            send_all(sock, hdr.pack() + src.read_block(b))
+            b += n
+        send_all(sock, ChannelHeader(end_event, session, i, 0, 0).pack())
+        sock.setblocking(True)
+        recv_exact(sock, 1)
+        src.close()
+
+    if use_processes:
+        pids = []
+        for i, s in enumerate(socks):
+            pid = os.fork()
+            if pid == 0:
+                try:
+                    tx(i, s)
+                    os._exit(0)
+                except BaseException:
+                    os._exit(1)
+            pids.append(pid)
+        for pid in pids:
+            _, status = os.waitpid(pid, 0)
+            if os.waitstatus_to_exitcode(status) != 0:
+                raise RuntimeError("sender child failed")
+    else:
+        threads = [
+            threading.Thread(target=tx, args=(i, s)) for i, s in enumerate(socks)
+        ]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+    return source.size
+
+
+def _receive(socks, sink, block_size, *, pool_slots=32, fsm=None,
+             conformance=True, reusable=False, pool=None):
+    return mt_receive(socks, sink, block_size, pool_slots, reusable=reusable)
+
+
+def _send(socks, source, session, *, reusable=False):
+    return worker_send(socks, source, session, use_processes=False,
+                       reusable=reusable)
+
+
+ENGINE = register_engine(Engine(
+    "mt", _receive, _send,
+    "multi-threaded: thread per channel, pessimistically locked shared "
+    "ring, one disk thread",
+))

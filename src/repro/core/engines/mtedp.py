@@ -1,0 +1,264 @@
+"""MTEDP — multi-threaded event-driven pipelined engine (paper §2.5.3).
+
+The xDFS design: ONE thread multiplexes all n channels via PIOD
+(selectors), blocks land zero-copy in a preallocated BlockPool, and a
+single file handle drains them with coalesced VECTORED writes
+(os.pwritev) — single-writer, lock-free, minimal seeks. The sender is the
+mirror image: one thread, write-readiness multiplexing.
+"""
+from __future__ import annotations
+
+import selectors
+import socket
+from typing import Dict, List, Optional
+
+from repro.core.engines.base import (
+    ACK,
+    END_EVENTS,
+    RecvStats,
+    Sink,
+    Source,
+    recv_exact,
+    send_all,
+)
+from repro.core.engines.registry import Engine, register_engine
+from repro.core.fsm import FSM_BUILDERS, Machine
+from repro.core.header import HEADER_SIZE, ChannelEvent, ChannelHeader
+from repro.core.piod import PIOD
+
+
+def mtedp_receive(
+    socks: List[socket.socket],
+    sink: Sink,
+    block_size: int,
+    pool_slots: int = 32,
+    conformance: bool = True,
+    fsm: Optional[Machine] = None,
+    reusable: bool = False,
+    pool=None,
+) -> RecvStats:
+    """The xDFS MTEDP receiver: PIOD event loop + BlockPool + vectored I/O.
+
+    ``fsm`` — a persistent ``server_upload`` conformance machine owned by the
+    session layer (multi-file sessions thread ONE machine through every file).
+    When ``None`` and ``conformance`` is set, a fresh machine is built and
+    fast-forwarded through the connection stages (one-shot mode).
+    ``reusable`` — file streams end with EOFR (channels stay open; the FSM
+    loops back to ``9_open_file``) instead of EOFT (terminal flush).
+    ``pool`` — a caller-owned BlockPool reused across the files of a session
+    (every block is released by the final flush, so reuse is safe); when
+    ``None`` a file-private pool is allocated.
+    """
+    from repro.core.ringbuf import BlockPool
+
+    stats = RecvStats()
+    if pool is None or pool.block_size != block_size:
+        pool = BlockPool(pool_slots, block_size)
+    piod = PIOD()
+    n = len(socks)
+    eof = [False] * n
+    own_fsm = False
+    if fsm is None and conformance:
+        fsm = FSM_BUILDERS["server_upload"]()
+        own_fsm = True
+        # connection/negotiation stages already completed by the session layer
+        for ev in ("conn", "auth_ok", "ftsm", "params_ok", "new_session",
+                   "registered", "all_channels", "opened"):
+            fsm.step(ev)
+
+    class Chan:
+        __slots__ = ("sock", "idx", "hdr_buf", "hdr_got", "hdr", "blk", "got")
+
+        def __init__(self, sock, idx):
+            self.sock = sock
+            self.idx = idx
+            self.hdr_buf = memoryview(bytearray(HEADER_SIZE))
+            self.hdr_got = 0
+            self.hdr = None
+            self.blk = None
+            self.got = 0
+
+    def fsm_steps(*events):
+        if fsm is not None:
+            for e in events:
+                fsm.step(e)
+
+    def flush(final=False):
+        blocks = pool.drain()
+        if blocks or final:
+            stats.writev_calls += sink.writev_coalesced(blocks)
+            stats.flushes += 1
+            for _, _, blk in blocks:
+                pool.release(blk)
+        if fsm is None:
+            return
+        if final:
+            # conformance: must be in 13_flush; EOFR keeps the session alive
+            fsm.step("eofr_flush" if reusable else "final_flush")
+        elif fsm.state == "10_dispatch":
+            fsm_steps("flush", "flushed")
+        # (a drain tick after all_eof, state 13, needs no transition)
+
+    def on_readable(sock, mask):
+        """Greedy drain: keep consuming until the socket would block —
+        one selector wakeup then services many blocks (minimizes dispatch
+        overhead, the §2.3 context-switch factor applied to the event loop).
+        """
+        c = chans[sock]
+        try:
+            while True:
+                if c.hdr is None:
+                    r = sock.recv_into(
+                        c.hdr_buf[c.hdr_got:], HEADER_SIZE - c.hdr_got
+                    )
+                    if r == 0:
+                        raise ConnectionError("peer closed mid-header")
+                    c.hdr_got += r
+                    if c.hdr_got < HEADER_SIZE:
+                        continue
+                    c.hdr = ChannelHeader.unpack(bytes(c.hdr_buf))
+                    c.hdr_got = 0
+                    if c.hdr.event in END_EVENTS:
+                        # milestone: 10 -> 11 -> 14 -> (10 | 13)
+                        if c.hdr.event == ChannelEvent.EOFR:
+                            stats.eofr_frames += 1
+                        else:
+                            stats.eoft_frames += 1
+                        eof[c.idx] = True
+                        piod.unregister(sock)
+                        c.hdr = None
+                        fsm_steps("read_ready", "eof_header",
+                                  "all_eof" if all(eof) else "channels_open")
+                        return
+                    c.blk = pool.acquire()
+                    while c.blk is None:  # backpressure: drain to disk
+                        flush()
+                        c.blk = pool.acquire()
+                    c.got = 0
+                    continue
+                # payload
+                want = c.hdr.length - c.got
+                r = sock.recv_into(memoryview(c.blk)[c.got : c.hdr.length], want)
+                if r == 0:
+                    raise ConnectionError("peer closed mid-block")
+                c.got += r
+                stats.bytes += r
+                if c.got == c.hdr.length:
+                    pool.commit(c.blk, c.hdr.offset, c.hdr.length)
+                    # milestone: full block moved through 10 -> 11 -> 12 -> 10
+                    fsm_steps("read_ready", "block", "buffered")
+                    c.hdr = None
+                    c.blk = None
+                    if pool.n_free == 0:
+                        flush()
+        except BlockingIOError:
+            return
+
+    chans: Dict[socket.socket, Chan] = {}
+    for i, s in enumerate(socks):
+        chans[s] = Chan(s, i)
+        piod.register(s, selectors.EVENT_READ, on_readable)
+
+    def drained_if_idle():
+        if pool.n_committed >= pool_slots // 2:
+            flush()
+
+    piod.idle_callback = drained_if_idle
+    piod.run(until=lambda: all(eof))
+    flush(final=True)
+    piod.close()
+    if own_fsm:
+        if reusable:
+            assert fsm.state == "9_open_file", (
+                f"conformance: receiver FSM ended in {fsm.state}"
+            )
+        else:
+            assert fsm.done, f"conformance: receiver FSM ended in {fsm.state}"
+    for s in socks:
+        s.setblocking(True)
+        send_all(s, ACK)
+    return stats
+
+
+def event_send(
+    socks: List[socket.socket],
+    source: Source,
+    session: bytes,
+    mode_event: ChannelEvent = ChannelEvent.xFTSMU,
+    reusable: bool = False,
+) -> int:
+    """xDFS event-driven sender: one thread, write-readiness multiplexing."""
+    n = len(socks)
+    piod = PIOD()
+    next_block = [c for c in range(n)]  # block index each channel sends next
+    pending: Dict[socket.socket, memoryview] = {}
+    done = [False] * n
+    sent = 0
+    end_event = ChannelEvent.EOFR if reusable else ChannelEvent.EOFT
+
+    def make_frame(i_chan: int, i_block: int) -> bytes:
+        if i_block >= source.n_blocks:
+            hdr = ChannelHeader(end_event, session, i_chan, 0, 0)
+            return hdr.pack()
+        ln = source.block_len(i_block)
+        hdr = ChannelHeader(
+            mode_event, session, i_chan, i_block * source.block_size, ln
+        )
+        return hdr.pack() + source.read_block(i_block)
+
+    idx = {s: i for i, s in enumerate(socks)}
+
+    def on_writable(sock, mask):
+        nonlocal sent
+        i = idx[sock]
+        try:
+            while True:  # greedy: fill the socket until it would block
+                buf = pending.get(sock)
+                if buf is None:
+                    blk = next_block[i]
+                    next_block[i] += n
+                    frame = make_frame(i, blk)
+                    buf = memoryview(frame)
+                    pending[sock] = buf
+                    if blk >= source.n_blocks:
+                        done[i] = True
+                w = sock.send(buf)
+                sent += w
+                buf = buf[w:]
+                if len(buf) == 0:
+                    pending.pop(sock)
+                    if done[i]:
+                        piod.unregister(sock)
+                        return
+                else:
+                    pending[sock] = buf
+        except BlockingIOError:
+            return
+
+    for s in socks:
+        piod.register(s, selectors.EVENT_WRITE, on_writable)
+    piod.run(until=lambda: all(done) and not pending)
+    piod.close()
+    for s in socks:
+        s.setblocking(True)
+        recv_exact(s, 1)  # final ack (exception-header channel)
+    return sent
+
+
+def _receive(socks, sink, block_size, *, pool_slots=32, fsm=None,
+             conformance=True, reusable=False, pool=None):
+    return mtedp_receive(socks, sink, block_size, pool_slots,
+                         conformance=conformance, fsm=fsm, reusable=reusable,
+                         pool=pool)
+
+
+def _send(socks, source, session, *, reusable=False):
+    return event_send(socks, source, session, reusable=reusable)
+
+
+ENGINE = register_engine(Engine(
+    "mtedp", _receive, _send,
+    "multi-threaded event-driven pipelined (the paper's xDFS design): one "
+    "event loop, zero-copy block pool, single-writer vectored disk I/O",
+    uses_pool=True,
+))

@@ -1,0 +1,64 @@
+"""Pluggable engine registry.
+
+An ``Engine`` bundles the receive + send halves of one server architecture
+(the paper's §2.5 MTEDP / MT / MP designs). Engines self-register at import
+time via :func:`register_engine`; the session layer dispatches by name, so
+new architectures (e.g. a hybrid xThread/xDFS server, Table 4) plug in
+without touching the protocol code.
+
+Uniform callable signatures:
+
+  receive(socks, sink, block_size, *, pool_slots=32, fsm=None,
+          conformance=True, reusable=False, pool=None) -> RecvStats
+  send(socks, source, session, *, reusable=False) -> int  (bytes on the wire)
+
+``pool`` is an optional caller-owned block pool reused across a session's
+files (engines that don't pool blocks ignore it).
+
+``reusable=True`` ends each channel's file stream with ``EOFR`` (channel
+stays open for the next file of the session) instead of ``EOFT``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List
+
+
+class UnknownEngineError(ValueError):
+    """Raised when a transfer engine name is not in the registry."""
+
+
+@dataclass(frozen=True)
+class Engine:
+    name: str
+    receive: Callable[..., "RecvStats"]  # noqa: F821 - see base.RecvStats
+    send: Callable[..., int]
+    description: str = ""
+    uses_pool: bool = False  # receive() consumes the caller-owned block pool
+
+
+_REGISTRY: Dict[str, Engine] = {}
+
+
+def register_engine(engine: Engine, *aliases: str) -> Engine:
+    """Register ``engine`` under its name (and any aliases). Re-registering
+    a name replaces the previous engine (lets tests/users override)."""
+    for name in (engine.name, *aliases):
+        _REGISTRY[name] = engine
+    return engine
+
+
+def get_engine(name: str) -> Engine:
+    if isinstance(name, Engine):
+        return name
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise UnknownEngineError(
+            f"unknown transfer engine {name!r}; "
+            f"available engines: {', '.join(sorted(_REGISTRY))}"
+        ) from None
+
+
+def available_engines() -> List[str]:
+    return sorted(_REGISTRY)

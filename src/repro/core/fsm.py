@@ -111,6 +111,10 @@ def server_download_fsm() -> Machine:
         ("15_eof_check", "all_sent"): "16_send_eof",
         ("16_send_eof", "eof_headers_sent"): "17_drain",
         ("17_drain", "drained"): "18_end",
+        # multi-file session loop (EOFR, Table 3): the drained channel set
+        # stays open and the machine re-arms for the next file of the session
+        ("17_drain", "drained_reusable"): "9_open_file",
+        ("9_open_file", "eoft"): "18_end",  # client terminates the session
     }
     for s in list(states - {"18_end", "err"}):
         t[(s, "error")] = "err"
@@ -136,6 +140,12 @@ def client_download_fsm() -> Machine:
         ("10_write_disk", "written"): "6_dispatch",
         ("8_eof_check", "channels_open"): "6_dispatch",
         ("8_eof_check", "all_eof"): "12_end",
+        # multi-file session loop (EOFR): all channels saw EOFR, so the file
+        # is complete but the session persists — request the next file over
+        # the already-open channels, or close the session with EOFT
+        ("8_eof_check", "all_eofr"): "3_request",
+        ("3_request", "request_sent_reuse"): "6_dispatch",
+        ("3_request", "session_close"): "12_end",
     }
     for s in list(states - {"12_end", "err"}):
         t[(s, "error")] = "err"
@@ -172,6 +182,11 @@ def server_upload_fsm() -> Machine:
         ("14_eof_check", "channels_open"): "10_dispatch",
         ("14_eof_check", "all_eof"): "13_flush",
         ("13_flush", "final_flush"): "18_end",
+        # multi-file session loop (EOFR, Table 3): the final flush of a file
+        # that ended with EOFR re-arms the machine for the session's next
+        # file instead of terminating; EOFT while idle ends the session
+        ("13_flush", "eofr_flush"): "9_open_file",
+        ("9_open_file", "eoft"): "18_end",
     }
     for s in list(states - {"18_end", "err"}):
         t[(s, "error")] = "err"
@@ -198,6 +213,11 @@ def client_upload_fsm() -> Machine:
         ("8_send_block", "sent"): "6_dispatch",
         ("9_eof", "eof_sent"): "10_await_acks",
         ("10_await_acks", "acked"): "12_end",
+        # multi-file session loop (EOFR): acks for an EOFR-terminated file
+        # return to the request state; the open channels carry the next file
+        ("10_await_acks", "acked_reusable"): "3_request",
+        ("3_request", "request_sent_reuse"): "6_dispatch",
+        ("3_request", "session_close"): "12_end",
     }
     for s in list(states - {"12_end", "err"}):
         t[(s, "error")] = "err"

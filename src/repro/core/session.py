@@ -1,0 +1,234 @@
+"""xDFS session wire protocol — persistent, multi-file, channel-reusing.
+
+A *session* is one negotiation plus n long-lived TCP channels that carry
+many file transfers (paper §2.5.3 and Table 3). Per-transfer overhead is
+amortized exactly as DotDFS prescribes:
+
+* every channel introduces itself with a ``CONM`` *hello* header carrying
+  the session GUID + channel index, so one server can demux channels of
+  many concurrent sessions arriving in any order;
+* channel 0 is the **control channel**: after its hello it sends the
+  length-prefixed ``Negotiation`` (Table 2) ONCE, then one control frame
+  per file — a ``ChannelHeader`` whose event selects the operation
+  (``xFTSMU`` = put/upload, ``xFTSMD`` = get/download, ``EOFT`` = close)
+  and whose payload is a small JSON metadata blob;
+* file streams end with ``EOFR`` on every channel — *end-of-file,
+  channel reusable* — so the same sockets carry the next file; ``EOFT``
+  appears exactly once, as the session-terminating control frame;
+* the server threads ONE ``server_upload`` conformance FSM through the
+  whole session (mtedp engine): each file loops ``9_open_file ->
+  10..13_flush -> (eofr_flush) -> 9_open_file`` and the terminal ``EOFT``
+  must land in ``9_open_file`` for the machine to end legally.
+
+Layering: this module knows the wire protocol and drives an ``Engine``
+from the registry; ``core/api.py`` wraps it in the user-facing
+``XdfsServer`` / ``XdfsClient`` objects.
+"""
+from __future__ import annotations
+
+import json
+import os
+import socket
+import struct
+from dataclasses import dataclass, field
+from typing import Dict, Optional, Tuple
+
+from repro.core.engines import Engine, RecvStats, Sink, Source, recv_exact, send_all
+from repro.core.fsm import FSM_BUILDERS, Machine
+from repro.core.header import (
+    HEADER_SIZE,
+    ChannelEvent,
+    ChannelHeader,
+    Negotiation,
+    ProtocolError,
+)
+
+CTRL_CHANNEL = 0
+DEFAULT_BLOCK = 1 << 20
+
+
+class SessionError(ProtocolError):
+    """A control-level session failure (bad request, remote exception)."""
+
+
+# ---------------------------------------------------------------------------
+# control frames: ChannelHeader + JSON payload on the control channel
+# ---------------------------------------------------------------------------
+
+
+def send_ctrl(sock: socket.socket, event: ChannelEvent, session: bytes,
+              payload: Optional[dict] = None) -> None:
+    body = json.dumps(payload or {}).encode()
+    hdr = ChannelHeader(event, session, CTRL_CHANNEL, 0, len(body))
+    send_all(sock, hdr.pack() + body)
+
+
+def recv_ctrl(sock: socket.socket) -> Tuple[ChannelHeader, dict]:
+    hdr = ChannelHeader.unpack(bytes(recv_exact(sock, HEADER_SIZE)))
+    body = bytes(recv_exact(sock, hdr.length)) if hdr.length else b"{}"
+    payload = json.loads(body.decode())
+    if hdr.event == ChannelEvent.EXCEPTION:
+        raise SessionError(payload.get("error", "remote exception"))
+    return hdr, payload
+
+
+def send_hello(sock: socket.socket, session: bytes, channel: int) -> None:
+    """Channel self-identification: lets the server demux interleaved
+    channel arrivals of concurrent sessions."""
+    send_all(sock, ChannelHeader(ChannelEvent.CONM, session, channel, 0, 0).pack())
+
+
+def recv_hello(sock: socket.socket) -> ChannelHeader:
+    hdr = ChannelHeader.unpack(bytes(recv_exact(sock, HEADER_SIZE)))
+    if hdr.event != ChannelEvent.CONM or hdr.length != 0:
+        raise ProtocolError(f"expected channel hello, got {hdr.event!r}")
+    return hdr
+
+
+def send_negotiation(sock: socket.socket, neg: Negotiation) -> None:
+    raw = neg.pack()
+    send_all(sock, struct.pack("<I", len(raw)) + raw)
+
+
+def recv_negotiation(sock: socket.socket) -> Negotiation:
+    (nlen,) = struct.unpack("<I", bytes(recv_exact(sock, 4)))
+    return Negotiation.unpack(bytes(recv_exact(sock, nlen)))
+
+
+def resolve_path(root: Optional[str], name: Optional[str],
+                 for_write: bool = False) -> Optional[str]:
+    """Map a remote name onto the server filesystem. ``root=None`` is the
+    trusted local mode (paths used as-is); otherwise names are confined to
+    ``root`` and parent directories are created for writes."""
+    if name is None:
+        return None
+    if root is None:
+        path = os.path.abspath(name)
+    else:
+        root = os.path.abspath(root)
+        path = os.path.normpath(os.path.join(root, name))
+        if os.path.commonpath([root, path]) != root:
+            raise SessionError(f"path {name!r} escapes the session root")
+    if for_write:
+        os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    return path
+
+
+# ---------------------------------------------------------------------------
+# server side of one session
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class SessionStats:
+    files: int = 0
+    bytes: int = 0
+    eofr_frames: int = 0
+    eoft_frames: int = 0
+    writev_calls: int = 0
+
+    def absorb(self, st: RecvStats) -> None:
+        self.bytes += st.bytes
+        self.eofr_frames += st.eofr_frames
+        self.eoft_frames += st.eoft_frames
+        self.writev_calls += st.writev_calls
+
+
+class ServerSession:
+    """Runs one accepted session to completion on the server side."""
+
+    def __init__(self, socks, neg: Negotiation, engine: Engine,
+                 root: Optional[str], pool_slots: int = 32):
+        self.socks = list(socks)
+        self.neg = neg
+        self.engine = engine
+        self.root = root
+        self.pool_slots = pool_slots
+        self.stats = SessionStats()
+        self._pool = None  # BlockPool reused across the session's files
+        self.fsm: Optional[Machine] = None
+        if engine.name == "mtedp":
+            # one conformance machine for the WHOLE session: the multi-file
+            # loop re-arms it at 9_open_file between files
+            self.fsm = FSM_BUILDERS["server_upload"]()
+            for ev in ("conn", "auth_ok", "ftsm", "params_ok", "new_session",
+                       "registered", "all_channels"):
+                self.fsm.step(ev)
+
+    def run(self) -> SessionStats:
+        ctrl = self.socks[CTRL_CHANNEL]
+        while True:
+            try:
+                hdr, meta = recv_ctrl(ctrl)
+            except (ConnectionError, OSError):
+                break  # client vanished; channels die with it
+            if hdr.event == ChannelEvent.EOFT:
+                self.stats.eoft_frames += 1
+                if self.fsm is not None:
+                    self.fsm.step("eoft")
+                    assert self.fsm.done, (
+                        f"conformance: session FSM ended in {self.fsm.state}"
+                    )
+                break
+            try:
+                if hdr.event == ChannelEvent.xFTSMU:
+                    self._handle_put(ctrl, meta)
+                elif hdr.event == ChannelEvent.xFTSMD:
+                    self._handle_get(ctrl, meta)
+                else:
+                    send_ctrl(ctrl, ChannelEvent.EXCEPTION, self.neg.session,
+                              {"error": f"unexpected control event {hdr.event!r}"})
+            except SessionError as e:
+                send_ctrl(ctrl, ChannelEvent.EXCEPTION, self.neg.session,
+                          {"error": str(e)})
+        return self.stats
+
+    def _handle_put(self, ctrl, meta: dict) -> None:
+        size = int(meta["size"])
+        block_size = int(meta.get("block_size", self.neg.block_size))
+        try:
+            path = resolve_path(self.root, meta.get("remote"), for_write=True)
+            sink = Sink(path, size)
+        except OSError as e:
+            raise SessionError(f"cannot open {meta.get('remote')!r}: {e}")
+        send_ctrl(ctrl, ChannelEvent.CONM, self.neg.session, {"ok": True})
+        if self.fsm is not None:
+            self.fsm.step("opened")
+        if self.engine.uses_pool and (
+            self._pool is None or self._pool.block_size != block_size
+        ):
+            from repro.core.ringbuf import BlockPool
+
+            self._pool = BlockPool(self.pool_slots, block_size)
+        try:
+            st = self.engine.receive(
+                self.socks, sink, block_size, pool_slots=self.pool_slots,
+                fsm=self.fsm, conformance=self.fsm is not None, reusable=True,
+                pool=self._pool,
+            )
+        finally:
+            sink.close()
+        self.stats.files += 1
+        self.stats.absorb(st)
+
+    def _handle_get(self, ctrl, meta: dict) -> None:
+        block_size = int(meta.get("block_size", self.neg.block_size))
+        remote = meta.get("remote")
+        if remote is None:  # mem-to-mem mode: serve zeros
+            size = int(meta["size"])
+            source = Source(None, size, block_size)
+        else:
+            try:
+                path = resolve_path(self.root, remote)
+                size = os.path.getsize(path)
+                source = Source(path, size, block_size)
+            except OSError as e:
+                raise SessionError(f"cannot read {remote!r}: {e}")
+        send_ctrl(ctrl, ChannelEvent.CONM, self.neg.session,
+                  {"ok": True, "size": size})
+        try:
+            self.engine.send(self.socks, source, self.neg.session, reusable=True)
+        finally:
+            source.close()
+        self.stats.files += 1
+        self.stats.bytes += size

@@ -1,501 +1,49 @@
-"""xDFS host transfer engines — the paper's three server architectures.
+"""One-shot transfer compatibility shim over the xDFS session API.
 
-* ``mtedp`` — multi-threaded event-driven pipelined (the paper's xDFS
-  design, §2.5.3): ONE thread multiplexes all n channels via PIOD
-  (selectors), blocks land zero-copy in a preallocated BlockPool, and a
-  single file handle drains them with coalesced VECTORED writes
-  (os.pwritev) — single-writer, lock-free, minimal seeks.
-* ``mt`` — multi-threaded (§2.5.2): thread per channel + pessimistically
-  locked shared ring + one disk thread (single handle).
-* ``mp`` — multi-processed (§2.5.1, the GridFTP model): fork per channel,
-  n independent file handles, per-block pwrite at scattered offsets.
+Historically this module WAS the engines (652 lines of MTEDP/MT/MP
+receivers and senders). Those now live behind the pluggable registry in
+``core/engines/`` and the persistent-session objects in ``core/api.py``
+(``XdfsServer`` / ``XdfsClient``). What remains here:
 
-Senders mirror the receivers (the paper notes client APIs reuse the same
-quasi-server architectures): ``event`` (single-thread, selectors) vs
-``threaded``/``forked`` (blocking worker per channel, own fd + seeks).
-
-Both transfer directions run over real loopback TCP sockets; disk I/O is
-real file I/O; mem-to-mem mode replaces them with zero buffers / no-op
-sinks (the paper's /dev/zero -> /dev/null tests).
+* ``TransferSpec`` / ``TransferStats`` — the original one-shot dataclasses;
+* ``run_transfer(spec)`` — DEPRECATED single-file entry point, now a thin
+  shim that forks an ``XdfsServer`` process and an ``XdfsClient`` process
+  (per-side CPU/RSS attribution, paper Figs. 13/16/17/19) and moves one
+  file through a one-negotiation session. New code should hold an
+  ``XdfsClient`` session open and amortize negotiation across files.
+* re-exports of the engine helpers (``Source``, ``Sink``, ``mtedp_receive``
+  etc.) for backward compatibility.
 """
 from __future__ import annotations
 
 import json
 import os
 import resource
-import selectors
 import socket
-import struct
-import threading
-import time
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from dataclasses import dataclass
+from typing import Optional
 
-from repro.core.fsm import FSM_BUILDERS
-from repro.core.header import (
-    HEADER_SIZE,
-    ChannelEvent,
-    ChannelHeader,
-    Negotiation,
-    new_session_id,
+# Backward-compatible re-exports: the engines moved to repro.core.engines.
+from repro.core.engines import (  # noqa: F401
+    ACK,
+    IOV_MAX,
+    RecvStats,
+    Sink,
+    Source,
+    event_send,
+    get_engine,
+    mp_receive,
+    mt_receive,
+    mtedp_receive,
+    recv_exact,
+    send_all,
+    worker_send,
 )
-from repro.core.piod import PIOD
-from repro.core.ringbuf import BlockPool, LockedRing
-
-ACK = b"\x06"
-IOV_MAX = 512
-
-
-# ---------------------------------------------------------------------------
-# wire helpers
-# ---------------------------------------------------------------------------
-
-
-def send_all(sock: socket.socket, data) -> None:
-    view = memoryview(data)
-    while view:
-        n = sock.send(view)
-        view = view[n:]
-
-
-def recv_exact(sock: socket.socket, n: int, buf: Optional[memoryview] = None):
-    out = memoryview(bytearray(n)) if buf is None else buf[:n]
-    got = 0
-    while got < n:
-        r = sock.recv_into(out[got:], n - got)
-        if r == 0:
-            raise ConnectionError("peer closed")
-        got += r
-    return out
-
-
-# ---------------------------------------------------------------------------
-# sources and sinks
-# ---------------------------------------------------------------------------
-
-
-class Source:
-    """Reads blocks from a file, or serves zeros (mem mode)."""
-
-    def __init__(self, path: Optional[str], size: int, block_size: int):
-        self.size = size
-        self.block_size = block_size
-        self.n_blocks = (size + block_size - 1) // block_size
-        self.path = path
-        self._fd = os.open(path, os.O_RDONLY) if path else -1
-        self._zeros = None if path else bytes(block_size)
-
-    def open_worker(self) -> "Source":
-        """A worker-private handle (MP/MT senders use one fd per worker)."""
-        return Source(self.path, self.size, self.block_size)
-
-    def block_len(self, i: int) -> int:
-        return min(self.block_size, self.size - i * self.block_size)
-
-    def read_block(self, i: int) -> bytes:
-        ln = self.block_len(i)
-        if self._fd < 0:
-            return self._zeros[:ln]
-        return os.pread(self._fd, ln, i * self.block_size)
-
-    def close(self):
-        if self._fd >= 0:
-            os.close(self._fd)
-
-
-class Sink:
-    """Writes blocks to a file (pwrite / coalesced pwritev), or discards."""
-
-    def __init__(self, path: Optional[str], size: int):
-        self.path = path
-        self.size = size
-        if path:
-            self._fd = os.open(path, os.O_WRONLY | os.O_CREAT, 0o644)
-            os.ftruncate(self._fd, size)
-        else:
-            self._fd = -1
-
-    def open_worker(self) -> "Sink":
-        return Sink(self.path, self.size) if self.path else Sink(None, self.size)
-
-    def write_at(self, offset: int, data) -> None:
-        if self._fd >= 0:
-            os.pwrite(self._fd, data, offset)
-
-    def writev_coalesced(self, blocks: List[Tuple[int, int, bytearray]]) -> int:
-        """Sort by offset, group contiguous runs, one pwritev per run.
-
-        Returns the number of vectored syscalls issued (the seek-reduction
-        metric from the paper)."""
-        if self._fd < 0 or not blocks:
-            return 0
-        blocks.sort(key=lambda b: b[0])
-        calls = 0
-        run: List[memoryview] = []
-        run_start = run_end = -1
-        for off, ln, blk in blocks:
-            if off == run_end and len(run) < IOV_MAX:
-                run.append(memoryview(blk)[:ln])
-                run_end += ln
-            else:
-                if run:
-                    os.pwritev(self._fd, run, run_start)
-                    calls += 1
-                run = [memoryview(blk)[:ln]]
-                run_start, run_end = off, off + ln
-        if run:
-            os.pwritev(self._fd, run, run_start)
-            calls += 1
-        return calls
-
-    def close(self):
-        if self._fd >= 0:
-            os.close(self._fd)
-
-
-# ---------------------------------------------------------------------------
-# receivers
-# ---------------------------------------------------------------------------
-
-
-@dataclass
-class RecvStats:
-    bytes: int = 0
-    writev_calls: int = 0
-    flushes: int = 0
-
-
-def mtedp_receive(
-    socks: List[socket.socket],
-    sink: Sink,
-    block_size: int,
-    pool_slots: int = 32,
-    conformance: bool = True,
-) -> RecvStats:
-    """The xDFS MTEDP receiver: PIOD event loop + BlockPool + vectored I/O."""
-    stats = RecvStats()
-    pool = BlockPool(pool_slots, block_size)
-    piod = PIOD()
-    n = len(socks)
-    eof = [False] * n
-    fsm = FSM_BUILDERS["server_upload"]() if conformance else None
-    if fsm is not None:
-        # connection/negotiation stages already completed by the session layer
-        for ev in ("conn", "auth_ok", "ftsm", "params_ok", "new_session",
-                   "registered", "all_channels", "opened"):
-            fsm.step(ev)
-
-    class Chan:
-        __slots__ = ("sock", "idx", "hdr_buf", "hdr_got", "hdr", "blk", "got")
-
-        def __init__(self, sock, idx):
-            self.sock = sock
-            self.idx = idx
-            self.hdr_buf = memoryview(bytearray(HEADER_SIZE))
-            self.hdr_got = 0
-            self.hdr = None
-            self.blk = None
-            self.got = 0
-
-    def fsm_steps(*events):
-        if fsm is not None:
-            for e in events:
-                fsm.step(e)
-
-    def flush(final=False):
-        blocks = pool.drain()
-        if blocks or final:
-            stats.writev_calls += sink.writev_coalesced(blocks)
-            stats.flushes += 1
-            for _, _, blk in blocks:
-                pool.release(blk)
-        if fsm is None:
-            return
-        if final:
-            fsm.step("final_flush")  # conformance: must be in 13_flush
-        elif fsm.state == "10_dispatch":
-            fsm_steps("flush", "flushed")
-        # (a drain tick after all_eof, state 13, needs no transition)
-
-    def on_readable(sock, mask):
-        """Greedy drain: keep consuming until the socket would block —
-        one selector wakeup then services many blocks (minimizes dispatch
-        overhead, the §2.3 context-switch factor applied to the event loop).
-        """
-        c = chans[sock]
-        try:
-            while True:
-                if c.hdr is None:
-                    r = sock.recv_into(
-                        c.hdr_buf[c.hdr_got:], HEADER_SIZE - c.hdr_got
-                    )
-                    if r == 0:
-                        raise ConnectionError("peer closed mid-header")
-                    c.hdr_got += r
-                    if c.hdr_got < HEADER_SIZE:
-                        continue
-                    c.hdr = ChannelHeader.unpack(bytes(c.hdr_buf))
-                    c.hdr_got = 0
-                    if c.hdr.event == ChannelEvent.EOFT:
-                        # milestone: 10 -> 11 -> 14 -> (10 | 13)
-                        eof[c.idx] = True
-                        piod.unregister(sock)
-                        c.hdr = None
-                        fsm_steps("read_ready", "eof_header",
-                                  "all_eof" if all(eof) else "channels_open")
-                        return
-                    c.blk = pool.acquire()
-                    while c.blk is None:  # backpressure: drain to disk
-                        flush()
-                        c.blk = pool.acquire()
-                    c.got = 0
-                    continue
-                # payload
-                want = c.hdr.length - c.got
-                r = sock.recv_into(memoryview(c.blk)[c.got : c.hdr.length], want)
-                if r == 0:
-                    raise ConnectionError("peer closed mid-block")
-                c.got += r
-                stats.bytes += r
-                if c.got == c.hdr.length:
-                    pool.commit(c.blk, c.hdr.offset, c.hdr.length)
-                    # milestone: full block moved through 10 -> 11 -> 12 -> 10
-                    fsm_steps("read_ready", "block", "buffered")
-                    c.hdr = None
-                    c.blk = None
-                    if pool.n_free == 0:
-                        flush()
-        except BlockingIOError:
-            return
-
-    chans: Dict[socket.socket, Chan] = {}
-    for i, s in enumerate(socks):
-        chans[s] = Chan(s, i)
-        piod.register(s, selectors.EVENT_READ, on_readable)
-
-    def drained_if_idle():
-        if pool.n_committed >= pool_slots // 2:
-            flush()
-
-    piod.idle_callback = drained_if_idle
-    piod.run(until=lambda: all(eof))
-    flush(final=True)
-    piod.close()
-    if fsm is not None:
-        assert fsm.done, f"conformance: receiver FSM ended in {fsm.state}"
-    for s in socks:
-        send_all(s, ACK)
-    return stats
-
-
-def mt_receive(
-    socks: List[socket.socket],
-    sink: Sink,
-    block_size: int,
-    ring_slots: int = 32,
-) -> RecvStats:
-    """MT model: thread per channel + locked shared ring + disk thread."""
-    stats = RecvStats()
-    ring = LockedRing(ring_slots, block_size)
-    lock = threading.Lock()
-
-    def rx(sock):
-        hdr_buf = memoryview(bytearray(HEADER_SIZE))
-        while True:
-            recv_exact(sock, HEADER_SIZE, hdr_buf)
-            hdr = ChannelHeader.unpack(bytes(hdr_buf))
-            if hdr.event == ChannelEvent.EOFT:
-                return
-            payload = recv_exact(sock, hdr.length)
-            ring.put(payload, hdr.offset)
-            with lock:
-                stats.bytes += hdr.length
-
-    def disk():
-        while True:
-            batch = ring.get_batch()
-            if batch:
-                blocks = [(off, len(d), bytearray(d)) for off, d in batch]
-                stats.writev_calls += sink.writev_coalesced(blocks)
-                stats.flushes += 1
-            elif ring.closed:
-                return
-
-    dt = threading.Thread(target=disk)
-    dt.start()
-    threads = [threading.Thread(target=rx, args=(s,)) for s in socks]
-    for t in threads:
-        t.start()
-    for t in threads:
-        t.join()
-    ring.close()
-    dt.join()
-    for s in socks:
-        send_all(s, ACK)
-    return stats
-
-
-def mp_receive(
-    socks: List[socket.socket],
-    sink: Sink,
-    block_size: int,
-) -> RecvStats:
-    """MP model (GridFTP-like): fork per channel, n file handles, per-block
-    pwrite at scattered offsets — no coalescing, no shared state."""
-    stats = RecvStats()
-    pids = []
-    for s in socks:
-        pid = os.fork()
-        if pid == 0:  # child
-            try:
-                wsink = sink.open_worker()
-                hdr_buf = memoryview(bytearray(HEADER_SIZE))
-                while True:
-                    recv_exact(s, HEADER_SIZE, hdr_buf)
-                    hdr = ChannelHeader.unpack(bytes(hdr_buf))
-                    if hdr.event == ChannelEvent.EOFT:
-                        break
-                    payload = recv_exact(s, hdr.length)
-                    wsink.write_at(hdr.offset, payload)
-                wsink.close()
-                send_all(s, ACK)
-                os._exit(0)
-            except BaseException:
-                os._exit(1)
-        pids.append(pid)
-    for pid in pids:
-        _, status = os.waitpid(pid, 0)
-        if os.waitstatus_to_exitcode(status) != 0:
-            raise RuntimeError("mp receiver child failed")
-    return stats
-
-
-# ---------------------------------------------------------------------------
-# senders
-# ---------------------------------------------------------------------------
-
-
-def event_send(
-    socks: List[socket.socket],
-    source: Source,
-    session: bytes,
-    mode_event: ChannelEvent = ChannelEvent.xFTSMU,
-) -> int:
-    """xDFS event-driven sender: one thread, write-readiness multiplexing."""
-    n = len(socks)
-    piod = PIOD()
-    next_block = [c for c in range(n)]  # block index each channel sends next
-    pending: Dict[socket.socket, memoryview] = {}
-    done = [False] * n
-    sent = 0
-
-    def make_frame(i_chan: int, i_block: int) -> bytes:
-        if i_block >= source.n_blocks:
-            hdr = ChannelHeader(ChannelEvent.EOFT, session, i_chan, 0, 0)
-            return hdr.pack()
-        ln = source.block_len(i_block)
-        hdr = ChannelHeader(
-            mode_event, session, i_chan, i_block * source.block_size, ln
-        )
-        return hdr.pack() + source.read_block(i_block)
-
-    idx = {s: i for i, s in enumerate(socks)}
-
-    def on_writable(sock, mask):
-        nonlocal sent
-        i = idx[sock]
-        try:
-            while True:  # greedy: fill the socket until it would block
-                buf = pending.get(sock)
-                if buf is None:
-                    blk = next_block[i]
-                    next_block[i] += n
-                    frame = make_frame(i, blk)
-                    buf = memoryview(frame)
-                    pending[sock] = buf
-                    if blk >= source.n_blocks:
-                        done[i] = True
-                w = sock.send(buf)
-                sent += w
-                buf = buf[w:]
-                if len(buf) == 0:
-                    pending.pop(sock)
-                    if done[i]:
-                        piod.unregister(sock)
-                        return
-                else:
-                    pending[sock] = buf
-        except BlockingIOError:
-            return
-
-    for s in socks:
-        piod.register(s, selectors.EVENT_WRITE, on_writable)
-    piod.run(until=lambda: all(done) and not pending)
-    piod.close()
-    for s in socks:
-        s.setblocking(True)
-        recv_exact(s, 1)  # final ack (exception-header channel)
-    return sent
-
-
-def worker_send(
-    socks: List[socket.socket],
-    source: Source,
-    session: bytes,
-    use_processes: bool,
-    mode_event: ChannelEvent = ChannelEvent.xFTSMU,
-) -> int:
-    """Baseline sender: blocking worker (thread or fork) per channel, each
-    with a PRIVATE fd reading its stripe (seek-heavy, GridFTP-like)."""
-    n = len(socks)
-
-    def tx(i: int, sock: socket.socket):
-        src = source.open_worker()
-        b = i
-        while b < src.n_blocks:
-            ln = src.block_len(b)
-            hdr = ChannelHeader(mode_event, session, i, b * src.block_size, ln)
-            send_all(sock, hdr.pack() + src.read_block(b))
-            b += n
-        send_all(sock, ChannelHeader(ChannelEvent.EOFT, session, i, 0, 0).pack())
-        sock.setblocking(True)
-        recv_exact(sock, 1)
-        src.close()
-
-    if use_processes:
-        pids = []
-        for i, s in enumerate(socks):
-            pid = os.fork()
-            if pid == 0:
-                try:
-                    tx(i, s)
-                    os._exit(0)
-                except BaseException:
-                    os._exit(1)
-            pids.append(pid)
-        for pid in pids:
-            _, status = os.waitpid(pid, 0)
-            if os.waitstatus_to_exitcode(status) != 0:
-                raise RuntimeError("sender child failed")
-    else:
-        threads = [
-            threading.Thread(target=tx, args=(i, s)) for i, s in enumerate(socks)
-        ]
-        for t in threads:
-            t.start()
-        for t in threads:
-            t.join()
-    return source.size
-
-
-# ---------------------------------------------------------------------------
-# session setup + orchestration
-# ---------------------------------------------------------------------------
 
 
 @dataclass
 class TransferSpec:
-    engine: str = "mtedp"  # mtedp | mt | mp
+    engine: str = "mtedp"  # any name in the engine registry
     mode: str = "upload"  # upload | download
     n_channels: int = 4
     block_size: int = 1 << 20
@@ -518,24 +66,6 @@ class TransferStats:
     writev_calls: int = 0
 
 
-def _receiver_for(engine: str):
-    return {"mtedp": mtedp_receive, "mt": mt_receive, "mp": mp_receive}[engine]
-
-
-def _run_receiver(engine, socks, sink, block_size, pool_slots):
-    if engine == "mtedp":
-        return mtedp_receive(socks, sink, block_size, pool_slots)
-    if engine == "mt":
-        return mt_receive(socks, sink, block_size, pool_slots)
-    return mp_receive(socks, sink, block_size)
-
-
-def _run_sender(engine, socks, source, session):
-    if engine == "mtedp":
-        return event_send(socks, source, session)
-    return worker_send(socks, source, session, use_processes=(engine == "mp"))
-
-
 def _child_metrics() -> dict:
     ru = resource.getrusage(resource.RUSAGE_SELF)
     rc = resource.getrusage(resource.RUSAGE_CHILDREN)
@@ -546,84 +76,72 @@ def _child_metrics() -> dict:
 
 
 def run_transfer(spec: TransferSpec) -> TransferStats:
-    """Run one full client->server (upload) or server->client (download)
-    session over loopback TCP, server and client in forked processes so CPU
-    and RSS are attributable per side (paper Figs. 13, 16, 17, 19)."""
-    lsock = socket.socket()
-    lsock.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
-    lsock.bind(("127.0.0.1", spec.port))
-    lsock.listen(spec.n_channels + 1)
-    port = lsock.getsockname()[1]
-    session = new_session_id()
+    """DEPRECATED one-shot shim: run one full upload or download session
+    over loopback TCP through the persistent-session API, server and client
+    in forked processes so CPU and RSS are attributable per side.
 
-    r_meta, w_meta = os.pipe()
+    Every call pays a fork + negotiation + teardown; hold an
+    ``XdfsClient`` session open instead to amortize that across files."""
+    from repro.core.api import XdfsClient, XdfsServer
+
+    get_engine(spec.engine)  # fail fast in the parent on unknown engines
+
+    r_port, w_port = os.pipe()
+    r_srv, w_srv = os.pipe()
     server_pid = os.fork()
     if server_pid == 0:  # ----- server process -----
-        os.close(r_meta)
+        os.close(r_port)
+        os.close(r_srv)
         try:
-            socks = []
-            for _ in range(spec.n_channels):
-                c, _ = lsock.accept()
-                c.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
-                socks.append(c)
-            lsock.close()
-            # negotiation arrives on the first-accepted channel
-            raw = bytes(recv_exact(socks[0], 4))
-            (nlen,) = struct.unpack("<I", raw)
-            neg = Negotiation.unpack(bytes(recv_exact(socks[0], nlen)))
-            assert neg.n_channels == spec.n_channels
-            stats = RecvStats()
-            if spec.mode == "upload":
-                sink = Sink(spec.dst_path, spec.size)
-                stats = _run_receiver(
-                    spec.engine, socks, sink, spec.block_size, spec.pool_slots
-                )
-                sink.close()
-            else:  # download: server sends
-                source = Source(spec.src_path, spec.size, spec.block_size)
-                _run_sender(spec.engine, socks, source, session)
-                source.close()
+            srv = XdfsServer(
+                engine=spec.engine, root=None, port=spec.port,
+                pool_slots=spec.pool_slots,
+            ).start()
+            os.write(w_port, json.dumps({"port": srv.address[1]}).encode())
+            os.close(w_port)
+            if not srv.wait_closed_sessions(1, timeout=600.0):
+                raise TimeoutError("no session completed")
+            if srv.errors:
+                raise srv.errors[0]
             m = _child_metrics()
-            m["writev_calls"] = stats.writev_calls
-            os.write(w_meta, json.dumps(m).encode())
+            m["writev_calls"] = srv.stats["writev_calls"]
+            m["server_bytes"] = srv.stats["bytes"]
+            srv.stop(timeout=2.0)
+            os.write(w_srv, json.dumps(m).encode())
             os._exit(0)
         except BaseException as e:
-            os.write(w_meta, json.dumps({"error": repr(e)}).encode())
+            os.write(w_srv, json.dumps({"error": repr(e)}).encode())
             os._exit(1)
 
-    # ----- client (this process forks again for metric isolation) -----
-    os.close(w_meta)
-    lsock.close()
+    # ----- parent: learn the port, then fork the client -----
+    os.close(w_port)
+    os.close(w_srv)
+    port_msg = json.loads(os.read(r_port, 4096).decode() or "{}")
+    os.close(r_port)
+    if "port" not in port_msg:
+        os.waitpid(server_pid, 0)
+        srv_err = json.loads(os.read(r_srv, 65536).decode() or "{}")
+        os.close(r_srv)
+        raise RuntimeError(f"transfer failed: srv={srv_err}")
+    port = port_msg["port"]
+
     r_cli, w_cli = os.pipe()
     client_pid = os.fork()
-    if client_pid == 0:
+    if client_pid == 0:  # ----- client process -----
         os.close(r_cli)
         try:
-            socks = []
-            for i in range(spec.n_channels):
-                c = socket.socket()
-                c.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
-                c.connect(("127.0.0.1", port))
-                socks.append(c)
-            neg = Negotiation(
-                session, spec.n_channels, spec.block_size, 1 << 20,
-                "remote.bin", "local.bin", file_size=spec.size,
-            ).pack()
-            send_all(socks[0], struct.pack("<I", len(neg)) + neg)
-            t0 = time.perf_counter()
+            cli = XdfsClient.connect(
+                ("127.0.0.1", port), n_channels=spec.n_channels,
+                engine=spec.engine, block_size=spec.block_size,
+            )
             if spec.mode == "upload":
-                source = Source(spec.src_path, spec.size, spec.block_size)
-                _run_sender(spec.engine, socks, source, session)
-                source.close()
+                res = cli.put(spec.src_path, spec.dst_path, size=spec.size)
             else:
-                sink = Sink(spec.dst_path, spec.size)
-                _run_receiver(
-                    spec.engine, socks, sink, spec.block_size, spec.pool_slots
-                )
-                sink.close()
-            wall = time.perf_counter() - t0
+                res = cli.get(spec.src_path, spec.dst_path, size=spec.size)
+            fr = res.result()
+            cli.close()
             m = _child_metrics()
-            m["wall_s"] = wall
+            m["wall_s"] = fr.wall_s
             os.write(w_cli, json.dumps(m).encode())
             os._exit(0)
         except BaseException as e:
@@ -631,9 +149,9 @@ def run_transfer(spec: TransferSpec) -> TransferStats:
             os._exit(1)
 
     os.close(w_cli)
-    srv = json.loads(os.read(r_meta, 65536).decode() or "{}")
+    srv = json.loads(os.read(r_srv, 65536).decode() or "{}")
     cli = json.loads(os.read(r_cli, 65536).decode() or "{}")
-    os.close(r_meta)
+    os.close(r_srv)
     os.close(r_cli)
     for pid in (server_pid, client_pid):
         os.waitpid(pid, 0)

@@ -1,0 +1,104 @@
+"""Tiny deterministic fallback for ``hypothesis`` (used when the real
+package is not installed — see conftest.py).
+
+Implements just the surface this test suite uses: ``given``, ``settings``,
+and the ``strategies`` constructors ``integers``, ``floats``, ``booleans``,
+``binary``, ``text``, ``sampled_from``, ``lists``, ``tuples``. Each
+``@given`` test runs against a fixed-seed random sample instead of
+hypothesis's adaptive search — weaker, but keeps every property test
+executable in minimal environments.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import string
+import types
+
+_DEFAULT_EXAMPLES = 25
+_MAX_EXAMPLES = 50  # cap: this is a smoke fallback, not a fuzzer
+
+
+class _Strategy:
+    def __init__(self, sample):
+        self.sample = sample  # fn(rng) -> value
+
+
+def integers(min_value, max_value):
+    return _Strategy(lambda r: r.randint(min_value, max_value))
+
+
+def floats(min_value, max_value):
+    return _Strategy(lambda r: r.uniform(min_value, max_value))
+
+
+def booleans():
+    return _Strategy(lambda r: bool(r.getrandbits(1)))
+
+
+def binary(min_size=0, max_size=20):
+    return _Strategy(
+        lambda r: bytes(r.getrandbits(8) for _ in range(r.randint(min_size, max_size)))
+    )
+
+
+def text(min_size=0, max_size=20, alphabet=string.printable):
+    return _Strategy(
+        lambda r: "".join(
+            r.choice(alphabet) for _ in range(r.randint(min_size, max_size))
+        )
+    )
+
+
+def sampled_from(elements):
+    elements = list(elements)
+    return _Strategy(lambda r: r.choice(elements))
+
+
+def lists(elements, min_size=0, max_size=10):
+    return _Strategy(
+        lambda r: [elements.sample(r) for _ in range(r.randint(min_size, max_size))]
+    )
+
+
+def tuples(*elements):
+    return _Strategy(lambda r: tuple(e.sample(r) for e in elements))
+
+
+def given(*arg_strategies, **kw_strategies):
+    def decorate(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = min(getattr(wrapper, "_max_examples", _DEFAULT_EXAMPLES),
+                    _MAX_EXAMPLES)
+            rng = random.Random(0xD0DF5)
+            for _ in range(n):
+                pos = [s.sample(rng) for s in arg_strategies]
+                named = {k: s.sample(rng) for k, s in kw_strategies.items()}
+                fn(*args, *pos, **named, **kwargs)
+
+        # pytest must only see params NOT filled by strategies (fixtures):
+        # positional strategies fill the leading params, keyword strategies
+        # fill by name. Everything else stays in the visible signature.
+        params = list(inspect.signature(fn).parameters.values())
+        leftover = [p for p in params[len(arg_strategies):]
+                    if p.name not in kw_strategies]
+        del wrapper.__wrapped__  # stop inspect from unwrapping to fn
+        wrapper.__signature__ = inspect.Signature(leftover)
+        return wrapper
+    return decorate
+
+
+def settings(max_examples=None, deadline=None, **_ignored):
+    def decorate(fn):
+        if max_examples is not None:
+            fn._max_examples = max_examples
+        return fn
+    return decorate
+
+
+strategies = types.ModuleType("hypothesis.strategies")
+for _name in ("integers", "floats", "booleans", "binary", "text",
+              "sampled_from", "lists", "tuples"):
+    setattr(strategies, _name, globals()[_name])

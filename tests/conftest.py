@@ -1,8 +1,25 @@
+import importlib.util
 import os
+import pathlib
+import sys
 
 # Smoke tests and benches must see 1 device (dry-runs set 512 themselves,
 # in their own process). Keep determinism knobs on.
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+# hypothesis is optional: when absent, install the tiny deterministic
+# fallback so property-test modules still collect and run (weaker sampling,
+# same assertions).
+try:
+    import hypothesis  # noqa: F401
+except ImportError:
+    _spec = importlib.util.spec_from_file_location(
+        "hypothesis", pathlib.Path(__file__).with_name("_hypothesis_stub.py")
+    )
+    _stub = importlib.util.module_from_spec(_spec)
+    _spec.loader.exec_module(_stub)
+    sys.modules["hypothesis"] = _stub
+    sys.modules["hypothesis.strategies"] = _stub.strategies
 
 import jax  # noqa: E402
 import pytest  # noqa: E402

@@ -1,0 +1,206 @@
+"""Persistent-session API: multi-file channel reuse (EOFR), one negotiation
+per session, engine registry, FSM multi-file loop, and the amortization
+claim (session reuse beats one-shot transfers for small files)."""
+import os
+import time
+
+import pytest
+
+from repro.core.api import XdfsClient, XdfsServer
+from repro.core.engines import (
+    Engine,
+    UnknownEngineError,
+    available_engines,
+    get_engine,
+    register_engine,
+)
+from repro.core.fsm import FSM_BUILDERS
+from repro.core.session import SessionError
+from repro.core.transfer import TransferSpec, run_transfer
+
+
+def _mkfiles(d, n, base=1 << 17):
+    out = []
+    for i in range(n):
+        data = os.urandom(base + i * 997)  # distinct odd sizes
+        p = d / f"f{i}.bin"
+        p.write_bytes(data)
+        out.append((p, data))
+    return out
+
+
+@pytest.mark.parametrize("engine", ["mtedp", "mt", "mp"])
+def test_multi_file_session_roundtrip(engine, tmp_path):
+    """>= 3 files per session, byte-exact both directions, all engines."""
+    files = _mkfiles(tmp_path, 3)
+    with XdfsServer(engine=engine, root=str(tmp_path / "srv")) as srv:
+        with XdfsClient.connect(srv.address, n_channels=3, engine=engine,
+                                block_size=1 << 16) as cli:
+            ups = cli.put_many(
+                [(str(p), f"up/{p.name}") for p, _ in files]
+            )
+            for r in ups:
+                assert r.result().bytes > 0
+            downs = cli.get_many(
+                [(f"up/{p.name}", str(tmp_path / f"back_{p.name}"))
+                 for p, _ in files]
+            )
+            for r in downs:
+                r.result()
+        srv.wait_closed_sessions(1, timeout=60)
+        assert not srv.errors, srv.errors
+    for p, data in files:
+        assert (tmp_path / f"back_{p.name}").read_bytes() == data, \
+            f"{engine} corrupted {p.name}"
+    assert srv.stats["negotiations"] == 1  # ONE negotiation for 6 files
+    assert srv.stats["files"] == 6
+
+
+def test_put_many_reuses_channels(tmp_path):
+    """The acceptance claim: 8 small files over one session = exactly one
+    negotiation, and every file ends with one EOFR per channel (channels
+    stay open and are reused, Table 3)."""
+    n_channels, n_files = 4, 8
+    files = _mkfiles(tmp_path, n_files, base=1 << 15)
+    with XdfsServer(engine="mtedp", root=str(tmp_path / "srv")) as srv:
+        with XdfsClient.connect(srv.address, n_channels=n_channels,
+                                block_size=1 << 14) as cli:
+            for r in cli.put_many([(str(p), p.name) for p, _ in files]):
+                r.result()
+            assert cli.stats["negotiations"] == 1
+            assert cli.stats["eofr_sent"] == n_files * n_channels
+        srv.wait_closed_sessions(1, timeout=60)
+        assert not srv.errors, srv.errors
+    assert srv.stats["negotiations"] == 1
+    assert srv.stats["sessions"] == 1
+    assert srv.stats["eofr_frames"] == n_files * n_channels
+    assert srv.stats["eoft_frames"] == 1  # exactly one: the session close
+    total = sum(len(d) for _, d in files)
+    assert srv.stats["bytes"] == total
+
+
+def test_mp_receiver_reports_bytes(tmp_path):
+    """Satellite fix: forked mp children pipe byte counts to the parent."""
+    files = _mkfiles(tmp_path, 2)
+    with XdfsServer(engine="mp", root=str(tmp_path / "srv")) as srv:
+        with XdfsClient.connect(srv.address, n_channels=2, engine="mp",
+                                block_size=1 << 16) as cli:
+            for r in cli.put_many([(str(p), p.name) for p, _ in files]):
+                r.result()
+        srv.wait_closed_sessions(1, timeout=60)
+    assert srv.stats["bytes"] == sum(len(d) for _, d in files)
+    assert srv.stats["eofr_frames"] == 2 * 2
+
+
+def test_unknown_engine_raises_clear_error():
+    with pytest.raises(UnknownEngineError, match="mtedp"):
+        get_engine("warp-drive")
+    with pytest.raises(UnknownEngineError):
+        XdfsServer(engine="nope")
+    with pytest.raises(UnknownEngineError):
+        XdfsClient.connect(("127.0.0.1", 1), engine="nope")
+    assert {"mtedp", "mt", "mp"} <= set(available_engines())
+
+
+def test_register_custom_engine():
+    """Third-party engines plug into the same dispatch path."""
+    base = get_engine("mtedp")
+    register_engine(Engine("custom-mtedp", base.receive, base.send, "alias"))
+    try:
+        assert get_engine("custom-mtedp").receive is base.receive
+        assert "custom-mtedp" in available_engines()
+    finally:
+        import repro.core.engines.registry as reg
+        reg._REGISTRY.pop("custom-mtedp", None)
+
+
+def test_get_missing_file_keeps_session_alive(tmp_path):
+    """A bad request raises on ITS future; the session keeps serving."""
+    files = _mkfiles(tmp_path, 1)
+    with XdfsServer(root=str(tmp_path / "srv")) as srv:
+        with XdfsClient.connect(srv.address, n_channels=2) as cli:
+            bad = cli.get("does/not/exist.bin", str(tmp_path / "x"))
+            with pytest.raises(SessionError):
+                bad.result()
+            p, data = files[0]
+            cli.put(str(p), "ok.bin").result()
+            back = cli.get_bytes("ok.bin").result().data
+            assert back == data
+
+
+def test_path_escape_rejected(tmp_path):
+    with XdfsServer(root=str(tmp_path / "jail")) as srv:
+        with XdfsClient.connect(srv.address, n_channels=1) as cli:
+            res = cli.put(None, "../escape.bin", data=b"x" * 64)
+            with pytest.raises(SessionError, match="escape"):
+                res.result()
+    assert not (tmp_path / "escape.bin").exists()
+
+
+def test_concurrent_sessions_one_server(tmp_path):
+    """The persistent server demuxes interleaved channels of many sessions."""
+    files = _mkfiles(tmp_path, 2)
+    with XdfsServer(root=str(tmp_path / "srv")) as srv:
+        clients = [XdfsClient.connect(srv.address, n_channels=2)
+                   for _ in range(3)]
+        try:
+            futs = [c.put(str(files[0][0]), f"c{i}.bin")
+                    for i, c in enumerate(clients)]
+            for f in futs:
+                f.result()
+        finally:
+            for c in clients:
+                c.close()
+        srv.wait_closed_sessions(3, timeout=60)
+        assert not srv.errors, srv.errors
+    assert srv.stats["sessions"] == 3
+    assert srv.stats["negotiations"] == 3
+    for i in range(3):
+        assert (tmp_path / "srv" / f"c{i}.bin").read_bytes() == files[0][1]
+
+
+def test_fsm_multi_file_loop_conformance():
+    """The extended server-upload CFSM loops 9_open_file -> ... ->
+    13_flush --eofr_flush--> 9_open_file per file, then ends on EOFT."""
+    m = FSM_BUILDERS["server_upload"]()
+    for ev in ("conn", "auth_ok", "ftsm", "params_ok", "new_session",
+               "registered", "all_channels"):
+        m.step(ev)
+    for _ in range(3):  # three files over the same channels
+        m.step("opened")
+        m.step("read_ready"); m.step("block"); m.step("buffered")
+        m.step("read_ready"); m.step("eof_header"); m.step("all_eof")
+        m.step("eofr_flush")
+        assert m.state == "9_open_file"
+    m.step("eoft")
+    assert m.done
+
+
+def test_session_reuse_beats_oneshot(tmp_path):
+    """Acceptance benchmark, test-sized: 8 small files through ONE session
+    must beat 8 one-shot run_transfer calls (each pays fork + negotiation
+    + teardown) on wall-clock."""
+    n_files = 8
+    files = _mkfiles(tmp_path, n_files, base=1 << 16)
+
+    t0 = time.perf_counter()
+    with XdfsServer(engine="mtedp", root=str(tmp_path / "srv")) as srv:
+        with XdfsClient.connect(srv.address, n_channels=4,
+                                block_size=1 << 16) as cli:
+            for r in cli.put_many([(str(p), p.name) for p, _ in files]):
+                r.result()
+    t_session = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    for p, data in files:
+        run_transfer(TransferSpec(
+            engine="mtedp", mode="upload", n_channels=4, size=len(data),
+            src_path=str(p), dst_path=str(tmp_path / "one.bin"),
+            block_size=1 << 16,
+        ))
+    t_oneshot = time.perf_counter() - t0
+
+    assert t_session < t_oneshot, (
+        f"session reuse ({t_session:.3f}s) should beat "
+        f"{n_files}x one-shot ({t_oneshot:.3f}s)"
+    )
