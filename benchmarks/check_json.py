@@ -1,0 +1,74 @@
+"""Schema check for BENCH_*.json perf baselines (the CI gate).
+
+  PYTHONPATH=src python -m benchmarks.check_json BENCH_host.json
+
+Exits non-zero (listing every violation) if the file is missing,
+malformed, or lacks the sections/row keys the perf trajectory depends on.
+"""
+from __future__ import annotations
+
+import json
+import sys
+from typing import List
+
+REQUIRED_TOP = ("schema", "host", "python", "sections")
+REQUIRED_SECTIONS = {
+    "session_reuse": {"engine", "channels", "speedup", "session_s"},
+    "zero_copy": {"mode", "path", "block_kb", "mb_s", "gain_vs_copy"},
+    "host_transfer": {"engine", "channels", "block_kb", "mb_s",
+                      "writev_calls"},
+}
+SCALAR = (int, float, str, bool)
+
+
+def check(path: str) -> List[str]:
+    errors: List[str] = []
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except FileNotFoundError:
+        return [f"{path}: file not found"]
+    except json.JSONDecodeError as e:
+        return [f"{path}: malformed JSON: {e}"]
+    if not isinstance(doc, dict):
+        return [f"{path}: top level must be an object"]
+    for key in REQUIRED_TOP:
+        if key not in doc:
+            errors.append(f"missing top-level key {key!r}")
+    sections = doc.get("sections")
+    if not isinstance(sections, dict) or not sections:
+        errors.append("'sections' must be a non-empty object")
+        return errors
+    for name, required_keys in REQUIRED_SECTIONS.items():
+        rows = sections.get(name)
+        if not isinstance(rows, list) or not rows:
+            errors.append(f"section {name!r} missing or empty")
+            continue
+        for i, row in enumerate(rows):
+            if not isinstance(row, dict) or not row:
+                errors.append(f"{name}[{i}]: row must be a non-empty object")
+                continue
+            missing = required_keys - row.keys()
+            if missing:
+                errors.append(f"{name}[{i}]: missing keys {sorted(missing)}")
+            bad = [k for k, v in row.items() if not isinstance(v, SCALAR)]
+            if bad:
+                errors.append(f"{name}[{i}]: non-scalar values for {bad}")
+    return errors
+
+
+def main() -> None:
+    if len(sys.argv) != 2:
+        print("usage: python -m benchmarks.check_json BENCH.json",
+              file=sys.stderr)
+        sys.exit(2)
+    errors = check(sys.argv[1])
+    if errors:
+        for e in errors:
+            print(f"SCHEMA ERROR: {e}", file=sys.stderr)
+        sys.exit(1)
+    print(f"{sys.argv[1]}: OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,12 +1,20 @@
 """Benchmark entrypoint: one section per paper table/figure + system benches.
 
   PYTHONPATH=src python -m benchmarks.run [--full] [--quick] [--smoke]
+                                          [--json PATH]
 
-``--smoke`` runs ONLY the session-reuse microbenchmark (one negotiated
-multi-file session vs N one-shot transfers) — the CI fast path.
+``--smoke`` runs ONLY the fast sections (session reuse, zero-copy A/B,
+host transfer matrix) — the CI fast path.
+
+``--json PATH`` additionally writes every section's rows as a
+machine-readable baseline (the ``BENCH_host.json`` committed at the repo
+root; schema-checked by ``benchmarks/check_json.py``), so every future
+perf PR is measured against a committed trajectory.
 
 Sections:
   0. session_reuse   — §2.5.3 amortization: EOFR channel reuse vs one-shot
+  0b. zero_copy      — copy vs scatter-gather vs sendfile send datapaths
+  0c. host_transfer  — engine x channels matrix (MB/s + writev calls)
   1. paper_figs      — Figs. 12-19 transfer reproductions (MTEDP vs MT vs MP)
   2. device_channels — xDFS ring collectives vs lax.psum (8-dev subprocess)
   3. kernels_bench   — attention / wkv / rglru scaling micro-benches
@@ -19,37 +27,111 @@ CSV lines: ``name,us_per_call,derived`` style per section.
 """
 from __future__ import annotations
 
+import argparse
+import json
 import os
+import platform
 import subprocess
 import sys
+import tempfile
+import time
+from pathlib import Path
+from typing import Dict, List
+
+BENCH_SCHEMA = 1
+
+
+def host_transfer_matrix(smoke: bool = False) -> List[dict]:
+    """Disk-to-disk engine x channels matrix: the per-section rows of the
+    BENCH_*.json baseline (engine, channels, block size, MB/s, writev)."""
+    from repro.core.transfer import TransferSpec, run_transfer
+
+    size = (8 if smoke else 64) << 20
+    block = 1 << 17
+    tmp = Path(tempfile.mkdtemp(prefix="xdfs_matrix_"))
+    src = tmp / "src.bin"
+    src.write_bytes(os.urandom(size))
+    rows = []
+    for engine in ("mtedp", "mt", "mp"):
+        for channels in (1, 4):
+            st = run_transfer(TransferSpec(
+                engine=engine, mode="upload", n_channels=channels,
+                size=size, src_path=str(src), dst_path=str(tmp / "dst.bin"),
+                block_size=block,
+            ))
+            row = {
+                "engine": engine, "channels": channels,
+                "block_kb": block >> 10, "size_mb": size >> 20,
+                "mb_s": round(size / st.wall_s / 1e6, 1),
+                "mbit_s": round(st.throughput_mbps, 1),
+                "writev_calls": st.writev_calls,
+            }
+            rows.append(row)
+            print(",".join(f"{k}={v}" for k, v in row.items()), flush=True)
+    import shutil
+    shutil.rmtree(tmp, ignore_errors=True)
+    return rows
+
+
+def write_json(path: str, sections: Dict[str, List[dict]]) -> None:
+    doc = {
+        "schema": BENCH_SCHEMA,
+        "host": platform.node(),
+        "platform": platform.platform(),
+        "python": platform.python_version(),
+        "generated_utc": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
+        "sections": sections,
+    }
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"wrote {path} ({len(sections)} sections)", flush=True)
 
 
 def main() -> None:
-    full = "--full" in sys.argv
-    quick = "--quick" in sys.argv
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write all section rows as a BENCH_*.json baseline")
+    args = ap.parse_args()
+    sections: Dict[str, List[dict]] = {}
 
     print("== section 0: session reuse (EOFR amortization) ==", flush=True)
     from benchmarks import session_reuse
 
-    session_reuse.run(n_files=8, size_kb=64 if "--smoke" in sys.argv else 256)
-    if "--smoke" in sys.argv:
+    sections["session_reuse"] = [
+        session_reuse.run(n_files=8, size_kb=64 if args.smoke else 256)
+    ]
+
+    print("== section 0b: zero-copy send datapath A/B ==", flush=True)
+    from benchmarks import zero_copy
+
+    sections["zero_copy"] = zero_copy.run(smoke=args.smoke or args.quick)
+
+    print("== section 0c: host transfer matrix ==", flush=True)
+    sections["host_transfer"] = host_transfer_matrix(
+        smoke=args.smoke or args.quick)
+
+    if args.smoke:
+        if args.json:
+            write_json(args.json, sections)
         print("== done (smoke) ==")
         return
 
     print("== section 1: paper figures 12-19 (host transfer engines) ==", flush=True)
     from benchmarks import paper_figs
 
-    if quick:
-        import tempfile
-        from pathlib import Path
-
+    if args.quick:
         tmp = Path(tempfile.mkdtemp(prefix="xdfs_q_"))
         rows = paper_figs.fig12_14_single_stream([64], tmp, repeats=1)
         rows += paper_figs.fig15_19_parallel(64, [1, 4], tmp, repeats=1)
         for r in rows:
             print(",".join(f"{k}={v}" for k, v in r.items()))
+        sections["paper_figs"] = rows
     else:
-        paper_figs.run(full=full)
+        sections["paper_figs"] = paper_figs.run(full=args.full)
 
     print("== section 2: device channels (8-device subprocess) ==", flush=True)
     env = dict(os.environ)
@@ -71,8 +153,10 @@ def main() -> None:
     print("== section 4: checkpoint throughput ==", flush=True)
     from benchmarks import ckpt_bench
 
-    ckpt_bench.run(size_mb=64 if quick else 256)
+    ckpt_bench.run(size_mb=64 if args.quick else 256)
 
+    if args.json:
+        write_json(args.json, sections)
     print("== done ==")
 
 

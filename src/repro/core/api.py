@@ -42,6 +42,8 @@ from repro.core.session import (
     DEFAULT_BLOCK,
     ServerSession,
     SessionError,
+    SessionStats,
+    SocketTuning,
     recv_ctrl,
     recv_hello,
     recv_negotiation,
@@ -51,6 +53,28 @@ from repro.core.session import (
 )
 
 HANDSHAKE_TIMEOUT = 15.0
+
+
+def _connect_tuned(address: Tuple[str, int], timeout: float,
+                   tuning: SocketTuning) -> socket.socket:
+    """``socket.create_connection`` with the tuning applied BEFORE the TCP
+    handshake — SO_RCVBUF must be set pre-connect for the kernel to pick a
+    matching window-scale factor."""
+    host, port = address
+    err: Optional[OSError] = None
+    for af, kind, proto, _, sa in socket.getaddrinfo(
+        host, port, 0, socket.SOCK_STREAM
+    ):
+        s = socket.socket(af, kind, proto)
+        try:
+            tuning.apply(s)
+            s.settimeout(timeout)
+            s.connect(sa)
+            return s
+        except OSError as e:
+            err = e
+            s.close()
+    raise err if err is not None else OSError(f"cannot resolve {address}")
 
 
 @dataclass(frozen=True)
@@ -98,13 +122,18 @@ class XdfsServer:
 
     def __init__(self, engine: Union[str, Engine] = "mtedp",
                  root: Optional[str] = None, host: str = "127.0.0.1",
-                 port: int = 0, pool_slots: int = 32, backlog: int = 128):
+                 port: int = 0, pool_slots: int = 32, backlog: int = 128,
+                 tuning: Optional[SocketTuning] = None):
         self.engine = get_engine(engine)  # fail fast on unknown engines
         self.root = root
         self.host = host
         self._port = port
         self.pool_slots = pool_slots
         self.backlog = backlog
+        # server-side default tuning; buffer sizes land on the LISTENING
+        # socket so accepted channels inherit them before the TCP
+        # handshake fixes the window scale
+        self.tuning = tuning or SocketTuning()
         self._lsock: Optional[socket.socket] = None
         self._accept_thread: Optional[threading.Thread] = None
         self._session_threads: List[threading.Thread] = []
@@ -116,6 +145,7 @@ class XdfsServer:
         self._stopping = False
         self.errors: List[BaseException] = []  # session failures
         self.handshake_errors: List[BaseException] = []  # stray/bad connects
+        self.last_tuning: Optional[SocketTuning] = None  # most recent session
         self.stats: Dict[str, int] = {
             "sessions": 0, "sessions_closed": 0, "negotiations": 0,
             "files": 0, "bytes": 0, "eofr_frames": 0, "eoft_frames": 0,
@@ -127,6 +157,7 @@ class XdfsServer:
     def start(self) -> "XdfsServer":
         lsock = socket.socket()
         lsock.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+        self.tuning.apply_buffers(lsock)
         lsock.bind((self.host, self._port))
         lsock.listen(self.backlog)
         # a timeout so the accept loop notices _stopping: close() alone does
@@ -224,8 +255,17 @@ class XdfsServer:
                     self.stats["negotiations"] += 1
             conn.settimeout(None)
             with self._lock:
-                self._pending.setdefault(hello.session, {})[hello.channel] = conn
+                chans = self._pending.setdefault(hello.session, {})
+                stale = chans.get(hello.channel)
+                chans[hello.channel] = conn
                 self._pending_since.setdefault(hello.session, time.monotonic())
+            if stale is not None:
+                # a reconnect/duplicate hello for the same channel: the
+                # newer socket wins, the old one must not leak
+                try:
+                    stale.close()
+                except OSError:
+                    pass
             self._maybe_start_session(hello.session)
         except Exception as e:  # noqa: BLE001 - a bad/stray connection must
             # not take the server down, and is NOT a session failure
@@ -241,21 +281,43 @@ class XdfsServer:
             chans = self._pending.get(session_id, {})
             if neg is None or len(chans) < neg.n_channels:
                 return
+            socks = [chans.get(i) for i in range(neg.n_channels)]
+            if any(s is None for s in socks):
+                # enough hellos arrived but with out-of-range/garbled
+                # channel indices — not a startable session; leave the
+                # state for the expected channels (or stale pruning)
+                return
+            extras = [s for ch, s in chans.items() if ch >= neg.n_channels]
             del self._pending_neg[session_id]
             del self._pending[session_id]
             self._pending_since.pop(session_id, None)
             self.stats["sessions"] += 1
-            socks = [chans[i] for i in range(neg.n_channels)]
+            # apply the client-negotiated socket tuning to the server side
+            # of every channel, so both ends of the session agree
+            tuning = SocketTuning.from_negotiation(neg)
+            for s in socks:
+                tuning.apply(s)
+            self.last_tuning = tuning
             t = threading.Thread(
                 target=self._run_session, args=(socks, neg),
                 name="xdfs-session", daemon=True,
             )
             self._session_threads.append(t)
+        for s in extras:  # garbled out-of-range channel hellos must not leak
+            try:
+                s.close()
+            except OSError:
+                pass
         t.start()
 
     def _run_session(self, socks, neg: Negotiation) -> None:
-        sess = ServerSession(socks, neg, self.engine, self.root, self.pool_slots)
+        sess = None
         try:
+            # construction can refuse the session (e.g. a livelock-prone
+            # pool_slots/n_channels combination) — that must still close
+            # the channels and count the session as closed
+            sess = ServerSession(socks, neg, self.engine, self.root,
+                                 self.pool_slots)
             sess.run()
         except BaseException as e:  # noqa: BLE001 - keep the server alive
             self.errors.append(e)
@@ -266,7 +328,7 @@ class XdfsServer:
                 except OSError:
                     pass
             with self._closed_cv:
-                st = sess.stats
+                st = sess.stats if sess is not None else SessionStats()
                 self.stats["files"] += st.files
                 self.stats["bytes"] += st.bytes
                 self.stats["eofr_frames"] += st.eofr_frames
@@ -293,12 +355,14 @@ class XdfsClient:
     return :class:`TransferResult` futures, so callers can pipeline."""
 
     def __init__(self, socks: List[socket.socket], session_id: bytes,
-                 engine: Engine, n_channels: int, block_size: int):
+                 engine: Engine, n_channels: int, block_size: int,
+                 tuning: Optional[SocketTuning] = None):
         self.socks = socks
         self.session_id = session_id
         self.engine = engine
         self.n_channels = n_channels
         self.block_size = block_size
+        self.tuning = tuning or SocketTuning()
         self.stats: Dict[str, int] = {
             "negotiations": 1, "files": 0, "bytes": 0, "eofr_sent": 0,
         }
@@ -318,28 +382,36 @@ class XdfsClient:
     def connect(cls, address: Tuple[str, int], n_channels: int = 4,
                 engine: Union[str, Engine] = "mtedp",
                 block_size: int = DEFAULT_BLOCK,
-                timeout: float = HANDSHAKE_TIMEOUT) -> "XdfsClient":
+                timeout: float = HANDSHAKE_TIMEOUT,
+                tuning: Optional[SocketTuning] = None) -> "XdfsClient":
+        """``tuning`` — negotiated socket knobs (TCP_NODELAY + SO_SNDBUF /
+        SO_RCVBUF); carried in the Negotiation so the server applies the
+        same values to its side of every channel."""
         eng = get_engine(engine)
+        tuning = tuning or SocketTuning()
         session_id = new_session_id()
         socks: List[socket.socket] = []
         try:
             for i in range(n_channels):
-                s = socket.create_connection(address, timeout=timeout)
-                s.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+                s = _connect_tuned(address, timeout, tuning)
+                socks.append(s)  # before the hello: a failed write must
+                # still find the socket in the cleanup loop below
                 send_hello(s, session_id, i)
                 if i == CTRL_CHANNEL:
                     send_negotiation(s, Negotiation(
                         session_id, n_channels, block_size, 1 << 20,
                         "", "", file_size=0,
+                        so_sndbuf=tuning.sndbuf, so_rcvbuf=tuning.rcvbuf,
+                        so_nodelay=tuning.nodelay,
                     ))
-                socks.append(s)
         except BaseException:
             for s in socks:
                 s.close()
             raise
         for s in socks:
             s.settimeout(None)
-        return cls(socks, session_id, eng, n_channels, block_size)
+        return cls(socks, session_id, eng, n_channels, block_size,
+                   tuning=tuning)
 
     # -- public operations (pipelined) -------------------------------------
 
@@ -486,7 +558,10 @@ class XdfsClient:
         ):
             from repro.core.ringbuf import BlockPool
 
-            self._recv_pool = BlockPool(32, self.block_size)
+            # sized past n_channels so the receiver's livelock guard
+            # (pool.slots > n_channels) holds for any channel count
+            self._recv_pool = BlockPool(max(32, self.n_channels + 1),
+                                        self.block_size)
         try:
             self.engine.receive(
                 self.socks, sink, self.block_size, reusable=True,

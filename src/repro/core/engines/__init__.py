@@ -11,11 +11,17 @@ register with::
 from repro.core.engines.base import (  # noqa: F401
     ACK,
     IOV_MAX,
+    SENDFILE,
+    FrameBuilder,
     RecvStats,
+    SendfileUnsupported,
     Sink,
     Source,
+    advance_iovec,
     recv_exact,
     send_all,
+    sendfile_all,
+    sendmsg_all,
 )
 from repro.core.engines.registry import (  # noqa: F401
     Engine,
@@ -32,7 +38,9 @@ from repro.core.engines.mt import mt_receive, worker_send  # noqa: F401
 from repro.core.engines.mp import mp_receive  # noqa: F401
 
 __all__ = [
-    "ACK", "IOV_MAX", "RecvStats", "Sink", "Source", "recv_exact", "send_all",
+    "ACK", "IOV_MAX", "SENDFILE", "FrameBuilder", "RecvStats",
+    "SendfileUnsupported", "Sink", "Source", "advance_iovec", "recv_exact",
+    "send_all", "sendfile_all", "sendmsg_all",
     "Engine", "UnknownEngineError", "available_engines", "get_engine",
     "register_engine", "mtedp_receive", "event_send", "mt_receive",
     "worker_send", "mp_receive",

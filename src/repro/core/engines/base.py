@@ -5,18 +5,27 @@ Engines (engines/{mtedp,mt,mp}.py) move blocks between a ``Source`` and a
 in-memory buffer (checkpoint leaves), or zeros (the paper's /dev/zero
 mem-to-mem mode); sinks by a file, a capture buffer, or /dev/null-style
 discard.
+
+The send path is zero-copy end to end: file-backed sources are mmapped and
+``block_view(i)`` hands out views into the map, ``FrameBuilder`` packs
+headers into per-channel reusable buffers, and senders hand both straight
+to ``socket.sendmsg`` (scatter-gather) or ``os.sendfile`` — no per-block
+heap copy between the page cache and the socket.
 """
 from __future__ import annotations
 
+import errno
+import mmap
 import os
 import socket
 from dataclasses import dataclass
 from typing import List, Optional, Tuple
 
-from repro.core.header import ChannelEvent
+from repro.core.header import HEADER_SIZE, ChannelEvent, pack_header_into
 
 ACK = b"\x06"
 IOV_MAX = 512
+SENDFILE = hasattr(os, "sendfile")
 
 # the one definition of which frame events end a channel's file stream
 END_EVENTS = (ChannelEvent.EOFR, ChannelEvent.EOFT)
@@ -27,10 +36,13 @@ END_EVENTS = (ChannelEvent.EOFR, ChannelEvent.EOFT)
 # ---------------------------------------------------------------------------
 
 
-def send_all(sock: socket.socket, data) -> None:
+MSG_MORE = getattr(socket, "MSG_MORE", 0)  # Linux: coalesce with next send
+
+
+def send_all(sock: socket.socket, data, flags: int = 0) -> None:
     view = memoryview(data)
     while view:
-        n = sock.send(view)
+        n = sock.send(view, flags)
         view = view[n:]
 
 
@@ -45,35 +57,162 @@ def recv_exact(sock: socket.socket, n: int, buf: Optional[memoryview] = None):
     return out
 
 
+def advance_iovec(iov: List[memoryview], n: int) -> List[memoryview]:
+    """Account ``n`` sent bytes against the head of an iovec IN PLACE —
+    partial ``sendmsg`` resumes by re-slicing the vector instead of
+    rebuilding the frame."""
+    while n:
+        head = iov[0]
+        if n < len(head):
+            iov[0] = head[n:]
+            break
+        n -= len(head)
+        iov.pop(0)
+    return iov
+
+
+def sendmsg_all(sock: socket.socket, views) -> int:
+    """Scatter-gather send of [header_view, payload_view, ...] on a blocking
+    socket; partial sends re-slice the iovec until everything is on the
+    wire. Returns total bytes sent."""
+    iov = [v if isinstance(v, memoryview) else memoryview(v) for v in views]
+    iov = [v for v in iov if len(v)]
+    total = 0
+    while iov:
+        n = sock.sendmsg(iov)
+        total += n
+        advance_iovec(iov, n)
+    return total
+
+
+class SendfileUnsupported(OSError):
+    """First ``sendfile`` call failed before any byte hit the wire — the
+    fd/socket combination doesn't support it; caller falls back."""
+
+
+_SENDFILE_FALLBACK_ERRNOS = frozenset(
+    getattr(errno, name) for name in
+    ("EINVAL", "ENOSYS", "EOPNOTSUPP", "ENOTSOCK", "ENOTSUP")
+    if hasattr(errno, name)
+)
+
+
+def sendfile_all(sock: socket.socket, fd: int, offset: int, count: int) -> int:
+    """Kernel-side copy of ``count`` bytes of ``fd`` at ``offset`` into the
+    socket (the uncompressed file-backed fast path). Raises
+    :class:`SendfileUnsupported` only if the FIRST call fails with an
+    unsupported-operation errno (nothing on the wire yet, safe to fall
+    back); a mid-stream error is a real transport failure and re-raises."""
+    sent = 0
+    while sent < count:
+        try:
+            n = os.sendfile(sock.fileno(), fd, offset + sent, count - sent)
+        except OSError as e:
+            if sent == 0 and e.errno in _SENDFILE_FALLBACK_ERRNOS:
+                raise SendfileUnsupported(e.errno, "sendfile unsupported") from e
+            raise
+        if n == 0:
+            raise ConnectionError("sendfile: peer closed")
+        sent += n
+    return sent
+
+
+class FrameBuilder:
+    """Packs channel headers into per-channel REUSABLE buffers.
+
+    Safe because a channel has at most one frame in flight: the next header
+    is only packed after the previous frame fully drained. Eliminates the
+    two per-block allocations of the legacy ``hdr.pack() + payload`` path
+    (header bytes + concatenated frame)."""
+
+    __slots__ = ("session", "_bufs", "_views")
+
+    def __init__(self, session: bytes, n_channels: int):
+        self.session = session
+        self._bufs = [bytearray(HEADER_SIZE) for _ in range(n_channels)]
+        self._views = [memoryview(b) for b in self._bufs]
+
+    def header(self, channel: int, event: ChannelEvent, offset: int,
+               length: int, flags: int = 0) -> memoryview:
+        pack_header_into(self._bufs[channel], event, self.session, channel,
+                         offset, length, flags)
+        return self._views[channel]
+
+
 # ---------------------------------------------------------------------------
 # sources and sinks
 # ---------------------------------------------------------------------------
 
 
 class Source:
-    """Reads blocks from a file, an in-memory buffer, or serves zeros."""
+    """Reads blocks from a file, an in-memory buffer, or serves zeros.
+
+    File-backed sources are mmapped: :meth:`block_view` returns a
+    ``memoryview`` straight into the map (zero heap copies on the send
+    path), with ``os.pread`` as the fallback when the map cannot be built.
+    :meth:`read_block` is the legacy materializing read; every fresh
+    per-block heap copy it makes is counted in the class-level
+    ``materializations`` so tests can assert the hot path stays at zero.
+    """
+
+    materializations = 0  # class-level: fresh per-block heap copies
 
     def __init__(self, path: Optional[str], size: int, block_size: int,
-                 data: Optional[bytes] = None):
+                 data: Optional[bytes] = None, use_mmap: bool = True):
         self.size = size
         self.block_size = block_size
         self.n_blocks = (size + block_size - 1) // block_size
         self.path = path
         self.data = data
+        self.use_mmap = use_mmap
         self._fd = os.open(path, os.O_RDONLY) if path else -1
         self._mem = memoryview(data) if (path is None and data is not None) else None
         self._zeros = bytes(block_size) if (path is None and data is None) else None
+        self._zeros_view = (memoryview(self._zeros)
+                            if self._zeros is not None else None)
+        self._map: Optional[mmap.mmap] = None
+        self._map_view: Optional[memoryview] = None
+        if self._fd >= 0 and use_mmap and size > 0:
+            try:
+                self._map = mmap.mmap(self._fd, 0, access=mmap.ACCESS_READ)
+                self._map_view = memoryview(self._map)
+            except (OSError, ValueError):
+                self._map = None  # pread fallback (pipes, odd filesystems)
+
+    @property
+    def file_backed(self) -> bool:
+        return self._fd >= 0
+
+    def fileno(self) -> int:
+        return self._fd
 
     def open_worker(self) -> "Source":
         """A worker-private handle (MP/MT senders use one fd per worker)."""
-        return Source(self.path, self.size, self.block_size, data=self.data)
+        return Source(self.path, self.size, self.block_size, data=self.data,
+                      use_mmap=self.use_mmap)
 
     def block_len(self, i: int) -> int:
         return min(self.block_size, self.size - i * self.block_size)
 
+    def block_view(self, i: int) -> memoryview:
+        """Zero-copy view of block ``i`` (mmap / in-memory / zeros); only
+        the pread fallback materializes a fresh buffer."""
+        ln = self.block_len(i)
+        off = i * self.block_size
+        if self._map_view is not None:
+            return self._map_view[off : off + ln]
+        if self._mem is not None:
+            return self._mem[off : off + ln]
+        if self._zeros_view is not None:
+            return self._zeros_view[:ln]
+        Source.materializations += 1
+        return memoryview(os.pread(self._fd, ln, off))
+
     def read_block(self, i: int) -> bytes:
+        """Legacy materializing read (the copy path senders no longer use)."""
         ln = self.block_len(i)
         if self._fd >= 0:
+            Source.materializations += 1
             return os.pread(self._fd, ln, i * self.block_size)
         if self._mem is not None:
             off = i * self.block_size
@@ -81,8 +220,18 @@ class Source:
         return self._zeros[:ln]
 
     def close(self):
+        if self._map_view is not None:
+            self._map_view.release()
+            self._map_view = None
+        if self._map is not None:
+            try:
+                self._map.close()
+            except BufferError:
+                pass  # exported block views still referenced; GC reaps later
+            self._map = None
         if self._fd >= 0:
             os.close(self._fd)
+            self._fd = -1
 
 
 class Sink:
@@ -119,7 +268,7 @@ class Sink:
         elif self._cap is not None:
             self._cap[offset : offset + len(data)] = data
 
-    def writev_coalesced(self, blocks: List[Tuple[int, int, bytearray]]) -> int:
+    def writev_coalesced(self, blocks: List[Tuple[int, int, bytes]]) -> int:
         """Sort by offset, group contiguous runs, one pwritev per run.
 
         Returns the number of vectored syscalls issued (the seek-reduction

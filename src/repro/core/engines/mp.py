@@ -23,7 +23,12 @@ from repro.core.engines.base import (
 )
 from repro.core.engines.mt import worker_send
 from repro.core.engines.registry import Engine, register_engine
-from repro.core.header import HEADER_SIZE, ChannelEvent, ChannelHeader
+from repro.core.header import (
+    HEADER_SIZE,
+    ChannelEvent,
+    ChannelHeader,
+    ProtocolError,
+)
 
 
 def mp_receive(
@@ -47,16 +52,24 @@ def mp_receive(
             os.close(r_cnt)
             try:
                 wsink = sink.open_worker()
+                # one header + one payload buffer per child, reused for
+                # every frame (zero per-frame allocation)
                 hdr_buf = memoryview(bytearray(HEADER_SIZE))
+                payload_buf = memoryview(bytearray(block_size))
                 child = {"bytes": 0, "eofr": 0, "eoft": 0}
                 while True:
                     recv_exact(s, HEADER_SIZE, hdr_buf)
-                    hdr = ChannelHeader.unpack(bytes(hdr_buf))
+                    hdr = ChannelHeader.unpack(hdr_buf)
                     if hdr.event in END_EVENTS:
                         key = "eofr" if hdr.event == ChannelEvent.EOFR else "eoft"
                         child[key] += 1
                         break
-                    payload = recv_exact(s, hdr.length)
+                    if hdr.length > block_size:
+                        raise ProtocolError(
+                            f"block of {hdr.length} bytes exceeds "
+                            f"negotiated block_size {block_size}"
+                        )
+                    payload = recv_exact(s, hdr.length, payload_buf)
                     wsink.write_at(hdr.offset, payload)
                     child["bytes"] += hdr.length
                 wsink.close()

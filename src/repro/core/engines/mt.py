@@ -13,14 +13,25 @@ from typing import List
 from repro.core.engines.base import (
     ACK,
     END_EVENTS,
+    MSG_MORE,
+    SENDFILE,
     RecvStats,
+    SendfileUnsupported,
     Sink,
     Source,
     recv_exact,
     send_all,
+    sendfile_all,
+    sendmsg_all,
 )
 from repro.core.engines.registry import Engine, register_engine
-from repro.core.header import HEADER_SIZE, ChannelEvent, ChannelHeader
+from repro.core.header import (
+    HEADER_SIZE,
+    ChannelEvent,
+    ChannelHeader,
+    ProtocolError,
+    pack_header_into,
+)
 
 
 def mt_receive(
@@ -30,39 +41,73 @@ def mt_receive(
     ring_slots: int = 32,
     reusable: bool = False,
 ) -> RecvStats:
-    """MT model: thread per channel + locked shared ring + disk thread."""
+    """MT model: thread per channel + locked shared ring + disk thread.
+
+    Each channel thread owns ONE preallocated header buffer and ONE payload
+    buffer — zero per-frame allocation in the receive loops (the ring's
+    locked drain still snapshots blocks, the MT model's deliberate
+    synchronization cost). Channel-thread failures are re-raised in the
+    caller, not swallowed."""
     from repro.core.ringbuf import LockedRing
 
     stats = RecvStats()
     ring = LockedRing(ring_slots, block_size)
     lock = threading.Lock()
+    errors: List[BaseException] = []
 
     def rx(sock):
-        hdr_buf = memoryview(bytearray(HEADER_SIZE))
-        while True:
-            recv_exact(sock, HEADER_SIZE, hdr_buf)
-            hdr = ChannelHeader.unpack(bytes(hdr_buf))
-            if hdr.event in END_EVENTS:
+        try:
+            hdr_buf = memoryview(bytearray(HEADER_SIZE))
+            payload_buf = memoryview(bytearray(block_size))
+            while True:
+                recv_exact(sock, HEADER_SIZE, hdr_buf)
+                hdr = ChannelHeader.unpack(hdr_buf)
+                if hdr.event in END_EVENTS:
+                    with lock:
+                        if hdr.event == ChannelEvent.EOFR:
+                            stats.eofr_frames += 1
+                        else:
+                            stats.eoft_frames += 1
+                    return
+                if hdr.length > block_size:
+                    raise ProtocolError(
+                        f"block of {hdr.length} bytes exceeds negotiated "
+                        f"block_size {block_size}"
+                    )
+                payload = recv_exact(sock, hdr.length, payload_buf)
+                ring.put(payload, hdr.offset)
                 with lock:
-                    if hdr.event == ChannelEvent.EOFR:
-                        stats.eofr_frames += 1
-                    else:
-                        stats.eoft_frames += 1
-                return
-            payload = recv_exact(sock, hdr.length)
-            ring.put(payload, hdr.offset)
+                    stats.bytes += hdr.length
+        except BaseException as e:  # noqa: BLE001 - surfaced after join
             with lock:
-                stats.bytes += hdr.length
+                errors.append(e)
+            for s in socks:  # unblock sibling channel threads mid-recv
+                try:
+                    s.shutdown(socket.SHUT_RDWR)
+                except OSError:
+                    pass
 
     def disk():
-        while True:
-            batch = ring.get_batch()
-            if batch:
-                blocks = [(off, len(d), bytearray(d)) for off, d in batch]
-                stats.writev_calls += sink.writev_coalesced(blocks)
-                stats.flushes += 1
-            elif ring.closed:
-                return
+        try:
+            while True:
+                batch = ring.get_batch()
+                if batch:
+                    # batch rows are already private snapshots; hand them
+                    # to the vectored write without another copy
+                    blocks = [(off, len(d), d) for off, d in batch]
+                    stats.writev_calls += sink.writev_coalesced(blocks)
+                    stats.flushes += 1
+                elif ring.closed:
+                    return
+        except BaseException as e:  # noqa: BLE001 - e.g. sink ENOSPC
+            with lock:
+                errors.append(e)
+            ring.close()  # unblock channel threads waiting in ring.put
+            for s in socks:
+                try:
+                    s.shutdown(socket.SHUT_RDWR)
+                except OSError:
+                    pass
 
     dt = threading.Thread(target=disk)
     dt.start()
@@ -73,6 +118,8 @@ def mt_receive(
         t.join()
     ring.close()
     dt.join()
+    if errors:
+        raise errors[0]  # don't ACK a broken stream
     for s in socks:
         send_all(s, ACK)
     return stats
@@ -85,9 +132,15 @@ def worker_send(
     use_processes: bool,
     mode_event: ChannelEvent = ChannelEvent.xFTSMU,
     reusable: bool = False,
+    allow_sendfile: bool = True,
 ) -> int:
     """Baseline sender: blocking worker (thread or fork) per channel, each
-    with a PRIVATE fd reading its stripe (seek-heavy, GridFTP-like)."""
+    with a PRIVATE fd reading its stripe (seek-heavy, GridFTP-like).
+
+    Zero-copy datapath: uncompressed file-backed sources go through
+    ``os.sendfile`` (kernel-side page-cache -> socket copy); everything
+    else is scatter-gather ``sendmsg([header_view, block_view])``. Headers
+    are packed into one reusable per-worker buffer."""
     import os
 
     n = len(socks)
@@ -95,13 +148,31 @@ def worker_send(
 
     def tx(i: int, sock: socket.socket):
         src = source.open_worker()
+        # one reusable header buffer per worker (its single wire channel)
+        hdr_buf = bytearray(HEADER_SIZE)
+        hdr = memoryview(hdr_buf)
+        use_sf = allow_sendfile and SENDFILE and src.file_backed
         b = i
         while b < src.n_blocks:
             ln = src.block_len(b)
-            hdr = ChannelHeader(mode_event, session, i, b * src.block_size, ln)
-            send_all(sock, hdr.pack() + src.read_block(b))
+            off = b * src.block_size
+            pack_header_into(hdr_buf, mode_event, session, i, off, ln)
+            if use_sf:
+                # MSG_MORE keeps the tiny header out of its own NODELAY
+                # segment: it coalesces with the first sendfile payload
+                send_all(sock, hdr, MSG_MORE)
+                try:
+                    sendfile_all(sock, src.fileno(), off, ln)
+                except SendfileUnsupported:
+                    # nothing of this block hit the wire: finish it from
+                    # the mmap view and stay on the generic path
+                    use_sf = False
+                    send_all(sock, src.block_view(b))
+            else:
+                sendmsg_all(sock, [hdr, src.block_view(b)])
             b += n
-        send_all(sock, ChannelHeader(end_event, session, i, 0, 0).pack())
+        pack_header_into(hdr_buf, end_event, session, i, 0, 0)
+        send_all(sock, hdr)
         sock.setblocking(True)
         recv_exact(sock, 1)
         src.close()
@@ -122,13 +193,31 @@ def worker_send(
             if os.waitstatus_to_exitcode(status) != 0:
                 raise RuntimeError("sender child failed")
     else:
+        errors: List[BaseException] = []
+
+        def guarded_tx(i, s):
+            try:
+                tx(i, s)
+            except BaseException as e:  # noqa: BLE001 - surfaced after join
+                errors.append(e)
+                for sock in socks:  # unblock siblings awaiting their ACK
+                    try:
+                        sock.shutdown(socket.SHUT_RDWR)
+                    except OSError:
+                        pass
+
         threads = [
-            threading.Thread(target=tx, args=(i, s)) for i, s in enumerate(socks)
+            threading.Thread(target=guarded_tx, args=(i, s))
+            for i, s in enumerate(socks)
         ]
         for t in threads:
             t.start()
         for t in threads:
             t.join()
+        if errors:
+            # mirror the fork path's exit-code check: a dead channel must
+            # fail the transfer, not return success
+            raise errors[0]
     return source.size
 
 

@@ -15,15 +15,22 @@ from typing import Dict, List, Optional
 from repro.core.engines.base import (
     ACK,
     END_EVENTS,
+    FrameBuilder,
     RecvStats,
     Sink,
     Source,
+    advance_iovec,
     recv_exact,
     send_all,
 )
 from repro.core.engines.registry import Engine, register_engine
 from repro.core.fsm import FSM_BUILDERS, Machine
-from repro.core.header import HEADER_SIZE, ChannelEvent, ChannelHeader
+from repro.core.header import (
+    HEADER_SIZE,
+    ChannelEvent,
+    ChannelHeader,
+    ProtocolError,
+)
 from repro.core.piod import PIOD
 
 
@@ -52,10 +59,18 @@ def mtedp_receive(
     from repro.core.ringbuf import BlockPool
 
     stats = RecvStats()
+    n = len(socks)
     if pool is None or pool.block_size != block_size:
         pool = BlockPool(pool_slots, block_size)
+    if pool.slots <= n:
+        # with <= n slots every slot can be held by a partially-filled
+        # block (one per channel) and the backpressure flush below would
+        # spin forever draining zero committed blocks
+        raise ValueError(
+            f"pool_slots ({pool.slots}) must exceed n_channels ({n}): "
+            "an all-uncommitted pool cannot make progress"
+        )
     piod = PIOD()
-    n = len(socks)
     eof = [False] * n
     own_fsm = False
     if fsm is None and conformance:
@@ -116,7 +131,7 @@ def mtedp_receive(
                     c.hdr_got += r
                     if c.hdr_got < HEADER_SIZE:
                         continue
-                    c.hdr = ChannelHeader.unpack(bytes(c.hdr_buf))
+                    c.hdr = ChannelHeader.unpack(c.hdr_buf)
                     c.hdr_got = 0
                     if c.hdr.event in END_EVENTS:
                         # milestone: 10 -> 11 -> 14 -> (10 | 13)
@@ -130,8 +145,23 @@ def mtedp_receive(
                         fsm_steps("read_ready", "eof_header",
                                   "all_eof" if all(eof) else "channels_open")
                         return
+                    if c.hdr.length > block_size:
+                        raise ProtocolError(
+                            f"block of {c.hdr.length} bytes exceeds "
+                            f"negotiated block_size {block_size}"
+                        )
                     c.blk = pool.acquire()
                     while c.blk is None:  # backpressure: drain to disk
+                        if pool.n_committed == 0:
+                            # every slot is held by a partially-filled block
+                            # of some channel: flushing drains nothing and
+                            # the loop would livelock (guarded against by
+                            # the pool_slots > n_channels check above)
+                            raise RuntimeError(
+                                "receiver livelock: all pool slots held by "
+                                "uncommitted blocks; raise pool_slots above "
+                                "the channel count"
+                            )
                         flush()
                         c.blk = pool.acquire()
                     c.got = 0
@@ -187,24 +217,31 @@ def event_send(
     mode_event: ChannelEvent = ChannelEvent.xFTSMU,
     reusable: bool = False,
 ) -> int:
-    """xDFS event-driven sender: one thread, write-readiness multiplexing."""
+    """xDFS event-driven sender: one thread, write-readiness multiplexing.
+
+    Zero-copy: frames are scatter-gather iovecs ``[header_view,
+    block_view]`` — the header lives in a per-channel reusable buffer
+    (:class:`FrameBuilder`), the payload is a view into the source mmap —
+    and partial ``sendmsg`` resumes by re-slicing the iovec
+    (:func:`advance_iovec`) instead of rebuilding the frame.
+    """
     n = len(socks)
     piod = PIOD()
+    frames = FrameBuilder(session, n)
     next_block = [c for c in range(n)]  # block index each channel sends next
-    pending: Dict[socket.socket, memoryview] = {}
+    pending: Dict[socket.socket, List[memoryview]] = {}  # in-flight iovecs
     done = [False] * n
     sent = 0
     end_event = ChannelEvent.EOFR if reusable else ChannelEvent.EOFT
 
-    def make_frame(i_chan: int, i_block: int) -> bytes:
+    def make_frame(i_chan: int, i_block: int) -> List[memoryview]:
         if i_block >= source.n_blocks:
-            hdr = ChannelHeader(end_event, session, i_chan, 0, 0)
-            return hdr.pack()
+            return [frames.header(i_chan, end_event, 0, 0)]
         ln = source.block_len(i_block)
-        hdr = ChannelHeader(
-            mode_event, session, i_chan, i_block * source.block_size, ln
-        )
-        return hdr.pack() + source.read_block(i_block)
+        return [
+            frames.header(i_chan, mode_event, i_block * source.block_size, ln),
+            source.block_view(i_block),
+        ]
 
     idx = {s: i for i, s in enumerate(socks)}
 
@@ -213,25 +250,22 @@ def event_send(
         i = idx[sock]
         try:
             while True:  # greedy: fill the socket until it would block
-                buf = pending.get(sock)
-                if buf is None:
+                iov = pending.get(sock)
+                if iov is None:
                     blk = next_block[i]
                     next_block[i] += n
-                    frame = make_frame(i, blk)
-                    buf = memoryview(frame)
-                    pending[sock] = buf
+                    iov = make_frame(i, blk)
+                    pending[sock] = iov
                     if blk >= source.n_blocks:
                         done[i] = True
-                w = sock.send(buf)
+                w = sock.sendmsg(iov)
                 sent += w
-                buf = buf[w:]
-                if len(buf) == 0:
-                    pending.pop(sock)
-                    if done[i]:
-                        piod.unregister(sock)
-                        return
-                else:
-                    pending[sock] = buf
+                if advance_iovec(iov, w):
+                    continue  # partial frame still pending on this channel
+                pending.pop(sock)
+                if done[i]:
+                    piod.unregister(sock)
+                    return
         except BlockingIOError:
             return
 

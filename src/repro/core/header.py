@@ -35,6 +35,26 @@ _FMT = struct.Struct("<IHBB16sIQQI")
 HEADER_SIZE = _FMT.size
 
 
+def header_checksum(event: int, session: bytes, channel: int,
+                    offset: int, length: int) -> int:
+    """Cheap integrity word over the header fields (not the payload)."""
+    x = (offset * 0x9E3779B97F4A7C15 + length) & 0xFFFFFFFFFFFFFFFF
+    x ^= int(event) << 56 | channel
+    x ^= int.from_bytes(session[:8], "little")
+    return (x ^ (x >> 32)) & 0xFFFFFFFF
+
+
+def pack_header_into(buf, event: int, session: bytes, channel: int,
+                     offset: int, length: int, flags: int = 0) -> None:
+    """Pack a channel header into a caller-owned buffer — the zero-copy
+    senders reuse one per-channel buffer for every frame instead of
+    allocating ``pack()`` bytes per block."""
+    _FMT.pack_into(
+        buf, 0, MAGIC, VERSION, int(event), flags, session, channel,
+        offset, length, header_checksum(event, session, channel, offset, length),
+    )
+
+
 @dataclass(frozen=True)
 class ChannelHeader:
     event: ChannelEvent
@@ -51,17 +71,20 @@ class ChannelHeader:
             self.session, self.channel, self.offset, self.length, crc,
         )
 
+    def pack_into(self, buf) -> None:
+        pack_header_into(buf, self.event, self.session, self.channel,
+                         self.offset, self.length, self.flags)
+
     def checksum(self) -> int:
-        # cheap integrity word over the header fields (not the payload)
-        x = (self.offset * 0x9E3779B97F4A7C15 + self.length) & 0xFFFFFFFFFFFFFFFF
-        x ^= int(self.event) << 56 | self.channel
-        x ^= int.from_bytes(self.session[:8], "little")
-        return (x ^ (x >> 32)) & 0xFFFFFFFF
+        return header_checksum(self.event, self.session, self.channel,
+                               self.offset, self.length)
 
     @classmethod
-    def unpack(cls, buf: bytes) -> "ChannelHeader":
-        magic, ver, ev, flags, session, channel, offset, length, crc = _FMT.unpack(
-            buf[:HEADER_SIZE]
+    def unpack(cls, buf) -> "ChannelHeader":
+        """Accepts any buffer (bytes, bytearray, memoryview) — receivers
+        unpack straight from their reusable header buffers."""
+        magic, ver, ev, flags, session, channel, offset, length, crc = (
+            _FMT.unpack_from(buf)
         )
         if magic != MAGIC:
             raise ProtocolError(f"bad magic {magic:#x}")
@@ -93,6 +116,12 @@ class Negotiation:
     compressed: bool = False  # ZxDFS extended mode
     file_size: int = 0
     credentials: bytes = b""  # xSec is out of scope; carried opaquely
+    # negotiated socket tuning: both ends apply the same TCP_NODELAY and
+    # SO_SNDBUF/SO_RCVBUF so window sizes agree across the session
+    # (0 = kernel default)
+    so_sndbuf: int = 0
+    so_rcvbuf: int = 0
+    so_nodelay: bool = True
 
     def pack(self) -> bytes:
         rn = self.remote_name.encode()
@@ -103,7 +132,10 @@ class Negotiation:
             self.tcp_window, self.file_size, 0, self.compressed, False,
             len(rn), len(ln),
         )
-        return head + rn + ln + struct.pack("<H", len(self.credentials)) + self.credentials
+        return (head + rn + ln
+                + struct.pack("<H", len(self.credentials)) + self.credentials
+                + struct.pack("<II?", self.so_sndbuf, self.so_rcvbuf,
+                              self.so_nodelay))
 
     @classmethod
     def unpack(cls, buf: bytes) -> "Negotiation":
@@ -118,7 +150,16 @@ class Negotiation:
         p += lln
         (lc,) = struct.unpack("<H", buf[p : p + 2])
         creds = buf[p + 2 : p + 2 + lc]
-        return cls(session, n, bs, win, rn, ln, ver, comp, fsize, creds)
+        p += 2 + lc
+        # v1 negotiation blobs end at the credentials; tuning tail optional
+        sndbuf = rcvbuf = 0
+        nodelay = True
+        if len(buf) >= p + 8:
+            sndbuf, rcvbuf = struct.unpack("<II", buf[p : p + 8])
+            if len(buf) >= p + 9:
+                nodelay = bool(buf[p + 8])
+        return cls(session, n, bs, win, rn, ln, ver, comp, fsize, creds,
+                   sndbuf, rcvbuf, nodelay)
 
 
 def new_session_id() -> bytes:

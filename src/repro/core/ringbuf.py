@@ -94,6 +94,7 @@ class BlockPool:
     ring."""
 
     def __init__(self, slots: int, block_size: int):
+        self.slots = slots
         self.block_size = block_size
         self._free: List[bytearray] = [bytearray(block_size) for _ in range(slots)]
         self._committed: List[Tuple[int, int, bytearray]] = []  # (offset, len, blk)

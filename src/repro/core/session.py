@@ -51,6 +51,43 @@ class SessionError(ProtocolError):
     """A control-level session failure (bad request, remote exception)."""
 
 
+@dataclass(frozen=True)
+class SocketTuning:
+    """Per-session socket knobs, carried in the ``Negotiation`` so client
+    and server apply the SAME settings to every channel (the tuned-buffer
+    factor of the paper's §2.3 analysis; 0 keeps the kernel default).
+
+    TCP fixes the window-scale factor at the handshake, so SO_RCVBUF is
+    only fully effective when set BEFORE connect/accept: the client
+    applies it pre-connect, and ``XdfsServer(tuning=...)`` applies it to
+    the listening socket so accepted channels inherit it. The
+    post-handshake per-session apply still grows buffers within the
+    already-chosen scale (and SO_SNDBUF/TCP_NODELAY are unaffected)."""
+
+    nodelay: bool = True
+    sndbuf: int = 0  # SO_SNDBUF in bytes
+    rcvbuf: int = 0  # SO_RCVBUF in bytes
+
+    def apply(self, sock: socket.socket) -> None:
+        if sock.family in (socket.AF_INET, getattr(socket, "AF_INET6", None)):
+            sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY,
+                            1 if self.nodelay else 0)  # Nagle is TCP-only
+        self.apply_buffers(sock)
+
+    def apply_buffers(self, sock: socket.socket) -> None:
+        """Just the buffer sizes — also valid on a LISTENING socket, where
+        accepted channels inherit them pre-handshake."""
+        if self.sndbuf > 0:
+            sock.setsockopt(socket.SOL_SOCKET, socket.SO_SNDBUF, self.sndbuf)
+        if self.rcvbuf > 0:
+            sock.setsockopt(socket.SOL_SOCKET, socket.SO_RCVBUF, self.rcvbuf)
+
+    @classmethod
+    def from_negotiation(cls, neg: Negotiation) -> "SocketTuning":
+        return cls(nodelay=neg.so_nodelay, sndbuf=neg.so_sndbuf,
+                   rcvbuf=neg.so_rcvbuf)
+
+
 # ---------------------------------------------------------------------------
 # control frames: ChannelHeader + JSON payload on the control channel
 # ---------------------------------------------------------------------------
@@ -64,7 +101,7 @@ def send_ctrl(sock: socket.socket, event: ChannelEvent, session: bytes,
 
 
 def recv_ctrl(sock: socket.socket) -> Tuple[ChannelHeader, dict]:
-    hdr = ChannelHeader.unpack(bytes(recv_exact(sock, HEADER_SIZE)))
+    hdr = ChannelHeader.unpack(recv_exact(sock, HEADER_SIZE))
     body = bytes(recv_exact(sock, hdr.length)) if hdr.length else b"{}"
     payload = json.loads(body.decode())
     if hdr.event == ChannelEvent.EXCEPTION:
@@ -79,7 +116,7 @@ def send_hello(sock: socket.socket, session: bytes, channel: int) -> None:
 
 
 def recv_hello(sock: socket.socket) -> ChannelHeader:
-    hdr = ChannelHeader.unpack(bytes(recv_exact(sock, HEADER_SIZE)))
+    hdr = ChannelHeader.unpack(recv_exact(sock, HEADER_SIZE))
     if hdr.event != ChannelEvent.CONM or hdr.length != 0:
         raise ProtocolError(f"expected channel hello, got {hdr.event!r}")
     return hdr
@@ -143,6 +180,13 @@ class ServerSession:
         self.neg = neg
         self.engine = engine
         self.root = root
+        if engine.uses_pool and pool_slots <= neg.n_channels:
+            # every pool slot could be pinned by a partially-filled block of
+            # some channel, livelocking the receiver's backpressure flush
+            raise SessionError(
+                f"pool_slots ({pool_slots}) must exceed n_channels "
+                f"({neg.n_channels})"
+            )
         self.pool_slots = pool_slots
         self.stats = SessionStats()
         self._pool = None  # BlockPool reused across the session's files

@@ -27,6 +27,7 @@ from typing import Optional
 from repro.core.engines import (  # noqa: F401
     ACK,
     IOV_MAX,
+    FrameBuilder,
     RecvStats,
     Sink,
     Source,
@@ -37,6 +38,8 @@ from repro.core.engines import (  # noqa: F401
     mtedp_receive,
     recv_exact,
     send_all,
+    sendfile_all,
+    sendmsg_all,
     worker_send,
 )
 
@@ -52,6 +55,8 @@ class TransferSpec:
     dst_path: Optional[str] = None  # None -> mem sink (discard)
     pool_slots: int = 32
     port: int = 0
+    sndbuf: int = 0  # negotiated SO_SNDBUF (0 = kernel default)
+    rcvbuf: int = 0  # negotiated SO_RCVBUF
 
 
 @dataclass
@@ -130,9 +135,12 @@ def run_transfer(spec: TransferSpec) -> TransferStats:
     if client_pid == 0:  # ----- client process -----
         os.close(r_cli)
         try:
+            from repro.core.session import SocketTuning
+
             cli = XdfsClient.connect(
                 ("127.0.0.1", port), n_channels=spec.n_channels,
                 engine=spec.engine, block_size=spec.block_size,
+                tuning=SocketTuning(sndbuf=spec.sndbuf, rcvbuf=spec.rcvbuf),
             )
             if spec.mode == "upload":
                 res = cli.put(spec.src_path, spec.dst_path, size=spec.size)

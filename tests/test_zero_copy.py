@@ -1,0 +1,345 @@
+"""Zero-copy send datapath: mmap sources, scatter-gather frames, sendfile,
+negotiated socket tuning, and the receiver-livelock guards."""
+import os
+import socket
+import threading
+
+import pytest
+
+from repro.core.api import XdfsClient, XdfsServer
+from repro.core.engines.base import (
+    FrameBuilder,
+    Sink,
+    Source,
+    advance_iovec,
+    recv_exact,
+    sendmsg_all,
+)
+from repro.core.engines.mt import mt_receive, worker_send
+from repro.core.engines.mtedp import mtedp_receive
+from repro.core.header import (
+    HEADER_SIZE,
+    ChannelEvent,
+    ChannelHeader,
+    Negotiation,
+)
+from repro.core.session import SocketTuning
+
+SESSION = b"0123456789abcdef"
+
+
+# ---------------------------------------------------------------------------
+# Source: mmap mode
+# ---------------------------------------------------------------------------
+
+
+def test_block_view_matches_pread(tmp_path):
+    """mmap-backed block views are byte-identical to the pread path, odd
+    tail block included."""
+    data = os.urandom((1 << 18) + 3333)
+    p = tmp_path / "src.bin"
+    p.write_bytes(data)
+    mm = Source(str(p), len(data), 1 << 16)
+    pr = Source(str(p), len(data), 1 << 16, use_mmap=False)
+    assert mm._map_view is not None, "mmap mode did not engage"
+    assert pr._map_view is None
+    try:
+        for i in range(mm.n_blocks):
+            off = i * mm.block_size
+            want = data[off : off + mm.block_len(i)]
+            assert bytes(mm.block_view(i)) == want
+            assert bytes(pr.read_block(i)) == want
+    finally:
+        mm.close()
+        pr.close()
+
+
+def test_block_view_zero_copy_for_mem_and_zeros():
+    data = os.urandom(1 << 16)
+    mem = Source(None, len(data), 1 << 14, data=data)
+    assert bytes(mem.block_view(1)) == data[1 << 14 : 2 << 14]
+    zeros = Source(None, 1 << 15, 1 << 14)
+    assert bytes(zeros.block_view(0)) == bytes(1 << 14)
+    mem.close()
+    zeros.close()
+
+
+def test_file_send_materializes_nothing(tmp_path):
+    """The acceptance gate: no per-block heap copy on the file-backed send
+    path, for both the event-driven (mtedp) and worker (mt) senders."""
+    data = os.urandom((1 << 20) + 4097)
+    src = tmp_path / "in.bin"
+    src.write_bytes(data)
+    for engine in ("mtedp", "mt"):
+        with XdfsServer(engine=engine, root=str(tmp_path / f"srv_{engine}")) as srv:
+            Source.materializations = 0
+            with XdfsClient.connect(srv.address, n_channels=3, engine=engine,
+                                    block_size=1 << 16) as cli:
+                cli.put(str(src), "out.bin").result()
+            assert Source.materializations == 0, (
+                f"{engine}: file-backed send path materialized a heap copy"
+            )
+            srv.wait_closed_sessions(1, timeout=60)
+        got = (tmp_path / f"srv_{engine}" / "out.bin").read_bytes()
+        assert got == data
+
+
+def test_read_block_counts_materializations(tmp_path):
+    """Control for the test above: the legacy copy path IS counted."""
+    p = tmp_path / "f.bin"
+    p.write_bytes(os.urandom(1 << 16))
+    s = Source(str(p), 1 << 16, 1 << 14, use_mmap=False)
+    before = Source.materializations
+    s.read_block(0)
+    s.block_view(1)  # pread fallback without a map also materializes
+    assert Source.materializations == before + 2
+    s.close()
+
+
+# ---------------------------------------------------------------------------
+# scatter-gather framing and partial-send resumption
+# ---------------------------------------------------------------------------
+
+
+def test_advance_iovec_reslices():
+    a, b = memoryview(bytes(range(10))), memoryview(bytes(range(10, 16)))
+    iov = advance_iovec([a, b], 4)
+    assert [bytes(v) for v in iov] == [bytes(range(4, 10)), bytes(range(10, 16))]
+    iov = advance_iovec(iov, 6)
+    assert [bytes(v) for v in iov] == [bytes(range(10, 16))]
+    assert advance_iovec(iov, 6) == []
+
+
+def _parse_frames(raw: bytes, size: int):
+    """Reassemble a framed stream back into the original payload."""
+    out = bytearray(size)
+    pos = 0
+    while pos < len(raw):
+        hdr = ChannelHeader.unpack(raw[pos : pos + HEADER_SIZE])
+        pos += HEADER_SIZE
+        if hdr.event in (ChannelEvent.EOFR, ChannelEvent.EOFT):
+            continue
+        out[hdr.offset : hdr.offset + hdr.length] = raw[pos : pos + hdr.length]
+        pos += hdr.length
+    return bytes(out)
+
+
+def test_sendmsg_partial_resumption_small_sndbuf():
+    """A tiny SO_SNDBUF forces partial sendmsg returns; the iovec re-slice
+    must still deliver every frame intact."""
+    a, b = socket.socketpair()
+    a.setsockopt(socket.SOL_SOCKET, socket.SO_SNDBUF, 4096)
+    size = (1 << 19) + 777
+    payload = os.urandom(size)
+    src = Source(None, size, 1 << 16, data=payload)
+    frames = FrameBuilder(SESSION, 1)
+    total = src.n_blocks * HEADER_SIZE + size
+    chunks = []
+
+    def drain():
+        got = 0
+        while got < total:
+            c = b.recv(1 << 16)
+            assert c, "sender closed early"
+            chunks.append(c)
+            got += len(c)
+
+    rx = threading.Thread(target=drain)
+    rx.start()
+    for i in range(src.n_blocks):
+        ln = src.block_len(i)
+        sent = sendmsg_all(a, [
+            frames.header(0, ChannelEvent.xFTSMU, i * src.block_size, ln),
+            src.block_view(i),
+        ])
+        assert sent == HEADER_SIZE + ln
+    rx.join()
+    src.close()
+    a.close()
+    b.close()
+    assert _parse_frames(b"".join(chunks), size) == payload
+
+
+def test_event_send_partial_resumption_via_tuned_session(tmp_path):
+    """End-to-end: a session negotiated with tiny socket buffers forces the
+    nonblocking event_send through its partial-iovec path; content must
+    survive, and the tuning must reach the server."""
+    data = os.urandom((1 << 20) + 1234)
+    src = tmp_path / "in.bin"
+    src.write_bytes(data)
+    tuning = SocketTuning(sndbuf=8192, rcvbuf=8192)
+    with XdfsServer(engine="mtedp", root=str(tmp_path / "srv")) as srv:
+        with XdfsClient.connect(srv.address, n_channels=2, block_size=1 << 16,
+                                tuning=tuning) as cli:
+            cli.put(str(src), "out.bin").result()
+            sndbuf = cli.socks[1].getsockopt(socket.SOL_SOCKET,
+                                             socket.SO_SNDBUF)
+            assert sndbuf >= 8192  # kernels round up/double, never shrink
+        srv.wait_closed_sessions(1, timeout=60)
+        assert srv.last_tuning == tuning
+    assert (tmp_path / "srv" / "out.bin").read_bytes() == data
+
+
+# ---------------------------------------------------------------------------
+# sendfile fast path
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("allow_sendfile", [True, False])
+def test_sendfile_and_generic_paths_identical_sinks(tmp_path, allow_sendfile):
+    """worker_send with and without the sendfile fast path must produce
+    byte-identical sinks."""
+    data = os.urandom((1 << 19) + 12345)
+    srcp = tmp_path / "src.bin"
+    srcp.write_bytes(data)
+    dstp = tmp_path / f"dst_{allow_sendfile}.bin"
+    pairs = [socket.socketpair() for _ in range(2)]
+    sink = Sink(str(dstp), len(data))
+    stats = {}
+
+    def rx():
+        stats["st"] = mt_receive([b for _, b in pairs], sink, 1 << 16)
+
+    t = threading.Thread(target=rx)
+    t.start()
+    source = Source(str(srcp), len(data), 1 << 16)
+    worker_send([a for a, _ in pairs], source, SESSION, use_processes=False,
+                allow_sendfile=allow_sendfile)
+    t.join()
+    source.close()
+    sink.close()
+    for a, b in pairs:
+        a.close()
+        b.close()
+    assert stats["st"].bytes == len(data)
+    assert dstp.read_bytes() == data
+
+
+# ---------------------------------------------------------------------------
+# socket tuning negotiation
+# ---------------------------------------------------------------------------
+
+
+def test_negotiation_carries_tuning_roundtrip():
+    neg = Negotiation(SESSION, 4, 1 << 20, 1 << 20, "r", "l",
+                      so_sndbuf=123456, so_rcvbuf=654321, so_nodelay=False)
+    back = Negotiation.unpack(neg.pack())
+    assert back == neg
+    from repro.core.session import SocketTuning
+
+    assert SocketTuning.from_negotiation(back) == SocketTuning(
+        nodelay=False, sndbuf=123456, rcvbuf=654321)
+    # blobs without the nodelay byte parse with nodelay defaulting on
+    mid = Negotiation.unpack(neg.pack()[:-1])
+    assert mid.so_sndbuf == 123456 and mid.so_nodelay is True
+    # v1 blobs without any tuning tail still parse (defaults 0 / on)
+    legacy = Negotiation.unpack(neg.pack()[:-9])
+    assert legacy.so_sndbuf == 0 and legacy.so_rcvbuf == 0
+    assert legacy.so_nodelay is True
+    assert legacy.n_channels == 4
+
+
+def test_tuning_applies_to_socket():
+    a, b = socket.socketpair()
+    SocketTuning(nodelay=False, sndbuf=32768, rcvbuf=32768).apply(a)
+    assert a.getsockopt(socket.SOL_SOCKET, socket.SO_SNDBUF) >= 32768
+    assert a.getsockopt(socket.SOL_SOCKET, socket.SO_RCVBUF) >= 32768
+    a.close()
+    b.close()
+
+
+def test_mtedp_receive_rejects_oversize_frame():
+    """The event-loop receiver classifies oversize frames as ProtocolError,
+    like its sibling engines."""
+    from repro.core.header import ProtocolError
+
+    a, b = socket.socketpair()
+    sink = Sink(None, 1 << 16)
+    bad = ChannelHeader(ChannelEvent.xFTSMU, SESSION, 0, 0, 1 << 20)
+    threading.Thread(target=lambda: a.sendall(bad.pack()), daemon=True).start()
+    try:
+        with pytest.raises(ProtocolError, match="exceeds negotiated"):
+            mtedp_receive([b], sink, 1 << 16, conformance=False)
+    finally:
+        sink.close()
+        a.close()
+        b.close()
+
+
+def test_get_with_many_channels_pool_sized_up(tmp_path):
+    """The client receive pool must outgrow any channel count (livelock
+    guard holds for n_channels >= 32)."""
+    data = os.urandom(1 << 18)
+    with XdfsServer(engine="mtedp", root=str(tmp_path),
+                    pool_slots=40) as srv:
+        with XdfsClient.connect(srv.address, n_channels=33,
+                                block_size=1 << 14) as cli:
+            cli.put(None, "big.bin", data=data).result()
+            assert cli.get_bytes("big.bin").result().data == data
+        srv.wait_closed_sessions(1, timeout=60)
+        assert not srv.errors, srv.errors
+
+
+def test_worker_send_thread_mode_propagates_errors(tmp_path):
+    """A dead channel must fail the transfer, not return success (mirror
+    of the fork path's exit-code check)."""
+    data = os.urandom(1 << 18)
+    p = tmp_path / "src.bin"
+    p.write_bytes(data)
+    a, b = socket.socketpair()
+    b.close()  # receiver gone before the first frame
+    source = Source(str(p), len(data), 1 << 14)
+    try:
+        with pytest.raises((ConnectionError, OSError)):
+            worker_send([a], source, SESSION, use_processes=False)
+    finally:
+        source.close()
+        a.close()
+
+
+def test_mt_receive_propagates_channel_errors():
+    """An oversize frame must surface as a ProtocolError in the caller, not
+    die silently inside the channel thread (which would truncate or hang)."""
+    from repro.core.header import ProtocolError
+
+    a, b = socket.socketpair()
+    sink = Sink(None, 1 << 16)
+    bad = ChannelHeader(ChannelEvent.xFTSMU, SESSION, 0, 0, 1 << 20)
+    threading.Thread(target=lambda: a.sendall(bad.pack()), daemon=True).start()
+    try:
+        with pytest.raises(ProtocolError, match="exceeds negotiated"):
+            mt_receive([b], sink, 1 << 16)
+    finally:
+        sink.close()
+        a.close()
+        b.close()
+
+
+# ---------------------------------------------------------------------------
+# receiver livelock guards
+# ---------------------------------------------------------------------------
+
+
+def test_pool_slots_must_exceed_channels():
+    pairs = [socket.socketpair() for _ in range(4)]
+    sink = Sink(None, 0)
+    try:
+        with pytest.raises(ValueError, match="pool_slots"):
+            mtedp_receive([a for a, _ in pairs], sink, 1 << 16,
+                          pool_slots=4, conformance=False)
+    finally:
+        sink.close()
+        for a, b in pairs:
+            a.close()
+            b.close()
+
+
+def test_session_rejects_livelock_prone_pool(tmp_path):
+    """A session whose pool could livelock is refused at setup."""
+    with XdfsServer(engine="mtedp", root=str(tmp_path), pool_slots=2) as srv:
+        with pytest.raises(Exception):
+            with XdfsClient.connect(srv.address, n_channels=4,
+                                    block_size=1 << 16) as cli:
+                cli.put(None, None, size=1 << 16).result(timeout=30)
+        srv.wait_closed_sessions(1, timeout=60)
+        assert any("pool_slots" in str(e) for e in srv.errors)
