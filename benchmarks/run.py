@@ -14,6 +14,7 @@ perf PR is measured against a committed trajectory.
 Sections:
   0. session_reuse   — §2.5.3 amortization: EOFR channel reuse vs one-shot
   0b. zero_copy      — copy vs scatter-gather vs sendfile send datapaths
+  0b2. zero_copy_recv — copy vs registered-pool vs splice receive datapaths
   0c. host_transfer  — engine x channels matrix (MB/s + writev calls)
   1. paper_figs      — Figs. 12-19 transfer reproductions (MTEDP vs MT vs MP)
   2. device_channels — xDFS ring collectives vs lax.psum (8-dev subprocess)
@@ -109,6 +110,10 @@ def main() -> None:
     from benchmarks import zero_copy
 
     sections["zero_copy"] = zero_copy.run(smoke=args.smoke or args.quick)
+
+    print("== section 0b2: zero-copy receive datapath A/B ==", flush=True)
+    sections["zero_copy_recv"] = zero_copy.run_recv(
+        smoke=args.smoke or args.quick)
 
     print("== section 0c: host transfer matrix ==", flush=True)
     sections["host_transfer"] = host_transfer_matrix(

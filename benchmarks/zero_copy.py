@@ -1,7 +1,8 @@
-"""Zero-copy send-path A/B microbenchmark.
+"""Zero-copy datapath A/B microbenchmarks — send side AND receive side.
 
-Three sender datapaths pushing the same framed block stream through a
-loopback socketpair, mem-to-mem and disk-to-disk:
+**Send side** (:func:`run`): three sender datapaths pushing the same
+framed block stream through a loopback socketpair, mem-to-mem and
+disk-to-disk:
 
 * ``copy``     — the legacy frame build: ``hdr.pack() + payload`` (a fresh
   header allocation plus a full-frame concat copy per block; on the disk
@@ -17,12 +18,25 @@ The receiver drains into one reusable buffer (and, in disk mode, appends
 to a sink file) so both sides are allocation-free and the A/B isolates
 the SENDER datapath.
 
+**Receive side** (:func:`run_recv`): a fast scatter-gather sender streams
+the frames; three receiver datapaths drain them, mem (discard) and disk:
+
+* ``copy``   — the seed receive pipeline: a fresh payload buffer per
+  frame, copy-in to the locked ring, snapshot copy back out on the drain,
+  ``pwritev`` of the snapshots (three payload-size heap touches/block);
+* ``pool``   — the registered-buffer path: ``recv_into`` pool slot views,
+  headers parsed in place, coalesced ``pwritev`` of the SAME pool memory
+  (zero user-space payload copies);
+* ``splice`` — kernel-side socket -> pipe -> file ``os.splice`` (disk
+  sinks on Linux only; falls back to ``pool`` when unsupported).
+
   PYTHONPATH=src python -m benchmarks.zero_copy [--mb 64] [--block-kb 128]
 """
 from __future__ import annotations
 
 import os
 import socket
+import sys
 import tempfile
 import threading
 import time
@@ -30,13 +44,19 @@ from typing import List, Optional
 
 from repro.core.engines.base import (
     SENDFILE,
+    SPLICE,
     FrameBuilder,
+    Sink,
     Source,
+    SpliceReceiver,
+    SpliceUnsupported,
+    recv_exact,
     send_all,
     sendfile_all,
     sendmsg_all,
 )
 from repro.core.header import HEADER_SIZE, ChannelEvent, ChannelHeader
+from repro.core.ringbuf import LockedRing, RecvBufferPool
 
 SESSION = b"zero-copy-bench!"  # 16 bytes
 SOCK_BUF = 1 << 20
@@ -168,6 +188,208 @@ def run(size_mb: int = 64, block_kb: int = 128, repeats: int = 5,
     return rows
 
 
+# ---------------------------------------------------------------------------
+# receive-side A/B
+# ---------------------------------------------------------------------------
+
+
+RECV_DRAIN_EVERY = 16  # blocks buffered before the batched write-out
+
+
+def _recv_frames(sock: socket.socket, n_blocks: int, on_block) -> None:
+    """Shared frame loop: header parsed in place from one reusable buffer,
+    payload handling delegated to the path-specific ``on_block``."""
+    hdr_buf = memoryview(bytearray(HEADER_SIZE))
+    for _ in range(n_blocks):
+        recv_exact(sock, HEADER_SIZE, hdr_buf)
+        hdr = ChannelHeader.unpack(hdr_buf)
+        on_block(sock, hdr)
+
+
+def _recv_copy(sock: socket.socket, sink: Sink, n_blocks: int,
+               block_size: int) -> None:
+    """The seed MT pipeline, faithfully: a fresh payload buffer per frame,
+    copy-in to the pessimistically locked shared ring, a disk thread that
+    snapshot-copies the batch back out and writes the snapshots — two
+    payload copies per block plus the lock handoffs."""
+    ring = LockedRing(32, block_size)
+    err: List[BaseException] = []
+
+    def disk():
+        try:
+            while True:
+                batch = ring.get_batch()
+                if batch:
+                    sink.writev_coalesced([(off, len(d), d)
+                                           for off, d in batch])
+                elif ring.closed:
+                    return
+        except BaseException as e:  # noqa: BLE001 - surfaced after join
+            err.append(e)
+            ring.close()
+
+    dt = threading.Thread(target=disk)
+    dt.start()
+
+    def on_block(sock, hdr):
+        payload = recv_exact(sock, hdr.length)  # fresh bytearray per frame
+        ring.put(payload, hdr.offset)
+
+    try:
+        _recv_frames(sock, n_blocks, on_block)
+    finally:
+        ring.close()
+        dt.join()
+    if err:
+        raise err[0]
+
+
+def _pool_datapath(sink: Sink, block_size: int):
+    """The registered-buffer datapath as an (on_block, drain) pair —
+    shared verbatim by the ``pool`` path and the ``splice`` path's
+    fallback, so both rows always measure the SAME pool code."""
+    pool = RecvBufferPool(32, block_size)
+
+    def drain():
+        blocks = pool.drain()
+        sink.writev_views(
+            [(off, pool.view(slot)[:ln]) for off, ln, slot in blocks])
+        pool.release_all(slot for _, _, slot in blocks)
+
+    def on_block(sock, hdr):
+        slot = pool.acquire()
+        if slot is None:
+            drain()
+            slot = pool.acquire()
+        recv_exact(sock, hdr.length, pool.view(slot))
+        pool.commit(slot, hdr.offset, hdr.length)
+        if pool.n_committed >= RECV_DRAIN_EVERY:
+            drain()
+
+    return on_block, drain
+
+
+def _recv_pool(sock: socket.socket, sink: Sink, n_blocks: int,
+               block_size: int) -> None:
+    """Registered-buffer path: recv_into pool slot views, pwritev the same
+    memory, release. Zero user-space payload copies."""
+    on_block, drain = _pool_datapath(sink, block_size)
+    _recv_frames(sock, n_blocks, on_block)
+    drain()
+
+
+def _recv_splice(sock: socket.socket, sink: Sink, n_blocks: int,
+                 block_size: int) -> None:
+    """Kernel-side socket->pipe->file; on first-call fallback the remaining
+    frames take the pool path (mirroring the engines)."""
+    spl = SpliceReceiver()
+    pool_block, drain = _pool_datapath(sink, block_size)
+    state = {"spl": True}
+
+    def on_block(sock, hdr):
+        if state["spl"]:
+            try:
+                spl.splice_block(sock, sink.fileno(), hdr.offset, hdr.length)
+                if not spl.ok:
+                    state["spl"] = False
+                return
+            except SpliceUnsupported:
+                state["spl"] = False
+        pool_block(sock, hdr)
+
+    try:
+        _recv_frames(sock, n_blocks, on_block)
+        drain()
+    finally:
+        spl.close()
+
+
+_RECV_PATHS = {"copy": _recv_copy, "pool": _recv_pool, "splice": _recv_splice}
+
+
+def _time_recv_path_once(path: str, source: Source, sink_path: Optional[str],
+                         block_size: int) -> float:
+    """One timed run of one receiver datapath. The sender is a forked
+    process running the scatter-gather path from an in-memory source — a
+    separate process so no GIL contention caps the receiver under test."""
+    a, b = socket.socketpair()
+    for s in (a, b):
+        s.setsockopt(socket.SOL_SOCKET, socket.SO_SNDBUF, SOCK_BUF)
+        s.setsockopt(socket.SOL_SOCKET, socket.SO_RCVBUF, SOCK_BUF)
+    sink = Sink(sink_path, source.size)
+    pid = os.fork()
+    if pid == 0:  # sender child (source pages shared copy-on-write)
+        try:
+            b.close()
+            _send_sg(a, source)
+            os._exit(0)
+        except BaseException:
+            os._exit(1)
+    a.close()
+    try:
+        t0 = time.perf_counter()
+        _RECV_PATHS[path](b, sink, source.n_blocks, block_size)
+        elapsed = time.perf_counter() - t0
+        if sink.file_backed:
+            # flush dirty pages OUTSIDE the timed region so this run's
+            # writeback doesn't contaminate the next path's timing
+            os.fsync(sink.fileno())
+        return elapsed
+    finally:
+        sink.close()
+        b.close()
+        _, status = os.waitpid(pid, 0)
+        # a receiver exception closes b mid-stream and EPIPEs the child;
+        # only surface the child's failure when nothing else is propagating
+        if (os.waitstatus_to_exitcode(status) != 0
+                and sys.exc_info()[0] is None):
+            raise RuntimeError("recv-bench sender child failed")
+
+
+def run_recv(size_mb: int = 64, block_kb: int = 128, repeats: int = 12,
+             smoke: bool = False) -> List[dict]:
+    """Receive-side A/B matrix; one row per (mode, path), best-of-N with
+    interleaved repeats (same protocol as the send-side :func:`run`, but
+    more repeats: disk-write latency on a sandboxed host is erratic enough
+    that each path needs many shots at a quiet window)."""
+    if smoke:
+        size_mb, repeats = min(size_mb, 32), 12
+    size = size_mb << 20
+    block_size = block_kb << 10
+    payload = os.urandom(size)
+    source = Source(None, size, block_size, data=payload)
+
+    tmp = tempfile.mkdtemp(prefix="xdfs_zcr_")
+    sink_file = os.path.join(tmp, "dst.bin")
+
+    modes = {"mem": None, "disk": sink_file}
+    rows: List[dict] = []
+    for mode, sink_path in modes.items():
+        paths = [p for p in ("copy", "pool", "splice")
+                 if not (p == "splice" and (mode == "mem" or not SPLICE))]
+        best = {p: float("inf") for p in paths}
+        for _ in range(repeats):
+            for p in paths:
+                best[p] = min(
+                    best[p],
+                    _time_recv_path_once(p, source, sink_path, block_size))
+        base_mb_s = size / best["copy"] / 1e6
+        for path in paths:
+            mb_s = size / best[path] / 1e6
+            row = {
+                "mode": mode, "path": path, "block_kb": block_kb,
+                "size_mb": size_mb, "mb_s": round(mb_s, 1),
+                "gain_vs_copy": round(mb_s / base_mb_s, 2),
+            }
+            rows.append(row)
+            print(",".join(f"{k}={v}" for k, v in row.items()), flush=True)
+
+    source.close()
+    import shutil
+    shutil.rmtree(tmp, ignore_errors=True)
+    return rows
+
+
 if __name__ == "__main__":
     import argparse
 
@@ -176,5 +398,13 @@ if __name__ == "__main__":
     ap.add_argument("--block-kb", type=int, default=128)
     ap.add_argument("--repeats", type=int, default=5)
     ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--recv", action="store_true",
+                    help="run only the receive-side A/B")
+    ap.add_argument("--send", action="store_true",
+                    help="run only the send-side A/B")
     args = ap.parse_args()
-    run(args.mb, args.block_kb, args.repeats, smoke=args.smoke)
+    # no flags (or both) = both A/Bs; a single flag selects one side
+    if args.send or not args.recv:
+        run(args.mb, args.block_kb, args.repeats, smoke=args.smoke)
+    if args.recv or not args.send:
+        run_recv(args.mb, args.block_kb, args.repeats, smoke=args.smoke)

@@ -123,13 +123,16 @@ class XdfsServer:
     def __init__(self, engine: Union[str, Engine] = "mtedp",
                  root: Optional[str] = None, host: str = "127.0.0.1",
                  port: int = 0, pool_slots: int = 32, backlog: int = 128,
-                 tuning: Optional[SocketTuning] = None):
+                 tuning: Optional[SocketTuning] = None,
+                 splice: bool = False):
         self.engine = get_engine(engine)  # fail fast on unknown engines
         self.root = root
         self.host = host
         self._port = port
         self.pool_slots = pool_slots
         self.backlog = backlog
+        # opt-in kernel-side receive (os.splice) for engines that support it
+        self.splice = splice
         # server-side default tuning; buffer sizes land on the LISTENING
         # socket so accepted channels inherit them before the TCP
         # handshake fixes the window scale
@@ -149,7 +152,7 @@ class XdfsServer:
         self.stats: Dict[str, int] = {
             "sessions": 0, "sessions_closed": 0, "negotiations": 0,
             "files": 0, "bytes": 0, "eofr_frames": 0, "eoft_frames": 0,
-            "writev_calls": 0,
+            "writev_calls": 0, "splice_bytes": 0,
         }
 
     # -- lifecycle ---------------------------------------------------------
@@ -317,7 +320,7 @@ class XdfsServer:
             # pool_slots/n_channels combination) — that must still close
             # the channels and count the session as closed
             sess = ServerSession(socks, neg, self.engine, self.root,
-                                 self.pool_slots)
+                                 self.pool_slots, splice=self.splice)
             sess.run()
         except BaseException as e:  # noqa: BLE001 - keep the server alive
             self.errors.append(e)
@@ -334,6 +337,7 @@ class XdfsServer:
                 self.stats["eofr_frames"] += st.eofr_frames
                 self.stats["eoft_frames"] += st.eoft_frames
                 self.stats["writev_calls"] += st.writev_calls
+                self.stats["splice_bytes"] += st.splice_bytes
                 self.stats["sessions_closed"] += 1
                 # prune finished threads so a long-lived server stays bounded
                 me = threading.current_thread()
@@ -356,13 +360,15 @@ class XdfsClient:
 
     def __init__(self, socks: List[socket.socket], session_id: bytes,
                  engine: Engine, n_channels: int, block_size: int,
-                 tuning: Optional[SocketTuning] = None):
+                 tuning: Optional[SocketTuning] = None,
+                 splice: bool = False):
         self.socks = socks
         self.session_id = session_id
         self.engine = engine
         self.n_channels = n_channels
         self.block_size = block_size
         self.tuning = tuning or SocketTuning()
+        self.splice = splice  # opt-in kernel-side receive for gets
         self.stats: Dict[str, int] = {
             "negotiations": 1, "files": 0, "bytes": 0, "eofr_sent": 0,
         }
@@ -370,7 +376,7 @@ class XdfsClient:
         self._submit_lock = threading.Lock()
         self._closed = False
         self._broken: Optional[BaseException] = None
-        self._recv_pool = None  # BlockPool reused across this session's gets
+        self._recv_pool = None  # RecvBufferPool reused across session gets
         self._worker = threading.Thread(
             target=self._drain_ops, name="xdfs-client", daemon=True
         )
@@ -383,10 +389,12 @@ class XdfsClient:
                 engine: Union[str, Engine] = "mtedp",
                 block_size: int = DEFAULT_BLOCK,
                 timeout: float = HANDSHAKE_TIMEOUT,
-                tuning: Optional[SocketTuning] = None) -> "XdfsClient":
+                tuning: Optional[SocketTuning] = None,
+                splice: bool = False) -> "XdfsClient":
         """``tuning`` — negotiated socket knobs (TCP_NODELAY + SO_SNDBUF /
         SO_RCVBUF); carried in the Negotiation so the server applies the
-        same values to its side of every channel."""
+        same values to its side of every channel. ``splice`` — opt this
+        client's downloads into the kernel-side receive fast path."""
         eng = get_engine(engine)
         tuning = tuning or SocketTuning()
         session_id = new_session_id()
@@ -411,7 +419,7 @@ class XdfsClient:
         for s in socks:
             s.settimeout(None)
         return cls(socks, session_id, eng, n_channels, block_size,
-                   tuning=tuning)
+                   tuning=tuning, splice=splice)
 
     # -- public operations (pipelined) -------------------------------------
 
@@ -556,16 +564,16 @@ class XdfsClient:
             self._recv_pool is None
             or self._recv_pool.block_size != self.block_size
         ):
-            from repro.core.ringbuf import BlockPool
+            from repro.core.ringbuf import RecvBufferPool
 
             # sized past n_channels so the receiver's livelock guard
             # (pool.slots > n_channels) holds for any channel count
-            self._recv_pool = BlockPool(max(32, self.n_channels + 1),
-                                        self.block_size)
+            self._recv_pool = RecvBufferPool(max(32, self.n_channels + 1),
+                                             self.block_size)
         try:
             self.engine.receive(
                 self.socks, sink, self.block_size, reusable=True,
-                pool=self._recv_pool,
+                pool=self._recv_pool, splice=self.splice,
             )
             payload = sink.data if capture else None
         finally:

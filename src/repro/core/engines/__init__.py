@@ -12,11 +12,14 @@ from repro.core.engines.base import (  # noqa: F401
     ACK,
     IOV_MAX,
     SENDFILE,
+    SPLICE,
     FrameBuilder,
     RecvStats,
     SendfileUnsupported,
     Sink,
     Source,
+    SpliceReceiver,
+    SpliceUnsupported,
     advance_iovec,
     recv_exact,
     send_all,
@@ -38,8 +41,9 @@ from repro.core.engines.mt import mt_receive, worker_send  # noqa: F401
 from repro.core.engines.mp import mp_receive  # noqa: F401
 
 __all__ = [
-    "ACK", "IOV_MAX", "SENDFILE", "FrameBuilder", "RecvStats",
-    "SendfileUnsupported", "Sink", "Source", "advance_iovec", "recv_exact",
+    "ACK", "IOV_MAX", "SENDFILE", "SPLICE", "FrameBuilder", "RecvStats",
+    "SendfileUnsupported", "Sink", "Source", "SpliceReceiver",
+    "SpliceUnsupported", "advance_iovec", "recv_exact",
     "send_all", "sendfile_all", "sendmsg_all",
     "Engine", "UnknownEngineError", "available_engines", "get_engine",
     "register_engine", "mtedp_receive", "event_send", "mt_receive",

@@ -6,11 +6,23 @@ in-memory buffer (checkpoint leaves), or zeros (the paper's /dev/zero
 mem-to-mem mode); sinks by a file, a capture buffer, or /dev/null-style
 discard.
 
-The send path is zero-copy end to end: file-backed sources are mmapped and
-``block_view(i)`` hands out views into the map, ``FrameBuilder`` packs
-headers into per-channel reusable buffers, and senders hand both straight
-to ``socket.sendmsg`` (scatter-gather) or ``os.sendfile`` — no per-block
-heap copy between the page cache and the socket.
+Both halves of the datapath are zero-copy:
+
+* **send** — file-backed sources are mmapped and ``block_view(i)`` hands
+  out views into the map, ``FrameBuilder`` packs headers into per-channel
+  reusable buffers, and senders hand both straight to ``socket.sendmsg``
+  (scatter-gather) or ``os.sendfile`` — no per-block heap copy between
+  the page cache and the socket.
+* **receive** — frames land directly in a registered
+  ``RecvBufferPool`` (core/ringbuf.py): receivers pass pool slot views to
+  ``socket.recv_into``, parse headers in place from reusable buffers, and
+  the drain side hands trimmed views of the SAME pool memory to
+  ``Sink.writev_views`` (coalesced ``os.pwritev``). Slot lifecycle:
+  ``acquire -> recv_into -> commit -> pwritev -> release``. On Linux the
+  blocking receivers can additionally opt into :class:`SpliceReceiver`
+  (socket -> pipe -> file ``os.splice``), which keeps the payload
+  kernel-side entirely; a :class:`SpliceUnsupported` first-call failure
+  falls back to the pool path, mirroring the ``sendfile`` pattern.
 """
 from __future__ import annotations
 
@@ -57,6 +69,19 @@ def recv_exact(sock: socket.socket, n: int, buf: Optional[memoryview] = None):
     return out
 
 
+def pwrite_all(fd: int, data, offset: int) -> None:
+    """``os.pwrite`` until every byte of ``data`` lands (short writes —
+    near-full disk, quotas — must surface as progress or an error, never
+    as a silent hole in the file)."""
+    view = memoryview(data)
+    while view:
+        n = os.pwrite(fd, view, offset)
+        if n <= 0:
+            raise OSError(errno.EIO, "pwrite: short write")
+        offset += n
+        view = view[n:]
+
+
 def advance_iovec(iov: List[memoryview], n: int) -> List[memoryview]:
     """Account ``n`` sent bytes against the head of an iovec IN PLACE —
     partial ``sendmsg`` resumes by re-slicing the vector instead of
@@ -90,7 +115,7 @@ class SendfileUnsupported(OSError):
     fd/socket combination doesn't support it; caller falls back."""
 
 
-_SENDFILE_FALLBACK_ERRNOS = frozenset(
+_KERNEL_COPY_FALLBACK_ERRNOS = frozenset(
     getattr(errno, name) for name in
     ("EINVAL", "ENOSYS", "EOPNOTSUPP", "ENOTSOCK", "ENOTSUP")
     if hasattr(errno, name)
@@ -108,13 +133,150 @@ def sendfile_all(sock: socket.socket, fd: int, offset: int, count: int) -> int:
         try:
             n = os.sendfile(sock.fileno(), fd, offset + sent, count - sent)
         except OSError as e:
-            if sent == 0 and e.errno in _SENDFILE_FALLBACK_ERRNOS:
+            if sent == 0 and e.errno in _KERNEL_COPY_FALLBACK_ERRNOS:
                 raise SendfileUnsupported(e.errno, "sendfile unsupported") from e
             raise
         if n == 0:
             raise ConnectionError("sendfile: peer closed")
         sent += n
     return sent
+
+
+SPLICE = hasattr(os, "splice")
+
+
+class SpliceUnsupported(OSError):
+    """First ``splice`` call failed before any byte left the socket — the
+    socket/pipe/file combination doesn't support it; caller falls back to
+    the registered-buffer pool path."""
+
+
+class SpliceReceiver:
+    """Kernel-side socket->file block receive: ``os.splice`` through a
+    private pipe (sockets cannot splice straight into a file offset), the
+    receive-side mirror of the ``sendfile`` fast path. The payload never
+    surfaces to user space.
+
+    One instance per receiving worker; :meth:`splice_block` moves exactly
+    one frame's payload from a BLOCKING socket into ``fd`` at ``offset``.
+    Fallback contract, mirroring :func:`sendfile_all`:
+
+    * if the FIRST socket->pipe splice of a block fails with an
+      unsupported-operation errno, nothing was consumed from the socket —
+      :class:`SpliceUnsupported` is raised and the caller receives the
+      whole block on the generic pool path;
+    * if splice dies mid-block (bytes already off the socket), the block
+      is COMPLETED with a recovery copy (charged to
+      ``RecvBufferPool.materializations``) and ``self.ok`` drops to False
+      so the caller switches paths from the next frame — data is never
+      lost to a late fallback;
+    * any other mid-stream error is a real transport failure and re-raises.
+    """
+
+    PIPE_CHUNK = 1 << 16  # default Linux pipe capacity
+
+    def __init__(self):
+        if not SPLICE:
+            raise SpliceUnsupported(0, "os.splice unavailable")
+        self._r, self._w = os.pipe()
+        self._scratch: Optional[memoryview] = None
+        self.ok = True  # drops to False after a mid-block recovery
+
+    def close(self) -> None:
+        for fd in (self._r, self._w):
+            try:
+                os.close(fd)
+            except OSError:
+                pass
+
+    def splice_block(self, sock: socket.socket, fd: int, offset: int,
+                     count: int) -> int:
+        """Move ``count`` payload bytes socket->pipe->file. Returns the
+        number of bytes that stayed kernel-side (== ``count`` unless a
+        mid-block recovery copied part of the chunk)."""
+        moved = spliced = 0
+        while moved < count:
+            want = min(self.PIPE_CHUNK, count - moved)
+            try:
+                n_in = os.splice(sock.fileno(), self._w, want)
+            except OSError as e:
+                if e.errno not in _KERNEL_COPY_FALLBACK_ERRNOS:
+                    raise
+                if moved == 0:
+                    raise SpliceUnsupported(
+                        e.errno, "splice unsupported") from e
+                self.ok = False  # finish the block in user space
+                self._copy_from_socket(sock, fd, offset + moved,
+                                       count - moved)
+                return spliced
+            if n_in == 0:
+                raise ConnectionError("splice: peer closed mid-block")
+            # _pipe_to_file recovers its own mid-drain fallback (dropping
+            # self.ok); the whole chunk is on disk either way
+            spliced += self._pipe_to_file(fd, offset + moved, n_in)
+            moved += n_in
+            if not self.ok:
+                # finish the rest of the block from the socket, then the
+                # caller drops to the pool path for later frames
+                self._copy_from_socket(sock, fd, offset + moved,
+                                       count - moved)
+                return spliced
+        return spliced
+
+    def _pipe_to_file(self, fd: int, offset: int, n_in: int) -> int:
+        """Drain ``n_in`` pipe bytes into ``fd`` at ``offset``. Returns how
+        many moved kernel-side; an unsupported-errno failure mid-drain
+        recovers ONLY the still-undrained remainder (at its correct
+        offset) with a counted copy and drops ``self.ok``."""
+        drained = 0
+        while drained < n_in:
+            try:
+                n_out = os.splice(self._r, fd, n_in - drained,
+                                  offset_dst=offset + drained)
+            except OSError as e:
+                if e.errno not in _KERNEL_COPY_FALLBACK_ERRNOS:
+                    raise
+                self.ok = False
+                self._copy_from_pipe(fd, offset + drained, n_in - drained)
+                return drained
+            if n_out == 0:
+                raise OSError(errno.EIO, "splice: pipe->file stalled")
+            drained += n_out
+        return drained
+
+    def _scratch_view(self) -> memoryview:
+        if self._scratch is None:
+            self._scratch = memoryview(bytearray(self.PIPE_CHUNK))
+        return self._scratch
+
+    def _copy_from_pipe(self, fd: int, offset: int, n: int) -> None:
+        from repro.core.ringbuf import RecvBufferPool
+
+        RecvBufferPool.materializations += 1
+        scratch = self._scratch_view()
+        done = 0
+        while done < n:
+            got = os.readv(self._r, [scratch[: n - done]])
+            if got == 0:
+                raise OSError(errno.EIO, "splice recovery: pipe drained early")
+            pwrite_all(fd, scratch[:got], offset + done)
+            done += got
+
+    def _copy_from_socket(self, sock: socket.socket, fd: int, offset: int,
+                          n: int) -> None:
+        if n <= 0:
+            return
+        from repro.core.ringbuf import RecvBufferPool
+
+        RecvBufferPool.materializations += 1
+        scratch = self._scratch_view()
+        done = 0
+        while done < n:
+            got = sock.recv_into(scratch[: min(len(scratch), n - done)])
+            if got == 0:
+                raise ConnectionError("peer closed mid-block")
+            pwrite_all(fd, scratch[:got], offset + done)
+            done += got
 
 
 class FrameBuilder:
@@ -236,7 +398,10 @@ class Source:
 
 class Sink:
     """Writes blocks to a file (pwrite / coalesced pwritev), captures them
-    into memory, or discards them."""
+    into memory, or discards them. The zero-copy write-out is
+    :meth:`writev_views`: trimmed views of registered pool memory go
+    straight into ``os.pwritev`` — the pool slots they reference are
+    released by the caller only after the write lands."""
 
     def __init__(self, path: Optional[str], size: int, capture: bool = False):
         self.path = path
@@ -257,6 +422,14 @@ class Sink:
             raise ValueError("not a capture sink")
         return bytes(self._cap)
 
+    @property
+    def file_backed(self) -> bool:
+        """True when write-out goes to a real fd (splice needs one)."""
+        return self._fd >= 0
+
+    def fileno(self) -> int:
+        return self._fd
+
     def open_worker(self) -> "Sink":
         if self.capture:
             raise ValueError("capture sinks cannot be shared with forked workers")
@@ -264,39 +437,60 @@ class Sink:
 
     def write_at(self, offset: int, data) -> None:
         if self._fd >= 0:
-            os.pwrite(self._fd, data, offset)
+            pwrite_all(self._fd, data, offset)
         elif self._cap is not None:
             self._cap[offset : offset + len(data)] = data
 
-    def writev_coalesced(self, blocks: List[Tuple[int, int, bytes]]) -> int:
-        """Sort by offset, group contiguous runs, one pwritev per run.
+    def writev_views(self, blocks: List[Tuple[int, memoryview]]) -> int:
+        """Vectored write-out of pre-trimmed ``(offset, view)`` pairs: sort
+        by offset, group contiguous runs, one ``pwritev`` per run — the
+        views (registered pool memory) go into the syscall untouched.
 
         Returns the number of vectored syscalls issued (the seek-reduction
         metric from the paper)."""
         if not blocks or (self._fd < 0 and self._cap is None):
             return 0
         if self._cap is not None:
-            for off, ln, blk in blocks:
-                self._cap[off : off + ln] = memoryview(blk)[:ln]
+            for off, mv in blocks:
+                self._cap[off : off + len(mv)] = mv
             return 1
         blocks.sort(key=lambda b: b[0])
         calls = 0
         run: List[memoryview] = []
         run_start = run_end = -1
-        for off, ln, blk in blocks:
+        for off, mv in blocks:
             if off == run_end and len(run) < IOV_MAX:
-                run.append(memoryview(blk)[:ln])
-                run_end += ln
+                run.append(mv)
+                run_end += len(mv)
             else:
                 if run:
-                    os.pwritev(self._fd, run, run_start)
-                    calls += 1
-                run = [memoryview(blk)[:ln]]
-                run_start, run_end = off, off + ln
+                    calls += self._pwritev_all(run, run_start)
+                run = [mv]
+                run_start, run_end = off, off + len(mv)
         if run:
-            os.pwritev(self._fd, run, run_start)
-            calls += 1
+            calls += self._pwritev_all(run, run_start)
         return calls
+
+    def _pwritev_all(self, run: List[memoryview], offset: int) -> int:
+        """One run, fully written: a short ``pwritev`` (near-full disk,
+        RLIMIT_FSIZE) resumes by re-slicing the iovec — a partial run must
+        never silently drop its tail. Returns syscalls issued."""
+        calls = 0
+        while run:
+            n = os.pwritev(self._fd, run, offset)
+            calls += 1
+            if n <= 0:
+                raise OSError(errno.EIO, "pwritev: short write")
+            offset += n
+            advance_iovec(run, n)
+        return calls
+
+    def writev_coalesced(self, blocks: List[Tuple[int, int, bytes]]) -> int:
+        """Legacy ``(offset, length, buffer)`` write-out; trims each buffer
+        and delegates to :meth:`writev_views`."""
+        return self.writev_views(
+            [(off, memoryview(blk)[:ln]) for off, ln, blk in blocks]
+        )
 
     def close(self):
         if self._fd >= 0:
@@ -310,3 +504,4 @@ class RecvStats:
     flushes: int = 0
     eofr_frames: int = 0  # EOFR end-frames seen (channel stays reusable)
     eoft_frames: int = 0  # EOFT end-frames seen (session terminates)
+    splice_bytes: int = 0  # payload bytes that stayed kernel-side (splice)

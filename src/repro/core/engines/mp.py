@@ -1,9 +1,17 @@
 """MP — multi-processed engine (paper §2.5.1, the GridFTP model).
 
-Fork per channel, n independent file handles, per-block pwrite at
-scattered offsets — no coalescing, no shared state. Each forked child
-pipes its byte/end-frame counts back to the parent so ``RecvStats`` is
-accurate across the process boundary.
+Concurrency model: fork per channel, n independent file handles, per-block
+pwrite at scattered offsets — no coalescing, no shared state. Each forked
+child pipes its byte/end-frame counts back to the parent so ``RecvStats``
+is accurate across the process boundary.
+
+Pool-slot lifecycle (receive): each child owns a small private
+``RecvBufferPool`` (pools cannot be shared across forks); per frame it
+``acquire``s a slot, ``recv_into``s the slot view, ``pwrite``s the
+trimmed view at the frame's scattered offset — the GridFTP baseline keeps
+its one-write-per-block seek behavior deliberately — and ``release``s
+the slot. ``use_splice`` moves payloads kernel-side instead
+(socket -> pipe -> file), with the standard first-call fallback.
 """
 from __future__ import annotations
 
@@ -15,9 +23,12 @@ from typing import List
 from repro.core.engines.base import (
     ACK,
     END_EVENTS,
+    SPLICE,
     RecvStats,
     Sink,
     Source,
+    SpliceReceiver,
+    SpliceUnsupported,
     recv_exact,
     send_all,
 )
@@ -36,10 +47,18 @@ def mp_receive(
     sink: Sink,
     block_size: int,
     reusable: bool = False,
+    use_splice: bool = False,
 ) -> RecvStats:
     """MP model (GridFTP-like): fork per channel, n file handles, per-block
     pwrite at scattered offsets — no coalescing, no shared state. Per-child
-    counters travel back over a pipe and are summed into the parent stats."""
+    counters travel back over a pipe and are summed into the parent stats.
+
+    Each child receives into slots of a small private ``RecvBufferPool``
+    (header parsed in place, payload ``recv_into`` the slot view, trimmed
+    view handed to ``pwrite``); ``use_splice`` keeps payloads kernel-side
+    entirely via socket -> pipe -> file ``os.splice``."""
+    from repro.core.ringbuf import RecvBufferPool
+
     if sink.capture:
         raise ValueError("mp engine cannot receive into a capture sink "
                          "(forked children do not share parent memory)")
@@ -52,11 +71,18 @@ def mp_receive(
             os.close(r_cnt)
             try:
                 wsink = sink.open_worker()
-                # one header + one payload buffer per child, reused for
-                # every frame (zero per-frame allocation)
+                # one header buffer + a tiny private recv pool per child,
+                # reused for every frame (zero per-frame allocation)
                 hdr_buf = memoryview(bytearray(HEADER_SIZE))
-                payload_buf = memoryview(bytearray(block_size))
-                child = {"bytes": 0, "eofr": 0, "eoft": 0}
+                pool = RecvBufferPool(2, block_size)
+                spl = None
+                use_spl = use_splice and SPLICE and wsink.file_backed
+                if use_spl:
+                    try:
+                        spl = SpliceReceiver()
+                    except SpliceUnsupported:
+                        use_spl = False
+                child = {"bytes": 0, "eofr": 0, "eoft": 0, "splice": 0}
                 while True:
                     recv_exact(s, HEADER_SIZE, hdr_buf)
                     hdr = ChannelHeader.unpack(hdr_buf)
@@ -69,8 +95,20 @@ def mp_receive(
                             f"block of {hdr.length} bytes exceeds "
                             f"negotiated block_size {block_size}"
                         )
-                    payload = recv_exact(s, hdr.length, payload_buf)
-                    wsink.write_at(hdr.offset, payload)
+                    if use_spl:
+                        try:
+                            child["splice"] += spl.splice_block(
+                                s, wsink.fileno(), hdr.offset, hdr.length)
+                            child["bytes"] += hdr.length
+                            if not spl.ok:
+                                use_spl = False
+                            continue
+                        except SpliceUnsupported:
+                            use_spl = False
+                    slot = pool.acquire()
+                    recv_exact(s, hdr.length, pool.view(slot))
+                    wsink.write_at(hdr.offset, pool.view(slot)[: hdr.length])
+                    pool.release(slot)
                     child["bytes"] += hdr.length
                 wsink.close()
                 os.write(w_cnt, json.dumps(child).encode())
@@ -91,12 +129,14 @@ def mp_receive(
         stats.bytes += child["bytes"]
         stats.eofr_frames += child["eofr"]
         stats.eoft_frames += child["eoft"]
+        stats.splice_bytes += child.get("splice", 0)
     return stats
 
 
 def _receive(socks, sink, block_size, *, pool_slots=32, fsm=None,
-             conformance=True, reusable=False, pool=None):
-    return mp_receive(socks, sink, block_size, reusable=reusable)
+             conformance=True, reusable=False, pool=None, splice=False):
+    return mp_receive(socks, sink, block_size, reusable=reusable,
+                      use_splice=splice)
 
 
 def _send(socks, source, session, *, reusable=False):

@@ -1,8 +1,21 @@
 """MT — multi-threaded engine (paper §2.5.2).
 
-Thread per channel + pessimistically locked shared ring + one disk thread
-(single handle). The sender is a blocking worker thread per channel, each
-with a private fd reading its stripe.
+Concurrency model: one blocking thread per channel plus one disk thread,
+all sharing a pessimistically locked receive pool (the paper's MT
+synchronization cost lives in those per-block lock handoffs). The sender
+is a blocking worker thread per channel, each with a private fd reading
+its stripe.
+
+Pool-slot lifecycle (receive): each channel thread parses headers in
+place from its reusable buffer, ``acquire``s a slot from the shared
+``LockedRecvPool`` (blocking when the pool is exhausted — backpressure),
+``recv_into``s the slot view, and ``commit``s; the single disk thread
+``drain_wait``s the committed backlog, hands the trimmed pool views to
+one coalesced ``os.pwritev``, and ``release``s the slots. With
+``use_splice`` and a file-backed sink, channel threads instead move each
+payload kernel-side (socket -> pipe -> file ``os.splice``), bypassing the
+pool and the disk thread entirely; a first-call ``SpliceUnsupported``
+drops that channel back to the pool path.
 """
 from __future__ import annotations
 
@@ -15,10 +28,13 @@ from repro.core.engines.base import (
     END_EVENTS,
     MSG_MORE,
     SENDFILE,
+    SPLICE,
     RecvStats,
     SendfileUnsupported,
     Sink,
     Source,
+    SpliceReceiver,
+    SpliceUnsupported,
     recv_exact,
     send_all,
     sendfile_all,
@@ -40,25 +56,39 @@ def mt_receive(
     block_size: int,
     ring_slots: int = 32,
     reusable: bool = False,
+    pool=None,
+    use_splice: bool = False,
 ) -> RecvStats:
-    """MT model: thread per channel + locked shared ring + disk thread.
+    """MT model: thread per channel + locked shared recv pool + disk thread.
 
-    Each channel thread owns ONE preallocated header buffer and ONE payload
-    buffer — zero per-frame allocation in the receive loops (the ring's
-    locked drain still snapshots blocks, the MT model's deliberate
-    synchronization cost). Channel-thread failures are re-raised in the
-    caller, not swallowed."""
-    from repro.core.ringbuf import LockedRing
+    Zero-copy receive: each channel thread parses headers in place from
+    its one reusable buffer and ``recv_into``s payloads straight into
+    slots of the shared registered ``RecvBufferPool`` (``pool``, reusable
+    across a session's files); the disk thread drains committed slots
+    with coalesced ``pwritev`` of the SAME pool memory. The per-block
+    acquire/commit lock handoffs are the MT model's deliberate
+    synchronization cost. ``use_splice`` moves payloads kernel-side
+    instead (file-backed sinks on Linux; opt-in). Channel-thread failures
+    are re-raised in the caller, not swallowed."""
+    from repro.core.ringbuf import LockedRecvPool, RecvBufferPool
 
     stats = RecvStats()
-    ring = LockedRing(ring_slots, block_size)
+    if pool is None or pool.block_size != block_size:
+        pool = RecvBufferPool(ring_slots, block_size)
+    shared = LockedRecvPool(pool)
     lock = threading.Lock()
     errors: List[BaseException] = []
 
     def rx(sock):
+        spl = None
         try:
+            use_spl = use_splice and SPLICE and sink.file_backed
+            if use_spl:
+                try:
+                    spl = SpliceReceiver()
+                except SpliceUnsupported:
+                    use_spl = False
             hdr_buf = memoryview(bytearray(HEADER_SIZE))
-            payload_buf = memoryview(bytearray(block_size))
             while True:
                 recv_exact(sock, HEADER_SIZE, hdr_buf)
                 hdr = ChannelHeader.unpack(hdr_buf)
@@ -74,35 +104,55 @@ def mt_receive(
                         f"block of {hdr.length} bytes exceeds negotiated "
                         f"block_size {block_size}"
                     )
-                payload = recv_exact(sock, hdr.length, payload_buf)
-                ring.put(payload, hdr.offset)
+                if use_spl:
+                    try:
+                        n_k = spl.splice_block(sock, sink.fileno(),
+                                               hdr.offset, hdr.length)
+                        with lock:
+                            stats.bytes += hdr.length
+                            stats.splice_bytes += n_k
+                        if not spl.ok:  # mid-block recovery: stop splicing
+                            use_spl = False
+                        continue
+                    except SpliceUnsupported:
+                        use_spl = False  # nothing consumed; pool path below
+                slot = shared.acquire()  # blocks when exhausted: backpressure
+                recv_exact(sock, hdr.length, shared.view(slot))
+                shared.commit(slot, hdr.offset, hdr.length)
                 with lock:
                     stats.bytes += hdr.length
         except BaseException as e:  # noqa: BLE001 - surfaced after join
             with lock:
                 errors.append(e)
+            shared.close()  # unblock siblings parked in acquire
             for s in socks:  # unblock sibling channel threads mid-recv
                 try:
                     s.shutdown(socket.SHUT_RDWR)
                 except OSError:
                     pass
+        finally:
+            if spl is not None:
+                spl.close()
 
     def disk():
         try:
             while True:
-                batch = ring.get_batch()
+                batch = shared.drain_wait()
                 if batch:
-                    # batch rows are already private snapshots; hand them
-                    # to the vectored write without another copy
-                    blocks = [(off, len(d), d) for off, d in batch]
-                    stats.writev_calls += sink.writev_coalesced(blocks)
+                    # trimmed views of the registered pool memory go into
+                    # pwritev untouched; slots free only after the write
+                    stats.writev_calls += sink.writev_views(
+                        [(off, shared.view(slot)[:ln])
+                         for off, ln, slot in batch]
+                    )
                     stats.flushes += 1
-                elif ring.closed:
+                    shared.release_all(slot for _, _, slot in batch)
+                elif shared.closed:
                     return
         except BaseException as e:  # noqa: BLE001 - e.g. sink ENOSPC
             with lock:
                 errors.append(e)
-            ring.close()  # unblock channel threads waiting in ring.put
+            shared.close()  # unblock channel threads waiting in acquire
             for s in socks:
                 try:
                     s.shutdown(socket.SHUT_RDWR)
@@ -116,7 +166,7 @@ def mt_receive(
         t.start()
     for t in threads:
         t.join()
-    ring.close()
+    shared.close()
     dt.join()
     if errors:
         raise errors[0]  # don't ACK a broken stream
@@ -222,8 +272,9 @@ def worker_send(
 
 
 def _receive(socks, sink, block_size, *, pool_slots=32, fsm=None,
-             conformance=True, reusable=False, pool=None):
-    return mt_receive(socks, sink, block_size, pool_slots, reusable=reusable)
+             conformance=True, reusable=False, pool=None, splice=False):
+    return mt_receive(socks, sink, block_size, pool_slots, reusable=reusable,
+                      pool=pool, use_splice=splice)
 
 
 def _send(socks, source, session, *, reusable=False):
@@ -234,5 +285,6 @@ def _send(socks, source, session, *, reusable=False):
 ENGINE = register_engine(Engine(
     "mt", _receive, _send,
     "multi-threaded: thread per channel, pessimistically locked shared "
-    "ring, one disk thread",
+    "recv pool, one disk thread",
+    uses_pool=True,
 ))

@@ -1,10 +1,19 @@
 """MTEDP — multi-threaded event-driven pipelined engine (paper §2.5.3).
 
-The xDFS design: ONE thread multiplexes all n channels via PIOD
-(selectors), blocks land zero-copy in a preallocated BlockPool, and a
-single file handle drains them with coalesced VECTORED writes
-(os.pwritev) — single-writer, lock-free, minimal seeks. The sender is the
-mirror image: one thread, write-readiness multiplexing.
+Concurrency model: ONE thread multiplexes all n channels via PIOD
+(selectors) — no locks anywhere on the datapath, because nothing is
+shared between threads. The sender is the mirror image: one thread,
+write-readiness multiplexing, scatter-gather ``sendmsg`` frames.
+
+Pool-slot lifecycle (receive): each channel's state machine ``acquire``s
+a slot from the registered ``RecvBufferPool`` when a data header arrives,
+``recv_into``s the slot view across however many readiness callbacks the
+payload needs, ``commit``s the filled slot, and the flush step hands the
+committed views to one coalesced ``os.pwritev`` (single file handle,
+single writer, minimal seeks) before ``release``-ing them. Pool
+exhaustion back-pressures the event loop by flushing inline; headers are
+parsed in place from per-channel reusable buffers. No payload byte is
+copied in user space between the socket and the disk.
 """
 from __future__ import annotations
 
@@ -44,7 +53,8 @@ def mtedp_receive(
     reusable: bool = False,
     pool=None,
 ) -> RecvStats:
-    """The xDFS MTEDP receiver: PIOD event loop + BlockPool + vectored I/O.
+    """The xDFS MTEDP receiver: PIOD event loop + registered
+    ``RecvBufferPool`` + vectored I/O.
 
     ``fsm`` — a persistent ``server_upload`` conformance machine owned by the
     session layer (multi-file sessions thread ONE machine through every file).
@@ -52,16 +62,16 @@ def mtedp_receive(
     fast-forwarded through the connection stages (one-shot mode).
     ``reusable`` — file streams end with EOFR (channels stay open; the FSM
     loops back to ``9_open_file``) instead of EOFT (terminal flush).
-    ``pool`` — a caller-owned BlockPool reused across the files of a session
-    (every block is released by the final flush, so reuse is safe); when
-    ``None`` a file-private pool is allocated.
+    ``pool`` — a caller-owned ``RecvBufferPool`` reused across the files of a
+    session (every slot is released by the final flush, so reuse is safe);
+    when ``None`` a file-private pool is allocated.
     """
-    from repro.core.ringbuf import BlockPool
+    from repro.core.ringbuf import RecvBufferPool
 
     stats = RecvStats()
     n = len(socks)
     if pool is None or pool.block_size != block_size:
-        pool = BlockPool(pool_slots, block_size)
+        pool = RecvBufferPool(pool_slots, block_size)
     if pool.slots <= n:
         # with <= n slots every slot can be held by a partially-filled
         # block (one per channel) and the backpressure flush below would
@@ -82,7 +92,8 @@ def mtedp_receive(
             fsm.step(ev)
 
     class Chan:
-        __slots__ = ("sock", "idx", "hdr_buf", "hdr_got", "hdr", "blk", "got")
+        __slots__ = ("sock", "idx", "hdr_buf", "hdr_got", "hdr", "slot",
+                     "view", "got")
 
         def __init__(self, sock, idx):
             self.sock = sock
@@ -90,7 +101,8 @@ def mtedp_receive(
             self.hdr_buf = memoryview(bytearray(HEADER_SIZE))
             self.hdr_got = 0
             self.hdr = None
-            self.blk = None
+            self.slot = None  # claimed pool slot handle
+            self.view = None  # its registered buffer view
             self.got = 0
 
     def fsm_steps(*events):
@@ -101,10 +113,12 @@ def mtedp_receive(
     def flush(final=False):
         blocks = pool.drain()
         if blocks or final:
-            stats.writev_calls += sink.writev_coalesced(blocks)
+            stats.writev_calls += sink.writev_views(
+                [(off, pool.view(slot)[:ln]) for off, ln, slot in blocks]
+            )
             stats.flushes += 1
-            for _, _, blk in blocks:
-                pool.release(blk)
+            for _, _, slot in blocks:
+                pool.release(slot)
         if fsm is None:
             return
         if final:
@@ -150,8 +164,8 @@ def mtedp_receive(
                             f"block of {c.hdr.length} bytes exceeds "
                             f"negotiated block_size {block_size}"
                         )
-                    c.blk = pool.acquire()
-                    while c.blk is None:  # backpressure: drain to disk
+                    c.slot = pool.acquire()
+                    while c.slot is None:  # backpressure: drain to disk
                         if pool.n_committed == 0:
                             # every slot is held by a partially-filled block
                             # of some channel: flushing drains nothing and
@@ -163,22 +177,24 @@ def mtedp_receive(
                                 "the channel count"
                             )
                         flush()
-                        c.blk = pool.acquire()
+                        c.slot = pool.acquire()
+                    c.view = pool.view(c.slot)
                     c.got = 0
                     continue
-                # payload
+                # payload lands straight in the registered slot view
                 want = c.hdr.length - c.got
-                r = sock.recv_into(memoryview(c.blk)[c.got : c.hdr.length], want)
+                r = sock.recv_into(c.view[c.got : c.hdr.length], want)
                 if r == 0:
                     raise ConnectionError("peer closed mid-block")
                 c.got += r
                 stats.bytes += r
                 if c.got == c.hdr.length:
-                    pool.commit(c.blk, c.hdr.offset, c.hdr.length)
+                    pool.commit(c.slot, c.hdr.offset, c.hdr.length)
                     # milestone: full block moved through 10 -> 11 -> 12 -> 10
                     fsm_steps("read_ready", "block", "buffered")
                     c.hdr = None
-                    c.blk = None
+                    c.slot = None
+                    c.view = None
                     if pool.n_free == 0:
                         flush()
         except BlockingIOError:
@@ -280,7 +296,10 @@ def event_send(
 
 
 def _receive(socks, sink, block_size, *, pool_slots=32, fsm=None,
-             conformance=True, reusable=False, pool=None):
+             conformance=True, reusable=False, pool=None, splice=False):
+    # ``splice`` is accepted for signature uniformity but ignored: the
+    # blocking socket->pipe splice would stall the nonblocking event loop
+    # (the same reason the mtedp sender has no sendfile path).
     return mtedp_receive(socks, sink, block_size, pool_slots,
                          conformance=conformance, fsm=fsm, reusable=reusable,
                          pool=pool)
@@ -293,6 +312,8 @@ def _send(socks, source, session, *, reusable=False):
 ENGINE = register_engine(Engine(
     "mtedp", _receive, _send,
     "multi-threaded event-driven pipelined (the paper's xDFS design): one "
-    "event loop, zero-copy block pool, single-writer vectored disk I/O",
+    "event loop, registered zero-copy recv pool, single-writer vectored "
+    "disk I/O",
     uses_pool=True,
+    pool_livelock_guard=True,
 ))

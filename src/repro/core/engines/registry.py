@@ -9,14 +9,20 @@ without touching the protocol code.
 Uniform callable signatures:
 
   receive(socks, sink, block_size, *, pool_slots=32, fsm=None,
-          conformance=True, reusable=False, pool=None) -> RecvStats
+          conformance=True, reusable=False, pool=None,
+          splice=False) -> RecvStats
   send(socks, source, session, *, reusable=False) -> int  (bytes on the wire)
 
-``pool`` is an optional caller-owned block pool reused across a session's
-files (engines that don't pool blocks ignore it).
+``pool`` is an optional caller-owned registered ``RecvBufferPool`` reused
+across a session's files (engines that don't pool blocks ignore it).
 
 ``reusable=True`` ends each channel's file stream with ``EOFR`` (channel
 stays open for the next file of the session) instead of ``EOFT``.
+
+``splice=True`` opts the receive side into the kernel-side
+socket->pipe->file ``os.splice`` fast path where the engine supports it
+(blocking receivers, file-backed sinks); engines that can't splice accept
+and ignore the flag.
 """
 from __future__ import annotations
 
@@ -34,7 +40,11 @@ class Engine:
     receive: Callable[..., "RecvStats"]  # noqa: F821 - see base.RecvStats
     send: Callable[..., int]
     description: str = ""
-    uses_pool: bool = False  # receive() consumes the caller-owned block pool
+    uses_pool: bool = False  # receive() consumes the caller-owned recv pool
+    # receive() livelocks unless pool_slots > n_channels (a nonblocking
+    # event loop whose every slot can be pinned by a partial block); the
+    # session layer refuses such configurations up front
+    pool_livelock_guard: bool = False
 
 
 _REGISTRY: Dict[str, Engine] = {}

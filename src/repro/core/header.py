@@ -138,24 +138,28 @@ class Negotiation:
                               self.so_nodelay))
 
     @classmethod
-    def unpack(cls, buf: bytes) -> "Negotiation":
+    def unpack(cls, buf) -> "Negotiation":
+        """Accepts any buffer (bytes, bytearray, memoryview) — the session
+        layer parses the negotiation straight from its recv buffer;
+        ``str(view, "utf-8")`` and ``unpack_from`` read in place, and only
+        the (stored) credentials blob is materialized."""
         head = struct.Struct("<16sHIIQQB??HH")
-        (session, ver, n, bs, win, fsize, _r, comp, _r2, lrn, lln) = head.unpack(
-            buf[: head.size]
+        (session, ver, n, bs, win, fsize, _r, comp, _r2, lrn, lln) = (
+            head.unpack_from(buf)
         )
         p = head.size
-        rn = buf[p : p + lrn].decode()
+        rn = str(buf[p : p + lrn], "utf-8")
         p += lrn
-        ln = buf[p : p + lln].decode()
+        ln = str(buf[p : p + lln], "utf-8")
         p += lln
-        (lc,) = struct.unpack("<H", buf[p : p + 2])
-        creds = buf[p + 2 : p + 2 + lc]
+        (lc,) = struct.unpack_from("<H", buf, p)
+        creds = bytes(buf[p + 2 : p + 2 + lc])
         p += 2 + lc
         # v1 negotiation blobs end at the credentials; tuning tail optional
         sndbuf = rcvbuf = 0
         nodelay = True
         if len(buf) >= p + 8:
-            sndbuf, rcvbuf = struct.unpack("<II", buf[p : p + 8])
+            sndbuf, rcvbuf = struct.unpack_from("<II", buf, p)
             if len(buf) >= p + 9:
                 nodelay = bool(buf[p + 8])
         return cls(session, n, bs, win, rn, ln, ver, comp, fsize, creds,

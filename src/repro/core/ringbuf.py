@@ -1,21 +1,147 @@
-"""Circular block buffer (paper §2.5.2-2.5.3 and §4.1).
+"""Receive-side block buffers (paper §2.5.2-2.5.3 and §4.1).
 
-Two variants, matching the two server architectures that use one:
+The registered-buffer receive datapath lives here:
 
-* ``RingBuffer`` — single-producer/single-consumer, index-based, LOCK-FREE
-  (the MTEDP engine: one event loop produces, the disk drain consumes in the
-  same thread or a dedicated disk thread). Slots are preallocated bytearrays
-  (the paper's memory-allocation factor: zero per-block allocation in steady
-  state).
-* ``LockedRing`` — the MT model's pessimistically-locked shared buffer
-  (threading.Condition), kept deliberately faithful to the paper's
-  description so the benchmark reproduces its synchronization overhead.
+* ``RecvBufferPool`` — ONE preallocated backing buffer carved into
+  block-size slot views. Receivers hand slot views straight to
+  ``socket.recv_into`` so frames land in pool memory, and the drain side
+  hands trimmed views of the same memory to ``os.pwritev`` — zero
+  payload copies between the socket and the disk. Slot lifecycle:
+  ``acquire -> recv_into(view) -> commit -> pwritev -> release``.
+* ``LockedRecvPool`` — the MT model's pessimistically-locked shared pool
+  (threading.Condition around a ``RecvBufferPool``): channel threads
+  block in ``acquire`` when the pool is exhausted (backpressure), the
+  disk thread blocks in ``drain_wait``; the per-block lock handoffs keep
+  the paper's MT synchronization cost observable.
+
+Legacy structures kept for the benchmarks and model-checking tests:
+
+* ``RingBuffer`` — single-producer/single-consumer, index-based,
+  lock-free copy-in ring.
+* ``LockedRing`` — the seed's MT shared buffer; both its ``put`` copy-in
+  and its ``get_batch`` snapshot are charged to
+  ``RecvBufferPool.materializations``, so the copying receive path is
+  measurably non-zero-copy.
+* ``BlockPool`` — the pre-registered-buffer MTEDP pool (per-slot
+  bytearrays; superseded by ``RecvBufferPool``).
 """
 from __future__ import annotations
 
 import threading
-from dataclasses import dataclass
-from typing import List, Optional, Tuple
+from typing import Iterable, List, Optional, Tuple
+
+
+class RecvBufferPool:
+    """Registered-buffer pool: the receive-side mirror of the mmap send path.
+
+    One contiguous backing ``bytearray`` is registered up front and carved
+    into ``slots`` fixed views. ``acquire`` hands out an integer slot
+    handle; ``view(slot)`` is the preallocated memoryview receivers pass to
+    ``recv_into``; ``commit`` tags a filled slot with its file
+    ``(offset, length)``; ``drain`` returns the committed backlog for a
+    coalesced ``pwritev`` of the SAME memory; ``release`` returns slots to
+    the free list. Nothing on that path allocates or copies payload bytes.
+
+    ``materializations`` is a class-level counter of payload-sized heap
+    copies made anywhere on the receive path (legacy ring snapshots, splice
+    recovery reads, ...). The zero-copy hot loop must leave it untouched —
+    tests assert it reads 0 after a full transfer.
+    """
+
+    materializations = 0  # class-level: payload-sized receive-path copies
+
+    __slots__ = ("slots", "block_size", "_backing", "_views", "_free",
+                 "_committed")
+
+    def __init__(self, slots: int, block_size: int):
+        assert slots > 0 and block_size > 0
+        self.slots = slots
+        self.block_size = block_size
+        self._backing = bytearray(slots * block_size)
+        mem = memoryview(self._backing)
+        self._views = [mem[i * block_size : (i + 1) * block_size]
+                       for i in range(slots)]
+        self._free: List[int] = list(range(slots))
+        self._committed: List[Tuple[int, int, int]] = []  # (offset, len, slot)
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def n_committed(self) -> int:
+        return len(self._committed)
+
+    def acquire(self) -> Optional[int]:
+        """Claim a free slot handle (None when exhausted — the caller's
+        backpressure point)."""
+        return self._free.pop() if self._free else None
+
+    def view(self, slot: int) -> memoryview:
+        """The slot's full-block view into the registered backing buffer."""
+        return self._views[slot]
+
+    def commit(self, slot: int, offset: int, length: int) -> None:
+        """Tag a filled slot for write-out at file ``offset``."""
+        self._committed.append((offset, length, slot))
+
+    def drain(self) -> List[Tuple[int, int, int]]:
+        """Take the committed backlog (offset, length, slot) for vectored
+        write-out; the caller releases each slot after the write lands."""
+        out = self._committed
+        self._committed = []
+        return out
+
+    def release(self, slot: int) -> None:
+        self._free.append(slot)
+
+    def release_all(self, slots: Iterable[int]) -> None:
+        self._free.extend(slots)
+
+
+class LockedRecvPool:
+    """The MT model's shared receive pool: a ``RecvBufferPool`` behind one
+    pessimistic lock. Channel threads ``acquire`` (blocking when the pool
+    is exhausted — backpressure), fill the slot view, ``commit``; the disk
+    thread ``drain_wait``s, writes the views out, and ``release``s."""
+
+    def __init__(self, pool: RecvBufferPool):
+        self.pool = pool
+        self._cv = threading.Condition()
+        self.closed = False
+
+    def acquire(self) -> int:
+        with self._cv:
+            while not self.closed:
+                slot = self.pool.acquire()
+                if slot is not None:
+                    return slot
+                self._cv.wait()
+            raise RuntimeError("recv pool closed")
+
+    def view(self, slot: int) -> memoryview:
+        return self.pool.view(slot)
+
+    def commit(self, slot: int, offset: int, length: int) -> None:
+        with self._cv:
+            self.pool.commit(slot, offset, length)
+            self._cv.notify_all()
+
+    def drain_wait(self, timeout: float = 0.1) -> List[Tuple[int, int, int]]:
+        with self._cv:
+            if self.pool.n_committed == 0 and not self.closed:
+                self._cv.wait(timeout)
+            return self.pool.drain()
+
+    def release_all(self, slots: Iterable[int]) -> None:
+        with self._cv:
+            self.pool.release_all(slots)
+            self._cv.notify_all()
+
+    def close(self) -> None:
+        with self._cv:
+            self.closed = True
+            self._cv.notify_all()
 
 
 class RingBuffer:
@@ -87,11 +213,11 @@ class RingBuffer:
 
 
 class BlockPool:
-    """Preallocated block pool (region allocator, paper §2.2): the MTEDP
-    engine claims blocks for in-flight channel receives (zero-copy
-    ``recv_into``) and commits them to a FIFO for the disk drain — multiple
-    channels can hold claimed blocks concurrently, unlike the strict SPSC
-    ring."""
+    """Preallocated block pool (region allocator, paper §2.2): per-slot
+    bytearray blocks claimed for in-flight channel receives and committed
+    to a FIFO for the disk drain. Superseded on the engine receive path by
+    :class:`RecvBufferPool` (one registered backing buffer, slot handles);
+    kept for the model-checking tests and as the simplest pool shape."""
 
     def __init__(self, slots: int, block_size: int):
         self.slots = slots
@@ -123,7 +249,14 @@ class BlockPool:
 
 
 class LockedRing:
-    """The MT model's shared circular buffer with pessimistic locking."""
+    """The seed MT model's shared circular buffer with pessimistic locking.
+
+    Every block is COPIED twice on its way through (``put`` copies into the
+    ring slot, ``get_batch`` snapshots it back out); both copies are charged
+    to ``RecvBufferPool.materializations`` so the legacy datapath is
+    measurably non-zero-copy. The live MT engine uses
+    :class:`LockedRecvPool` instead; this stays as the copying baseline for
+    ``benchmarks/zero_copy.py`` and the threaded-integrity tests."""
 
     def __init__(self, slots: int, block_size: int):
         self._ring = RingBuffer(slots, block_size)
@@ -136,6 +269,7 @@ class LockedRing:
                 self._cv.wait()
             if self.closed:
                 raise RuntimeError("ring closed")
+            RecvBufferPool.materializations += 1  # copy-in to the ring slot
             ok = self._ring.push(data, offset)
             assert ok
             self._cv.notify_all()
@@ -144,7 +278,9 @@ class LockedRing:
         with self._cv:
             if self._ring.empty() and not self.closed:
                 self._cv.wait(timeout)
-            out = [(off, bytes(mv)) for off, mv in self._ring.drain_contiguous()]
+            drained = self._ring.drain_contiguous()
+            RecvBufferPool.materializations += len(drained)  # snapshots
+            out = [(off, bytes(mv)) for off, mv in drained]
             self._cv.notify_all()
             return out
 

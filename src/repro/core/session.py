@@ -23,6 +23,15 @@ amortized exactly as DotDFS prescribes:
 Layering: this module knows the wire protocol and drives an ``Engine``
 from the registry; ``core/api.py`` wraps it in the user-facing
 ``XdfsServer`` / ``XdfsClient`` objects.
+
+Pool-slot lifecycle: a ``ServerSession`` owns ONE registered
+``RecvBufferPool`` for the whole session and lends it to every
+``engine.receive`` call (pool-using engines fill its slot views via
+``recv_into`` and release every slot by their final flush, so cross-file
+reuse is safe); control frames are parsed in place from the recv buffer —
+no ``bytes()`` copies anywhere on the receive path. ``splice=True`` opts
+receives into the kernel-side ``os.splice`` fast path where the engine
+supports it.
 """
 from __future__ import annotations
 
@@ -101,9 +110,12 @@ def send_ctrl(sock: socket.socket, event: ChannelEvent, session: bytes,
 
 
 def recv_ctrl(sock: socket.socket) -> Tuple[ChannelHeader, dict]:
+    # header and body are parsed straight from the recv buffers: unpack
+    # accepts any buffer, and str(view, "utf-8") decodes without a bytes()
+    # round-trip
     hdr = ChannelHeader.unpack(recv_exact(sock, HEADER_SIZE))
-    body = bytes(recv_exact(sock, hdr.length)) if hdr.length else b"{}"
-    payload = json.loads(body.decode())
+    body = str(recv_exact(sock, hdr.length), "utf-8") if hdr.length else "{}"
+    payload = json.loads(body)
     if hdr.event == ChannelEvent.EXCEPTION:
         raise SessionError(payload.get("error", "remote exception"))
     return hdr, payload
@@ -128,8 +140,8 @@ def send_negotiation(sock: socket.socket, neg: Negotiation) -> None:
 
 
 def recv_negotiation(sock: socket.socket) -> Negotiation:
-    (nlen,) = struct.unpack("<I", bytes(recv_exact(sock, 4)))
-    return Negotiation.unpack(bytes(recv_exact(sock, nlen)))
+    (nlen,) = struct.unpack("<I", recv_exact(sock, 4))
+    return Negotiation.unpack(recv_exact(sock, nlen))  # parses in place
 
 
 def resolve_path(root: Optional[str], name: Optional[str],
@@ -163,24 +175,28 @@ class SessionStats:
     eofr_frames: int = 0
     eoft_frames: int = 0
     writev_calls: int = 0
+    splice_bytes: int = 0
 
     def absorb(self, st: RecvStats) -> None:
         self.bytes += st.bytes
         self.eofr_frames += st.eofr_frames
         self.eoft_frames += st.eoft_frames
         self.writev_calls += st.writev_calls
+        self.splice_bytes += st.splice_bytes
 
 
 class ServerSession:
     """Runs one accepted session to completion on the server side."""
 
     def __init__(self, socks, neg: Negotiation, engine: Engine,
-                 root: Optional[str], pool_slots: int = 32):
+                 root: Optional[str], pool_slots: int = 32,
+                 splice: bool = False):
         self.socks = list(socks)
         self.neg = neg
         self.engine = engine
         self.root = root
-        if engine.uses_pool and pool_slots <= neg.n_channels:
+        self.splice = splice
+        if engine.pool_livelock_guard and pool_slots <= neg.n_channels:
             # every pool slot could be pinned by a partially-filled block of
             # some channel, livelocking the receiver's backpressure flush
             raise SessionError(
@@ -189,7 +205,7 @@ class ServerSession:
             )
         self.pool_slots = pool_slots
         self.stats = SessionStats()
-        self._pool = None  # BlockPool reused across the session's files
+        self._pool = None  # RecvBufferPool reused across the session's files
         self.fsm: Optional[Machine] = None
         if engine.name == "mtedp":
             # one conformance machine for the WHOLE session: the multi-file
@@ -241,14 +257,14 @@ class ServerSession:
         if self.engine.uses_pool and (
             self._pool is None or self._pool.block_size != block_size
         ):
-            from repro.core.ringbuf import BlockPool
+            from repro.core.ringbuf import RecvBufferPool
 
-            self._pool = BlockPool(self.pool_slots, block_size)
+            self._pool = RecvBufferPool(self.pool_slots, block_size)
         try:
             st = self.engine.receive(
                 self.socks, sink, block_size, pool_slots=self.pool_slots,
                 fsm=self.fsm, conformance=self.fsm is not None, reusable=True,
-                pool=self._pool,
+                pool=self._pool, splice=self.splice,
             )
         finally:
             sink.close()

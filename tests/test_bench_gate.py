@@ -1,0 +1,72 @@
+"""benchmarks/check_json.py regression-gate mode: a synthetic throughput
+regression against the committed BENCH_host.json must fail the gate."""
+import copy
+import json
+import sys
+from pathlib import Path
+
+import pytest
+
+REPO = Path(__file__).resolve().parent.parent
+BASELINE = REPO / "BENCH_host.json"
+
+sys.path.insert(0, str(REPO))  # benchmarks/ is a top-level package
+from benchmarks.check_json import check, check_schema  # noqa: E402
+
+pytestmark = pytest.mark.skipif(not BASELINE.exists(),
+                                reason="no committed baseline")
+
+
+def _baseline_doc() -> dict:
+    return json.loads(BASELINE.read_text())
+
+
+def _write(tmp_path, doc) -> str:
+    p = tmp_path / "candidate.json"
+    p.write_text(json.dumps(doc))
+    return str(p)
+
+
+def test_committed_baseline_passes_schema():
+    assert check_schema(_baseline_doc()) == []
+
+
+def test_identical_candidate_passes_gate(tmp_path):
+    cand = _write(tmp_path, _baseline_doc())
+    assert check(cand, str(BASELINE)) == []
+
+
+def test_synthetic_regression_fails_gate(tmp_path):
+    """The acceptance gate: >20% throughput drop in a zero-copy section
+    must fail against the committed baseline."""
+    doc = copy.deepcopy(_baseline_doc())
+    row = doc["sections"]["zero_copy_recv"][0]
+    row["mb_s"] = round(row["mb_s"] * 0.75, 1)  # a 25% regression
+    errors = check(_write(tmp_path, doc), str(BASELINE))
+    assert any("zero_copy_recv" in e and "regressed" in e for e in errors), (
+        f"gate did not fire on a 25% regression: {errors}"
+    )
+
+
+def test_small_wobble_within_tolerance_passes(tmp_path):
+    doc = copy.deepcopy(_baseline_doc())
+    for row in doc["sections"]["zero_copy_recv"]:
+        row["mb_s"] = round(row["mb_s"] * 0.9, 1)  # 10% < 20% tolerance
+    assert check(_write(tmp_path, doc), str(BASELINE)) == []
+
+
+def test_lost_coverage_fails_gate(tmp_path):
+    """Dropping a baseline row (e.g. silently skipping a path) fails."""
+    doc = copy.deepcopy(_baseline_doc())
+    rows = doc["sections"]["zero_copy_recv"]
+    assert len(rows) > 1
+    doc["sections"]["zero_copy_recv"] = rows[1:]
+    errors = check(_write(tmp_path, doc), str(BASELINE))
+    assert any("lost benchmark coverage" in e for e in errors)
+
+
+def test_tolerance_override_relaxes_gate(tmp_path):
+    doc = copy.deepcopy(_baseline_doc())
+    row = doc["sections"]["zero_copy_recv"][0]
+    row["mb_s"] = round(row["mb_s"] * 0.75, 1)
+    assert check(_write(tmp_path, doc), str(BASELINE), tolerance=0.5) == []

@@ -1,0 +1,114 @@
+"""docs/ARCHITECTURE.md is normative and machine-checked: the wire-protocol
+tables must match the constants in header.py and the transition relations
+in fsm.py, and the docs linter must pass on every committed doc."""
+import re
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+from repro.core import header
+from repro.core.fsm import FSM_BUILDERS
+from repro.core.header import HEADER_SIZE, MAGIC, VERSION, ChannelEvent
+
+REPO = Path(__file__).resolve().parent.parent
+ARCH = REPO / "docs" / "ARCHITECTURE.md"
+DOCS = [REPO / "README.md", ARCH, REPO / "docs" / "BENCHMARKING.md"]
+
+pytestmark = pytest.mark.skipif(not ARCH.exists(),
+                                reason="docs not present in this checkout")
+
+
+def _arch_text() -> str:
+    return ARCH.read_text()
+
+
+# ---------------------------------------------------------------------------
+# frame header + negotiation constants
+# ---------------------------------------------------------------------------
+
+
+def test_header_struct_format_documented():
+    text = _arch_text()
+    assert f"`{header._FMT.format}`" in text, (
+        "ARCHITECTURE.md frame-header struct format drifted from header.py"
+    )
+    assert f"**{HEADER_SIZE} bytes**" in text
+    assert f"`{MAGIC:#010x}`" in text
+    # version row: the wire version constant must appear as documented
+    assert re.search(rf"\|\s*1\s*\|\s*version\s*\|\s*`H`\s*\|\s*2\s*\|\s*"
+                     rf"`{VERSION}`", text), (
+        "documented header version row missing or drifted"
+    )
+
+
+def test_negotiation_formats_documented():
+    text = _arch_text()
+    # the implementation's own struct strings (pack/unpack in header.py)
+    assert "`<16sHIIQQB??HH`" in text  # negotiation head
+    assert "`<II?`" in text  # tuning tail
+
+
+def test_channel_event_table_matches_enum():
+    text = _arch_text()
+    rows = re.findall(r"^\|\s*`(\w+)`\s*\|\s*(\d+)\s*\|", text, re.M)
+    documented = {name: int(val) for name, val in rows
+                  if name in ChannelEvent.__members__}
+    actual = {e.name: int(e) for e in ChannelEvent}
+    assert documented == actual, (
+        f"ARCHITECTURE.md event table drifted from ChannelEvent: "
+        f"documented {documented}, actual {actual}"
+    )
+
+
+# ---------------------------------------------------------------------------
+# FSM transition tables
+# ---------------------------------------------------------------------------
+
+
+def _doc_fsm_rows(section_marker: str, end_marker: str):
+    """All `| `state` | `event` | `next` |` triples between two markers."""
+    text = _arch_text()
+    start = text.index(section_marker)
+    end = text.index(end_marker, start)
+    return set(re.findall(
+        r"^\|\s*`([\w]+)`\s*\|\s*`([\w]+)`\s*\|\s*`([\w]+)`\s*\|",
+        text[start:end], re.M))
+
+
+def _machine_rows(name: str):
+    """The machine's transition relation minus the uniformly generated
+    error/handled edges (documented as a note, not table rows)."""
+    m = FSM_BUILDERS[name]()
+    return {(s, e, t) for (s, e), t in m.transitions.items()
+            if e not in ("error", "handled")}
+
+
+@pytest.mark.parametrize("name,start,end", [
+    ("server_upload", "`server_upload` transition relation",
+     "`client_upload` machine"),
+    ("client_upload", "`client_upload` machine", "Every non-final state"),
+])
+def test_fsm_tables_match_machines(name, start, end):
+    documented = _doc_fsm_rows(start, end)
+    actual = _machine_rows(name)
+    assert documented == actual, (
+        f"ARCHITECTURE.md {name} table drifted from fsm.py:\n"
+        f"  documented-only: {sorted(documented - actual)}\n"
+        f"  machine-only:    {sorted(actual - documented)}"
+    )
+
+
+# ---------------------------------------------------------------------------
+# docs linter (fences + links), same entry point CI uses
+# ---------------------------------------------------------------------------
+
+
+def test_docs_lint_passes():
+    r = subprocess.run(
+        [sys.executable, str(REPO / "tools" / "check_docs.py"),
+         *map(str, DOCS)],
+        capture_output=True, text=True,
+    )
+    assert r.returncode == 0, f"docs lint failed:\n{r.stderr}"

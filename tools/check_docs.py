@@ -1,0 +1,118 @@
+"""Docs lint: code fences and internal links must resolve.
+
+  python tools/check_docs.py README.md docs/*.md
+
+Checks, per markdown file:
+
+* every ``` code fence is closed (odd fence counts are broken docs);
+* every internal markdown link ``[text](target)`` resolves: the target
+  file exists relative to the doc (http(s)/mailto links are skipped),
+  and a ``#fragment`` matches a heading in the target file using
+  GitHub's slugification (lowercase, spaces to dashes, punctuation
+  dropped).
+
+Exits non-zero listing every violation. No dependencies beyond the
+stdlib, so CI and tests can both run it.
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+from typing import List
+
+FENCE = re.compile(r"^\s*(```|~~~)")
+# [text](target) — ignores images' leading ! by matching it away
+LINK = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)\)")
+HEADING = re.compile(r"^(#{1,6})\s+(.*?)\s*$")
+
+
+def github_slug(heading: str) -> str:
+    """GitHub's anchor slug: strip markdown code ticks, lowercase, drop
+    punctuation, spaces to dashes."""
+    text = heading.replace("`", "")
+    text = text.lower()
+    text = re.sub(r"[^\w\- ]", "", text)
+    return text.replace(" ", "-")
+
+
+def _strip_fenced(lines: List[str]) -> List[str]:
+    """Drop fenced-code-block interiors so fences' content (e.g. ASCII
+    diagrams containing brackets) is not link-checked."""
+    out, in_fence = [], False
+    for line in lines:
+        if FENCE.match(line):
+            in_fence = not in_fence
+            continue
+        if not in_fence:
+            out.append(line)
+    return out
+
+
+def _headings(path: Path) -> List[str]:
+    slugs = []
+    in_fence = False
+    for line in path.read_text().splitlines():
+        if FENCE.match(line):
+            in_fence = not in_fence
+            continue
+        if in_fence:
+            continue
+        m = HEADING.match(line)
+        if m:
+            slugs.append(github_slug(m.group(2)))
+    return slugs
+
+
+def check_file(path: Path) -> List[str]:
+    errors: List[str] = []
+    try:
+        lines = path.read_text().splitlines()
+    except OSError as e:
+        return [f"{path}: unreadable: {e}"]
+
+    n_fences = sum(1 for line in lines if FENCE.match(line))
+    if n_fences % 2:
+        errors.append(f"{path}: odd number of code fences ({n_fences}) — "
+                      "an unclosed ``` block")
+
+    for i, line in enumerate(_strip_fenced(lines), 1):
+        for m in LINK.finditer(line):
+            target = m.group(1)
+            if target.startswith(("http://", "https://", "mailto:")):
+                continue
+            file_part, _, fragment = target.partition("#")
+            if file_part:
+                dest = (path.parent / file_part).resolve()
+                if not dest.exists():
+                    errors.append(
+                        f"{path}: broken link {target!r} "
+                        f"(no such file {file_part!r})")
+                    continue
+            else:
+                dest = path.resolve()
+            if fragment and dest.suffix == ".md":
+                if fragment not in _headings(dest):
+                    errors.append(
+                        f"{path}: broken anchor {target!r} "
+                        f"(no heading slugs to {fragment!r} in {dest.name})")
+    return errors
+
+
+def main(argv: List[str]) -> int:
+    if not argv:
+        print("usage: python tools/check_docs.py FILE.md [FILE.md ...]",
+              file=sys.stderr)
+        return 2
+    errors: List[str] = []
+    for name in argv:
+        errors.extend(check_file(Path(name)))
+    for e in errors:
+        print(f"DOCS ERROR: {e}", file=sys.stderr)
+    if not errors:
+        print(f"docs OK ({len(argv)} files)")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
