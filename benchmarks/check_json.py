@@ -3,7 +3,10 @@
 Two modes (docs/BENCHMARKING.md has the full story):
 
 * **schema** (always) — the candidate file must carry every required
-  section with every required row key, scalar values only::
+  section with every required row key, scalar values only; the
+  ``zero_copy_batched`` section additionally carries a baseline-free
+  invariant: batched rows must show at least ``SYSCALL_BATCH_FACTOR``x
+  fewer syscalls/GB than their per-frame twin::
 
       PYTHONPATH=src python -m benchmarks.check_json BENCH_host.json
 
@@ -34,10 +37,16 @@ REQUIRED_SECTIONS = {
     "session_reuse": {"engine", "channels", "speedup", "session_s"},
     "zero_copy": {"mode", "path", "block_kb", "mb_s", "gain_vs_copy"},
     "zero_copy_recv": {"mode", "path", "block_kb", "mb_s", "gain_vs_copy"},
+    "zero_copy_batched": {"mode", "path", "block_kb", "mb_s",
+                          "gain_vs_frame", "syscalls_per_gb"},
     "host_transfer": {"engine", "channels", "block_kb", "mb_s",
                       "writev_calls"},
 }
 SCALAR = (int, float, str, bool)
+
+# the batched datapath's reason to exist: every batched row must issue at
+# most 1/SYSCALL_BATCH_FACTOR the syscalls/GB of its per-frame twin
+SYSCALL_BATCH_FACTOR = 4
 
 # regression-gate config: identity key (matches a candidate row to its
 # baseline row) and the higher-is-better throughput metric per section
@@ -45,12 +54,14 @@ SECTION_KEYS = {
     "session_reuse": ("engine", "channels"),
     "zero_copy": ("mode", "path", "block_kb"),
     "zero_copy_recv": ("mode", "path", "block_kb"),
+    "zero_copy_batched": ("mode", "path", "block_kb"),
     "host_transfer": ("engine", "channels", "block_kb"),
 }
 SECTION_METRIC = {
     "session_reuse": "speedup",
     "zero_copy": "mb_s",
     "zero_copy_recv": "mb_s",
+    "zero_copy_batched": "mb_s",
     "host_transfer": "mb_s",
 }
 # Default allowed fractional drop below the baseline before the gate
@@ -61,6 +72,7 @@ SECTION_TOLERANCE = {
     "session_reuse": 0.50,
     "zero_copy": 0.20,
     "zero_copy_recv": 0.20,
+    "zero_copy_batched": 0.25,
     "host_transfer": 0.40,
 }
 
@@ -102,6 +114,41 @@ def check_schema(doc: dict) -> List[str]:
             bad = [k for k, v in row.items() if not isinstance(v, SCALAR)]
             if bad:
                 errors.append(f"{name}[{i}]: non-scalar values for {bad}")
+    return errors
+
+
+def check_batched_invariant(doc: dict) -> List[str]:
+    """The zero_copy_batched section's acceptance invariant, checked on
+    EVERY candidate (no baseline needed): each batched row must show at
+    least a ``SYSCALL_BATCH_FACTOR``x reduction in syscalls/GB over the
+    per-frame row of the same (mode, block_kb)."""
+    errors: List[str] = []
+    rows = (doc.get("sections") or {}).get("zero_copy_batched") or []
+    frame = {(r.get("mode"), r.get("block_kb")): r for r in rows
+             if isinstance(r, dict) and r.get("path") == "frame"}
+    for row in rows:
+        if not isinstance(row, dict) or row.get("path") == "frame":
+            continue
+        base = frame.get((row.get("mode"), row.get("block_kb")))
+        ident = f"mode={row.get('mode')}, path={row.get('path')}"
+        if base is None:
+            errors.append(
+                f"zero_copy_batched[{ident}]: no per-frame twin row to "
+                f"compare syscalls_per_gb against")
+            continue
+        b_calls, f_calls = row.get("syscalls_per_gb"), base.get(
+            "syscalls_per_gb")
+        if not all(isinstance(v, (int, float)) and v > 0
+                   for v in (b_calls, f_calls)):
+            errors.append(
+                f"zero_copy_batched[{ident}]: non-numeric syscalls_per_gb")
+            continue
+        if b_calls * SYSCALL_BATCH_FACTOR > f_calls:
+            errors.append(
+                f"zero_copy_batched[{ident}]: syscalls/GB only "
+                f"{f_calls / b_calls:.1f}x below per-frame "
+                f"({b_calls:g} vs {f_calls:g}; must be >= "
+                f"{SYSCALL_BATCH_FACTOR}x)")
     return errors
 
 
@@ -155,7 +202,7 @@ def check(path: str, baseline_path: Optional[str] = None,
     doc, errors = _load(path)
     if doc is None:
         return errors
-    errors = check_schema(doc)
+    errors = check_schema(doc) + check_batched_invariant(doc)
     if errors or baseline_path is None:
         return errors
     base, base_errors = _load(baseline_path)

@@ -15,6 +15,7 @@ Sections:
   0. session_reuse   — §2.5.3 amortization: EOFR channel reuse vs one-shot
   0b. zero_copy      — copy vs scatter-gather vs sendfile send datapaths
   0b2. zero_copy_recv — copy vs registered-pool vs splice receive datapaths
+  0b3. zero_copy_batched — per-frame vs syscall-batched framing (+ syscalls/GB)
   0c. host_transfer  — engine x channels matrix (MB/s + writev calls)
   1. paper_figs      — Figs. 12-19 transfer reproductions (MTEDP vs MT vs MP)
   2. device_channels — xDFS ring collectives vs lax.psum (8-dev subprocess)
@@ -113,6 +114,10 @@ def main() -> None:
 
     print("== section 0b2: zero-copy receive datapath A/B ==", flush=True)
     sections["zero_copy_recv"] = zero_copy.run_recv(
+        smoke=args.smoke or args.quick)
+
+    print("== section 0b3: syscall-batched framing A/B ==", flush=True)
+    sections["zero_copy_batched"] = zero_copy.run_batched(
         smoke=args.smoke or args.quick)
 
     print("== section 0c: host transfer matrix ==", flush=True)

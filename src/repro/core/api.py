@@ -40,6 +40,7 @@ from repro.core.header import ChannelEvent, Negotiation, new_session_id
 from repro.core.session import (
     CTRL_CHANNEL,
     DEFAULT_BLOCK,
+    MAX_BATCH_FRAMES,
     ServerSession,
     SessionError,
     SessionStats,
@@ -152,7 +153,8 @@ class XdfsServer:
         self.stats: Dict[str, int] = {
             "sessions": 0, "sessions_closed": 0, "negotiations": 0,
             "files": 0, "bytes": 0, "eofr_frames": 0, "eoft_frames": 0,
-            "writev_calls": 0, "splice_bytes": 0,
+            "writev_calls": 0, "splice_bytes": 0, "recv_calls": 0,
+            "splice_autodisables": 0,
         }
 
     # -- lifecycle ---------------------------------------------------------
@@ -338,6 +340,8 @@ class XdfsServer:
                 self.stats["eoft_frames"] += st.eoft_frames
                 self.stats["writev_calls"] += st.writev_calls
                 self.stats["splice_bytes"] += st.splice_bytes
+                self.stats["recv_calls"] += st.recv_calls
+                self.stats["splice_autodisables"] += st.splice_autodisables
                 self.stats["sessions_closed"] += 1
                 # prune finished threads so a long-lived server stays bounded
                 me = threading.current_thread()
@@ -361,7 +365,7 @@ class XdfsClient:
     def __init__(self, socks: List[socket.socket], session_id: bytes,
                  engine: Engine, n_channels: int, block_size: int,
                  tuning: Optional[SocketTuning] = None,
-                 splice: bool = False):
+                 splice: bool = False, batch_frames: int = 1):
         self.socks = socks
         self.session_id = session_id
         self.engine = engine
@@ -369,6 +373,8 @@ class XdfsClient:
         self.block_size = block_size
         self.tuning = tuning or SocketTuning()
         self.splice = splice  # opt-in kernel-side receive for gets
+        # negotiated syscall-batching ceiling, both directions
+        self.batch_frames = max(1, min(int(batch_frames), MAX_BATCH_FRAMES))
         self.stats: Dict[str, int] = {
             "negotiations": 1, "files": 0, "bytes": 0, "eofr_sent": 0,
         }
@@ -377,6 +383,7 @@ class XdfsClient:
         self._closed = False
         self._broken: Optional[BaseException] = None
         self._recv_pool = None  # RecvBufferPool reused across session gets
+        self._recv_slabs = None  # SlabSet reused across session gets
         self._worker = threading.Thread(
             target=self._drain_ops, name="xdfs-client", daemon=True
         )
@@ -390,13 +397,18 @@ class XdfsClient:
                 block_size: int = DEFAULT_BLOCK,
                 timeout: float = HANDSHAKE_TIMEOUT,
                 tuning: Optional[SocketTuning] = None,
-                splice: bool = False) -> "XdfsClient":
+                splice: bool = False, batch_frames: int = 1) -> "XdfsClient":
         """``tuning`` — negotiated socket knobs (TCP_NODELAY + SO_SNDBUF /
         SO_RCVBUF); carried in the Negotiation so the server applies the
         same values to its side of every channel. ``splice`` — opt this
-        client's downloads into the kernel-side receive fast path."""
+        client's downloads into the kernel-side receive fast path (the
+        autotuner may still switch it off when it measures slower).
+        ``batch_frames`` — negotiated ceiling on frames per scatter-gather
+        syscall batch, BOTH directions (1 = per-frame datapath; actual
+        depth is hill-climbed per channel)."""
         eng = get_engine(engine)
         tuning = tuning or SocketTuning()
+        batch_frames = max(1, min(int(batch_frames), MAX_BATCH_FRAMES))
         session_id = new_session_id()
         socks: List[socket.socket] = []
         try:
@@ -410,7 +422,7 @@ class XdfsClient:
                         session_id, n_channels, block_size, 1 << 20,
                         "", "", file_size=0,
                         so_sndbuf=tuning.sndbuf, so_rcvbuf=tuning.rcvbuf,
-                        so_nodelay=tuning.nodelay,
+                        so_nodelay=tuning.nodelay, batch_frames=batch_frames,
                     ))
         except BaseException:
             for s in socks:
@@ -419,7 +431,7 @@ class XdfsClient:
         for s in socks:
             s.settimeout(None)
         return cls(socks, session_id, eng, n_channels, block_size,
-                   tuning=tuning, splice=splice)
+                   tuning=tuning, splice=splice, batch_frames=batch_frames)
 
     # -- public operations (pipelined) -------------------------------------
 
@@ -544,7 +556,8 @@ class XdfsClient:
         recv_ctrl(ctrl)  # OK, or raises SessionError on EXCEPTION
         source = Source(src, size, self.block_size, data=data)
         try:
-            self.engine.send(self.socks, source, self.session_id, reusable=True)
+            self.engine.send(self.socks, source, self.session_id,
+                             reusable=True, batch_frames=self.batch_frames)
         finally:
             source.close()
         self.stats["files"] += 1
@@ -560,7 +573,7 @@ class XdfsClient:
         _, resp = recv_ctrl(ctrl)
         size = int(resp["size"])
         sink = Sink(dst, size, capture=capture)
-        if self.engine.uses_pool and (
+        if self.engine.uses_pool and self.batch_frames <= 1 and (
             self._recv_pool is None
             or self._recv_pool.block_size != self.block_size
         ):
@@ -570,10 +583,18 @@ class XdfsClient:
             # (pool.slots > n_channels) holds for any channel count
             self._recv_pool = RecvBufferPool(max(32, self.n_channels + 1),
                                              self.block_size)
+        if self.engine.uses_pool and self.batch_frames > 1:
+            from repro.core.engines.base import slab_span
+            from repro.core.ringbuf import SlabSet
+
+            span = slab_span(self.batch_frames, self.block_size)
+            if self._recv_slabs is None or self._recv_slabs.slab_bytes != span:
+                self._recv_slabs = SlabSet(self.n_channels, span)
         try:
             self.engine.receive(
                 self.socks, sink, self.block_size, reusable=True,
                 pool=self._recv_pool, splice=self.splice,
+                batch_frames=self.batch_frames, slabs=self._recv_slabs,
             )
             payload = sink.data if capture else None
         finally:

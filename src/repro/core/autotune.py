@@ -1,0 +1,221 @@
+"""Adaptive datapath autotuning (the ROADMAP "adaptive splice / autotuning"
+item): measured-goodput controllers for the batched frame datapath.
+
+Two knobs are tuned at runtime, both per channel/worker, both from the
+same primitive (compare goodput across measurement windows):
+
+* **batch depth** — how many frames a sender coalesces into one
+  scatter-gather ``sendmsg`` (:class:`ChannelTuner`): a hill-climbing
+  loop over the discrete ``LADDER`` ``(1, 4, 16, 64)`` keeps the depth
+  that measures fastest on THIS path (deep batches win on syscall-bound
+  links, shallow ones when the socket buffer is the bottleneck);
+* **splice vs pool** — whether a receive worker keeps the kernel-side
+  ``os.splice`` path (:class:`SpliceArbiter`): one splice window and one
+  pool window are measured back to back and the faster path wins for the
+  remainder of the session. This replaces the static ``splice=True``
+  always-on behavior — on hosts where splice is slower than the
+  registered-buffer path (gVisor's syscall virtualization is the known
+  case) the session falls back mid-stream instead of paying for the
+  whole transfer.
+
+Controllers take an injectable ``clock`` so tests drive convergence
+deterministically with a fake clock; engines use the default
+``time.perf_counter``.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, Optional, Sequence, Tuple
+
+# The discrete batch-depth ladder senders climb. Depths beyond 64 frames
+# push the iovec toward IOV_MAX (2 entries per frame) for no measured
+# gain; the negotiated batch_frames cap truncates the ladder from above.
+LADDER: Tuple[int, ...] = (1, 4, 16, 64)
+
+# SpliceArbiter phase names (documented in docs/ARCHITECTURE.md; the
+# docs test machine-checks them against these constants)
+SPLICE_TRIAL = "splice_trial"
+POOL_TRIAL = "pool_trial"
+DECIDED = "decided"
+
+
+class HillClimber:
+    """1-D hill climb over a discrete ladder of settings.
+
+    One ``observe(score)`` call per measurement epoch (higher score is
+    better). The climber first walks the ladder to score every
+    neighbor of its path, then settles on the local maximum: each
+    observation refreshes the current rung's exponentially-weighted
+    score and the next position is the best-scoring of {down, stay, up},
+    preferring any still-unexplored neighbor. On a noiseless peaked
+    score function this converges to the peak and stays there.
+    """
+
+    __slots__ = ("ladder", "i", "scores", "_alpha")
+
+    def __init__(self, ladder: Sequence, start_index: Optional[int] = None,
+                 alpha: float = 0.5):
+        assert len(ladder) > 0
+        self.ladder = tuple(ladder)
+        self.i = len(self.ladder) - 1 if start_index is None else start_index
+        self.scores: Dict[int, float] = {}  # rung index -> EWMA score
+        self._alpha = alpha
+
+    @property
+    def value(self):
+        return self.ladder[self.i]
+
+    @property
+    def settled(self) -> bool:
+        """True once every neighbor of the current rung has a score and
+        the current rung is the best of them."""
+        cand = self._candidates()
+        return all(j in self.scores for j in cand) and self._argmax() == self.i
+
+    def _candidates(self):
+        return [j for j in (self.i - 1, self.i, self.i + 1)
+                if 0 <= j < len(self.ladder)]
+
+    def _argmax(self) -> int:
+        return max(self._candidates(), key=lambda j: self.scores[j])
+
+    def observe(self, score: float) -> None:
+        prev = self.scores.get(self.i)
+        self.scores[self.i] = (score if prev is None
+                               else prev + self._alpha * (score - prev))
+        for j in self._candidates():  # explore unscored neighbors first
+            if j not in self.scores:
+                self.i = j
+                return
+        self.i = self._argmax()
+
+
+class ChannelTuner:
+    """Batch-depth controller for one send channel.
+
+    ``depth`` is the number of frames the caller should coalesce into
+    its next ``sendmsg``; ``note(nbytes)`` reports delivered bytes after
+    each batch. Bytes are accumulated into fixed-size measurement
+    windows; each closed window's goodput feeds the hill climb. The
+    ladder is truncated at the negotiated ``batch_frames`` cap, and the
+    climb starts at the cap (the caller asked for batching; the tuner's
+    job is to back off when shallower measures faster).
+    """
+
+    __slots__ = ("window_bytes", "_clock", "_climber", "_t0", "_bytes",
+                 "windows")
+
+    def __init__(self, cap: int = LADDER[-1], window_bytes: int = 2 << 20,
+                 clock: Callable[[], float] = time.perf_counter):
+        # the cap itself is always a rung: a negotiated ceiling between
+        # ladder rungs (e.g. 2, 8, 32) must still be reachable, not
+        # silently rounded down to the next rung (which would disable
+        # batching entirely for caps of 2 and 3)
+        cap = max(1, min(cap, LADDER[-1]))
+        ladder = tuple(d for d in LADDER if d < cap) + (cap,)
+        self.window_bytes = window_bytes
+        self._clock = clock
+        self._climber = HillClimber(ladder)
+        self._t0: Optional[float] = None
+        self._bytes = 0
+        self.windows = 0  # closed measurement windows (observability)
+
+    @property
+    def depth(self) -> int:
+        return self._climber.value
+
+    @property
+    def settled(self) -> bool:
+        return self._climber.settled
+
+    def note(self, nbytes: int) -> None:
+        now = self._clock()
+        if self._t0 is None:  # first note opens the window
+            self._t0 = now
+            self._bytes = nbytes
+            return
+        self._bytes += nbytes
+        if self._bytes < self.window_bytes:
+            return
+        elapsed = max(now - self._t0, 1e-9)
+        self._climber.observe(self._bytes / elapsed)
+        self.windows += 1
+        self._t0 = now
+        self._bytes = 0
+
+
+class SpliceArbiter:
+    """Decides whether a receive worker keeps the kernel-side splice path.
+
+    Phase machine (state in ``.phase``)::
+
+        splice_trial --window--> pool_trial --window--> decided
+
+    Each trial measures goodput over ``window_bytes`` of payload on one
+    path; after both windows the faster path (with ``margin`` hysteresis
+    in splice's favor, so a tie keeps the path the caller opted into)
+    wins for the rest of the session. ``use_splice`` tells the caller
+    which path to run the NEXT block on; ``note(nbytes)`` reports each
+    landed block and returns ``True`` exactly once, on the observation
+    that completes the decision (the caller's hook for counting
+    ``RecvStats.splice_autodisables`` and switching datapaths).
+    ``force_pool()`` records a mechanical splice failure (unsupported /
+    mid-block fallback) — that is a failure, not a measured switch, so
+    it decides without flagging an autodisable.
+    """
+
+    __slots__ = ("window_bytes", "margin", "_clock", "phase", "_t0",
+                 "_bytes", "_splice_goodput", "chose_splice", "measured_switch")
+
+    def __init__(self, window_bytes: int = 4 << 20, margin: float = 0.10,
+                 clock: Callable[[], float] = time.perf_counter):
+        self.window_bytes = window_bytes
+        self.margin = margin
+        self._clock = clock
+        self.phase = SPLICE_TRIAL
+        self._t0: Optional[float] = None
+        self._bytes = 0
+        self._splice_goodput = 0.0
+        self.chose_splice = False
+        self.measured_switch = False  # decided pool over a WORKING splice
+
+    @property
+    def use_splice(self) -> bool:
+        if self.phase == DECIDED:
+            return self.chose_splice
+        return self.phase == SPLICE_TRIAL
+
+    @property
+    def decided(self) -> bool:
+        return self.phase == DECIDED
+
+    def force_pool(self) -> None:
+        self.phase = DECIDED
+        self.chose_splice = False
+
+    def note(self, nbytes: int) -> bool:
+        """Report one landed block. Returns True on the note that makes
+        the decision; False otherwise."""
+        if self.phase == DECIDED:
+            return False
+        now = self._clock()
+        if self._t0 is None:
+            self._t0 = now
+            self._bytes = nbytes
+            return False
+        self._bytes += nbytes
+        if self._bytes < self.window_bytes:
+            return False
+        goodput = self._bytes / max(now - self._t0, 1e-9)
+        self._t0 = None
+        self._bytes = 0
+        if self.phase == SPLICE_TRIAL:
+            self._splice_goodput = goodput
+            self.phase = POOL_TRIAL
+            return False
+        # pool window closed: pick the winner, with hysteresis toward
+        # the splice path the caller explicitly opted into
+        self.phase = DECIDED
+        self.chose_splice = self._splice_goodput * (1.0 + self.margin) >= goodput
+        self.measured_switch = not self.chose_splice
+        return True

@@ -16,7 +16,9 @@ from repro.core.engines.base import (  # noqa: F401
     FrameBuilder,
     RecvStats,
     SendfileUnsupported,
+    SendStats,
     Sink,
+    SlabChannel,
     Source,
     SpliceReceiver,
     SpliceUnsupported,
@@ -25,6 +27,8 @@ from repro.core.engines.base import (  # noqa: F401
     send_all,
     sendfile_all,
     sendmsg_all,
+    sendmsg_batched,
+    slab_span,
 )
 from repro.core.engines.registry import (  # noqa: F401
     Engine,
@@ -42,9 +46,10 @@ from repro.core.engines.mp import mp_receive  # noqa: F401
 
 __all__ = [
     "ACK", "IOV_MAX", "SENDFILE", "SPLICE", "FrameBuilder", "RecvStats",
-    "SendfileUnsupported", "Sink", "Source", "SpliceReceiver",
-    "SpliceUnsupported", "advance_iovec", "recv_exact",
-    "send_all", "sendfile_all", "sendmsg_all",
+    "SendfileUnsupported", "SendStats", "Sink", "SlabChannel", "Source",
+    "SpliceReceiver", "SpliceUnsupported", "advance_iovec", "recv_exact",
+    "send_all", "sendfile_all", "sendmsg_all", "sendmsg_batched",
+    "slab_span",
     "Engine", "UnknownEngineError", "available_engines", "get_engine",
     "register_engine", "mtedp_receive", "event_send", "mt_receive",
     "worker_send", "mp_receive",

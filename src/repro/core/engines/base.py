@@ -23,6 +23,16 @@ Both halves of the datapath are zero-copy:
   (socket -> pipe -> file ``os.splice``), which keeps the payload
   kernel-side entirely; a :class:`SpliceUnsupported` first-call failure
   falls back to the pool path, mirroring the ``sendfile`` pattern.
+
+Both directions additionally batch syscalls when the session negotiates
+``batch_frames > 1``: senders coalesce up to that many frames into one
+scatter-gather ``sendmsg`` (:func:`sendmsg_batched`, exact per-frame
+delivery accounting under partial sends), and receivers drain the socket
+with large slab reads parsed in place by :class:`SlabChannel` — many
+frames per ``recv_into``, committed as ``(offset, view)`` pairs of the
+same slab memory. Actual batch depth is hill-climbed at runtime by
+``core/autotune.py``; the splice opt-in is likewise arbitrated against
+the pool path by measured goodput instead of being static.
 """
 from __future__ import annotations
 
@@ -33,7 +43,13 @@ import socket
 from dataclasses import dataclass
 from typing import List, Optional, Tuple
 
-from repro.core.header import HEADER_SIZE, ChannelEvent, pack_header_into
+from repro.core.header import (
+    HEADER_SIZE,
+    ChannelEvent,
+    ChannelHeader,
+    ProtocolError,
+    pack_header_into,
+)
 
 ACK = b"\x06"
 IOV_MAX = 512
@@ -282,23 +298,244 @@ class SpliceReceiver:
 class FrameBuilder:
     """Packs channel headers into per-channel REUSABLE buffers.
 
-    Safe because a channel has at most one frame in flight: the next header
-    is only packed after the previous frame fully drained. Eliminates the
-    two per-block allocations of the legacy ``hdr.pack() + payload`` path
-    (header bytes + concatenated frame)."""
+    ``depth`` is the number of header buffers per channel: a channel may
+    have at most ``depth`` frames in flight (one for the legacy per-frame
+    senders; the negotiated batch ceiling plus the end frame for the
+    batched ones), and :meth:`header` hands the buffers out round-robin —
+    the next reuse of a buffer only happens after the batch it belonged
+    to fully drained. Eliminates the two per-block allocations of the
+    legacy ``hdr.pack() + payload`` path (header bytes + concatenated
+    frame)."""
 
-    __slots__ = ("session", "_bufs", "_views")
+    __slots__ = ("session", "depth", "_bufs", "_views", "_next")
 
-    def __init__(self, session: bytes, n_channels: int):
+    def __init__(self, session: bytes, n_channels: int, depth: int = 1):
         self.session = session
-        self._bufs = [bytearray(HEADER_SIZE) for _ in range(n_channels)]
-        self._views = [memoryview(b) for b in self._bufs]
+        self.depth = max(1, depth)
+        self._bufs = [[bytearray(HEADER_SIZE) for _ in range(self.depth)]
+                      for _ in range(n_channels)]
+        self._views = [[memoryview(b) for b in row] for row in self._bufs]
+        self._next = [0] * n_channels
 
     def header(self, channel: int, event: ChannelEvent, offset: int,
                length: int, flags: int = 0) -> memoryview:
-        pack_header_into(self._bufs[channel], event, self.session, channel,
-                         offset, length, flags)
-        return self._views[channel]
+        slot = self._next[channel]
+        self._next[channel] = (slot + 1) % self.depth
+        pack_header_into(self._bufs[channel][slot], event, self.session,
+                         channel, offset, length, flags)
+        return self._views[channel][slot]
+
+
+@dataclass
+class SendStats:
+    """Delivery accounting for the batched send path. ``bytes`` counts
+    bytes the kernel actually accepted (partial ``sendmsg`` returns
+    included as-is); ``frames`` counts frames whose LAST byte has been
+    delivered — never the raw iovec sum of an in-flight batch."""
+
+    bytes: int = 0
+    syscalls: int = 0  # sendmsg calls issued
+    frames: int = 0  # frames fully delivered
+    batches: int = 0  # batched sendmsg groups completed
+
+
+def sendmsg_batched(sock: socket.socket, views, frame_sizes,
+                    stats: Optional[SendStats] = None) -> int:
+    """Scatter-gather send of MANY frames in one iovec
+    (``[hdr0, blk0, hdr1, blk1, ...]``) on a blocking socket; partial
+    sends resume by re-slicing (:func:`advance_iovec`). ``frame_sizes``
+    holds each frame's on-wire size (header + payload); per-frame stats
+    credit a frame only once the cumulative delivered byte count crosses
+    its end boundary, so a short ``sendmsg`` under a tiny SO_SNDBUF never
+    over-reports delivery. Returns total bytes sent."""
+    iov = [v if isinstance(v, memoryview) else memoryview(v) for v in views]
+    iov = [v for v in iov if len(v)]
+    sent = 0
+    boundary = 0  # cumulative wire size up to the next uncredited frame
+    fi = 0
+    while iov:
+        n = sock.sendmsg(iov)
+        sent += n
+        if stats is not None:
+            stats.syscalls += 1
+            stats.bytes += n
+            while fi < len(frame_sizes) and sent >= boundary + frame_sizes[fi]:
+                boundary += frame_sizes[fi]
+                fi += 1
+                stats.frames += 1
+        advance_iovec(iov, n)
+    if stats is not None:
+        stats.batches += 1
+    return sent
+
+
+# ---------------------------------------------------------------------------
+# batched (slab) receive machinery
+# ---------------------------------------------------------------------------
+
+
+MAX_SLAB_BYTES = 8 << 20  # per-channel slab memory ceiling
+
+
+def slab_span(batch_frames: int, block_size: int) -> int:
+    """Slab size for a channel receiving up to ``batch_frames``-deep
+    batches of ``block_size`` blocks: ideally one full batch plus a
+    trailing header fits, clamped to a sane memory ceiling (a smaller
+    slab stays CORRECT — frames spanning the slab edge are committed as
+    partial payload views — it just flushes more often)."""
+    want = batch_frames * (HEADER_SIZE + block_size) + HEADER_SIZE
+    return max(4 * HEADER_SIZE, min(want, MAX_SLAB_BYTES))
+
+
+class SlabChannel:
+    """Batched receive parser for one channel: ONE large ``recv_into``
+    may land MANY frames in the slab; headers are parsed in place and
+    payload ``(file_offset, view)`` pairs — views of the SAME slab
+    memory — accumulate in ``pending`` for a vectored write-out.
+
+    Frame boundaries land anywhere relative to reads: a read may end
+    mid-header (the fragment waits for more bytes) or mid-payload (the
+    prefix is committed immediately as a partial ``(offset, view)`` pair
+    and the remainder continues in later reads, possibly after a slab
+    reset). The zero-materialization invariant holds because payload
+    bytes are consumed the moment they are parsed — the only bytes ever
+    moved by :meth:`compact` are a sub-header tail (< 48 bytes), which is
+    not a payload-sized copy.
+
+    Caller contract: when ``free_space()`` hits 0 (or on any flush
+    policy), write ``take_pending()`` out, then :meth:`compact` — views
+    in ``pending`` reference slab memory and must land before the slab
+    is reused. ``end_event`` is set when the channel's EOFR/EOFT frame
+    is parsed; no stream bytes follow it (the ACK exchange gates the
+    session's next file).
+    """
+
+    __slots__ = ("mem", "block_size", "filled", "parsed", "pending",
+                 "pending_bytes", "hdr", "payload_left", "payload_off",
+                 "end_event", "recv_calls", "bytes", "blocks")
+
+    def __init__(self, slab, block_size: int):
+        # ``slab`` is a ringbuf.RecvSlab (or anything with a ``mem`` view)
+        self.mem: memoryview = slab.mem
+        self.block_size = block_size
+        self.filled = 0
+        self.parsed = 0
+        self.pending: List[Tuple[int, memoryview]] = []
+        self.pending_bytes = 0
+        self.hdr: Optional[ChannelHeader] = None
+        self.payload_left = 0
+        self.payload_off = 0
+        self.end_event: Optional[ChannelEvent] = None
+        self.recv_calls = 0
+        self.bytes = 0  # payload bytes landed
+        self.blocks = 0  # frames fully landed
+
+    def free_space(self) -> int:
+        return len(self.mem) - self.filled
+
+    def receive_once(self, sock: socket.socket) -> int:
+        """One ``recv_into`` into the slab's free tail, then parse
+        everything that landed. Returns the number of frames COMPLETED by
+        this read (the caller's FSM/stat hook). Raises ``ConnectionError``
+        on EOF and propagates ``BlockingIOError`` untouched (nonblocking
+        callers use it to yield)."""
+        r = sock.recv_into(self.mem[self.filled:])
+        if r == 0:
+            raise ConnectionError("peer closed mid-stream")
+        self.recv_calls += 1
+        self.filled += r
+        return self._parse()
+
+    def _parse(self) -> int:
+        done = 0
+        while self.end_event is None:
+            if self.payload_left:
+                avail = self.filled - self.parsed
+                if not avail:
+                    break
+                take = min(self.payload_left, avail)
+                self.pending.append(
+                    (self.payload_off, self.mem[self.parsed:self.parsed + take])
+                )
+                self.pending_bytes += take
+                self.parsed += take
+                self.payload_off += take
+                self.payload_left -= take
+                self.bytes += take
+                if self.payload_left:
+                    break  # rest of this frame arrives in a later read
+                self.hdr = None
+                self.blocks += 1
+                done += 1
+                continue
+            if self.filled - self.parsed < HEADER_SIZE:
+                break  # partial header: wait for more bytes
+            hdr = ChannelHeader.unpack(
+                self.mem[self.parsed:self.parsed + HEADER_SIZE])
+            self.parsed += HEADER_SIZE
+            if hdr.event in END_EVENTS:
+                self.end_event = hdr.event
+                break
+            if hdr.length > self.block_size:
+                raise ProtocolError(
+                    f"block of {hdr.length} bytes exceeds negotiated "
+                    f"block_size {self.block_size}"
+                )
+            self.hdr = hdr
+            self.payload_left = hdr.length
+            self.payload_off = hdr.offset
+        return done
+
+    def take_pending(self) -> List[Tuple[int, memoryview]]:
+        out = self.pending
+        self.pending = []
+        self.pending_bytes = 0
+        return out
+
+    def compact(self) -> None:
+        """Reclaim the parsed region. Only legal once ``pending`` has been
+        taken AND written out (its views alias slab memory). The unparsed
+        tail is always sub-header sized — payload bytes never sit
+        unparsed — so this move is never a payload copy."""
+        assert not self.pending, "flush pending views before compacting"
+        tail = self.filled - self.parsed
+        assert tail < HEADER_SIZE
+        if tail:
+            self.mem[0:tail] = self.mem[self.parsed:self.filled]
+        self.filled = tail
+        self.parsed = 0
+
+    def seed(self, header_tail: bytes = b"", payload_off: int = 0,
+             payload_left: int = 0) -> None:
+        """Enter slab mode mid-stream (the mirror of :meth:`handoff`):
+        ``header_tail`` pre-loads a sub-header fragment already read on
+        another path; a nonzero ``payload_left`` resumes a frame whose
+        prefix landed elsewhere (the remainder continues at file offset
+        ``payload_off``). The two are mutually exclusive — a parser mid-
+        payload never holds header bytes."""
+        assert self.filled == 0 and self.payload_left == 0
+        assert not (header_tail and payload_left)
+        if header_tail:
+            self.mem[:len(header_tail)] = header_tail
+            self.filled = len(header_tail)
+        self.payload_off = payload_off
+        self.payload_left = payload_left
+
+    def handoff(self) -> Tuple[bytes, Optional[ChannelHeader], int, int]:
+        """Leave slab mode at the current parse position (a datapath
+        switch, e.g. the splice arbiter choosing splice back): returns
+        ``(header_tail, in_progress_hdr, payload_off, payload_left)``.
+        ``header_tail`` is the sub-header fragment already read (seed the
+        per-frame header buffer with it); a non-None header means the
+        current frame still owes ``payload_left`` bytes at file offset
+        ``payload_off``. Pending must have been taken/flushed first."""
+        assert not self.pending, "flush pending views before handoff"
+        tail = bytes(self.mem[self.parsed:self.filled])
+        hdr, off, left = self.hdr, self.payload_off, self.payload_left
+        self.hdr = None
+        self.payload_left = 0
+        self.filled = self.parsed = 0
+        return tail, hdr, off, left
 
 
 # ---------------------------------------------------------------------------
@@ -505,3 +742,7 @@ class RecvStats:
     eofr_frames: int = 0  # EOFR end-frames seen (channel stays reusable)
     eoft_frames: int = 0  # EOFT end-frames seen (session terminates)
     splice_bytes: int = 0  # payload bytes that stayed kernel-side (splice)
+    recv_calls: int = 0  # slab-path recv_into syscalls (0 on legacy paths)
+    # times the autotuner switched a WORKING splice path off because it
+    # measured slower than the pool path (mechanical fallbacks not counted)
+    splice_autodisables: int = 0

@@ -5,13 +5,20 @@ pwrite at scattered offsets — no coalescing, no shared state. Each forked
 child pipes its byte/end-frame counts back to the parent so ``RecvStats``
 is accurate across the process boundary.
 
-Pool-slot lifecycle (receive): each child owns a small private
-``RecvBufferPool`` (pools cannot be shared across forks); per frame it
-``acquire``s a slot, ``recv_into``s the slot view, ``pwrite``s the
-trimmed view at the frame's scattered offset — the GridFTP baseline keeps
-its one-write-per-block seek behavior deliberately — and ``release``s
-the slot. ``use_splice`` moves payloads kernel-side instead
-(socket -> pipe -> file), with the standard first-call fallback.
+Pool-slot lifecycle (receive, ``batch_frames == 1``): each child owns a
+small private ``RecvBufferPool`` (pools cannot be shared across forks);
+per frame it ``acquire``s a slot, ``recv_into``s the slot view,
+``pwrite``s the trimmed view at the frame's scattered offset — the
+GridFTP baseline keeps its one-write-per-block seek behavior
+deliberately — and ``release``s the slot. Batched mode gives each child
+a private ``RecvSlab`` instead: one ``recv_into`` spans many frames and
+every parsed ``(offset, view)`` fragment still goes out through its own
+scattered ``pwrite``.
+
+``use_splice`` starts the kernel-side socket -> pipe -> file path; like
+the MT engine it is ADAPTIVE — a per-child ``SpliceArbiter`` measures a
+splice window against a pool window and the faster path keeps the
+stream (a measured switch is counted in ``splice_autodisables``).
 """
 from __future__ import annotations
 
@@ -20,17 +27,20 @@ import os
 import socket
 from typing import List
 
+from repro.core.autotune import SpliceArbiter
 from repro.core.engines.base import (
     ACK,
     END_EVENTS,
     SPLICE,
     RecvStats,
     Sink,
+    SlabChannel,
     Source,
     SpliceReceiver,
     SpliceUnsupported,
     recv_exact,
     send_all,
+    slab_span,
 )
 from repro.core.engines.mt import worker_send
 from repro.core.engines.registry import Engine, register_engine
@@ -42,23 +52,156 @@ from repro.core.header import (
 )
 
 
+def _child_receive(s, wsink: Sink, block_size: int, use_splice: bool,
+                   batch_frames: int, arbiter_factory) -> dict:
+    """One forked channel's receive loop; returns its counters."""
+    from repro.core.ringbuf import RecvBufferPool, RecvSlab
+
+    child = {"bytes": 0, "eofr": 0, "eoft": 0, "splice": 0,
+             "recv_calls": 0, "autodisables": 0}
+    hdr_buf = memoryview(bytearray(HEADER_SIZE))
+    batched = batch_frames > 1
+    sc = (SlabChannel(RecvSlab(slab_span(batch_frames, block_size)),
+                      block_size) if batched else None)
+    pool = None if batched else RecvBufferPool(2, block_size)
+    spl = arb = None
+    if use_splice and SPLICE and wsink.file_backed:
+        try:
+            spl = SpliceReceiver()
+            arb = (arbiter_factory() if arbiter_factory is not None
+                   else SpliceArbiter())
+        except SpliceUnsupported:
+            spl = None
+
+    def note(nbytes):
+        if arb is not None and arb.note(nbytes):
+            if arb.measured_switch and spl is not None and spl.ok:
+                child["autodisables"] += 1
+
+    def end_frame(event) -> None:
+        child["eofr" if event == ChannelEvent.EOFR else "eoft"] += 1
+
+    def flush_slab():
+        for off, mv in sc.take_pending():
+            # GridFTP-faithful: every fragment is its own scattered pwrite
+            wsink.write_at(off, mv)
+        sc.compact()
+
+    try:
+        carry, resume = b"", None
+        while True:
+            if arb is not None and arb.use_splice:
+                # ---- per-frame kernel-side phase ----
+                if resume is not None:
+                    off, left = resume
+                    child["splice"] += spl.splice_block(
+                        s, wsink.fileno(), off, left)
+                    child["bytes"] += left
+                    note(left)
+                    resume = None
+                    if not spl.ok:
+                        arb.force_pool()
+                        continue
+                if carry:
+                    hdr_buf[:len(carry)] = carry
+                    recv_exact(s, HEADER_SIZE - len(carry),
+                               hdr_buf[len(carry):])
+                    carry = b""
+                else:
+                    recv_exact(s, HEADER_SIZE, hdr_buf)
+                hdr = ChannelHeader.unpack(hdr_buf)
+                if hdr.event in END_EVENTS:
+                    end_frame(hdr.event)
+                    return child
+                if hdr.length > block_size:
+                    raise ProtocolError(
+                        f"block of {hdr.length} bytes exceeds negotiated "
+                        f"block_size {block_size}"
+                    )
+                try:
+                    child["splice"] += spl.splice_block(
+                        s, wsink.fileno(), hdr.offset, hdr.length)
+                except SpliceUnsupported:
+                    arb.force_pool()  # nothing consumed; pool path resumes
+                    resume = (hdr.offset, hdr.length)
+                    continue
+                child["bytes"] += hdr.length
+                note(hdr.length)
+                if not spl.ok:
+                    arb.force_pool()
+            elif batched:
+                # ---- slab phase: many frames per recv_into ----
+                sc.seed(carry, *(resume or (0, 0)))
+                carry, resume = b"", None
+                last = sc.bytes
+                while True:
+                    if sc.free_space() == 0:
+                        flush_slab()
+                    sc.receive_once(s)
+                    note(sc.bytes - last)
+                    last = sc.bytes
+                    if sc.end_event is not None:
+                        flush_slab()
+                        end_frame(sc.end_event)
+                        child["bytes"] += sc.bytes
+                        child["recv_calls"] += sc.recv_calls
+                        return child
+                    if arb is not None and arb.decided and arb.chose_splice:
+                        flush_slab()
+                        tail, _hdr, off, left = sc.handoff()
+                        carry = tail
+                        resume = (off, left) if left else None
+                        child["bytes"] += sc.bytes
+                        child["recv_calls"] += sc.recv_calls
+                        sc.bytes = sc.recv_calls = 0
+                        break
+            else:
+                # ---- per-frame private-pool phase ----
+                if resume is not None:
+                    off, left = resume
+                    slot = pool.acquire()
+                    recv_exact(s, left, pool.view(slot))
+                    wsink.write_at(off, pool.view(slot)[:left])
+                    pool.release(slot)
+                    child["bytes"] += left
+                    note(left)
+                    resume = None
+                recv_exact(s, HEADER_SIZE, hdr_buf)
+                hdr = ChannelHeader.unpack(hdr_buf)
+                if hdr.event in END_EVENTS:
+                    end_frame(hdr.event)
+                    return child
+                if hdr.length > block_size:
+                    raise ProtocolError(
+                        f"block of {hdr.length} bytes exceeds negotiated "
+                        f"block_size {block_size}"
+                    )
+                if arb is not None and arb.use_splice:
+                    resume = (hdr.offset, hdr.length)
+                    continue  # arbiter flipped back mid-stream
+                slot = pool.acquire()
+                recv_exact(s, hdr.length, pool.view(slot))
+                wsink.write_at(hdr.offset, pool.view(slot)[: hdr.length])
+                pool.release(slot)
+                child["bytes"] += hdr.length
+                note(hdr.length)
+    finally:
+        if spl is not None:
+            spl.close()
+
+
 def mp_receive(
     socks: List[socket.socket],
     sink: Sink,
     block_size: int,
     reusable: bool = False,
     use_splice: bool = False,
+    batch_frames: int = 1,
+    arbiter_factory=None,
 ) -> RecvStats:
     """MP model (GridFTP-like): fork per channel, n file handles, per-block
     pwrite at scattered offsets — no coalescing, no shared state. Per-child
-    counters travel back over a pipe and are summed into the parent stats.
-
-    Each child receives into slots of a small private ``RecvBufferPool``
-    (header parsed in place, payload ``recv_into`` the slot view, trimmed
-    view handed to ``pwrite``); ``use_splice`` keeps payloads kernel-side
-    entirely via socket -> pipe -> file ``os.splice``."""
-    from repro.core.ringbuf import RecvBufferPool
-
+    counters travel back over a pipe and are summed into the parent stats."""
     if sink.capture:
         raise ValueError("mp engine cannot receive into a capture sink "
                          "(forked children do not share parent memory)")
@@ -71,45 +214,8 @@ def mp_receive(
             os.close(r_cnt)
             try:
                 wsink = sink.open_worker()
-                # one header buffer + a tiny private recv pool per child,
-                # reused for every frame (zero per-frame allocation)
-                hdr_buf = memoryview(bytearray(HEADER_SIZE))
-                pool = RecvBufferPool(2, block_size)
-                spl = None
-                use_spl = use_splice and SPLICE and wsink.file_backed
-                if use_spl:
-                    try:
-                        spl = SpliceReceiver()
-                    except SpliceUnsupported:
-                        use_spl = False
-                child = {"bytes": 0, "eofr": 0, "eoft": 0, "splice": 0}
-                while True:
-                    recv_exact(s, HEADER_SIZE, hdr_buf)
-                    hdr = ChannelHeader.unpack(hdr_buf)
-                    if hdr.event in END_EVENTS:
-                        key = "eofr" if hdr.event == ChannelEvent.EOFR else "eoft"
-                        child[key] += 1
-                        break
-                    if hdr.length > block_size:
-                        raise ProtocolError(
-                            f"block of {hdr.length} bytes exceeds "
-                            f"negotiated block_size {block_size}"
-                        )
-                    if use_spl:
-                        try:
-                            child["splice"] += spl.splice_block(
-                                s, wsink.fileno(), hdr.offset, hdr.length)
-                            child["bytes"] += hdr.length
-                            if not spl.ok:
-                                use_spl = False
-                            continue
-                        except SpliceUnsupported:
-                            use_spl = False
-                    slot = pool.acquire()
-                    recv_exact(s, hdr.length, pool.view(slot))
-                    wsink.write_at(hdr.offset, pool.view(slot)[: hdr.length])
-                    pool.release(slot)
-                    child["bytes"] += hdr.length
+                child = _child_receive(s, wsink, block_size, use_splice,
+                                       batch_frames, arbiter_factory)
                 wsink.close()
                 os.write(w_cnt, json.dumps(child).encode())
                 os.close(w_cnt)
@@ -130,18 +236,21 @@ def mp_receive(
         stats.eofr_frames += child["eofr"]
         stats.eoft_frames += child["eoft"]
         stats.splice_bytes += child.get("splice", 0)
+        stats.recv_calls += child.get("recv_calls", 0)
+        stats.splice_autodisables += child.get("autodisables", 0)
     return stats
 
 
 def _receive(socks, sink, block_size, *, pool_slots=32, fsm=None,
-             conformance=True, reusable=False, pool=None, splice=False):
+             conformance=True, reusable=False, pool=None, splice=False,
+             batch_frames=1, slabs=None):
     return mp_receive(socks, sink, block_size, reusable=reusable,
-                      use_splice=splice)
+                      use_splice=splice, batch_frames=batch_frames)
 
 
-def _send(socks, source, session, *, reusable=False):
+def _send(socks, source, session, *, reusable=False, batch_frames=1):
     return worker_send(socks, source, session, use_processes=True,
-                       reusable=reusable)
+                       reusable=reusable, batch_frames=batch_frames)
 
 
 ENGINE = register_engine(Engine(

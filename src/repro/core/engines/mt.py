@@ -1,37 +1,53 @@
 """MT — multi-threaded engine (paper §2.5.2).
 
 Concurrency model: one blocking thread per channel plus one disk thread,
-all sharing a pessimistically locked receive pool (the paper's MT
-synchronization cost lives in those per-block lock handoffs). The sender
-is a blocking worker thread per channel, each with a private fd reading
-its stripe.
+all sharing a pessimistically locked receive structure (the paper's MT
+synchronization cost lives in those lock handoffs). The sender is a
+blocking worker thread per channel, each with a private fd reading its
+stripe.
 
-Pool-slot lifecycle (receive): each channel thread parses headers in
-place from its reusable buffer, ``acquire``s a slot from the shared
-``LockedRecvPool`` (blocking when the pool is exhausted — backpressure),
-``recv_into``s the slot view, and ``commit``s; the single disk thread
-``drain_wait``s the committed backlog, hands the trimmed pool views to
-one coalesced ``os.pwritev``, and ``release``s the slots. With
-``use_splice`` and a file-backed sink, channel threads instead move each
-payload kernel-side (socket -> pipe -> file ``os.splice``), bypassing the
-pool and the disk thread entirely; a first-call ``SpliceUnsupported``
-drops that channel back to the pool path.
+Pool-slot lifecycle (receive, ``batch_frames == 1``): each channel
+thread parses headers in place from its reusable buffer, ``acquire``s a
+slot from the shared ``LockedRecvPool`` (blocking when the pool is
+exhausted — backpressure), ``recv_into``s the slot view, and
+``commit``s; the single disk thread ``drain_wait``s the committed
+backlog, hands the trimmed pool views to one coalesced ``os.pwritev``,
+and ``release``s the slots.
+
+Batched mode (``batch_frames > 1``): each channel thread owns a
+registered ``RecvSlab`` and drains its socket with large multi-frame
+``recv_into`` reads (``SlabChannel`` parses in place); full slabs are
+handed to the disk thread through a ``LockedBatchRelay`` — the channel
+thread blocks until the batch is written, so slab memory is never
+reused under an in-flight ``pwritev`` (the batched descendant of the
+per-block lock handoff).
+
+Splice is ADAPTIVE: ``use_splice`` starts the kernel-side
+socket->pipe->file path, but a ``SpliceArbiter`` (core/autotune.py)
+measures one splice window against one pool/slab window and the faster
+path wins the rest of the stream; a measured switch off a working
+splice is counted in ``RecvStats.splice_autodisables``. Mechanical
+failures (``SpliceUnsupported``, mid-block recovery) still fall back
+exactly as before.
 """
 from __future__ import annotations
 
 import socket
 import threading
-from typing import List
+from typing import List, Optional
 
+from repro.core.autotune import ChannelTuner, SpliceArbiter
 from repro.core.engines.base import (
     ACK,
     END_EVENTS,
     MSG_MORE,
     SENDFILE,
     SPLICE,
+    FrameBuilder,
     RecvStats,
     SendfileUnsupported,
     Sink,
+    SlabChannel,
     Source,
     SpliceReceiver,
     SpliceUnsupported,
@@ -39,6 +55,8 @@ from repro.core.engines.base import (
     send_all,
     sendfile_all,
     sendmsg_all,
+    sendmsg_batched,
+    slab_span,
 )
 from repro.core.engines.registry import Engine, register_engine
 from repro.core.header import (
@@ -46,8 +64,12 @@ from repro.core.header import (
     ChannelEvent,
     ChannelHeader,
     ProtocolError,
-    pack_header_into,
 )
+
+# sentinel results of one receive phase (see _rx_channel)
+_END = "end"  # the channel's end frame landed; stream done
+_TO_POOL = "pool"  # arbiter moved off splice; continue on the pool path
+_TO_SPLICE = "splice"  # arbiter chose splice back; resume per-frame
 
 
 def mt_receive(
@@ -58,83 +80,224 @@ def mt_receive(
     reusable: bool = False,
     pool=None,
     use_splice: bool = False,
+    batch_frames: int = 1,
+    slabs=None,
+    arbiter_factory=None,
 ) -> RecvStats:
-    """MT model: thread per channel + locked shared recv pool + disk thread.
+    """MT model: thread per channel + locked shared handoff + disk thread.
 
-    Zero-copy receive: each channel thread parses headers in place from
-    its one reusable buffer and ``recv_into``s payloads straight into
-    slots of the shared registered ``RecvBufferPool`` (``pool``, reusable
-    across a session's files); the disk thread drains committed slots
-    with coalesced ``pwritev`` of the SAME pool memory. The per-block
-    acquire/commit lock handoffs are the MT model's deliberate
-    synchronization cost. ``use_splice`` moves payloads kernel-side
-    instead (file-backed sinks on Linux; opt-in). Channel-thread failures
-    are re-raised in the caller, not swallowed."""
-    from repro.core.ringbuf import LockedRecvPool, RecvBufferPool
+    Zero-copy receive either way: per-frame mode lands payloads in
+    shared ``RecvBufferPool`` slots, batched mode in per-channel slabs;
+    the disk thread writes the SAME memory out with coalesced
+    ``pwritev``. ``use_splice`` opts into the kernel-side path under the
+    goodput arbiter; ``arbiter_factory`` overrides arbiter construction
+    (tests script deterministic decisions through it). Channel-thread
+    failures are re-raised in the caller, not swallowed."""
+    from repro.core.ringbuf import (
+        LockedBatchRelay,
+        LockedRecvPool,
+        RecvBufferPool,
+        SlabSet,
+    )
 
     stats = RecvStats()
-    if pool is None or pool.block_size != block_size:
-        pool = RecvBufferPool(ring_slots, block_size)
-    shared = LockedRecvPool(pool)
+    batched = batch_frames > 1
+    n = len(socks)
+    shared = relay = None
+    if batched:
+        span = slab_span(batch_frames, block_size)
+        if slabs is None or slabs.n_channels < n or slabs.slab_bytes != span:
+            slabs = SlabSet(n, span)
+        relay = LockedBatchRelay()
+    else:
+        if pool is None or pool.block_size != block_size:
+            pool = RecvBufferPool(ring_slots, block_size)
+        shared = LockedRecvPool(pool)
     lock = threading.Lock()
     errors: List[BaseException] = []
+    splice_ok = use_splice and SPLICE and sink.file_backed
 
-    def rx(sock):
+    def fail(e: BaseException) -> None:
+        with lock:
+            errors.append(e)
+        if shared is not None:
+            shared.close()  # unblock siblings parked in acquire
+        if relay is not None:
+            relay.close()  # unblock siblings parked in submit_wait
+        for s in socks:  # unblock sibling channel threads mid-recv
+            try:
+                s.shutdown(socket.SHUT_RDWR)
+            except OSError:
+                pass
+
+    def note_arbiter(arb: Optional[SpliceArbiter], spl, nbytes: int) -> None:
+        """Feed the arbiter and count a measured autodisable exactly once."""
+        if arb is not None and arb.note(nbytes):
+            if arb.measured_switch and spl is not None and spl.ok:
+                with lock:
+                    stats.splice_autodisables += 1
+
+    def splice_phase(sock, spl, arb, hdr_buf, resume):
+        """Per-frame kernel-side receive while the arbiter favors splice.
+        Returns (_END, None) or (_TO_POOL, resume') where resume' is a
+        frame whose payload still needs ``(offset, length)`` on the pool
+        path (a first-call SpliceUnsupported consumed nothing)."""
+        if resume is not None:  # finish a frame handed over mid-payload
+            off, left = resume
+            n_k = spl.splice_block(sock, sink.fileno(), off, left)
+            with lock:
+                stats.bytes += left
+                stats.splice_bytes += n_k
+            note_arbiter(arb, spl, left)
+            if not spl.ok:
+                arb.force_pool()
+        while arb.use_splice:
+            recv_exact(sock, HEADER_SIZE, hdr_buf)
+            hdr = ChannelHeader.unpack(hdr_buf)
+            if hdr.event in END_EVENTS:
+                with lock:
+                    if hdr.event == ChannelEvent.EOFR:
+                        stats.eofr_frames += 1
+                    else:
+                        stats.eoft_frames += 1
+                return _END, None
+            if hdr.length > block_size:
+                raise ProtocolError(
+                    f"block of {hdr.length} bytes exceeds negotiated "
+                    f"block_size {block_size}"
+                )
+            try:
+                n_k = spl.splice_block(sock, sink.fileno(), hdr.offset,
+                                       hdr.length)
+            except SpliceUnsupported:
+                # nothing consumed: the whole payload moves to the pool path
+                arb.force_pool()
+                return _TO_POOL, (hdr.offset, hdr.length)
+            with lock:
+                stats.bytes += hdr.length
+                stats.splice_bytes += n_k
+            note_arbiter(arb, spl, hdr.length)
+            if not spl.ok:  # mid-block recovery: stop splicing
+                arb.force_pool()
+        return _TO_POOL, None
+
+    def pool_phase(sock, arb, spl, hdr_buf, resume):
+        """Per-frame shared-pool receive (``batch_frames == 1``). Runs to
+        the end frame unless the arbiter picks splice back mid-trial."""
+        if resume is not None:
+            off, left = resume
+            slot = shared.acquire()
+            recv_exact(sock, left, shared.view(slot))
+            shared.commit(slot, off, left)
+            with lock:
+                stats.bytes += left
+            note_arbiter(arb, spl, left)
+        while True:
+            if arb is not None and arb.use_splice:
+                return _TO_SPLICE, None
+            recv_exact(sock, HEADER_SIZE, hdr_buf)
+            hdr = ChannelHeader.unpack(hdr_buf)
+            if hdr.event in END_EVENTS:
+                with lock:
+                    if hdr.event == ChannelEvent.EOFR:
+                        stats.eofr_frames += 1
+                    else:
+                        stats.eoft_frames += 1
+                return _END, None
+            if hdr.length > block_size:
+                raise ProtocolError(
+                    f"block of {hdr.length} bytes exceeds negotiated "
+                    f"block_size {block_size}"
+                )
+            slot = shared.acquire()  # blocks when exhausted: backpressure
+            recv_exact(sock, hdr.length, shared.view(slot))
+            shared.commit(slot, hdr.offset, hdr.length)
+            with lock:
+                stats.bytes += hdr.length
+            note_arbiter(arb, spl, hdr.length)
+
+    def slab_phase(sock, sc: SlabChannel, arb, spl, carry, resume):
+        """Batched slab receive: large multi-frame reads, full slabs
+        relayed to the disk thread. Runs to the end frame unless the
+        arbiter picks splice back mid-trial (slab state is then handed
+        off at the current parse position)."""
+        sc.seed(carry, *(resume or (0, 0)))
+        last_bytes = sc.bytes
+        while True:
+            if sc.free_space() == 0:
+                relay.submit_wait(sc.take_pending())
+                sc.compact()
+            sc.receive_once(sock)
+            note_arbiter(arb, spl, sc.bytes - last_bytes)
+            last_bytes = sc.bytes
+            if sc.end_event is not None:
+                relay.submit_wait(sc.take_pending())
+                with lock:
+                    if sc.end_event == ChannelEvent.EOFR:
+                        stats.eofr_frames += 1
+                    else:
+                        stats.eoft_frames += 1
+                return _END, b"", None
+            if arb is not None and arb.decided and arb.chose_splice:
+                relay.submit_wait(sc.take_pending())
+                tail, hdr, off, left = sc.handoff()
+                return _TO_SPLICE, tail, ((off, left) if left else None)
+
+    def rx(i: int, sock):
         spl = None
         try:
-            use_spl = use_splice and SPLICE and sink.file_backed
-            if use_spl:
+            arb = None
+            if splice_ok:
                 try:
                     spl = SpliceReceiver()
+                    arb = (arbiter_factory() if arbiter_factory is not None
+                           else SpliceArbiter())
                 except SpliceUnsupported:
-                    use_spl = False
+                    spl = None
             hdr_buf = memoryview(bytearray(HEADER_SIZE))
+            sc = SlabChannel(slabs.slab(i), block_size) if batched else None
+            carry, resume = b"", None
             while True:
-                recv_exact(sock, HEADER_SIZE, hdr_buf)
-                hdr = ChannelHeader.unpack(hdr_buf)
-                if hdr.event in END_EVENTS:
-                    with lock:
-                        if hdr.event == ChannelEvent.EOFR:
-                            stats.eofr_frames += 1
-                        else:
-                            stats.eoft_frames += 1
-                    return
-                if hdr.length > block_size:
-                    raise ProtocolError(
-                        f"block of {hdr.length} bytes exceeds negotiated "
-                        f"block_size {block_size}"
-                    )
-                if use_spl:
-                    try:
-                        n_k = spl.splice_block(sock, sink.fileno(),
-                                               hdr.offset, hdr.length)
-                        with lock:
-                            stats.bytes += hdr.length
-                            stats.splice_bytes += n_k
-                        if not spl.ok:  # mid-block recovery: stop splicing
-                            use_spl = False
-                        continue
-                    except SpliceUnsupported:
-                        use_spl = False  # nothing consumed; pool path below
-                slot = shared.acquire()  # blocks when exhausted: backpressure
-                recv_exact(sock, hdr.length, shared.view(slot))
-                shared.commit(slot, hdr.offset, hdr.length)
+                if arb is not None and arb.use_splice:
+                    if carry:  # sub-header fragment from a slab handoff
+                        hdr_buf[:len(carry)] = carry
+                        recv_exact(sock, HEADER_SIZE - len(carry),
+                                   hdr_buf[len(carry):])
+                        hdr = ChannelHeader.unpack(hdr_buf)
+                        carry = b""
+                        if hdr.event in END_EVENTS:
+                            with lock:
+                                if hdr.event == ChannelEvent.EOFR:
+                                    stats.eofr_frames += 1
+                                else:
+                                    stats.eoft_frames += 1
+                            break
+                        if hdr.length > block_size:
+                            raise ProtocolError(
+                                f"block of {hdr.length} bytes exceeds "
+                                f"negotiated block_size {block_size}"
+                            )
+                        resume = (hdr.offset, hdr.length)
+                    sig, resume = splice_phase(sock, spl, arb, hdr_buf,
+                                               resume)
+                elif batched:
+                    sig, carry, resume = slab_phase(sock, sc, arb, spl,
+                                                    carry, resume)
+                else:
+                    sig, resume = pool_phase(sock, arb, spl, hdr_buf, resume)
+                if sig == _END:
+                    break
+            if sc is not None:
                 with lock:
-                    stats.bytes += hdr.length
+                    stats.bytes += sc.bytes
+                    stats.recv_calls += sc.recv_calls
         except BaseException as e:  # noqa: BLE001 - surfaced after join
-            with lock:
-                errors.append(e)
-            shared.close()  # unblock siblings parked in acquire
-            for s in socks:  # unblock sibling channel threads mid-recv
-                try:
-                    s.shutdown(socket.SHUT_RDWR)
-                except OSError:
-                    pass
+            fail(e)
         finally:
             if spl is not None:
                 spl.close()
 
-    def disk():
+    def disk_pooled():
         try:
             while True:
                 batch = shared.drain_wait()
@@ -150,23 +313,34 @@ def mt_receive(
                 elif shared.closed:
                     return
         except BaseException as e:  # noqa: BLE001 - e.g. sink ENOSPC
-            with lock:
-                errors.append(e)
-            shared.close()  # unblock channel threads waiting in acquire
-            for s in socks:
-                try:
-                    s.shutdown(socket.SHUT_RDWR)
-                except OSError:
-                    pass
+            fail(e)
 
-    dt = threading.Thread(target=disk)
+    def disk_batched():
+        try:
+            while True:
+                ticket = relay.next_ticket()
+                if ticket is None:
+                    if relay.closed:
+                        return
+                    continue
+                stats.writev_calls += sink.writev_views(ticket[0])
+                stats.flushes += 1
+                relay.mark_done(ticket)
+        except BaseException as e:  # noqa: BLE001 - e.g. sink ENOSPC
+            fail(e)
+
+    dt = threading.Thread(target=disk_batched if batched else disk_pooled)
     dt.start()
-    threads = [threading.Thread(target=rx, args=(s,)) for s in socks]
+    threads = [threading.Thread(target=rx, args=(i, s))
+               for i, s in enumerate(socks)]
     for t in threads:
         t.start()
     for t in threads:
         t.join()
-    shared.close()
+    if shared is not None:
+        shared.close()
+    if relay is not None:
+        relay.close()
     dt.join()
     if errors:
         raise errors[0]  # don't ACK a broken stream
@@ -183,46 +357,69 @@ def worker_send(
     mode_event: ChannelEvent = ChannelEvent.xFTSMU,
     reusable: bool = False,
     allow_sendfile: bool = True,
+    batch_frames: int = 1,
 ) -> int:
     """Baseline sender: blocking worker (thread or fork) per channel, each
     with a PRIVATE fd reading its stripe (seek-heavy, GridFTP-like).
 
     Zero-copy datapath: uncompressed file-backed sources go through
     ``os.sendfile`` (kernel-side page-cache -> socket copy); everything
-    else is scatter-gather ``sendmsg([header_view, block_view])``. Headers
-    are packed into one reusable per-worker buffer."""
+    else is scatter-gather ``sendmsg``. With ``batch_frames > 1`` the
+    sendfile path steps aside and each worker coalesces a hill-climbed
+    number of frames into one ``sendmsg_batched`` call (headers cycle
+    through a ring of reusable per-worker buffers)."""
     import os
 
     n = len(socks)
     end_event = ChannelEvent.EOFR if reusable else ChannelEvent.EOFT
+    cap = max(1, batch_frames)
+    # reusable header buffers per channel: one per potentially in-flight
+    # frame (the batch ceiling plus the end frame)
+    frames = FrameBuilder(session, n, depth=cap + 1)
 
     def tx(i: int, sock: socket.socket):
         src = source.open_worker()
-        # one reusable header buffer per worker (its single wire channel)
-        hdr_buf = bytearray(HEADER_SIZE)
-        hdr = memoryview(hdr_buf)
-        use_sf = allow_sendfile and SENDFILE and src.file_backed
+
+        def hdr(event, off, ln):
+            return frames.header(i, event, off, ln)
+
+        # sendfile precludes gathering many frames into one syscall, so
+        # the batched mode always takes the scatter-gather path
+        use_sf = (allow_sendfile and SENDFILE and src.file_backed
+                  and cap == 1)
+        tuner = ChannelTuner(cap=cap) if cap > 1 else None
         b = i
         while b < src.n_blocks:
-            ln = src.block_len(b)
-            off = b * src.block_size
-            pack_header_into(hdr_buf, mode_event, session, i, off, ln)
-            if use_sf:
-                # MSG_MORE keeps the tiny header out of its own NODELAY
-                # segment: it coalesces with the first sendfile payload
-                send_all(sock, hdr, MSG_MORE)
-                try:
-                    sendfile_all(sock, src.fileno(), off, ln)
-                except SendfileUnsupported:
-                    # nothing of this block hit the wire: finish it from
-                    # the mmap view and stay on the generic path
-                    use_sf = False
-                    send_all(sock, src.block_view(b))
-            else:
-                sendmsg_all(sock, [hdr, src.block_view(b)])
-            b += n
-        pack_header_into(hdr_buf, end_event, session, i, 0, 0)
-        send_all(sock, hdr)
+            if tuner is None:
+                ln = src.block_len(b)
+                off = b * src.block_size
+                if use_sf:
+                    # MSG_MORE keeps the tiny header out of its own NODELAY
+                    # segment: it coalesces with the first sendfile payload
+                    send_all(sock, hdr(mode_event, off, ln), MSG_MORE)
+                    try:
+                        sendfile_all(sock, src.fileno(), off, ln)
+                    except SendfileUnsupported:
+                        # nothing of this block hit the wire: finish it from
+                        # the mmap view and stay on the generic path
+                        use_sf = False
+                        send_all(sock, src.block_view(b))
+                else:
+                    sendmsg_all(sock, [hdr(mode_event, off, ln),
+                                       src.block_view(b)])
+                b += n
+                continue
+            iov = []
+            sizes = []
+            while len(sizes) < tuner.depth and b < src.n_blocks:
+                ln = src.block_len(b)
+                iov.append(hdr(mode_event, b * src.block_size, ln))
+                iov.append(src.block_view(b))
+                sizes.append(HEADER_SIZE + ln)
+                b += n
+            sent = sendmsg_batched(sock, iov, sizes)
+            tuner.note(sent)
+        send_all(sock, hdr(end_event, 0, 0))
         sock.setblocking(True)
         recv_exact(sock, 1)
         src.close()
@@ -272,19 +469,21 @@ def worker_send(
 
 
 def _receive(socks, sink, block_size, *, pool_slots=32, fsm=None,
-             conformance=True, reusable=False, pool=None, splice=False):
+             conformance=True, reusable=False, pool=None, splice=False,
+             batch_frames=1, slabs=None):
     return mt_receive(socks, sink, block_size, pool_slots, reusable=reusable,
-                      pool=pool, use_splice=splice)
+                      pool=pool, use_splice=splice, batch_frames=batch_frames,
+                      slabs=slabs)
 
 
-def _send(socks, source, session, *, reusable=False):
+def _send(socks, source, session, *, reusable=False, batch_frames=1):
     return worker_send(socks, source, session, use_processes=False,
-                       reusable=reusable)
+                       reusable=reusable, batch_frames=batch_frames)
 
 
 ENGINE = register_engine(Engine(
     "mt", _receive, _send,
     "multi-threaded: thread per channel, pessimistically locked shared "
-    "recv pool, one disk thread",
+    "recv pool (or batched slab relay), one disk thread",
     uses_pool=True,
 ))

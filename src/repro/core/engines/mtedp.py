@@ -14,6 +14,14 @@ single writer, minimal seeks) before ``release``-ing them. Pool
 exhaustion back-pressures the event loop by flushing inline; headers are
 parsed in place from per-channel reusable buffers. No payload byte is
 copied in user space between the socket and the disk.
+
+Batched mode (``batch_frames > 1``): each channel owns a registered
+``RecvSlab`` instead of sharing the pool — one ``recv_into`` spans MANY
+frames, ``SlabChannel`` parses headers in place and commits payload
+views of the slab, and the flush step ``pwritev``s those views before
+the slab compacts (backpressure = flush when the slab fills). The
+sender's mirror: up to ``batch_frames`` frames per pending iovec, depth
+hill-climbed per channel by ``autotune.ChannelTuner``.
 """
 from __future__ import annotations
 
@@ -21,16 +29,19 @@ import selectors
 import socket
 from typing import Dict, List, Optional
 
+from repro.core.autotune import ChannelTuner
 from repro.core.engines.base import (
     ACK,
     END_EVENTS,
     FrameBuilder,
     RecvStats,
     Sink,
+    SlabChannel,
     Source,
     advance_iovec,
     recv_exact,
     send_all,
+    slab_span,
 )
 from repro.core.engines.registry import Engine, register_engine
 from repro.core.fsm import FSM_BUILDERS, Machine
@@ -43,6 +54,16 @@ from repro.core.header import (
 from repro.core.piod import PIOD
 
 
+def _session_fsm():
+    """A fresh ``server_upload`` machine fast-forwarded through the
+    connection stages (one-shot mode)."""
+    fsm = FSM_BUILDERS["server_upload"]()
+    for ev in ("conn", "auth_ok", "ftsm", "params_ok", "new_session",
+               "registered", "all_channels", "opened"):
+        fsm.step(ev)
+    return fsm
+
+
 def mtedp_receive(
     socks: List[socket.socket],
     sink: Sink,
@@ -52,6 +73,8 @@ def mtedp_receive(
     fsm: Optional[Machine] = None,
     reusable: bool = False,
     pool=None,
+    batch_frames: int = 1,
+    slabs=None,
 ) -> RecvStats:
     """The xDFS MTEDP receiver: PIOD event loop + registered
     ``RecvBufferPool`` + vectored I/O.
@@ -65,7 +88,35 @@ def mtedp_receive(
     ``pool`` — a caller-owned ``RecvBufferPool`` reused across the files of a
     session (every slot is released by the final flush, so reuse is safe);
     when ``None`` a file-private pool is allocated.
+    ``batch_frames`` — the negotiated batch ceiling; above 1 the receiver
+    runs the slab datapath (``slabs`` optionally carries a caller-owned
+    ``SlabSet`` reused across the session's files).
     """
+    own_fsm = fsm is None and conformance
+    if own_fsm:
+        fsm = _session_fsm()
+    if batch_frames > 1:
+        stats = _receive_batched(socks, sink, block_size, fsm, reusable,
+                                 batch_frames, slabs)
+    else:
+        stats = _receive_pooled(socks, sink, block_size, pool_slots, fsm,
+                                reusable, pool)
+    if own_fsm:
+        if reusable:
+            assert fsm.state == "9_open_file", (
+                f"conformance: receiver FSM ended in {fsm.state}"
+            )
+        else:
+            assert fsm.done, f"conformance: receiver FSM ended in {fsm.state}"
+    for s in socks:
+        s.setblocking(True)
+        send_all(s, ACK)
+    return stats
+
+
+def _receive_pooled(socks, sink, block_size, pool_slots, fsm, reusable,
+                    pool) -> RecvStats:
+    """The per-frame registered-pool datapath (batch_frames == 1)."""
     from repro.core.ringbuf import RecvBufferPool
 
     stats = RecvStats()
@@ -82,14 +133,6 @@ def mtedp_receive(
         )
     piod = PIOD()
     eof = [False] * n
-    own_fsm = False
-    if fsm is None and conformance:
-        fsm = FSM_BUILDERS["server_upload"]()
-        own_fsm = True
-        # connection/negotiation stages already completed by the session layer
-        for ev in ("conn", "auth_ok", "ftsm", "params_ok", "new_session",
-                   "registered", "all_channels", "opened"):
-            fsm.step(ev)
 
     class Chan:
         __slots__ = ("sock", "idx", "hdr_buf", "hdr_got", "hdr", "slot",
@@ -213,16 +256,88 @@ def mtedp_receive(
     piod.run(until=lambda: all(eof))
     flush(final=True)
     piod.close()
-    if own_fsm:
-        if reusable:
-            assert fsm.state == "9_open_file", (
-                f"conformance: receiver FSM ended in {fsm.state}"
-            )
-        else:
-            assert fsm.done, f"conformance: receiver FSM ended in {fsm.state}"
-    for s in socks:
-        s.setblocking(True)
-        send_all(s, ACK)
+    return stats
+
+
+def _receive_batched(socks, sink, block_size, fsm, reusable, batch_frames,
+                     slabs) -> RecvStats:
+    """The slab datapath: per-channel registered slabs, many frames per
+    ``recv_into``, flush = pwritev of the slab views + compact."""
+    from repro.core.ringbuf import SlabSet
+
+    stats = RecvStats()
+    n = len(socks)
+    span = slab_span(batch_frames, block_size)
+    if slabs is None or slabs.n_channels < n or slabs.slab_bytes != span:
+        slabs = SlabSet(n, span)
+    piod = PIOD()
+    eof = [False] * n
+    chans: Dict[socket.socket, SlabChannel] = {}
+    idx: Dict[socket.socket, int] = {}
+
+    def fsm_steps(*events):
+        if fsm is not None:
+            for e in events:
+                fsm.step(e)
+
+    def flush_chan(sc: SlabChannel, final=False):
+        batch = sc.take_pending()
+        if batch or final:
+            stats.writev_calls += sink.writev_views(batch)
+            stats.flushes += 1
+        sc.compact()
+        if fsm is None or final:
+            return
+        if fsm.state == "10_dispatch":
+            fsm_steps("flush", "flushed")
+
+    def on_readable(sock, mask):
+        sc = chans[sock]
+        try:
+            while True:
+                if sc.free_space() == 0:
+                    flush_chan(sc)
+                done = sc.receive_once(sock)
+                for _ in range(done):
+                    # milestone per landed frame: 10 -> 11 -> 12 -> 10
+                    fsm_steps("read_ready", "block", "buffered")
+                if sc.end_event is not None:
+                    i = idx[sock]
+                    if sc.end_event == ChannelEvent.EOFR:
+                        stats.eofr_frames += 1
+                    else:
+                        stats.eoft_frames += 1
+                    eof[i] = True
+                    piod.unregister(sock)
+                    fsm_steps("read_ready", "eof_header",
+                              "all_eof" if all(eof) else "channels_open")
+                    if not all(eof):
+                        # the LAST channel's tail rides the final flush
+                        # (FSM is already in 13_flush by then)
+                        flush_chan(sc)
+                    return
+        except BlockingIOError:
+            return
+
+    for i, s in enumerate(socks):
+        chans[s] = SlabChannel(slabs.slab(i), block_size)
+        idx[s] = i
+        piod.register(s, selectors.EVENT_READ, on_readable)
+
+    def drained_if_idle():
+        for sc in chans.values():
+            if sc.pending_bytes and sc.end_event is None:
+                flush_chan(sc)
+
+    piod.idle_callback = drained_if_idle
+    piod.run(until=lambda: all(eof))
+    for sc in chans.values():  # terminal flush of every channel's tail
+        flush_chan(sc, final=True)
+        stats.bytes += sc.bytes
+        stats.recv_calls += sc.recv_calls
+    if fsm is not None:
+        fsm.step("eofr_flush" if reusable else "final_flush")
+    piod.close()
     return stats
 
 
@@ -232,32 +347,48 @@ def event_send(
     session: bytes,
     mode_event: ChannelEvent = ChannelEvent.xFTSMU,
     reusable: bool = False,
+    batch_frames: int = 1,
 ) -> int:
     """xDFS event-driven sender: one thread, write-readiness multiplexing.
 
     Zero-copy: frames are scatter-gather iovecs ``[header_view,
-    block_view]`` — the header lives in a per-channel reusable buffer
-    (:class:`FrameBuilder`), the payload is a view into the source mmap —
+    block_view, ...]`` — headers live in per-channel reusable buffers
+    (:class:`FrameBuilder`), payloads are views into the source mmap —
     and partial ``sendmsg`` resumes by re-slicing the iovec
     (:func:`advance_iovec`) instead of rebuilding the frame.
+
+    ``batch_frames`` caps how many frames one pending iovec coalesces;
+    above 1, each channel's actual depth is hill-climbed by a
+    ``ChannelTuner`` from measured goodput.
     """
     n = len(socks)
+    cap = max(1, batch_frames)
     piod = PIOD()
-    frames = FrameBuilder(session, n)
+    frames = FrameBuilder(session, n, depth=cap + 1)  # batch + end frame
+    tuners = ([ChannelTuner(cap=cap) for _ in range(n)] if cap > 1 else None)
     next_block = [c for c in range(n)]  # block index each channel sends next
     pending: Dict[socket.socket, List[memoryview]] = {}  # in-flight iovecs
     done = [False] * n
     sent = 0
     end_event = ChannelEvent.EOFR if reusable else ChannelEvent.EOFT
 
-    def make_frame(i_chan: int, i_block: int) -> List[memoryview]:
-        if i_block >= source.n_blocks:
-            return [frames.header(i_chan, end_event, 0, 0)]
-        ln = source.block_len(i_block)
-        return [
-            frames.header(i_chan, mode_event, i_block * source.block_size, ln),
-            source.block_view(i_block),
-        ]
+    def make_batch(i_chan: int) -> List[memoryview]:
+        """Up to the tuned depth of frames for this channel; the end
+        frame rides the batch that exhausts the stripe."""
+        depth = tuners[i_chan].depth if tuners is not None else 1
+        iov: List[memoryview] = []
+        for _ in range(depth):
+            blk = next_block[i_chan]
+            next_block[i_chan] += n
+            if blk >= source.n_blocks:
+                iov.append(frames.header(i_chan, end_event, 0, 0))
+                done[i_chan] = True
+                break
+            ln = source.block_len(blk)
+            iov.append(frames.header(i_chan, mode_event,
+                                     blk * source.block_size, ln))
+            iov.append(source.block_view(blk))
+        return iov
 
     idx = {s: i for i, s in enumerate(socks)}
 
@@ -268,16 +399,14 @@ def event_send(
             while True:  # greedy: fill the socket until it would block
                 iov = pending.get(sock)
                 if iov is None:
-                    blk = next_block[i]
-                    next_block[i] += n
-                    iov = make_frame(i, blk)
+                    iov = make_batch(i)
                     pending[sock] = iov
-                    if blk >= source.n_blocks:
-                        done[i] = True
                 w = sock.sendmsg(iov)
                 sent += w
+                if tuners is not None:
+                    tuners[i].note(w)
                 if advance_iovec(iov, w):
-                    continue  # partial frame still pending on this channel
+                    continue  # partial batch still pending on this channel
                 pending.pop(sock)
                 if done[i]:
                     piod.unregister(sock)
@@ -296,24 +425,26 @@ def event_send(
 
 
 def _receive(socks, sink, block_size, *, pool_slots=32, fsm=None,
-             conformance=True, reusable=False, pool=None, splice=False):
+             conformance=True, reusable=False, pool=None, splice=False,
+             batch_frames=1, slabs=None):
     # ``splice`` is accepted for signature uniformity but ignored: the
     # blocking socket->pipe splice would stall the nonblocking event loop
     # (the same reason the mtedp sender has no sendfile path).
     return mtedp_receive(socks, sink, block_size, pool_slots,
                          conformance=conformance, fsm=fsm, reusable=reusable,
-                         pool=pool)
+                         pool=pool, batch_frames=batch_frames, slabs=slabs)
 
 
-def _send(socks, source, session, *, reusable=False):
-    return event_send(socks, source, session, reusable=reusable)
+def _send(socks, source, session, *, reusable=False, batch_frames=1):
+    return event_send(socks, source, session, reusable=reusable,
+                      batch_frames=batch_frames)
 
 
 ENGINE = register_engine(Engine(
     "mtedp", _receive, _send,
     "multi-threaded event-driven pipelined (the paper's xDFS design): one "
-    "event loop, registered zero-copy recv pool, single-writer vectored "
-    "disk I/O",
+    "event loop, registered zero-copy recv pool or batched slabs, "
+    "single-writer vectored disk I/O",
     uses_pool=True,
     pool_livelock_guard=True,
 ))

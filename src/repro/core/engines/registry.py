@@ -9,9 +9,10 @@ without touching the protocol code.
 Uniform callable signatures:
 
   receive(socks, sink, block_size, *, pool_slots=32, fsm=None,
-          conformance=True, reusable=False, pool=None,
-          splice=False) -> RecvStats
-  send(socks, source, session, *, reusable=False) -> int  (bytes on the wire)
+          conformance=True, reusable=False, pool=None, splice=False,
+          batch_frames=1, slabs=None) -> RecvStats
+  send(socks, source, session, *, reusable=False,
+       batch_frames=1) -> int  (bytes on the wire)
 
 ``pool`` is an optional caller-owned registered ``RecvBufferPool`` reused
 across a session's files (engines that don't pool blocks ignore it).
@@ -22,7 +23,16 @@ stays open for the next file of the session) instead of ``EOFT``.
 ``splice=True`` opts the receive side into the kernel-side
 socket->pipe->file ``os.splice`` fast path where the engine supports it
 (blocking receivers, file-backed sinks); engines that can't splice accept
-and ignore the flag.
+and ignore the flag. The opt-in is ADAPTIVE: a goodput arbiter
+(core/autotune.py) measures splice against the pool path mid-session and
+keeps the faster one.
+
+``batch_frames`` is the session-negotiated ceiling on frames per
+scatter-gather syscall batch (1 = the per-frame legacy datapath); above 1
+senders hill-climb their actual depth and receivers run the slab
+datapath. ``slabs`` optionally carries the session-owned ``SlabSet``
+(per-channel registered slabs reused across files); engines that don't
+batch ignore both.
 """
 from __future__ import annotations
 

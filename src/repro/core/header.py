@@ -122,6 +122,11 @@ class Negotiation:
     so_sndbuf: int = 0
     so_rcvbuf: int = 0
     so_nodelay: bool = True
+    # negotiated CEILING on frames per scatter-gather sendmsg batch (both
+    # directions); receivers size their slabs from it and senders
+    # hill-climb actual depth below it. 1 (or an absent tail on the
+    # wire) = the per-frame legacy datapath.
+    batch_frames: int = 1
 
     def pack(self) -> bytes:
         rn = self.remote_name.encode()
@@ -135,7 +140,8 @@ class Negotiation:
         return (head + rn + ln
                 + struct.pack("<H", len(self.credentials)) + self.credentials
                 + struct.pack("<II?", self.so_sndbuf, self.so_rcvbuf,
-                              self.so_nodelay))
+                              self.so_nodelay)
+                + struct.pack("<H", self.batch_frames))
 
     @classmethod
     def unpack(cls, buf) -> "Negotiation":
@@ -158,12 +164,18 @@ class Negotiation:
         # v1 negotiation blobs end at the credentials; tuning tail optional
         sndbuf = rcvbuf = 0
         nodelay = True
+        batch = 1
         if len(buf) >= p + 8:
             sndbuf, rcvbuf = struct.unpack_from("<II", buf, p)
             if len(buf) >= p + 9:
                 nodelay = bool(buf[p + 8])
+        # batch tail optional too: pre-batching blobs (and a wire value of
+        # 0) mean the per-frame datapath
+        if len(buf) >= p + 11:
+            (batch,) = struct.unpack_from("<H", buf, p + 9)
+            batch = max(1, batch)
         return cls(session, n, bs, win, rn, ln, ver, comp, fsize, creds,
-                   sndbuf, rcvbuf, nodelay)
+                   sndbuf, rcvbuf, nodelay, batch)
 
 
 def new_session_id() -> bytes:

@@ -13,6 +13,12 @@ The registered-buffer receive datapath lives here:
   block in ``acquire`` when the pool is exhausted (backpressure), the
   disk thread blocks in ``drain_wait``; the per-block lock handoffs keep
   the paper's MT synchronization cost observable.
+* ``RecvSlab`` / ``SlabSet`` — the batched datapath's per-channel slabs:
+  one large ``recv_into`` may land MANY frames in the slab, parsed in
+  place by ``SlabChannel`` (engines/base.py); a session-owned ``SlabSet``
+  reuses the registered memory across files.
+* ``LockedBatchRelay`` — the MT model's batched disk handoff (channel
+  threads block until the disk thread wrote their slab views out).
 
 Legacy structures kept for the benchmarks and model-checking tests:
 
@@ -97,6 +103,86 @@ class RecvBufferPool:
 
     def release_all(self, slots: Iterable[int]) -> None:
         self._free.extend(slots)
+
+
+class RecvSlab:
+    """One registered receive slab for the batched datapath: a contiguous
+    buffer that LARGE ``recv_into`` reads fill with many frames at once.
+    ``SlabChannel`` (engines/base.py) parses headers in place from it and
+    commits payload ``(offset, view)`` pairs of the SAME memory for
+    vectored write-out — the multi-frame generalization of a
+    :class:`RecvBufferPool` slot. One slab per channel; a session-owned
+    :class:`SlabSet` reuses the memory across files."""
+
+    __slots__ = ("nbytes", "_backing", "mem")
+
+    def __init__(self, nbytes: int):
+        assert nbytes > 0
+        self.nbytes = nbytes
+        self._backing = bytearray(nbytes)
+        self.mem = memoryview(self._backing)
+
+
+class SlabSet:
+    """Per-channel receive slabs owned by a session and lent to every
+    ``engine.receive`` call (the batched twin of the session's
+    :class:`RecvBufferPool`): slab memory is registered once and reused
+    across all the files of the session."""
+
+    __slots__ = ("n_channels", "slab_bytes", "_slabs")
+
+    def __init__(self, n_channels: int, slab_bytes: int):
+        self.n_channels = n_channels
+        self.slab_bytes = slab_bytes
+        self._slabs = [RecvSlab(slab_bytes) for _ in range(n_channels)]
+
+    def slab(self, i: int) -> RecvSlab:
+        return self._slabs[i]
+
+
+class LockedBatchRelay:
+    """The MT model's batched disk handoff: channel threads submit whole
+    ``(offset, view)`` batches (views into their slabs) and BLOCK until
+    the disk thread reports them written — the slab memory is only reused
+    after the write lands. The per-batch lock handoffs are the batched
+    descendant of ``LockedRecvPool``'s per-block synchronization cost."""
+
+    def __init__(self):
+        self._cv = threading.Condition()
+        self._queue: List[list] = []  # [batch, done] tickets
+        self.closed = False
+
+    def submit_wait(self, batch) -> None:
+        if not batch:
+            return
+        ticket = [batch, False]
+        with self._cv:
+            if self.closed:
+                raise RuntimeError("batch relay closed")
+            self._queue.append(ticket)
+            self._cv.notify_all()
+            while not ticket[1]:
+                if self.closed:
+                    raise RuntimeError("batch relay closed")
+                self._cv.wait()
+
+    def next_ticket(self, timeout: float = 0.1):
+        """Disk thread: the oldest unwritten batch ticket (None on
+        timeout/closed). Pass the ticket back to :meth:`mark_done`."""
+        with self._cv:
+            if not self._queue and not self.closed:
+                self._cv.wait(timeout)
+            return self._queue.pop(0) if self._queue else None
+
+    def mark_done(self, ticket) -> None:
+        with self._cv:
+            ticket[1] = True
+            self._cv.notify_all()
+
+    def close(self) -> None:
+        with self._cv:
+            self.closed = True
+            self._cv.notify_all()
 
 
 class LockedRecvPool:

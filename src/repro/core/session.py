@@ -54,6 +54,9 @@ from repro.core.header import (
 
 CTRL_CHANNEL = 0
 DEFAULT_BLOCK = 1 << 20
+# hard ceiling on the negotiated batch_frames (the top of the autotuner's
+# ladder; also bounds per-frame iovec length well under IOV_MAX)
+MAX_BATCH_FRAMES = 64
 
 
 class SessionError(ProtocolError):
@@ -176,6 +179,8 @@ class SessionStats:
     eoft_frames: int = 0
     writev_calls: int = 0
     splice_bytes: int = 0
+    recv_calls: int = 0
+    splice_autodisables: int = 0
 
     def absorb(self, st: RecvStats) -> None:
         self.bytes += st.bytes
@@ -183,6 +188,8 @@ class SessionStats:
         self.eoft_frames += st.eoft_frames
         self.writev_calls += st.writev_calls
         self.splice_bytes += st.splice_bytes
+        self.recv_calls += st.recv_calls
+        self.splice_autodisables += st.splice_autodisables
 
 
 class ServerSession:
@@ -204,8 +211,11 @@ class ServerSession:
                 f"({neg.n_channels})"
             )
         self.pool_slots = pool_slots
+        # negotiated syscall-batching ceiling (1 = per-frame datapath)
+        self.batch_frames = max(1, min(int(neg.batch_frames), MAX_BATCH_FRAMES))
         self.stats = SessionStats()
         self._pool = None  # RecvBufferPool reused across the session's files
+        self._slabs = None  # SlabSet reused across the session's files
         self.fsm: Optional[Machine] = None
         if engine.name == "mtedp":
             # one conformance machine for the WHOLE session: the multi-file
@@ -254,17 +264,25 @@ class ServerSession:
         send_ctrl(ctrl, ChannelEvent.CONM, self.neg.session, {"ok": True})
         if self.fsm is not None:
             self.fsm.step("opened")
-        if self.engine.uses_pool and (
+        if self.engine.uses_pool and self.batch_frames <= 1 and (
             self._pool is None or self._pool.block_size != block_size
         ):
             from repro.core.ringbuf import RecvBufferPool
 
             self._pool = RecvBufferPool(self.pool_slots, block_size)
+        if self.engine.uses_pool and self.batch_frames > 1:
+            from repro.core.engines.base import slab_span
+            from repro.core.ringbuf import SlabSet
+
+            span = slab_span(self.batch_frames, block_size)
+            if self._slabs is None or self._slabs.slab_bytes != span:
+                self._slabs = SlabSet(self.neg.n_channels, span)
         try:
             st = self.engine.receive(
                 self.socks, sink, block_size, pool_slots=self.pool_slots,
                 fsm=self.fsm, conformance=self.fsm is not None, reusable=True,
                 pool=self._pool, splice=self.splice,
+                batch_frames=self.batch_frames, slabs=self._slabs,
             )
         finally:
             sink.close()
@@ -287,7 +305,8 @@ class ServerSession:
         send_ctrl(ctrl, ChannelEvent.CONM, self.neg.session,
                   {"ok": True, "size": size})
         try:
-            self.engine.send(self.socks, source, self.neg.session, reusable=True)
+            self.engine.send(self.socks, source, self.neg.session,
+                             reusable=True, batch_frames=self.batch_frames)
         finally:
             source.close()
         self.stats.files += 1

@@ -57,6 +57,7 @@ class TransferSpec:
     port: int = 0
     sndbuf: int = 0  # negotiated SO_SNDBUF (0 = kernel default)
     rcvbuf: int = 0  # negotiated SO_RCVBUF
+    batch_frames: int = 1  # negotiated syscall-batching ceiling
 
 
 @dataclass
@@ -141,6 +142,7 @@ def run_transfer(spec: TransferSpec) -> TransferStats:
                 ("127.0.0.1", port), n_channels=spec.n_channels,
                 engine=spec.engine, block_size=spec.block_size,
                 tuning=SocketTuning(sndbuf=spec.sndbuf, rcvbuf=spec.rcvbuf),
+                batch_frames=spec.batch_frames,
             )
             if spec.mode == "upload":
                 res = cli.put(spec.src_path, spec.dst_path, size=spec.size)

@@ -1,0 +1,633 @@
+"""Syscall-batched datapath: slab parsing at arbitrary frame boundaries,
+batched partial-send resumption across all three engines, exact
+short-sendmsg delivery accounting, autotuner convergence under a fake
+clock, and the adaptive splice arbiter's mid-stream path switches."""
+import itertools
+import os
+import socket
+import threading
+
+import pytest
+
+from repro.core.api import XdfsClient, XdfsServer
+from repro.core.autotune import (
+    DECIDED,
+    LADDER,
+    POOL_TRIAL,
+    SPLICE_TRIAL,
+    ChannelTuner,
+    HillClimber,
+    SpliceArbiter,
+)
+from repro.core.engines import mp as mp_mod
+from repro.core.engines import mt as mt_mod
+from repro.core.engines.base import (
+    SendStats,
+    Sink,
+    SlabChannel,
+    Source,
+    recv_exact,
+    sendmsg_batched,
+    slab_span,
+)
+from repro.core.engines.mt import mt_receive, worker_send
+from repro.core.engines.registry import get_engine
+from repro.core.header import HEADER_SIZE, ChannelEvent, ChannelHeader
+from repro.core.ringbuf import RecvBufferPool, RecvSlab
+from repro.core.session import MAX_BATCH_FRAMES
+
+SESSION = b"0123456789abcdef"
+ENGINES = ("mtedp", "mt", "mp")
+
+
+# ---------------------------------------------------------------------------
+# SlabChannel: frame boundaries anywhere relative to reads
+# ---------------------------------------------------------------------------
+
+
+def _frame_stream(data: bytes, block_size: int,
+                  end_event=ChannelEvent.EOFT) -> bytes:
+    """The exact byte stream one channel's sender puts on the wire."""
+    out = bytearray()
+    n_blocks = (len(data) + block_size - 1) // block_size
+    for i in range(n_blocks):
+        off = i * block_size
+        ln = min(block_size, len(data) - off)
+        hdr = ChannelHeader(ChannelEvent.xFTSMU, SESSION, 0, off, ln)
+        out += hdr.pack() + data[off : off + ln]
+    out += ChannelHeader(end_event, SESSION, 0, 0, 0).pack()
+    return bytes(out)
+
+
+def _drive_slab(stream: bytes, chunk_sizes, block_size: int,
+                slab_bytes: int, size: int):
+    """Feed ``stream`` through a socketpair in ``chunk_sizes``-sized
+    writes (cycled), draining the SlabChannel after each write — so the
+    test controls exactly where frame boundaries land relative to reads.
+    Returns (reassembled bytes, SlabChannel)."""
+    a, b = socket.socketpair()
+    b.setblocking(False)
+    sink = Sink(None, size, capture=True)
+    sc = SlabChannel(RecvSlab(slab_bytes), block_size)
+    sizes = itertools.cycle(chunk_sizes)
+    pos = 0
+    try:
+        while pos < len(stream) and sc.end_event is None:
+            n = min(next(sizes), len(stream) - pos)
+            a.sendall(stream[pos : pos + n])
+            pos += n
+            while sc.end_event is None:
+                if sc.free_space() == 0:
+                    sink.writev_views(sc.take_pending())
+                    sc.compact()
+                try:
+                    sc.receive_once(b)
+                except BlockingIOError:
+                    break
+        sink.writev_views(sc.take_pending())
+        return sink.data, sc
+    finally:
+        a.close()
+        b.close()
+
+
+def test_slab_reads_ending_mid_header():
+    """Chunks of 7 bytes: every read lands inside a header or a payload;
+    sub-header fragments must wait and reassemble losslessly."""
+    block = 256
+    data = os.urandom(block * 5 + 91)  # odd tail block included
+    got, sc = _drive_slab(_frame_stream(data, block), (7,), block,
+                          slab_span(4, block), len(data))
+    assert got == data
+    assert sc.blocks == 6 and sc.bytes == len(data)
+    assert sc.end_event == ChannelEvent.EOFT
+
+
+def test_slab_reads_ending_mid_payload():
+    """Chunks of header + half a block: every payload is split across
+    reads and committed as partial (offset, view) pairs."""
+    block = 256
+    data = os.urandom(block * 4 + 33)
+    got, sc = _drive_slab(_frame_stream(data, block), (HEADER_SIZE + 100,),
+                          block, slab_span(4, block), len(data))
+    assert got == data and sc.bytes == len(data)
+
+
+def test_slab_one_byte_reads_boundary_sweep():
+    """1-byte chunks sweep a boundary through EVERY position of every
+    header and payload — the exhaustive fragmentation case."""
+    block = 128
+    data = os.urandom(block * 3 + 17)
+    got, sc = _drive_slab(_frame_stream(data, block), (1,), block,
+                          slab_span(2, block), len(data))
+    assert got == data and sc.blocks == 4
+
+
+def test_slab_coalesced_arrival_many_frames_per_read():
+    """The whole stream sent at once lands many frames per recv_into —
+    the syscall-batching win the slab exists for."""
+    block = 1 << 10
+    data = os.urandom(block * 16)
+    stream = _frame_stream(data, block)
+    got, sc = _drive_slab(stream, (len(stream),), block,
+                          slab_span(64, block), len(data))
+    assert got == data
+    assert sc.recv_calls < sc.blocks, (
+        f"{sc.recv_calls} reads for {sc.blocks} frames: no coalescing"
+    )
+
+
+def test_slab_smaller_than_one_frame_stays_correct():
+    """A slab below one frame's size forces mid-payload commits and
+    compact cycles on every block; correctness must not depend on the
+    slab fitting a whole batch."""
+    block = 256
+    data = os.urandom(block * 4 + 5)
+    got, sc = _drive_slab(_frame_stream(data, block), (4096,), block,
+                          4 * HEADER_SIZE, len(data))
+    assert got == data and sc.bytes == len(data)
+
+
+def test_slab_seed_handoff_roundtrip():
+    """handoff() mid-stream and seed() on a fresh parser must resume the
+    byte stream exactly (the datapath-switch contract)."""
+    block = 256
+    data = os.urandom(block * 3)
+    stream = _frame_stream(data, block)
+    a, b = socket.socketpair()
+    sink = Sink(None, len(data), capture=True)
+    sc1 = SlabChannel(RecvSlab(slab_span(2, block)), block)
+    # land exactly one and a half frames plus 10 bytes of the next header
+    cut = (HEADER_SIZE + block) + HEADER_SIZE + block // 2 + 10
+    a.sendall(stream[:cut])
+    while sc1.bytes < block + block // 2:
+        sc1.receive_once(b)
+    sink.writev_views(sc1.take_pending())
+    tail, hdr, off, left = sc1.handoff()
+    # mid-payload handoffs carry no header bytes; this cut is mid-HEADER
+    # of frame 2 only after frame 1's payload fully parsed
+    sc2 = SlabChannel(RecvSlab(slab_span(2, block)), block)
+    if hdr is not None:
+        sc2.seed(payload_off=off, payload_left=left)
+        assert tail == b""
+    else:
+        sc2.seed(header_tail=tail)
+    a.sendall(stream[cut:])
+    while sc2.end_event is None:
+        if sc2.free_space() == 0:
+            sink.writev_views(sc2.take_pending())
+            sc2.compact()
+        sc2.receive_once(b)
+    sink.writev_views(sc2.take_pending())
+    assert sink.data == data
+    a.close()
+    b.close()
+
+
+# ---------------------------------------------------------------------------
+# sendmsg_batched: exact per-frame delivery accounting under short sends
+# ---------------------------------------------------------------------------
+
+
+class _ScriptedSock:
+    """sendmsg that accepts exactly the scripted byte counts (then
+    everything), recording stats.frames at each call's ENTRY — the
+    regression probe for over-reporting under short sends."""
+
+    def __init__(self, script, stats):
+        self.script = list(script)
+        self.stats = stats
+        self.frames_at_entry = []
+
+    def sendmsg(self, iov):
+        self.frames_at_entry.append(self.stats.frames)
+        total = sum(len(v) for v in iov)
+        n = self.script.pop(0) if self.script else total
+        return min(n, total)
+
+
+def test_sendmsg_batched_short_send_accounting_scripted():
+    """A short sendmsg must credit only frames whose LAST byte was
+    delivered — never the raw iovec sum of the in-flight batch."""
+    stats = SendStats()
+    payloads = [os.urandom(10), os.urandom(20), os.urandom(30)]
+    frames = []
+    sizes = []
+    for i, p in enumerate(payloads):
+        hdr = ChannelHeader(ChannelEvent.xFTSMU, SESSION, 0, i * 64, len(p))
+        frames += [hdr.pack(), p]
+        sizes.append(HEADER_SIZE + len(p))
+    # 5 bytes (mid-header-0), then to 3 bytes past frame 0's end, then rest
+    sock = _ScriptedSock([5, (sizes[0] - 5) + 3], stats)
+    sent = sendmsg_batched(sock, frames, sizes, stats)
+    assert sent == sum(sizes)
+    # entry snapshots: before call 1 nothing credited; before call 2 the
+    # 5-byte short send still credits NOTHING; before call 3 exactly one
+    # frame (frame 0) is complete despite 3 bytes of frame 1 being out
+    assert sock.frames_at_entry == [0, 0, 1]
+    assert stats.frames == 3 and stats.bytes == sent
+    assert stats.syscalls == 3 and stats.batches == 1
+
+
+class _WritabilityWait:
+    """Nonblocking sendmsg behind a writability wait: the kernel accepts
+    only the free SO_SNDBUF space per call, so short sends are REAL, not
+    scripted (the same shape as the mtedp event sender's socket)."""
+
+    def __init__(self, sock):
+        self.sock = sock
+        sock.setblocking(False)
+
+    def sendmsg(self, iov):
+        import select
+
+        while True:
+            try:
+                return self.sock.sendmsg(iov)
+            except BlockingIOError:
+                select.select([], [self.sock], [])
+
+
+def test_sendmsg_batched_accounting_under_tiny_sndbuf():
+    """The real-socket regression: a tiny SO_SNDBUF forces partial
+    sendmsg returns; final accounting must still be exact."""
+    a, b = socket.socketpair()
+    a.setsockopt(socket.SOL_SOCKET, socket.SO_SNDBUF, 4096)
+    b.setsockopt(socket.SOL_SOCKET, socket.SO_RCVBUF, 4096)
+    block = 1 << 13
+    payloads = [os.urandom(block) for _ in range(8)]
+    frames = []
+    sizes = []
+    for i, p in enumerate(payloads):
+        hdr = ChannelHeader(ChannelEvent.xFTSMU, SESSION, 0, i * block,
+                            len(p))
+        frames += [hdr.pack(), p]
+        sizes.append(HEADER_SIZE + len(p))
+    total = sum(sizes)
+    got = bytearray()
+
+    def drain():
+        while len(got) < total:
+            chunk = b.recv(1 << 10)
+            if not chunk:
+                break
+            got.extend(chunk)
+
+    t = threading.Thread(target=drain)
+    t.start()
+    stats = SendStats()
+    sent = sendmsg_batched(_WritabilityWait(a), frames, sizes, stats)
+    t.join()
+    a.close()
+    b.close()
+    assert sent == total and bytes(got) == b"".join(bytes(f) for f in frames)
+    assert stats.bytes == total
+    assert stats.frames == 8, "every frame fully delivered exactly once"
+    assert stats.syscalls > 1, (
+        "tiny SO_SNDBUF should have forced partial sends; the regression "
+        "this guards never exercised"
+    )
+
+
+# ---------------------------------------------------------------------------
+# batched partial-send resumption, end to end, all three engines
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("engine", ENGINES)
+def test_batched_partial_send_resumption(engine, tmp_path):
+    """batch_frames=4 under tiny socket buffers: every batch is split
+    across many partial sendmsg returns and every slab read lands at an
+    arbitrary boundary; files must still be byte-identical."""
+    data = os.urandom((1 << 18) + 7777)
+    srcp = tmp_path / "src.bin"
+    srcp.write_bytes(data)
+    dstp = tmp_path / f"dst_{engine}.bin"
+    eng = get_engine(engine)
+    pairs = [socket.socketpair() for _ in range(2)]
+    for pa, pb in pairs:
+        for s in (pa, pb):
+            s.setsockopt(socket.SOL_SOCKET, socket.SO_SNDBUF, 8192)
+            s.setsockopt(socket.SOL_SOCKET, socket.SO_RCVBUF, 8192)
+    sink = Sink(str(dstp), len(data))
+    res = {}
+
+    def rx():
+        res["st"] = eng.receive([pb for _, pb in pairs], sink, 1 << 13,
+                                batch_frames=4)
+
+    t = threading.Thread(target=rx)
+    t.start()
+    source = Source(str(srcp), len(data), 1 << 13)
+    eng.send([pa for pa, _ in pairs], source, SESSION, batch_frames=4)
+    t.join()
+    source.close()
+    sink.close()
+    for pa, pb in pairs:
+        pa.close()
+        pb.close()
+    st = res["st"]
+    assert st.bytes == len(data)
+    assert st.recv_calls > 0, "slab datapath did not engage"
+    assert dstp.read_bytes() == data
+
+
+@pytest.mark.parametrize("engine", ENGINES)
+def test_batched_session_zero_materialization(engine, tmp_path):
+    """The acceptance gate with batching ON: a full put+get session at
+    batch_frames=8 must keep both zero-copy invariants — no payload-sized
+    heap copy on either direction's hot loop."""
+    data = os.urandom((1 << 18) + 4097)
+    src = tmp_path / "in.bin"
+    src.write_bytes(data)
+    with XdfsServer(engine=engine, root=str(tmp_path / f"s_{engine}")) as srv:
+        RecvBufferPool.materializations = 0
+        Source.materializations = 0
+        with XdfsClient.connect(srv.address, n_channels=3, engine=engine,
+                                block_size=1 << 16, batch_frames=8) as cli:
+            assert cli.batch_frames == 8
+            cli.put(str(src), "out.bin").result()
+            cli.get("out.bin", str(tmp_path / f"b_{engine}.bin")).result()
+        srv.wait_closed_sessions(1, timeout=60)
+        assert not srv.errors, srv.errors
+        assert srv.stats["recv_calls"] > 0, "server did not run the slab path"
+        assert RecvBufferPool.materializations == 0, (
+            f"{engine}: batched receive hot loop materialized a heap copy"
+        )
+        assert Source.materializations == 0, (
+            f"{engine}: batched send hot loop materialized a heap copy"
+        )
+    assert (tmp_path / f"b_{engine}.bin").read_bytes() == data
+
+
+def test_batch_frames_negotiation_clamped(tmp_path):
+    """An absurd requested depth is clamped to MAX_BATCH_FRAMES on both
+    ends (it also bounds the per-sendmsg iovec well under IOV_MAX)."""
+    data = os.urandom(1 << 16)
+    src = tmp_path / "in.bin"
+    src.write_bytes(data)
+    with XdfsServer(engine="mt", root=str(tmp_path / "srv")) as srv:
+        with XdfsClient.connect(srv.address, n_channels=2, engine="mt",
+                                block_size=1 << 14,
+                                batch_frames=10**6) as cli:
+            assert cli.batch_frames == MAX_BATCH_FRAMES
+            cli.put(str(src), "out.bin").result()
+        srv.wait_closed_sessions(1, timeout=60)
+        assert not srv.errors, srv.errors
+    assert (tmp_path / "srv" / "out.bin").read_bytes() == data
+
+
+# ---------------------------------------------------------------------------
+# autotuner: deterministic convergence under a fake clock
+# ---------------------------------------------------------------------------
+
+
+def test_hill_climber_converges_to_interior_peak():
+    rates = {1: 1.0, 4: 3.0, 16: 2.0, 64: 0.5}
+    hc = HillClimber(LADDER)
+    for _ in range(20):
+        hc.observe(rates[hc.value])
+    assert hc.value == 4 and hc.settled
+
+
+def test_hill_climber_converges_to_edge_peak():
+    rates = {1: 5.0, 4: 3.0, 16: 2.0, 64: 1.0}
+    hc = HillClimber(LADDER)
+    for _ in range(20):
+        hc.observe(rates[hc.value])
+    assert hc.value == 1 and hc.settled
+
+
+def test_channel_tuner_converges_with_fake_clock():
+    """Goodput peaked at depth 16: the tuner must walk the ladder down
+    from the cap and settle on 16 — deterministically, on a fake clock."""
+    rate = {1: 100e6, 4: 400e6, 16: 800e6, 64: 300e6}
+    t = [0.0]
+    tuner = ChannelTuner(cap=64, window_bytes=1 << 20, clock=lambda: t[0])
+    for _ in range(200):
+        nbytes = 1 << 19
+        t[0] += nbytes / rate[tuner.depth]
+        tuner.note(nbytes)
+    assert tuner.depth == 16
+    assert tuner.settled
+    assert tuner.windows > 4
+
+
+def test_channel_tuner_cap_truncates_ladder():
+    assert ChannelTuner(cap=4).depth == 4  # climb starts at the cap
+    assert ChannelTuner(cap=1).depth == 1
+    assert ChannelTuner(cap=200).depth == LADDER[-1]
+    # a cap BETWEEN rungs is itself a rung — batching must engage at
+    # exactly the negotiated ceiling, not round down to the next rung
+    assert ChannelTuner(cap=2).depth == 2
+    assert ChannelTuner(cap=8)._climber.ladder == (1, 4, 8)
+
+
+def test_splice_arbiter_switches_to_faster_pool():
+    t = [0.0]
+    arb = SpliceArbiter(window_bytes=1 << 20, clock=lambda: t[0])
+    assert arb.phase == SPLICE_TRIAL and arb.use_splice
+    decisions = []
+    while arb.phase == SPLICE_TRIAL:  # splice window at 100 MB/s
+        t[0] += (1 << 19) / 100e6
+        decisions.append(arb.note(1 << 19))
+    assert arb.phase == POOL_TRIAL and not arb.use_splice
+    while arb.phase == POOL_TRIAL:  # pool window at 200 MB/s: clear win
+        t[0] += (1 << 19) / 200e6
+        decisions.append(arb.note(1 << 19))
+    assert arb.phase == DECIDED and arb.decided
+    assert not arb.use_splice and arb.measured_switch
+    # note() flags the deciding observation exactly once
+    assert decisions.count(True) == 1 and decisions[-1] is True
+    assert arb.note(1 << 19) is False
+
+
+def test_splice_arbiter_hysteresis_keeps_splice_on_near_tie():
+    """Within the 10% margin the path the caller opted into wins."""
+    t = [0.0]
+    arb = SpliceArbiter(window_bytes=1 << 20, clock=lambda: t[0])
+    while arb.phase == SPLICE_TRIAL:
+        t[0] += (1 << 19) / 100e6
+        arb.note(1 << 19)
+    while arb.phase == POOL_TRIAL:  # pool only 5% faster: inside margin
+        t[0] += (1 << 19) / 105e6
+        arb.note(1 << 19)
+    assert arb.decided and arb.use_splice and not arb.measured_switch
+
+
+def test_splice_arbiter_force_pool_is_not_a_measured_switch():
+    arb = SpliceArbiter()
+    arb.force_pool()
+    assert arb.decided and not arb.use_splice
+    assert not arb.measured_switch, (
+        "a mechanical splice failure must not count as an autodisable"
+    )
+
+
+# ---------------------------------------------------------------------------
+# adaptive splice in the engines (scripted arbiters + fake kernel path,
+# so the mid-stream switches run deterministically on any host)
+# ---------------------------------------------------------------------------
+
+
+class _FakeSplice:
+    """A user-space stand-in for SpliceReceiver with the same interface:
+    lets the arbiter's path-switching logic run on hosts where real
+    socket->pipe->file splice is unsupported (e.g. sandboxed kernels)."""
+
+    def __init__(self):
+        self.ok = True
+
+    def close(self):
+        pass
+
+    def splice_block(self, sock, fd, offset, count):
+        buf = memoryview(bytearray(count))
+        recv_exact(sock, count, buf)
+        os.pwrite(fd, buf, offset)
+        return count
+
+
+class _SwitchToPool(SpliceArbiter):
+    """Scripted: keep splice for N frames, then decide pool (a measured
+    autodisable)."""
+
+    def __init__(self, frames=2):
+        super().__init__()
+        self._left = frames
+
+    def note(self, nbytes):
+        if self.phase == DECIDED:
+            return False
+        self._left -= 1
+        if self._left <= 0:
+            self.phase = DECIDED
+            self.chose_splice = False
+            self.measured_switch = True
+            return True
+        return False
+
+
+class _SwitchToSplice(SpliceArbiter):
+    """Scripted: start on the pool/slab path, choose splice after N
+    notes (the splice-wins trial outcome)."""
+
+    def __init__(self, notes=2):
+        super().__init__()
+        self.phase = POOL_TRIAL
+        self._left = notes
+
+    def note(self, nbytes):
+        if self.phase == DECIDED:
+            return False
+        self._left -= 1
+        if self._left <= 0:
+            self.phase = DECIDED
+            self.chose_splice = True
+            return True
+        return False
+
+
+def _mt_transfer(tmp_path, monkeypatch, *, batch_frames, arbiter_factory,
+                 tag):
+    """One mt transfer with the fake kernel path patched in; returns
+    (RecvStats, data, received bytes)."""
+    monkeypatch.setattr(mt_mod, "SpliceReceiver", _FakeSplice)
+    monkeypatch.setattr(mt_mod, "SPLICE", True)
+    data = os.urandom((1 << 18) + 12345)
+    srcp = tmp_path / f"src_{tag}.bin"
+    srcp.write_bytes(data)
+    dstp = tmp_path / f"dst_{tag}.bin"
+    pairs = [socket.socketpair() for _ in range(2)]
+    sink = Sink(str(dstp), len(data))
+    res = {}
+
+    def rx():
+        res["st"] = mt_receive(
+            [pb for _, pb in pairs], sink, 1 << 13, use_splice=True,
+            batch_frames=batch_frames, arbiter_factory=arbiter_factory,
+        )
+
+    t = threading.Thread(target=rx)
+    t.start()
+    source = Source(str(srcp), len(data), 1 << 13)
+    worker_send([pa for pa, _ in pairs], source, SESSION,
+                use_processes=False, batch_frames=batch_frames)
+    t.join()
+    source.close()
+    sink.close()
+    for pa, pb in pairs:
+        pa.close()
+        pb.close()
+    return res["st"], data, dstp.read_bytes()
+
+
+def test_mt_adaptive_splice_autodisables_per_frame(tmp_path, monkeypatch):
+    """Per-frame mode: each channel's arbiter measures splice slower and
+    falls back to the pool path mid-stream; the switch is counted."""
+    st, data, got = _mt_transfer(
+        tmp_path, monkeypatch, batch_frames=1,
+        arbiter_factory=lambda: _SwitchToPool(2), tag="pf")
+    assert got == data and st.bytes == len(data)
+    assert st.splice_autodisables == 2, "one measured switch per channel"
+    assert 0 < st.splice_bytes < len(data)
+
+
+def test_mt_adaptive_splice_autodisables_batched(tmp_path, monkeypatch):
+    """Batched mode: the splice->slab handoff seeds each channel's slab
+    parser mid-stream and the rest of the file lands on the slab path."""
+    st, data, got = _mt_transfer(
+        tmp_path, monkeypatch, batch_frames=4,
+        arbiter_factory=lambda: _SwitchToPool(2), tag="ba")
+    assert got == data and st.bytes == len(data)
+    assert st.splice_autodisables == 2
+    assert st.recv_calls > 0, "slab path never engaged after the switch"
+
+
+def test_mt_adaptive_switchback_to_splice_batched(tmp_path, monkeypatch):
+    """The reverse decision: slab trial first, splice wins — the slab
+    parser hands off mid-stream (possibly mid-frame) and the remainder
+    goes kernel-side. Not an autodisable."""
+    st, data, got = _mt_transfer(
+        tmp_path, monkeypatch, batch_frames=4,
+        arbiter_factory=lambda: _SwitchToSplice(2), tag="sb")
+    assert got == data and st.bytes == len(data)
+    assert st.splice_autodisables == 0
+    assert st.splice_bytes > 0, "splice never engaged after the switchback"
+
+
+def test_mp_adaptive_splice_autodisable_crosses_fork(tmp_path, monkeypatch):
+    """MP children run the same arbiter; the autodisable count must
+    travel back over the stats pipe."""
+    monkeypatch.setattr(mp_mod, "SpliceReceiver", _FakeSplice)
+    monkeypatch.setattr(mp_mod, "SPLICE", True)
+    from repro.core.engines.mp import mp_receive
+
+    data = os.urandom((1 << 17) + 999)
+    srcp = tmp_path / "src.bin"
+    srcp.write_bytes(data)
+    dstp = tmp_path / "dst.bin"
+    pairs = [socket.socketpair() for _ in range(2)]
+    sink = Sink(str(dstp), len(data))
+    res = {}
+
+    def rx():
+        res["st"] = mp_receive(
+            [pb for _, pb in pairs], sink, 1 << 13, use_splice=True,
+            arbiter_factory=lambda: _SwitchToPool(2),
+        )
+
+    t = threading.Thread(target=rx)
+    t.start()
+    source = Source(str(srcp), len(data), 1 << 13)
+    worker_send([pa for pa, _ in pairs], source, SESSION,
+                use_processes=False)
+    t.join()
+    source.close()
+    sink.close()
+    for pa, pb in pairs:
+        pa.close()
+        pb.close()
+    st = res["st"]
+    assert dstp.read_bytes() == data and st.bytes == len(data)
+    assert st.splice_autodisables == 2

@@ -70,3 +70,22 @@ def test_tolerance_override_relaxes_gate(tmp_path):
     row = doc["sections"]["zero_copy_recv"][0]
     row["mb_s"] = round(row["mb_s"] * 0.75, 1)
     assert check(_write(tmp_path, doc), str(BASELINE), tolerance=0.5) == []
+
+
+def test_batched_syscall_invariant_fails_on_lost_batching(tmp_path):
+    """A batched row whose syscalls/GB creeps above 1/4 of the per-frame
+    row fails even with NO baseline — losing the batching win is a bug
+    regardless of absolute throughput."""
+    doc = copy.deepcopy(_baseline_doc())
+    rows = doc["sections"]["zero_copy_batched"]
+    frame = next(r for r in rows if r["path"] == "frame")
+    batched = next(r for r in rows if r["path"] != "frame")
+    batched["syscalls_per_gb"] = int(frame["syscalls_per_gb"] * 0.5)
+    errors = check(_write(tmp_path, doc))
+    assert any("syscalls/GB" in e for e in errors), errors
+
+
+def test_batched_syscall_invariant_passes_committed_baseline():
+    from benchmarks.check_json import check_batched_invariant
+
+    assert check_batched_invariant(_baseline_doc()) == []

@@ -48,6 +48,34 @@ def test_negotiation_formats_documented():
     # the implementation's own struct strings (pack/unpack in header.py)
     assert "`<16sHIIQQB??HH`" in text  # negotiation head
     assert "`<II?`" in text  # tuning tail
+    # batch tail row: the <H batch_frames field must be documented
+    assert re.search(r"\|\s*batch tail\s*\|\s*`<H`\s*\|\s*batch_frames",
+                     text), "batch_frames negotiation tail row missing"
+
+
+def test_batch_ceiling_documented():
+    from repro.core.session import MAX_BATCH_FRAMES
+
+    assert f"**{MAX_BATCH_FRAMES}**" in _arch_text(), (
+        "documented batch_frames ceiling drifted from session.MAX_BATCH_FRAMES"
+    )
+
+
+def test_autotuner_constants_documented():
+    """The autotuner section is normative too: the depth ladder and the
+    splice arbiter's phase names must match core/autotune.py."""
+    from repro.core import autotune
+
+    text = _arch_text()
+    ladder = "(" + ", ".join(str(d) for d in autotune.LADDER) + ")"
+    assert f"`{ladder}`" in text, (
+        f"documented batch-depth ladder drifted from autotune.LADDER {ladder}"
+    )
+    arrow = (f"{autotune.SPLICE_TRIAL} --window--> {autotune.POOL_TRIAL} "
+             f"--window--> {autotune.DECIDED}")
+    assert arrow in text, (
+        "documented splice-arbiter phase machine drifted from autotune.py"
+    )
 
 
 def test_channel_event_table_matches_enum():

@@ -222,21 +222,29 @@ def test_sendfile_and_generic_paths_identical_sinks(tmp_path, allow_sendfile):
 
 def test_negotiation_carries_tuning_roundtrip():
     neg = Negotiation(SESSION, 4, 1 << 20, 1 << 20, "r", "l",
-                      so_sndbuf=123456, so_rcvbuf=654321, so_nodelay=False)
+                      so_sndbuf=123456, so_rcvbuf=654321, so_nodelay=False,
+                      batch_frames=16)
     back = Negotiation.unpack(neg.pack())
     assert back == neg
     from repro.core.session import SocketTuning
 
     assert SocketTuning.from_negotiation(back) == SocketTuning(
         nodelay=False, sndbuf=123456, rcvbuf=654321)
+    # pre-batching blobs (no <H batch tail) default to the per-frame path
+    pre_batch = Negotiation.unpack(neg.pack()[:-2])
+    assert pre_batch.batch_frames == 1
+    assert pre_batch.so_sndbuf == 123456 and pre_batch.so_nodelay is False
     # blobs without the nodelay byte parse with nodelay defaulting on
-    mid = Negotiation.unpack(neg.pack()[:-1])
+    mid = Negotiation.unpack(neg.pack()[:-3])
     assert mid.so_sndbuf == 123456 and mid.so_nodelay is True
-    # v1 blobs without any tuning tail still parse (defaults 0 / on)
-    legacy = Negotiation.unpack(neg.pack()[:-9])
+    # v1 blobs without any tuning tail still parse (defaults 0 / on / 1)
+    legacy = Negotiation.unpack(neg.pack()[:-11])
     assert legacy.so_sndbuf == 0 and legacy.so_rcvbuf == 0
-    assert legacy.so_nodelay is True
+    assert legacy.so_nodelay is True and legacy.batch_frames == 1
     assert legacy.n_channels == 4
+    # a wire value of 0 means "no batching", not a zero-depth batch
+    zeroed = Negotiation.unpack(neg.pack()[:-2] + b"\x00\x00")
+    assert zeroed.batch_frames == 1
 
 
 def test_tuning_applies_to_socket():
