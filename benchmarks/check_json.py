@@ -41,6 +41,7 @@ REQUIRED_SECTIONS = {
                           "gain_vs_frame", "syscalls_per_gb"},
     "host_transfer": {"engine", "channels", "block_kb", "mb_s",
                       "writev_calls"},
+    "cluster_stripe": {"mode", "path", "nodes", "mb_s", "gain_vs_single"},
 }
 SCALAR = (int, float, str, bool)
 
@@ -56,6 +57,7 @@ SECTION_KEYS = {
     "zero_copy_recv": ("mode", "path", "block_kb"),
     "zero_copy_batched": ("mode", "path", "block_kb"),
     "host_transfer": ("engine", "channels", "block_kb"),
+    "cluster_stripe": ("mode", "path", "nodes"),
 }
 SECTION_METRIC = {
     "session_reuse": "speedup",
@@ -63,6 +65,7 @@ SECTION_METRIC = {
     "zero_copy_recv": "mb_s",
     "zero_copy_batched": "mb_s",
     "host_transfer": "mb_s",
+    "cluster_stripe": "mb_s",
 }
 # Default allowed fractional drop below the baseline before the gate
 # fails. The microbench sections are best-of-N on one process (tight);
@@ -74,6 +77,10 @@ SECTION_TOLERANCE = {
     "zero_copy_recv": 0.20,
     "zero_copy_batched": 0.25,
     "host_transfer": 0.40,
+    # an in-process 3-node cluster multiplies threads per byte moved, so
+    # scheduler noise on a shared host dominates (best-of-N still swings
+    # ~2x run to run); the gate only catches order-of-magnitude breaks
+    "cluster_stripe": 0.60,
 }
 
 

@@ -1,0 +1,104 @@
+"""Cluster striping A/B: aggregate striped throughput vs one session.
+
+Moves the SAME payload twice — once over a single `XdfsServer` session
+(the tuned single-host datapath) and once striped across a 3-node
+in-process cluster (`MetaNode` + 3 `DataNode`s, replication factor 1 so
+both paths write each byte exactly once) — and reports MB/s plus the
+striped path's gain over the single-node reference.
+
+On one host all nodes share the same disks and loopback stack, so the
+stripe measures the cluster layer's overhead/aggregation behavior, not
+real multi-machine scaling; the row shape (`nodes`, `gain_vs_single`)
+is what a multi-host run would fill with real numbers.
+"""
+from __future__ import annotations
+
+import os
+import shutil
+import tempfile
+import time
+from pathlib import Path
+from typing import List
+
+CLUSTER_BLOCK = 1 << 20
+
+
+def _best(fn, repeats: int) -> float:
+    return max(fn() for _ in range(repeats))
+
+
+def run(smoke: bool = False) -> List[dict]:
+    from repro.cluster import ClusterClient, DataNode, MetaNode
+    from repro.core.api import XdfsClient, XdfsServer
+
+    size = (16 if smoke else 64) << 20
+    repeats = 3 if smoke else 4
+    payload = os.urandom(size)
+    tmp = Path(tempfile.mkdtemp(prefix="xdfs_stripe_"))
+
+    # single-node reference: one negotiated session, same bytes
+    with XdfsServer(engine="mtedp", root=str(tmp / "single")) as srv:
+        with XdfsClient.connect(srv.address, n_channels=2) as cli:
+
+            def put_once() -> float:
+                t0 = time.perf_counter()
+                cli.put(None, "bench.bin", data=payload).result()
+                return size / (time.perf_counter() - t0) / 1e6
+
+            def get_once() -> float:
+                t0 = time.perf_counter()
+                got = cli.get_bytes("bench.bin").result().data
+                assert len(got) == size
+                return size / (time.perf_counter() - t0) / 1e6
+
+            single_put = _best(put_once, repeats)
+            single_get = _best(get_once, repeats)
+
+    # striped: 3 data nodes, rf=1 (each byte written once, like single)
+    meta = MetaNode(replication=1).start()
+    nodes = [
+        DataNode(meta.address, str(tmp / f"n{i}"), node_id=f"n{i}").start()
+        for i in range(3)
+    ]
+    ccli = ClusterClient(meta.address, block_size=CLUSTER_BLOCK)
+    try:
+        seq = iter(range(100))
+
+        def cput_once() -> float:
+            # a fresh name per repeat: overwriting would enqueue block
+            # reclaims whose disk churn bleeds into the next repeat
+            t0 = time.perf_counter()
+            ccli.put(f"bench_{next(seq)}.bin", data=payload)
+            return size / (time.perf_counter() - t0) / 1e6
+
+        def cget_once() -> float:
+            t0 = time.perf_counter()
+            assert len(ccli.get("bench_0.bin")) == size
+            return size / (time.perf_counter() - t0) / 1e6
+
+        striped_put = _best(cput_once, repeats)
+        striped_get = _best(cget_once, repeats)
+    finally:
+        ccli.close()
+        for n in nodes:
+            n.stop()
+        meta.stop()
+    shutil.rmtree(tmp, ignore_errors=True)
+
+    rows = []
+    for mode, single, striped in (("put", single_put, striped_put),
+                                  ("get", single_get, striped_get)):
+        rows.append({
+            "mode": mode, "path": "single", "nodes": 1,
+            "size_mb": size >> 20, "block_kb": CLUSTER_BLOCK >> 10,
+            "mb_s": round(single, 1), "gain_vs_single": 1.0,
+        })
+        rows.append({
+            "mode": mode, "path": "striped", "nodes": 3,
+            "size_mb": size >> 20, "block_kb": CLUSTER_BLOCK >> 10,
+            "mb_s": round(striped, 1),
+            "gain_vs_single": round(striped / single, 2),
+        })
+    for row in rows:
+        print(",".join(f"{k}={v}" for k, v in row.items()), flush=True)
+    return rows

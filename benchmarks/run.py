@@ -17,6 +17,7 @@ Sections:
   0b2. zero_copy_recv — copy vs registered-pool vs splice receive datapaths
   0b3. zero_copy_batched — per-frame vs syscall-batched framing (+ syscalls/GB)
   0c. host_transfer  — engine x channels matrix (MB/s + writev calls)
+  0d. cluster_stripe — striped 3-node cluster vs single-node session
   1. paper_figs      — Figs. 12-19 transfer reproductions (MTEDP vs MT vs MP)
   2. device_channels — xDFS ring collectives vs lax.psum (8-dev subprocess)
   3. kernels_bench   — attention / wkv / rglru scaling micro-benches
@@ -122,6 +123,12 @@ def main() -> None:
 
     print("== section 0c: host transfer matrix ==", flush=True)
     sections["host_transfer"] = host_transfer_matrix(
+        smoke=args.smoke or args.quick)
+
+    print("== section 0d: cluster striping A/B ==", flush=True)
+    from benchmarks import cluster_stripe
+
+    sections["cluster_stripe"] = cluster_stripe.run(
         smoke=args.smoke or args.quick)
 
     if args.smoke:

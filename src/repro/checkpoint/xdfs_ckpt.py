@@ -16,6 +16,17 @@ Fault-tolerance invariants (tested):
   * restore picks the newest COMPLETE step;
   * checksum mismatch -> that step is rejected and the previous one loads;
   * keep_last bounds disk usage.
+
+Cluster mode (opt-in): pass ``cluster=ClusterClient(...)`` to ``save`` /
+``restore`` / ``latest_step`` and every leaf stripes across the fleet of
+data nodes with the MetaNode's replication factor — sharded JAX
+checkpoint shards become replicated cluster blocks, and a data node
+dying between save and restore costs nothing. ``directory`` then names a
+prefix in the cluster namespace instead of a local path; the manifest is
+written LAST, so it is the commit point (restore only considers steps
+whose manifest exists — the same torn-save invariant as the atomic
+rename, without needing a rename primitive). The single-node local path
+stays the default and is untouched.
 """
 from __future__ import annotations
 
@@ -60,8 +71,82 @@ def _leaf_files(tree):
     return out
 
 
-def save(tree: Any, directory: str, step: int, keep_last: int = 3) -> str:
-    """Blocking sharded save; returns the committed directory."""
+def _step_prefix(directory: str, step: int) -> str:
+    return f"{directory.rstrip('/')}/step_{step:08d}"
+
+
+def _cluster_steps(directory: str, cluster) -> list:
+    """Committed steps in the cluster namespace = those whose manifest
+    (the last file written) exists."""
+    prefix = directory.rstrip("/") + "/step_"
+    steps = set()
+    for name in cluster.list(prefix):
+        rest = name[len(prefix):]
+        if rest.endswith("/manifest.json"):
+            steps.add(int(rest.split("/")[0]))
+    return sorted(steps)
+
+
+def _save_cluster(tree: Any, directory: str, step: int, keep_last: int,
+                  cluster) -> str:
+    prefix = _step_prefix(directory, step)
+    manifest = {"step": step, "leaves": []}
+    for keypath, fname, leaf in _leaf_files(tree):
+        arr = np.asarray(jax.device_get(leaf))
+        raw = arr.tobytes()
+        manifest["leaves"].append(
+            {
+                "key": keypath,
+                "file": fname,
+                "shape": list(arr.shape),
+                "dtype": str(arr.dtype),
+                "crc32": zlib.crc32(raw) & 0xFFFFFFFF,
+            }
+        )
+        cluster.put(f"{prefix}/{fname}", data=raw)
+    # manifest LAST = the commit point (restore ignores manifest-less steps)
+    cluster.put(f"{prefix}/manifest.json",
+                data=json.dumps(manifest).encode())
+    for old in _cluster_steps(directory, cluster)[:-keep_last]:
+        for name in cluster.list(_step_prefix(directory, old) + "/"):
+            cluster.delete(name)
+    return prefix
+
+
+def _restore_one_cluster(directory: str, step: int, like: Any,
+                         shardings: Any, cluster):
+    prefix = _step_prefix(directory, step)
+    manifest = json.loads(cluster.get(f"{prefix}/manifest.json"))
+    leaves_like, treedef = jax.tree_util.tree_flatten(like)
+    sh_leaves = (
+        jax.tree_util.tree_flatten(shardings)[0] if shardings is not None else
+        [None] * len(leaves_like)
+    )
+    if len(manifest["leaves"]) != len(leaves_like):
+        raise ValueError(
+            f"leaf count mismatch: ckpt {len(manifest['leaves'])} "
+            f"vs {len(leaves_like)}"
+        )
+    out = []
+    for meta, sh in zip(manifest["leaves"], sh_leaves):
+        raw = cluster.get(f"{prefix}/{meta['file']}")
+        if (zlib.crc32(raw) & 0xFFFFFFFF) != meta["crc32"]:
+            raise IOError(f"checksum mismatch in {meta['file']}")
+        arr = np.frombuffer(raw, dtype=meta["dtype"]).reshape(meta["shape"])
+        out.append(jax.device_put(arr, sh) if sh is not None
+                   else jax.device_put(arr))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def save(tree: Any, directory: str, step: int, keep_last: int = 3,
+         cluster=None) -> str:
+    """Blocking sharded save; returns the committed directory.
+
+    ``cluster`` (opt-in): a ``repro.cluster.ClusterClient`` — leaves
+    stripe across the cluster's data nodes instead of a local step dir.
+    """
+    if cluster is not None:
+        return _save_cluster(tree, directory, step, keep_last, cluster)
     base = Path(directory)
     base.mkdir(parents=True, exist_ok=True)
     rel = f"step_{step:08d}.tmp"
@@ -109,7 +194,10 @@ def _gc(base: Path, keep_last: int):
         shutil.rmtree(p, ignore_errors=True)
 
 
-def latest_step(directory: str) -> Optional[int]:
+def latest_step(directory: str, cluster=None) -> Optional[int]:
+    if cluster is not None:
+        steps = _cluster_steps(directory, cluster)
+        return steps[-1] if steps else None
     base = Path(directory)
     if not base.exists():
         return None
@@ -122,10 +210,28 @@ def latest_step(directory: str) -> Optional[int]:
 
 
 def restore(directory: str, like: Any, step: Optional[int] = None,
-            shardings: Any = None) -> Any:
+            shardings: Any = None, cluster=None) -> Any:
     """Restore into the structure of ``like`` (ShapeDtypeStructs or arrays).
 
-    Walks back to older steps if the newest is corrupt (checksum)."""
+    Walks back to older steps if the newest is corrupt (checksum).
+    ``cluster`` (opt-in): restore from the cluster namespace instead of
+    a local directory — per-block CRCs and replica failover come from
+    the ``ClusterClient``, and the leaf-level checksum walk-back across
+    steps is the same as the local path."""
+    if cluster is not None:
+        candidates = _cluster_steps(directory, cluster)
+        if step is not None:
+            candidates = [s for s in candidates if s == step]
+        last_err: Optional[Exception] = None
+        for s in reversed(candidates):
+            try:
+                return _restore_one_cluster(directory, s, like, shardings,
+                                            cluster), s
+            except Exception as e:  # corrupt/lost step: fall back
+                last_err = e
+        raise FileNotFoundError(
+            f"no restorable checkpoint under {directory!r} in cluster: "
+            f"{last_err}")
     base = Path(directory)
     candidates = sorted(
         int(p.name.split("_")[1])

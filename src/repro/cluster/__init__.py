@@ -1,0 +1,53 @@
+"""Cluster xDFS: striped, replicated multi-node storage.
+
+A :class:`MetaNode` (metadata/placement service) fronts a fleet of
+:class:`DataNode` block stores (each an ``XdfsServer``); a
+:class:`ClusterClient` stripes files into fixed-size blocks placed
+across nodes with a replication factor. Block bytes always move over
+ordinary xDFS sessions (the tuned zero-copy, syscall-batched datapath);
+this package is only the control plane: placement, heartbeats + block
+reports, failure detection, re-replication, and rebalancing.
+
+See docs/ARCHITECTURE.md ("Cluster control plane") for the wire spec
+and examples/cluster_quickstart.py for a runnable 3-node demo.
+"""
+from repro.cluster.client import DEFAULT_CLUSTER_BLOCK, ClusterClient
+from repro.cluster.datanode import DataNode
+from repro.cluster.metanode import FailureDetector, MetaNode, NodeInfo
+from repro.cluster.placement import (
+    Move,
+    choose_replicas,
+    plan_put,
+    plan_rebalance,
+    plan_replication,
+    spread,
+)
+from repro.cluster.wire import (
+    CMD_DROP,
+    CMD_REPLICATE,
+    ClusterError,
+    ClusterMsg,
+    block_name,
+    new_block_id,
+)
+
+__all__ = [
+    "CMD_DROP",
+    "CMD_REPLICATE",
+    "ClusterClient",
+    "ClusterError",
+    "ClusterMsg",
+    "DEFAULT_CLUSTER_BLOCK",
+    "DataNode",
+    "FailureDetector",
+    "MetaNode",
+    "Move",
+    "NodeInfo",
+    "block_name",
+    "choose_replicas",
+    "new_block_id",
+    "plan_put",
+    "plan_rebalance",
+    "plan_replication",
+    "spread",
+]

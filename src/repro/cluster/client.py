@@ -1,0 +1,246 @@
+"""ClusterClient: striped, replicated put/get over a fleet of data nodes.
+
+A put asks the MetaNode for a placement plan (``PLAN_PUT``), then writes
+every block to each of its ``rf`` planned nodes **in parallel** over
+pooled per-node xDFS sessions — one negotiated multi-channel session per
+data node, every block a pipelined ``put`` future on it, so the stripe
+rides the batched zero-copy datapath unchanged. The client computes a
+CRC32 per block and ``COMMIT``\\ s the achieved replica sets: a write
+that lost a replica mid-put (node died) still commits as long as every
+block landed somewhere, and the MetaNode's re-replication heals it back
+to ``rf``.
+
+A get resolves block locations (``LOOKUP``), fans the fetches out across
+replicas (block *i* prefers holder ``i mod len(holders)``, spreading
+read load), verifies each block's CRC, and **fails over**: a dead node
+or a corrupt replica just moves the fetch to the next live holder.
+"""
+from __future__ import annotations
+
+import os
+import socket
+import threading
+import zlib
+from typing import Dict, List, Optional, Tuple
+
+from repro.cluster.wire import (
+    ClusterError,
+    ClusterMsg,
+    block_name,
+    request,
+)
+from repro.core.api import SessionPool
+from repro.core.session import DEFAULT_BLOCK
+
+DEFAULT_CLUSTER_BLOCK = 4 << 20
+
+
+def _crc(view) -> int:
+    return zlib.crc32(view) & 0xFFFFFFFF
+
+
+class ClusterClient:
+    """Client-side striping/replication over per-node pooled sessions."""
+
+    def __init__(self, meta_address: Tuple[str, int],
+                 block_size: int = DEFAULT_CLUSTER_BLOCK,
+                 n_channels: int = 2, engine: str = "mtedp",
+                 batch_frames: int = 1,
+                 session_block: int = DEFAULT_BLOCK,
+                 pool: Optional[SessionPool] = None):
+        self.meta_address = (meta_address[0], int(meta_address[1]))
+        self.block_size = block_size
+        self.pool = pool or SessionPool(
+            n_channels=n_channels, engine=engine,
+            block_size=min(session_block, block_size),
+            batch_frames=batch_frames)
+        self._owns_pool = pool is None
+        self._meta: Optional[socket.socket] = None
+        self._meta_lock = threading.Lock()
+        self.stats: Dict[str, int] = {
+            "puts": 0, "gets": 0, "blocks_written": 0, "blocks_read": 0,
+            "replica_failovers": 0, "degraded_blocks": 0,
+        }
+
+    # -- metanode control --------------------------------------------------
+
+    def _call(self, msg: ClusterMsg, body: dict) -> dict:
+        with self._meta_lock:
+            for attempt in (0, 1):
+                if self._meta is None:
+                    self._meta = socket.create_connection(
+                        self.meta_address, timeout=10.0)
+                    self._meta.setsockopt(socket.IPPROTO_TCP,
+                                          socket.TCP_NODELAY, 1)
+                try:
+                    return request(self._meta, msg, body)
+                except (ConnectionError, OSError):
+                    try:
+                        self._meta.close()
+                    except OSError:
+                        pass
+                    self._meta = None
+                    if attempt:
+                        raise
+        raise AssertionError("unreachable")
+
+    # -- put ---------------------------------------------------------------
+
+    def put(self, name: str, data: Optional[bytes] = None,
+            src: Optional[str] = None) -> dict:
+        """Stripe ``data`` (or the contents of file ``src``) across the
+        cluster under ``name``. Returns the commit summary."""
+        if data is None:
+            if src is None:
+                raise ValueError("put needs data or src")
+            with open(src, "rb") as f:
+                data = f.read()
+        view = memoryview(data)
+        plan = self._call(ClusterMsg.PLAN_PUT, {
+            "name": name, "size": len(view), "block_size": self.block_size,
+        })
+        # fan out: every (block, replica) is one pipelined put future on
+        # that node's pooled session; sessions serialize per node, nodes
+        # stream in parallel
+        writes = []  # (block index, node dict, future or error)
+        for i, blk in enumerate(plan["blocks"]):
+            piece = view[blk["offset"]:blk["offset"] + blk["length"]]
+            for node in blk["nodes"]:
+                addr = (node["host"], node["port"])
+                try:
+                    cli = self.pool.lease(addr)
+                    fut = cli.put(None, block_name(blk["id"]), data=piece)
+                except Exception as e:  # noqa: BLE001 - dead node: the
+                    # block's other replicas may still land
+                    self.pool.invalidate(addr)
+                    fut = e
+                writes.append((i, node, fut))
+        achieved: List[List[str]] = [[] for _ in plan["blocks"]]
+        for i, node, fut in writes:
+            if isinstance(fut, Exception):
+                continue
+            try:
+                fut.result()
+                achieved[i].append(node["node_id"])
+                self.stats["blocks_written"] += 1
+            except Exception:  # noqa: BLE001
+                self.pool.invalidate((node["host"], node["port"]))
+        blocks = []
+        for i, blk in enumerate(plan["blocks"]):
+            if not achieved[i]:
+                raise ClusterError(
+                    f"block {i} of {name!r} failed on every planned node")
+            if len(achieved[i]) < len(blk["nodes"]):
+                self.stats["degraded_blocks"] += 1
+            piece = view[blk["offset"]:blk["offset"] + blk["length"]]
+            blocks.append({
+                "id": blk["id"], "offset": blk["offset"],
+                "length": blk["length"], "crc32": _crc(piece),
+                "nodes": achieved[i],
+            })
+        out = self._call(ClusterMsg.COMMIT, {
+            "name": name, "size": len(view),
+            "block_size": plan["block_size"], "blocks": blocks,
+        })
+        self.stats["puts"] += 1
+        return out
+
+    def put_file(self, src: str, name: Optional[str] = None) -> dict:
+        return self.put(name or os.path.basename(src), src=src)
+
+    # -- get ---------------------------------------------------------------
+
+    def get(self, name: str) -> bytes:
+        """Reassemble ``name`` from block replicas, verifying per-block
+        CRCs and failing over dead/corrupt replicas."""
+        meta = self._call(ClusterMsg.LOOKUP, {"name": name})
+        out = bytearray(meta["size"])
+        # first pass: one preferred replica per block, fanned out as
+        # pipelined futures grouped by session
+        fetches = []  # (block, holders after preferred, future or error)
+        for i, blk in enumerate(meta["blocks"]):
+            holders = blk["nodes"]
+            if not holders:
+                raise ClusterError(
+                    f"block {i} of {name!r} has no live replica")
+            order = holders[i % len(holders):] + holders[:i % len(holders)]
+            fetches.append((blk, order[1:], self._start_fetch(order[0], blk)))
+        retry = []
+        for blk, rest, fut in fetches:
+            data = self._finish_fetch(blk, fut)
+            if data is None:
+                retry.append((blk, rest))
+            else:
+                out[blk["offset"]:blk["offset"] + blk["length"]] = data
+        # failover pass: walk the remaining replicas of each failed block
+        for blk, rest in retry:
+            data = None
+            for node in rest:
+                self.stats["replica_failovers"] += 1
+                data = self._finish_fetch(blk, self._start_fetch(node, blk))
+                if data is not None:
+                    break
+            if data is None:
+                raise ClusterError(
+                    f"no intact replica of block {blk['id']} ({name!r})")
+            out[blk["offset"]:blk["offset"] + blk["length"]] = data
+        self.stats["gets"] += 1
+        return bytes(out)
+
+    def get_file(self, name: str, dst: str) -> int:
+        data = self.get(name)
+        with open(dst, "wb") as f:
+            f.write(data)
+        return len(data)
+
+    def _start_fetch(self, node: dict, blk: dict):
+        addr = (node["host"], node["port"])
+        try:
+            return self.pool.lease(addr).get_bytes(block_name(blk["id"]))
+        except Exception as e:  # noqa: BLE001 - dead node
+            self.pool.invalidate(addr)
+            return e
+
+    def _finish_fetch(self, blk: dict, fut) -> Optional[bytes]:
+        """Resolve one block fetch: None on transport failure or CRC
+        mismatch (caller fails over to another replica)."""
+        if isinstance(fut, Exception):
+            return None
+        try:
+            data = fut.result().data
+        except Exception:  # noqa: BLE001
+            return None
+        if len(data) != blk["length"] or _crc(data) != blk["crc32"]:
+            return None  # corrupt replica: as dead as a downed node
+        self.stats["blocks_read"] += 1
+        return data
+
+    # -- namespace ---------------------------------------------------------
+
+    def delete(self, name: str) -> None:
+        self._call(ClusterMsg.DELETE, {"name": name})
+
+    def list(self, prefix: str = "") -> List[str]:
+        return self._call(ClusterMsg.LIST, {"prefix": prefix})["names"]
+
+    def state(self) -> dict:
+        return self._call(ClusterMsg.STATE, {})
+
+    # -- lifecycle ---------------------------------------------------------
+
+    def close(self) -> None:
+        with self._meta_lock:
+            if self._meta is not None:
+                try:
+                    self._meta.close()
+                except OSError:
+                    pass
+                self._meta = None
+        if self._owns_pool:
+            self.pool.close()
+
+    def __enter__(self) -> "ClusterClient":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()

@@ -1,0 +1,216 @@
+"""DataNode: one storage node of the cluster = one ``XdfsServer``.
+
+A data node is deliberately thin: the tuned single-host datapath (the
+persistent session API with its zero-copy, syscall-batched engines) IS
+the block transport, unchanged. This module only adds the control-plane
+glue:
+
+* a block store — the wrapped ``XdfsServer``'s root directory, holding
+  one ``blk_<id>.bin`` file per block (clients and peers read/write
+  them over ordinary xDFS sessions);
+* registration + periodic heartbeats to the MetaNode, each carrying a
+  **full block report** (scanned from the store, so the report is the
+  ground truth even after a crash/restart);
+* execution of the commands piggybacked on heartbeat replies:
+  ``replicate`` pushes a block to a peer data node over a pooled xDFS
+  session (node-to-node copy on the same zero-copy path — file-backed
+  ``put`` means mmap/sendfile end to end), ``drop`` unlinks it.
+
+``kill()`` simulates a crash for tests and demos: the server stops
+accepting, in-flight sessions die, and heartbeats stop — the MetaNode's
+failure detector takes it from there.
+"""
+from __future__ import annotations
+
+import os
+import socket
+import threading
+import uuid
+from pathlib import Path
+from typing import Dict, List, Optional, Tuple
+
+from repro.cluster.wire import (
+    CMD_DROP,
+    CMD_REPLICATE,
+    ClusterMsg,
+    block_name,
+    request,
+)
+from repro.core.api import SessionPool, XdfsServer
+
+BLOCK_PREFIX = "blk_"
+BLOCK_SUFFIX = ".bin"
+
+
+class DataNode:
+    """One cluster storage node: an ``XdfsServer`` block store plus the
+    MetaNode control loop. ``auto_heartbeat=False`` hands the beat to
+    the caller (:meth:`heartbeat_once`) for deterministic tests."""
+
+    def __init__(self, meta_address: Tuple[str, int], root: str,
+                 node_id: Optional[str] = None, engine: str = "mtedp",
+                 host: str = "127.0.0.1",
+                 heartbeat_interval: float = 0.5,
+                 auto_heartbeat: bool = True,
+                 n_channels: int = 2, batch_frames: int = 1,
+                 pool: Optional[SessionPool] = None):
+        self.meta_address = (meta_address[0], int(meta_address[1]))
+        self.root = Path(root)
+        self.node_id = node_id or f"dn-{uuid.uuid4().hex[:8]}"
+        self.heartbeat_interval = heartbeat_interval
+        self.auto_heartbeat = auto_heartbeat
+        self.server = XdfsServer(engine=engine, root=str(self.root),
+                                 host=host)
+        # node-to-node transport: one pooled session per peer, so many
+        # re-replication copies to the same survivor share a negotiation
+        self.pool = pool or SessionPool(n_channels=n_channels,
+                                        engine=engine,
+                                        batch_frames=batch_frames)
+        self._owns_pool = pool is None
+        self._ctrl: Optional[socket.socket] = None
+        self._ctrl_lock = threading.Lock()
+        self._hb_thread: Optional[threading.Thread] = None
+        self._stop = threading.Event()
+        self.errors: List[BaseException] = []
+        self.stats: Dict[str, int] = {
+            "heartbeats": 0, "replicated_out": 0, "dropped": 0,
+            "command_errors": 0,
+        }
+
+    # -- lifecycle ---------------------------------------------------------
+
+    def start(self) -> "DataNode":
+        self.root.mkdir(parents=True, exist_ok=True)
+        self.server.start()
+        self.register()
+        if self.auto_heartbeat:
+            self._hb_thread = threading.Thread(
+                target=self._heartbeat_loop,
+                name=f"heartbeat-{self.node_id}", daemon=True)
+            self._hb_thread.start()
+        return self
+
+    @property
+    def address(self) -> Tuple[str, int]:
+        return self.server.address
+
+    def kill(self) -> None:
+        """Crash the node: sever every open session (clients holding
+        pooled sessions see the peer die mid-transfer), stop serving
+        blocks, and stop heartbeating. The MetaNode notices via its
+        failure detector."""
+        self._stop.set()
+        with self._ctrl_lock:
+            if self._ctrl is not None:
+                try:
+                    self._ctrl.close()
+                except OSError:
+                    pass
+                self._ctrl = None
+        self.server.abort()
+        if self._hb_thread is not None:
+            self._hb_thread.join(5.0)
+        if self._owns_pool:
+            self.pool.close()
+
+    def stop(self) -> None:
+        self.kill()
+
+    def __enter__(self) -> "DataNode":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.stop()
+
+    # -- control loop ------------------------------------------------------
+
+    def _meta_request(self, msg: ClusterMsg, body: dict) -> dict:
+        """One request on the persistent MetaNode control connection,
+        re-dialing once if the connection went away."""
+        with self._ctrl_lock:
+            for attempt in (0, 1):
+                if self._ctrl is None:
+                    self._ctrl = socket.create_connection(
+                        self.meta_address, timeout=10.0)
+                    self._ctrl.setsockopt(socket.IPPROTO_TCP,
+                                          socket.TCP_NODELAY, 1)
+                try:
+                    return request(self._ctrl, msg, body)
+                except (ConnectionError, OSError):
+                    try:
+                        self._ctrl.close()
+                    except OSError:
+                        pass
+                    self._ctrl = None
+                    if attempt:
+                        raise
+        raise AssertionError("unreachable")
+
+    def register(self) -> dict:
+        host, port = self.server.address
+        return self._meta_request(ClusterMsg.REGISTER, {
+            "node_id": self.node_id, "host": host, "port": port,
+        })
+
+    def block_ids(self) -> List[str]:
+        """The store's ground truth, scanned fresh for every report."""
+        out = []
+        for p in self.root.glob(f"{BLOCK_PREFIX}*{BLOCK_SUFFIX}"):
+            out.append(p.name[len(BLOCK_PREFIX):-len(BLOCK_SUFFIX)])
+        return sorted(out)
+
+    def heartbeat_once(self) -> List[dict]:
+        """Send one heartbeat + block report; execute every command the
+        MetaNode piggybacked on the reply. Returns those commands."""
+        reply = self._meta_request(ClusterMsg.HEARTBEAT, {
+            "node_id": self.node_id, "blocks": self.block_ids(),
+        })
+        self.stats["heartbeats"] += 1
+        cmds = reply.get("commands", [])
+        for cmd in cmds:
+            try:
+                self._execute(cmd)
+            except Exception as e:  # noqa: BLE001 - a failed copy must not
+                # kill the beat loop; the MetaNode replans after the grace
+                self.stats["command_errors"] += 1
+                self.errors.append(e)
+        return cmds
+
+    def _heartbeat_loop(self) -> None:
+        while not self._stop.wait(self.heartbeat_interval):
+            try:
+                self.heartbeat_once()
+            except Exception as e:  # noqa: BLE001 - meta may be restarting
+                self.errors.append(e)
+
+    # -- command execution -------------------------------------------------
+
+    def _execute(self, cmd: dict) -> None:
+        op = cmd.get("op")
+        if op == CMD_REPLICATE:
+            self._replicate(cmd["block_id"], cmd["target"])
+        elif op == CMD_DROP:
+            self._drop(cmd["block_id"])
+        else:
+            raise ValueError(f"unknown cluster command {op!r}")
+
+    def _replicate(self, block_id: str, target: dict) -> None:
+        """Node-to-node copy: push one block file to a peer data node
+        over a pooled xDFS session (file-backed put = the zero-copy
+        mmap/sendfile send path, negotiated once per peer)."""
+        path = self.root / block_name(block_id)
+        addr = (target["host"], int(target["port"]))
+        try:
+            cli = self.pool.lease(addr)
+            cli.put(str(path), block_name(block_id)).result()
+            self.stats["replicated_out"] += 1
+        except Exception:
+            self.pool.invalidate(addr)
+            raise
+
+    def _drop(self, block_id: str) -> None:
+        try:
+            os.unlink(self.root / block_name(block_id))
+            self.stats["dropped"] += 1
+        except FileNotFoundError:
+            pass

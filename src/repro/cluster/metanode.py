@@ -1,0 +1,489 @@
+"""MetaNode: the cluster's metadata/placement service (NameNode-style).
+
+One MetaNode fronts a fleet of data nodes (each an ``XdfsServer`` — see
+``datanode.py``). It owns the namespace (file -> ordered block list),
+the placement policy (``placement.py``), and the failure detector; it
+never touches block bytes. Data nodes register, then send periodic
+heartbeats carrying a **full block report**; clients ask for placement
+plans (put) and block locations (get) and move blocks themselves over
+ordinary xDFS sessions, so the MetaNode stays off the datapath.
+
+Control flow is pull-based: the MetaNode commands a data node only by
+piggybacking ``replicate`` / ``drop`` commands on its next heartbeat
+reply. That makes recovery idempotent — a node that crashes and comes
+back simply beats again and picks up fresh commands computed from the
+then-current state.
+
+The failure detector and the re-replication planner are driven by an
+injectable ``clock`` (same idiom as ``core/autotune.py``'s controllers)
+so tests advance time deterministically; ``start()`` additionally runs
+a real ticker thread for live clusters.
+"""
+from __future__ import annotations
+
+import socket
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Set, Tuple
+
+from repro.cluster import placement
+from repro.cluster.wire import (
+    CMD_DROP,
+    CMD_REPLICATE,
+    ClusterError,
+    ClusterMsg,
+    new_block_id,
+    recv_msg,
+    send_msg,
+)
+
+DEFAULT_REPLICATION = 2
+# a commanded copy that has not shown up in a block report after this
+# many timeouts is presumed failed and re-planned
+REPLICATION_GRACE_TIMEOUTS = 3.0
+
+
+class FailureDetector:
+    """Heartbeat bookkeeping: a node is alive while its last beat is
+    within ``timeout`` of ``clock()``. ``sweep()`` returns the nodes
+    that died since the previous sweep; a later beat revives a node."""
+
+    def __init__(self, timeout: float = 2.0,
+                 clock: Callable[[], float] = time.monotonic):
+        self.timeout = timeout
+        self._clock = clock
+        self._last: Dict[str, float] = {}
+        self._dead: Set[str] = set()
+
+    def beat(self, node_id: str) -> None:
+        self._last[node_id] = self._clock()
+        self._dead.discard(node_id)
+
+    def is_alive(self, node_id: str) -> bool:
+        last = self._last.get(node_id)
+        return (last is not None and node_id not in self._dead
+                and self._clock() - last <= self.timeout)
+
+    def alive(self) -> Set[str]:
+        return {n for n in self._last if self.is_alive(n)}
+
+    def sweep(self) -> List[str]:
+        now = self._clock()
+        newly_dead = sorted(
+            n for n, last in self._last.items()
+            if n not in self._dead and now - last > self.timeout
+        )
+        self._dead.update(newly_dead)
+        return newly_dead
+
+    def forget(self, node_id: str) -> None:
+        self._last.pop(node_id, None)
+        self._dead.discard(node_id)
+
+
+@dataclass
+class NodeInfo:
+    node_id: str
+    host: str
+    port: int
+    blocks: Set[str] = field(default_factory=set)
+
+    @property
+    def address(self) -> Tuple[str, int]:
+        return (self.host, self.port)
+
+    def as_dict(self) -> dict:
+        return {"node_id": self.node_id, "host": self.host,
+                "port": self.port}
+
+
+class MetaNode:
+    """The metadata/placement service. Thread-safe; all state under one
+    lock. Usable fully in-process (handlers are plain methods) or as a
+    TCP service via :meth:`start`."""
+
+    def __init__(self, host: str = "127.0.0.1", port: int = 0,
+                 replication: int = DEFAULT_REPLICATION,
+                 heartbeat_timeout: float = 2.0,
+                 tick_interval: Optional[float] = None,
+                 auto_rebalance: bool = False,
+                 clock: Callable[[], float] = time.monotonic):
+        self.host = host
+        self._port = port
+        self.replication = max(1, int(replication))
+        self.heartbeat_timeout = heartbeat_timeout
+        self.tick_interval = (heartbeat_timeout / 4.0
+                              if tick_interval is None else tick_interval)
+        self.auto_rebalance = auto_rebalance
+        self._clock = clock
+        self.detector = FailureDetector(heartbeat_timeout, clock)
+        self._lock = threading.RLock()
+        self.nodes: Dict[str, NodeInfo] = {}
+        self.files: Dict[str, dict] = {}  # name -> {size, block_size, blocks}
+        self.locations: Dict[str, Set[str]] = {}  # block id -> node ids
+        self._commands: Dict[str, List[dict]] = {}  # node id -> queued cmds
+        self._inflight: Dict[Tuple[str, str], float] = {}  # (blk, dst) -> t
+        self._pending_drops: List[Tuple[str, str, str]] = []  # blk, src, dst
+        self.lost_blocks: Set[str] = set()
+        self.stats: Dict[str, int] = {
+            "heartbeats": 0, "plans": 0, "commits": 0, "lookups": 0,
+            "re_replications": 0, "rebalance_moves": 0, "nodes_died": 0,
+        }
+        self._lsock: Optional[socket.socket] = None
+        self._threads: List[threading.Thread] = []
+        self._stopping = False
+
+    # -- lifecycle ---------------------------------------------------------
+
+    def start(self) -> "MetaNode":
+        lsock = socket.socket()
+        lsock.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+        lsock.bind((self.host, self._port))
+        lsock.listen(64)
+        lsock.settimeout(0.25)
+        self._lsock = lsock
+        acc = threading.Thread(target=self._accept_loop,
+                               name="meta-accept", daemon=True)
+        acc.start()
+        self._threads.append(acc)
+        if self.tick_interval > 0:
+            tk = threading.Thread(target=self._tick_loop,
+                                  name="meta-tick", daemon=True)
+            tk.start()
+            self._threads.append(tk)
+        return self
+
+    @property
+    def address(self) -> Tuple[str, int]:
+        assert self._lsock is not None, "metanode not started"
+        return self._lsock.getsockname()[:2]
+
+    def stop(self, timeout: float = 5.0) -> None:
+        self._stopping = True
+        if self._lsock is not None:
+            try:
+                self._lsock.close()
+            except OSError:
+                pass
+        for t in self._threads:
+            t.join(timeout)
+
+    def __enter__(self) -> "MetaNode":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.stop()
+
+    def _accept_loop(self) -> None:
+        while not self._stopping:
+            try:
+                conn, _ = self._lsock.accept()
+            except socket.timeout:
+                continue
+            except OSError:
+                break
+            threading.Thread(target=self._serve_conn, args=(conn,),
+                             daemon=True).start()
+
+    def _serve_conn(self, conn: socket.socket) -> None:
+        try:
+            conn.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+            while not self._stopping:
+                try:
+                    msg, body = recv_msg(conn)
+                except (ConnectionError, OSError):
+                    return
+                try:
+                    send_msg(conn, ClusterMsg.OK, self.dispatch(msg, body))
+                except ClusterError as e:
+                    send_msg(conn, ClusterMsg.ERR, {"error": str(e)})
+        except OSError:
+            pass
+        finally:
+            try:
+                conn.close()
+            except OSError:
+                pass
+
+    def _tick_loop(self) -> None:
+        while not self._stopping:
+            time.sleep(self.tick_interval)
+            try:
+                self.tick()
+                if self.auto_rebalance:
+                    self.rebalance()
+            except Exception:  # noqa: BLE001 - the ticker must survive
+                pass
+
+    # -- dispatch ----------------------------------------------------------
+
+    def dispatch(self, msg: ClusterMsg, body: dict) -> dict:
+        handlers = {
+            ClusterMsg.REGISTER: self.handle_register,
+            ClusterMsg.HEARTBEAT: self.handle_heartbeat,
+            ClusterMsg.PLAN_PUT: self.handle_plan_put,
+            ClusterMsg.COMMIT: self.handle_commit,
+            ClusterMsg.LOOKUP: self.handle_lookup,
+            ClusterMsg.LIST: self.handle_list,
+            ClusterMsg.DELETE: self.handle_delete,
+            ClusterMsg.STATE: self.handle_state,
+        }
+        h = handlers.get(msg)
+        if h is None:
+            raise ClusterError(f"unhandled control message {msg!r}")
+        return h(body)
+
+    # -- node control plane ------------------------------------------------
+
+    def handle_register(self, body: dict) -> dict:
+        node_id = str(body["node_id"])
+        with self._lock:
+            self.nodes[node_id] = NodeInfo(
+                node_id, str(body["host"]), int(body["port"]),
+                self.nodes.get(node_id, NodeInfo(node_id, "", 0)).blocks,
+            )
+            self.detector.beat(node_id)
+            self._commands.setdefault(node_id, [])
+        return {"heartbeat_timeout": self.heartbeat_timeout,
+                "replication": self.replication}
+
+    def handle_heartbeat(self, body: dict) -> dict:
+        node_id = str(body["node_id"])
+        report = {str(b) for b in body.get("blocks", ())}
+        with self._lock:
+            node = self.nodes.get(node_id)
+            if node is None:
+                raise ClusterError(f"unregistered node {node_id!r}")
+            self.detector.beat(node_id)
+            self.stats["heartbeats"] += 1
+            # full block report: reconcile the location index by diff
+            for blk in node.blocks - report:
+                holders = self.locations.get(blk)
+                if holders is not None:
+                    holders.discard(node_id)
+                    if not holders:
+                        del self.locations[blk]
+            for blk in report - node.blocks:
+                self.locations.setdefault(blk, set()).add(node_id)
+            node.blocks = report
+            for blk in report:
+                self._inflight.pop((blk, node_id), None)
+                self.lost_blocks.discard(blk)
+            self._settle_pending_drops()
+            cmds = self._commands.get(node_id, [])
+            self._commands[node_id] = []
+        return {"commands": cmds}
+
+    def _settle_pending_drops(self) -> None:
+        """Rebalance moves drop their source replica only AFTER the
+        destination's block report confirms the copy (never reduces
+        replication on a failed move); locked by caller."""
+        still = []
+        for blk, src, dst in self._pending_drops:
+            holders = self.locations.get(blk, set())
+            if dst in holders and self.detector.is_alive(dst):
+                if src in holders:
+                    self._enqueue(src, {"op": CMD_DROP, "block_id": blk})
+            elif (blk, dst) in self._inflight:
+                still.append((blk, src, dst))
+            # else: the move expired/failed — abandon the drop entirely
+        self._pending_drops = still
+
+    def _enqueue(self, node_id: str, cmd: dict) -> None:
+        self._commands.setdefault(node_id, []).append(cmd)
+
+    # -- failure detection + re-replication --------------------------------
+
+    def tick(self) -> List[str]:
+        """One failure-detector sweep + re-replication planning pass.
+        Returns the nodes that died this tick. Under-replicated blocks
+        (for ANY reason: a dead node, a degraded put, an expired copy
+        command) get ``replicate`` commands enqueued on live holders,
+        with in-flight suppression so repeated ticks do not spam
+        duplicate copies."""
+        with self._lock:
+            newly_dead = self.detector.sweep()
+            self.stats["nodes_died"] += len(newly_dead)
+            alive = self.detector.alive() & set(self.nodes)
+            now = self._clock()
+            grace = REPLICATION_GRACE_TIMEOUTS * self.heartbeat_timeout
+            self._inflight = {k: t for k, t in self._inflight.items()
+                              if now - t <= grace and k[1] in alive}
+            replicas = {}
+            for meta in self.files.values():
+                for blk in meta["blocks"]:
+                    holders = self.locations.get(blk["id"], set())
+                    live = holders & alive
+                    if not live:
+                        self.lost_blocks.add(blk["id"])
+                        continue
+                    if len(live) < self.replication:
+                        replicas[blk["id"]] = live
+            load = {n: len(self.nodes[n].blocks) for n in alive}
+            moves = placement.plan_replication(
+                replicas, alive, self.replication, load,
+                skip=self._inflight.keys(),
+            )
+            for mv in moves:
+                self._command_copy(mv, now)
+                self.stats["re_replications"] += 1
+            return newly_dead
+
+    def _command_copy(self, mv: placement.Move, now: float) -> None:
+        target = self.nodes[mv.dst]
+        self._enqueue(mv.src, {
+            "op": CMD_REPLICATE, "block_id": mv.block_id,
+            "target": target.as_dict(),
+        })
+        self._inflight[(mv.block_id, mv.dst)] = now
+
+    def rebalance(self) -> List[placement.Move]:
+        """Plan + enqueue moves that even out block counts across live
+        nodes; sources are dropped only after the destination confirms
+        (see :meth:`_settle_pending_drops`). Returns the planned moves."""
+        with self._lock:
+            alive = self.detector.alive() & set(self.nodes)
+            holdings = {n: set(self.nodes[n].blocks) for n in alive}
+            pending_dsts = {(b, d) for b, _s, d in self._pending_drops}
+            now = self._clock()
+            moves = []
+            for mv in placement.plan_rebalance(holdings):
+                if ((mv.block_id, mv.dst) in self._inflight
+                        or (mv.block_id, mv.dst) in pending_dsts):
+                    continue
+                self._command_copy(mv, now)
+                self._pending_drops.append((mv.block_id, mv.src, mv.dst))
+                self.stats["rebalance_moves"] += 1
+                moves.append(mv)
+            return moves
+
+    # -- client control plane ----------------------------------------------
+
+    def handle_plan_put(self, body: dict) -> dict:
+        name = str(body["name"])
+        size = int(body["size"])
+        block_size = int(body["block_size"])
+        if block_size <= 0:
+            raise ClusterError(f"bad block_size {block_size}")
+        with self._lock:
+            alive = sorted(self.detector.alive() & set(self.nodes))
+            if not alive:
+                raise ClusterError("no live data nodes to place on")
+            rf = min(self.replication, len(alive))
+            load = {n: len(self.nodes[n].blocks) for n in alive}
+            n_blocks = (size + block_size - 1) // block_size
+            plan = placement.plan_put(n_blocks, load, rf)
+            blocks = []
+            for i, nodes in enumerate(plan):
+                off = i * block_size
+                blocks.append({
+                    "id": new_block_id(), "offset": off,
+                    "length": min(block_size, size - off),
+                    "nodes": [self.nodes[n].as_dict() for n in nodes],
+                })
+            self.stats["plans"] += 1
+        return {"name": name, "size": size, "block_size": block_size,
+                "rf": rf, "blocks": blocks}
+
+    def handle_commit(self, body: dict) -> dict:
+        name = str(body["name"])
+        blocks = body["blocks"]
+        with self._lock:
+            for blk in blocks:
+                if not blk["nodes"]:
+                    raise ClusterError(
+                        f"block {blk['id']} of {name!r} has no replicas")
+            old = self.files.get(name)
+            self.files[name] = {
+                "size": int(body["size"]),
+                "block_size": int(body["block_size"]),
+                "blocks": [{"id": str(b["id"]), "offset": int(b["offset"]),
+                            "length": int(b["length"]),
+                            "crc32": int(b["crc32"])} for b in blocks],
+            }
+            # optimistic locations so an immediate get works before the
+            # writers' next block reports arrive
+            for blk in blocks:
+                self.locations.setdefault(str(blk["id"]), set()).update(
+                    str(n) for n in blk["nodes"])
+            if old is not None:  # overwrite: reclaim the old blocks
+                self._reclaim(old)
+            self.stats["commits"] += 1
+        return {"ok": True, "blocks": len(blocks)}
+
+    def handle_lookup(self, body: dict) -> dict:
+        name = str(body["name"])
+        with self._lock:
+            meta = self.files.get(name)
+            if meta is None:
+                raise ClusterError(f"unknown file {name!r}")
+            alive = self.detector.alive()
+            blocks = []
+            for blk in meta["blocks"]:
+                live = sorted(self.locations.get(blk["id"], set()) & alive)
+                blocks.append({
+                    **blk,
+                    "nodes": [self.nodes[n].as_dict() for n in live
+                              if n in self.nodes],
+                })
+            self.stats["lookups"] += 1
+            return {"name": name, "size": meta["size"],
+                    "block_size": meta["block_size"], "blocks": blocks}
+
+    def handle_list(self, body: dict) -> dict:
+        prefix = str(body.get("prefix", ""))
+        with self._lock:
+            names = sorted(n for n in self.files if n.startswith(prefix))
+        return {"names": names}
+
+    def handle_delete(self, body: dict) -> dict:
+        name = str(body["name"])
+        with self._lock:
+            meta = self.files.pop(name, None)
+            if meta is None:
+                raise ClusterError(f"unknown file {name!r}")
+            self._reclaim(meta)
+        return {"ok": True}
+
+    def _reclaim(self, meta: dict) -> None:
+        """Enqueue drops for every replica of a dereferenced file's
+        blocks; locked by caller."""
+        for blk in meta["blocks"]:
+            for node_id in self.locations.pop(blk["id"], set()):
+                if node_id in self.nodes:
+                    self._enqueue(node_id,
+                                  {"op": CMD_DROP, "block_id": blk["id"]})
+            self.lost_blocks.discard(blk["id"])
+
+    def handle_state(self, body: dict) -> dict:
+        with self._lock:
+            alive = self.detector.alive()
+            return {
+                "replication": self.replication,
+                "nodes": [{**n.as_dict(), "alive": nid in alive,
+                           "blocks": len(n.blocks)}
+                          for nid, n in sorted(self.nodes.items())],
+                "files": len(self.files),
+                "under_replicated": sum(
+                    1 for c in self._replica_counts() if 0 < c < self.replication),
+                "lost": sorted(self.lost_blocks),
+            }
+
+    # -- observability (in-process) ----------------------------------------
+
+    def _replica_counts(self) -> List[int]:
+        alive = self.detector.alive()
+        return [len(self.locations.get(blk["id"], set()) & alive)
+                for meta in self.files.values() for blk in meta["blocks"]]
+
+    def replication_of(self, name: str) -> List[int]:
+        """Live replica count per block of ``name`` — the block-report
+        view tests assert re-replication against."""
+        with self._lock:
+            meta = self.files.get(name)
+            if meta is None:
+                raise KeyError(name)
+            alive = self.detector.alive()
+            return [len(self.locations.get(blk["id"], set()) & alive)
+                    for blk in meta["blocks"]]

@@ -1,0 +1,118 @@
+"""Block placement, re-replication, and rebalance planners.
+
+Pure functions over snapshots of cluster state (who is alive, who holds
+what), so the MetaNode's policy is unit-testable without sockets or
+clocks. All plans are deterministic: ties break on node id, which keeps
+the fake-clock tests exact and makes re-planning idempotent.
+
+The planners deal in :class:`Move` records — ``(block_id, src, dst)`` —
+which the MetaNode turns into ``replicate`` commands piggybacked on
+heartbeat replies (see ``wire.CMD_REPLICATE``).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Iterable, List, Mapping, Sequence, Set, Tuple
+
+
+@dataclass(frozen=True)
+class Move:
+    """Copy ``block_id`` from data node ``src`` to data node ``dst``."""
+
+    block_id: str
+    src: str
+    dst: str
+
+
+def choose_replicas(load: Mapping[str, int], k: int,
+                    exclude: Iterable[str] = ()) -> List[str]:
+    """The ``k`` least-loaded nodes not in ``exclude`` (load = blocks
+    held + blocks already planned onto the node this round, so a striped
+    plan spreads instead of piling onto one empty node). Returns fewer
+    than ``k`` when the cluster is smaller than the replication factor —
+    the caller decides whether a degraded placement is acceptable."""
+    banned = set(exclude)
+    ranked = sorted((n for n in load if n not in banned),
+                    key=lambda n: (load[n], n))
+    return ranked[:k]
+
+
+def plan_put(n_blocks: int, load: Dict[str, int], rf: int) -> List[List[str]]:
+    """Placement for a striped put: per block, ``rf`` distinct nodes.
+    Mutates ``load`` as it plans so consecutive blocks stripe across the
+    fleet instead of all landing on the initially-emptiest node."""
+    plan: List[List[str]] = []
+    for _ in range(n_blocks):
+        nodes = choose_replicas(load, rf)
+        for n in nodes:
+            load[n] += 1
+        plan.append(nodes)
+    return plan
+
+
+def plan_replication(replicas: Mapping[str, Set[str]], alive: Set[str],
+                     rf: int, load: Mapping[str, int],
+                     skip: Iterable[Tuple[str, str]] = ()) -> List[Move]:
+    """Moves that bring every under-replicated block back to ``rf``.
+
+    ``replicas`` maps block id -> nodes CURRENTLY reporting it; only
+    live holders count as sources and only live non-holders as targets.
+    ``skip`` is the in-flight suppression set — ``(block_id, dst)``
+    pairs already commanded and not yet expired, so re-planning every
+    detector tick does not spam duplicate copies. Blocks with zero live
+    replicas are unrecoverable and yield no moves (the MetaNode reports
+    them as lost instead)."""
+    skipset = set(skip)
+    budget = dict(load)  # planned targets count toward this round's load
+    moves: List[Move] = []
+    for block_id in sorted(replicas):
+        holders = sorted(replicas[block_id] & alive)
+        if not holders:
+            continue  # lost: no live source to copy from
+        missing = rf - len(holders)
+        if missing <= 0:
+            continue
+        targets = choose_replicas(budget, missing, exclude=holders)
+        for i, dst in enumerate(targets):
+            if (block_id, dst) in skipset:
+                continue
+            src = holders[i % len(holders)]  # spread source read load
+            budget[dst] += 1
+            moves.append(Move(block_id, src, dst))
+    return moves
+
+
+def plan_rebalance(holdings: Mapping[str, Set[str]],
+                   max_spread: int = 1) -> List[Move]:
+    """Moves that even out block counts across live nodes.
+
+    Repeatedly moves one block from the fullest node to the emptiest
+    node that does not already hold it, until the spread (max - min
+    blocks per node) is within ``max_spread``. The returned moves are a
+    copy plan only — the MetaNode drops the source replica AFTER the
+    destination's block report confirms the copy landed, so a crash
+    mid-rebalance never reduces replication."""
+    if len(holdings) < 2:
+        return []
+    held = {n: set(b) for n, b in holdings.items()}
+    moves: List[Move] = []
+    while True:
+        ranked = sorted(held, key=lambda n: (len(held[n]), n))
+        lo, hi = ranked[0], ranked[-1]
+        if len(held[hi]) - len(held[lo]) <= max_spread:
+            return moves
+        candidates = sorted(held[hi] - held[lo])
+        if not candidates:
+            return moves  # everything on hi already lives on lo too
+        blk = candidates[0]
+        held[hi].discard(blk)
+        held[lo].add(blk)
+        moves.append(Move(blk, hi, lo))
+
+
+def spread(holdings: Mapping[str, Sequence]) -> int:
+    """Max - min blocks per node (0 for empty/single-node clusters)."""
+    if not holdings:
+        return 0
+    counts = [len(b) for b in holdings.values()]
+    return max(counts) - min(counts)

@@ -1,0 +1,108 @@
+"""Cluster control protocol: length-prefixed JSON messages.
+
+The cluster control plane (client <-> MetaNode, DataNode <-> MetaNode)
+speaks a small framed protocol in the spirit of ``core/header.py``: a
+fixed little-endian binary header carrying magic, version, message type,
+and body length, followed by a UTF-8 JSON body. Control traffic is tiny
+and rare compared to block data (which rides the ordinary xDFS session
+datapath), so JSON bodies trade a few bytes for debuggability; the
+binary header keeps framing unambiguous and version-checked.
+
+The message table in docs/ARCHITECTURE.md ("Cluster control plane") is
+normative and machine-checked against :class:`ClusterMsg` and the
+command-op constants by ``tests/test_docs.py``.
+"""
+from __future__ import annotations
+
+import enum
+import json
+import socket
+import struct
+import uuid
+from typing import Tuple
+
+MAGIC = 0x784D4554  # 'xMET'
+VERSION = 1
+
+# header: magic, version, msg type, body length
+_FMT = struct.Struct("<IHHI")
+MSG_HEADER_SIZE = _FMT.size
+
+# a control body is small metadata (namespace entries, block reports,
+# placement plans) — anything bigger is a framing bug, not a message
+MAX_BODY = 8 << 20
+
+
+class ClusterMsg(enum.IntEnum):
+    """Cluster control-plane message types (docs/ARCHITECTURE.md table)."""
+
+    REGISTER = 1  # datanode -> meta: join, advertise data address
+    HEARTBEAT = 2  # datanode -> meta: liveness + full block report
+    PLAN_PUT = 3  # client -> meta: request a striped placement plan
+    COMMIT = 4  # client -> meta: record blocks written by a striped put
+    LOOKUP = 5  # client -> meta: resolve a name to block locations
+    LIST = 6  # client -> meta: namespace listing under a prefix
+    DELETE = 7  # client -> meta: drop a file (blocks reclaimed via drop)
+    STATE = 8  # client -> meta: cluster health snapshot
+    OK = 9  # meta -> any: success reply, JSON result body
+    ERR = 10  # meta -> any: failure reply, {"error": ...}
+
+
+# command ops carried in a HEARTBEAT OK reply ({"commands": [...]}) —
+# the MetaNode's only way to make a DataNode act (pull-based, so a
+# restarting node picks its work back up on the next beat)
+CMD_REPLICATE = "replicate"  # push one block to a peer data node
+CMD_DROP = "drop"  # delete one block from the local store
+
+
+class ClusterError(RuntimeError):
+    """A control request failed (ERR reply or protocol violation)."""
+
+
+def new_block_id() -> str:
+    return uuid.uuid4().hex
+
+
+def block_name(block_id: str) -> str:
+    """The remote name one block is stored under in a data node's root."""
+    return f"blk_{block_id}.bin"
+
+
+def send_msg(sock: socket.socket, msg: ClusterMsg, body: dict) -> None:
+    raw = json.dumps(body, separators=(",", ":")).encode()
+    sock.sendall(_FMT.pack(MAGIC, VERSION, int(msg), len(raw)) + raw)
+
+
+def _recv_exact(sock: socket.socket, n: int) -> bytes:
+    buf = bytearray(n)
+    view = memoryview(buf)
+    got = 0
+    while got < n:
+        r = sock.recv_into(view[got:])
+        if r == 0:
+            raise ConnectionError("peer closed mid-message")
+        got += r
+    return bytes(buf)
+
+
+def recv_msg(sock: socket.socket) -> Tuple[ClusterMsg, dict]:
+    magic, ver, msg, length = _FMT.unpack(_recv_exact(sock, MSG_HEADER_SIZE))
+    if magic != MAGIC:
+        raise ClusterError(f"bad control magic {magic:#x}")
+    if ver != VERSION:
+        raise ClusterError(f"unsupported control version {ver}")
+    if length > MAX_BODY:
+        raise ClusterError(f"oversized control body ({length} bytes)")
+    body = json.loads(_recv_exact(sock, length)) if length else {}
+    return ClusterMsg(msg), body
+
+
+def request(sock: socket.socket, msg: ClusterMsg, body: dict) -> dict:
+    """One control round-trip; raises :class:`ClusterError` on ERR."""
+    send_msg(sock, msg, body)
+    reply, payload = recv_msg(sock)
+    if reply == ClusterMsg.ERR:
+        raise ClusterError(payload.get("error", "unknown cluster error"))
+    if reply != ClusterMsg.OK:
+        raise ClusterError(f"unexpected reply {reply!r}")
+    return payload

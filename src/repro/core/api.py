@@ -141,6 +141,7 @@ class XdfsServer:
         self._lsock: Optional[socket.socket] = None
         self._accept_thread: Optional[threading.Thread] = None
         self._session_threads: List[threading.Thread] = []
+        self._live_socks: Dict[threading.Thread, list] = {}
         self._pending: Dict[bytes, Dict[int, socket.socket]] = {}
         self._pending_neg: Dict[bytes, Negotiation] = {}
         self._pending_since: Dict[bytes, float] = {}
@@ -193,6 +194,34 @@ class XdfsServer:
             live = list(self._session_threads)
         for t in live:
             t.join(timeout)
+
+    def abort(self) -> None:
+        """Crash the server: close the listener AND every live session's
+        channel sockets without draining, so in-flight transfers fail on
+        the peer immediately. This is the fault-injection hook the
+        cluster's node-kill uses (:meth:`stop` is the graceful path —
+        it waits for open sessions, which a crash must not)."""
+        self._stopping = True
+        if self._lsock is not None:
+            try:
+                self._lsock.close()
+            except OSError:
+                pass
+        with self._lock:
+            socks = [s for lst in self._live_socks.values() for s in lst]
+            socks.extend(s for chans in self._pending.values()
+                         for s in chans.values())
+        for s in socks:
+            try:
+                s.shutdown(socket.SHUT_RDWR)
+            except OSError:
+                pass
+            try:
+                s.close()
+            except OSError:
+                pass
+        if self._accept_thread is not None:
+            self._accept_thread.join(2.0)
 
     def wait_closed_sessions(self, n: int = 1, timeout: float = 600.0) -> bool:
         """Block until ``n`` sessions have completed (shim + tests)."""
@@ -308,6 +337,7 @@ class XdfsServer:
                 name="xdfs-session", daemon=True,
             )
             self._session_threads.append(t)
+            self._live_socks[t] = list(socks)
         for s in extras:  # garbled out-of-range channel hellos must not leak
             try:
                 s.close()
@@ -345,6 +375,7 @@ class XdfsServer:
                 self.stats["sessions_closed"] += 1
                 # prune finished threads so a long-lived server stays bounded
                 me = threading.current_thread()
+                self._live_socks.pop(me, None)
                 self._session_threads = [
                     t for t in self._session_threads
                     if t is not me and t.is_alive()
@@ -495,6 +526,17 @@ class XdfsClient:
                 out.append(self.get(src, dst))
         return out
 
+    @property
+    def broken(self) -> bool:
+        """True once the transport failed: every further op fails fast.
+        Pool users (:class:`SessionPool`) check this to replace the
+        session instead of leasing it out again."""
+        return self._broken is not None
+
+    @property
+    def closed(self) -> bool:
+        return self._closed
+
     def close(self) -> None:
         """Drain queued operations, send the terminal EOFT, close channels."""
         with self._submit_lock:
@@ -606,3 +648,88 @@ class XdfsClient:
     def _do_close(self) -> FileResult:
         send_ctrl(self.socks[CTRL_CHANNEL], ChannelEvent.EOFT, self.session_id)
         return FileResult(None, 0, 0.0)
+
+
+# ---------------------------------------------------------------------------
+# session pool (the cluster layer's node-to-node transport hook)
+# ---------------------------------------------------------------------------
+
+
+class SessionPool:
+    """Reusable :class:`XdfsClient` sessions keyed by peer address.
+
+    The cluster layer multiplies session peers: a striped put talks to
+    every data node, and re-replication copies blocks node-to-node. Each
+    of those transfers must still amortize negotiation the way a single
+    session does, so the pool keeps ONE negotiated multi-channel session
+    per peer and every block ``put``/``get`` rides it (EOFR reuse, the
+    batched zero-copy datapath unchanged). A session that broke (peer
+    died) or was closed is replaced on the next :meth:`lease`.
+    """
+
+    def __init__(self, n_channels: int = 2,
+                 engine: Union[str, Engine] = "mtedp",
+                 block_size: int = DEFAULT_BLOCK,
+                 batch_frames: int = 1,
+                 tuning: Optional[SocketTuning] = None,
+                 timeout: float = HANDSHAKE_TIMEOUT):
+        self.n_channels = n_channels
+        self.engine = engine
+        self.block_size = block_size
+        self.batch_frames = batch_frames
+        self.tuning = tuning
+        self.timeout = timeout
+        self._lock = threading.Lock()
+        self._sessions: Dict[Tuple[str, int], XdfsClient] = {}
+        self.stats: Dict[str, int] = {"connects": 0, "reuses": 0}
+
+    def lease(self, address: Tuple[str, int]) -> XdfsClient:
+        """The pooled session for ``address``, dialing one if needed.
+        Leases are shared, not exclusive: ``XdfsClient`` serializes its
+        operations through one worker, so concurrent leaseholders simply
+        pipeline onto the same channels."""
+        address = (address[0], int(address[1]))
+        with self._lock:
+            cli = self._sessions.get(address)
+            if cli is not None and not (cli.broken or cli.closed):
+                self.stats["reuses"] += 1
+                return cli
+            if cli is not None:
+                self._discard(cli)
+            cli = XdfsClient.connect(
+                address, n_channels=self.n_channels, engine=self.engine,
+                block_size=self.block_size, timeout=self.timeout,
+                tuning=self.tuning, batch_frames=self.batch_frames,
+            )
+            self._sessions[address] = cli
+            self.stats["connects"] += 1
+            return cli
+
+    def invalidate(self, address: Tuple[str, int]) -> None:
+        """Drop the pooled session for a peer (e.g. after a transfer
+        error) so the next lease re-dials."""
+        address = (address[0], int(address[1]))
+        with self._lock:
+            cli = self._sessions.pop(address, None)
+        if cli is not None:
+            self._discard(cli)
+
+    @staticmethod
+    def _discard(cli: XdfsClient) -> None:
+        try:
+            cli.close()
+        except Exception:  # noqa: BLE001 - already-broken peers raise
+            pass
+
+    def close(self) -> None:
+        with self._lock:
+            sessions = list(self._sessions.values())
+            self._sessions.clear()
+        for cli in sessions:
+            self._discard(cli)
+
+    def __enter__(self) -> "SessionPool":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()

@@ -1,0 +1,506 @@
+"""Cluster xDFS: control wire framing, placement/re-replication/rebalance
+planners, the fake-clock failure detector (no sleeps — injectable clock,
+same idiom as the ChannelTuner tests in test_batched.py), MetaNode
+command planning, SessionPool reuse, and the end-to-end 3-node cluster:
+striped put, node kill, replica-failover get, and heartbeat-driven
+re-replication back to full replication asserted via block reports."""
+import os
+import socket
+import time
+
+import pytest
+
+from repro.cluster import (
+    CMD_DROP,
+    CMD_REPLICATE,
+    ClusterClient,
+    ClusterError,
+    ClusterMsg,
+    DataNode,
+    FailureDetector,
+    MetaNode,
+    Move,
+    block_name,
+    choose_replicas,
+    plan_put,
+    plan_rebalance,
+    plan_replication,
+)
+from repro.cluster import wire
+from repro.core.api import SessionPool, XdfsServer
+
+
+class FakeClock:
+    def __init__(self, t=0.0):
+        self.t = t
+
+    def __call__(self):
+        return self.t
+
+    def advance(self, dt):
+        self.t += dt
+
+
+# ---------------------------------------------------------------------------
+# control wire framing
+# ---------------------------------------------------------------------------
+
+
+def test_wire_roundtrip():
+    a, b = socket.socketpair()
+    try:
+        body = {"node_id": "n1", "blocks": ["x", "y"], "n": 7}
+        wire.send_msg(a, ClusterMsg.HEARTBEAT, body)
+        msg, got = wire.recv_msg(b)
+        assert msg == ClusterMsg.HEARTBEAT and got == body
+        wire.send_msg(b, ClusterMsg.OK, {})
+        assert wire.recv_msg(a) == (ClusterMsg.OK, {})
+    finally:
+        a.close()
+        b.close()
+
+
+def test_wire_bad_magic_and_err_reply():
+    a, b = socket.socketpair()
+    try:
+        a.sendall(b"\x00" * wire.MSG_HEADER_SIZE)
+        with pytest.raises(ClusterError):
+            wire.recv_msg(b)
+    finally:
+        a.close()
+        b.close()
+    a, b = socket.socketpair()
+    try:
+        wire.send_msg(b, ClusterMsg.ERR, {"error": "boom"})
+        with pytest.raises(ClusterError, match="boom"):
+            wire.request(a, ClusterMsg.LOOKUP, {"name": "x"})
+    finally:
+        a.close()
+        b.close()
+
+
+# ---------------------------------------------------------------------------
+# placement planners (pure)
+# ---------------------------------------------------------------------------
+
+
+def test_choose_replicas_least_loaded_and_exclude():
+    load = {"a": 3, "b": 1, "c": 2}
+    assert choose_replicas(load, 2) == ["b", "c"]
+    assert choose_replicas(load, 2, exclude={"b"}) == ["c", "a"]
+    # ties break on node id (determinism)
+    assert choose_replicas({"a": 1, "b": 1}, 1) == ["a"]
+    # a cluster smaller than k returns what exists
+    assert choose_replicas({"a": 0}, 3) == ["a"]
+
+
+def test_plan_put_stripes_instead_of_piling():
+    load = {"a": 0, "b": 0, "c": 0}
+    plan = plan_put(6, load, rf=2)
+    assert all(len(nodes) == 2 and len(set(nodes)) == 2 for nodes in plan)
+    counts = {}
+    for nodes in plan:
+        for n in nodes:
+            counts[n] = counts.get(n, 0) + 1
+    # 12 replicas over 3 nodes: an even stripe, not a pile-up
+    assert set(counts.values()) == {4}
+
+
+def test_plan_replication_heals_to_rf():
+    replicas = {"x": {"a"}, "y": {"a", "b"}}
+    moves = plan_replication(replicas, alive={"a", "b", "c"}, rf=2,
+                             load={"a": 2, "b": 1, "c": 0})
+    assert moves == [Move("x", "a", "c")]  # y already at rf
+
+
+def test_plan_replication_skip_and_lost():
+    # in-flight suppression: the planned (block, dst) is not re-planned
+    assert plan_replication({"x": {"a"}}, {"a", "b"}, 2, {"a": 1, "b": 0},
+                            skip=[("x", "b")]) == []
+    # zero live holders = lost: no move (nothing to copy from)
+    assert plan_replication({"x": set()}, {"b", "c"}, 2,
+                            {"b": 0, "c": 0}) == []
+
+
+def test_plan_rebalance_evens_out_and_respects_holders():
+    holdings = {"a": {"1", "2", "3", "4"}, "b": set(), "c": {"5"}}
+    moves = plan_rebalance(holdings)
+    held = {n: set(b) for n, b in holdings.items()}
+    for mv in moves:
+        assert mv.block_id not in held[mv.dst]  # never duplicate onto holder
+        held[mv.src].discard(mv.block_id)
+        held[mv.dst].add(mv.block_id)
+    counts = sorted(len(b) for b in held.values())
+    assert counts[-1] - counts[0] <= 1
+    assert plan_rebalance({"a": {"1", "2"}, "b": set()}) == [
+        Move("1", "a", "b")]
+    assert plan_rebalance({"a": {"1"}, "b": set()}) == []  # spread 1 is even
+    assert plan_rebalance({"a": {"1"}, "b": {"2"}}) == []
+
+
+# ---------------------------------------------------------------------------
+# failure detector (fake clock, no sleeps)
+# ---------------------------------------------------------------------------
+
+
+def test_failure_detector_marks_dead_after_timeout():
+    clock = FakeClock()
+    det = FailureDetector(timeout=1.0, clock=clock)
+    det.beat("a")
+    det.beat("b")
+    assert det.alive() == {"a", "b"}
+    clock.advance(0.9)
+    det.beat("b")
+    assert det.sweep() == []
+    clock.advance(0.5)  # a last seen 1.4 ago, b 0.5 ago
+    assert det.sweep() == ["a"]
+    assert det.alive() == {"b"}
+    assert det.sweep() == []  # death reported exactly once
+
+
+def test_failure_detector_revives_on_beat():
+    clock = FakeClock()
+    det = FailureDetector(timeout=1.0, clock=clock)
+    det.beat("a")
+    clock.advance(2.0)
+    assert det.sweep() == ["a"]
+    det.beat("a")
+    assert det.is_alive("a") and det.sweep() == []
+
+
+# ---------------------------------------------------------------------------
+# MetaNode planning under a fake clock (handlers called directly)
+# ---------------------------------------------------------------------------
+
+
+def _meta3(clock, rf=2):
+    meta = MetaNode(replication=rf, heartbeat_timeout=1.0, clock=clock)
+    for n in ("a", "b", "c"):
+        meta.handle_register({"node_id": n, "host": "h", "port": 1})
+    return meta
+
+
+def _commit(meta, name, blocks):
+    """blocks: list of (block_id, holders)."""
+    meta.handle_commit({
+        "name": name, "size": 128 * len(blocks), "block_size": 128,
+        "blocks": [{"id": b, "offset": 128 * i, "length": 128, "crc32": 0,
+                    "nodes": list(h)} for i, (b, h) in enumerate(blocks)],
+    })
+    for node in ("a", "b", "c"):
+        held = [b for b, h in blocks if node in h]
+        meta.handle_heartbeat({"node_id": node, "blocks": held})
+
+
+def test_metanode_death_triggers_re_replication_commands():
+    clock = FakeClock()
+    meta = _meta3(clock)
+    _commit(meta, "f", [("x", "ab"), ("y", "bc")])
+    assert meta.replication_of("f") == [2, 2]
+    clock.advance(1.5)
+    for n in ("b", "c"):  # b and c keep beating; a goes silent
+        meta.handle_heartbeat({"node_id": n,
+                               "blocks": ["x", "y"] if n == "b" else ["y"]})
+    assert meta.tick() == ["a"]
+    assert meta.replication_of("f") == [1, 2]  # x lost its a-replica
+    # the surviving holder of x was commanded to copy it to c
+    reply = meta.handle_heartbeat({"node_id": "b", "blocks": ["x", "y"]})
+    cmds = [c for c in reply["commands"] if c["op"] == CMD_REPLICATE]
+    assert len(cmds) == 1 and cmds[0]["block_id"] == "x"
+    assert cmds[0]["target"]["node_id"] == "c"
+    # in-flight suppression: an immediate re-tick plans nothing new
+    assert meta.tick() == [] and meta.stats["re_replications"] == 1
+    assert not meta.handle_heartbeat(
+        {"node_id": "b", "blocks": ["x", "y"]})["commands"]
+    # the copy lands: c's block report restores full replication
+    meta.handle_heartbeat({"node_id": "c", "blocks": ["x", "y"]})
+    assert meta.replication_of("f") == [2, 2]
+    assert meta.handle_state({})["under_replicated"] == 0
+
+
+def test_metanode_expired_copy_command_is_replanned():
+    clock = FakeClock()
+    meta = _meta3(clock)
+    _commit(meta, "f", [("x", "a")])  # degraded commit: one replica
+    meta.tick()  # plans a->? copy
+    assert meta.stats["re_replications"] == 1
+    meta.tick()  # suppressed while in flight
+    assert meta.stats["re_replications"] == 1
+    # past the grace period with no block report: presumed failed
+    clock.advance(3.5)
+    for n in ("a", "b", "c"):
+        meta.handle_heartbeat({"node_id": n,
+                               "blocks": ["x"] if n == "a" else []})
+    meta.tick()
+    assert meta.stats["re_replications"] == 2
+
+
+def test_metanode_lost_block_reported_not_planned():
+    clock = FakeClock()
+    meta = _meta3(clock)
+    _commit(meta, "f", [("x", "a")])
+    clock.advance(1.5)
+    for n in ("b", "c"):
+        meta.handle_heartbeat({"node_id": n, "blocks": []})
+    meta.tick()
+    assert "x" in meta.lost_blocks
+    assert meta.stats["re_replications"] == 0
+    assert meta.handle_state({})["lost"] == ["x"]
+
+
+def test_metanode_rebalance_defers_source_drop():
+    clock = FakeClock()
+    meta = _meta3(clock, rf=1)
+    _commit(meta, "f", [("1", "a"), ("2", "a"), ("3", "a"), ("4", "a")])
+    moves = meta.rebalance()
+    assert moves and all(mv.src == "a" for mv in moves)
+    # re-running plans nothing new while moves are in flight
+    assert meta.rebalance() == []
+    # source keeps everything until a destination CONFIRMS via report
+    assert not any(
+        c["op"] == CMD_DROP
+        for c in meta.handle_heartbeat(
+            {"node_id": "a", "blocks": ["1", "2", "3", "4"]})["commands"]
+        if c["op"] == CMD_DROP)
+    mv = moves[0]
+    meta.handle_heartbeat({"node_id": mv.dst, "blocks": [mv.block_id]})
+    reply = meta.handle_heartbeat(
+        {"node_id": "a", "blocks": ["1", "2", "3", "4"]})
+    drops = [c for c in reply["commands"] if c["op"] == CMD_DROP]
+    assert [c["block_id"] for c in drops] == [mv.block_id]
+
+
+def test_metanode_delete_reclaims_blocks():
+    clock = FakeClock()
+    meta = _meta3(clock)
+    _commit(meta, "f", [("x", "ab")])
+    meta.handle_delete({"name": "f"})
+    with pytest.raises(ClusterError):
+        meta.handle_lookup({"name": "f"})
+    for n in ("a", "b"):
+        reply = meta.handle_heartbeat({"node_id": n, "blocks": ["x"]})
+        assert [c["op"] for c in reply["commands"]] == [CMD_DROP]
+
+
+def test_metanode_plan_put_degrades_rf_to_cluster_size():
+    clock = FakeClock()
+    meta = MetaNode(replication=3, heartbeat_timeout=1.0, clock=clock)
+    meta.handle_register({"node_id": "a", "host": "h", "port": 1})
+    plan = meta.handle_plan_put({"name": "f", "size": 100, "block_size": 64})
+    assert plan["rf"] == 1
+    assert [b["length"] for b in plan["blocks"]] == [64, 36]
+    with pytest.raises(ClusterError):
+        MetaNode(clock=clock).handle_plan_put(
+            {"name": "f", "size": 1, "block_size": 1})
+
+
+# ---------------------------------------------------------------------------
+# SessionPool (the node-to-node transport hook in core/api.py)
+# ---------------------------------------------------------------------------
+
+
+def test_session_pool_reuses_and_invalidates(tmp_path):
+    with XdfsServer(engine="mtedp", root=str(tmp_path)) as srv:
+        with SessionPool(n_channels=2) as pool:
+            a = pool.lease(srv.address)
+            a.put(None, "x.bin", data=b"hello").result()
+            assert pool.lease(srv.address) is a
+            assert pool.stats == {"connects": 1, "reuses": 1}
+            pool.invalidate(srv.address)
+            b = pool.lease(srv.address)
+            assert b is not a and pool.stats["connects"] == 2
+            assert b.get_bytes("x.bin").result().data == b"hello"
+
+
+def test_session_pool_replaces_broken_sessions(tmp_path):
+    srv = XdfsServer(engine="mtedp", root=str(tmp_path)).start()
+    pool = SessionPool(n_channels=2)
+    try:
+        cli = pool.lease(srv.address)
+        cli.put(None, "x.bin", data=b"ok").result()
+        srv.abort()  # crash: live channels severed, listener closed
+        with pytest.raises(BaseException):
+            cli.put(None, "y.bin", data=b"dead").result()
+        assert cli.broken
+        # the pool must not lease the broken session out again
+        with pytest.raises(OSError):
+            pool.lease(srv.address)  # re-dial hits the closed listener
+        assert pool.stats["reuses"] == 0
+    finally:
+        pool.close()
+        srv.stop()
+
+
+# ---------------------------------------------------------------------------
+# end-to-end cluster (real sockets, 3 data nodes)
+# ---------------------------------------------------------------------------
+
+
+def _cluster(tmp_path, n=3, rf=2, timeout=0.5):
+    meta = MetaNode(replication=rf, heartbeat_timeout=timeout,
+                    tick_interval=timeout / 5).start()
+    nodes = [
+        DataNode(meta.address, str(tmp_path / f"n{i}"), node_id=f"n{i}",
+                 heartbeat_interval=timeout / 10).start()
+        for i in range(n)
+    ]
+    return meta, nodes
+
+
+def _await(pred, timeout=30.0, msg="condition"):
+    deadline = time.monotonic() + timeout
+    while time.monotonic() < deadline:
+        if pred():
+            return
+        time.sleep(0.05)
+    raise AssertionError(f"timed out waiting for {msg}")
+
+
+def test_cluster_put_get_kill_rereplicate(tmp_path):
+    """The acceptance path: 3 nodes, rf=2 — a striped put spreads blocks
+    across nodes, killing one node mid-session still serves a
+    byte-identical get from replicas, and the failure detector drives
+    re-replication until block reports show full replication again."""
+    meta, nodes = _cluster(tmp_path)
+    cli = ClusterClient(meta.address, block_size=128 << 10)
+    try:
+        data = os.urandom((2 << 20) + 4321)
+        cli.put("f/big.bin", data=data)
+        # block reports confirm the stripe: every node holds blocks, and
+        # every block is at rf=2
+        def striped():
+            h = {n["node_id"]: n["blocks"] for n in cli.state()["nodes"]}
+            return (len(h) == 3 and all(v > 0 for v in h.values())
+                    and all(c == 2
+                            for c in meta.replication_of("f/big.bin")))
+
+        _await(striped, msg="block reports confirm the stripe")
+        assert cli.get("f/big.bin") == data
+        # kill a node that holds blocks, mid-session (pooled sessions open)
+        nodes[0].kill()
+        assert cli.get("f/big.bin") == data  # replicas serve the read
+        # the detector must actually declare n0 dead (replicas on it stop
+        # counting) before the heal assertion means anything
+        def n0_dead():
+            return not {n["node_id"]: n
+                        for n in cli.state()["nodes"]}["n0"]["alive"]
+
+        _await(n0_dead, msg="failure detection")
+        # re-replication returns every block to rf=2 ON THE SURVIVORS
+        # (asserted via the block-report-driven location index)
+        _await(lambda: all(c >= 2 for c in meta.replication_of("f/big.bin")),
+               msg="re-replication heal")
+        assert cli.state()["under_replicated"] == 0
+        assert cli.state()["lost"] == []
+        assert cli.get("f/big.bin") == data
+    finally:
+        cli.close()
+        for n in nodes[1:]:
+            n.stop()
+        meta.stop()
+
+
+def test_cluster_get_fails_over_corrupt_replica(tmp_path):
+    meta, nodes = _cluster(tmp_path)
+    cli = ClusterClient(meta.address, block_size=64 << 10)
+    try:
+        data = os.urandom(256 << 10)
+        cli.put("c.bin", data=data)
+        # corrupt EVERY block replica on one node; CRC failover must pull
+        # the intact copies from the others
+        victims = list((tmp_path / "n0").glob("blk_*.bin"))
+        for p in victims:
+            raw = bytearray(p.read_bytes())
+            raw[0] ^= 0xFF
+            p.write_bytes(bytes(raw))
+        assert cli.get("c.bin") == data
+        if victims:  # n0 held at least one replica we corrupted
+            assert cli.stats["replica_failovers"] >= 0
+    finally:
+        cli.close()
+        for n in nodes:
+            n.stop()
+        meta.stop()
+
+
+def test_cluster_put_survives_planned_node_dying(tmp_path):
+    """A node that dies between planning and writing degrades its blocks
+    (commit records the achieved replicas) instead of failing the put,
+    and the tick-driven planner heals back to rf."""
+    meta, nodes = _cluster(tmp_path)
+    cli = ClusterClient(meta.address, block_size=64 << 10)
+    try:
+        nodes[2].kill()  # dead but not yet detected: plans still name it
+        data = os.urandom(512 << 10)
+        cli.put("d.bin", data=data)
+        assert cli.stats["degraded_blocks"] > 0
+        assert cli.get("d.bin") == data
+        _await(lambda: all(c >= 2 for c in meta.replication_of("d.bin")),
+               msg="degraded-put heal")
+    finally:
+        cli.close()
+        for n in nodes[:2]:
+            n.stop()
+        meta.stop()
+
+
+def test_cluster_namespace_and_empty_file(tmp_path):
+    meta, nodes = _cluster(tmp_path, n=2)
+    cli = ClusterClient(meta.address, block_size=64 << 10)
+    try:
+        cli.put("dir/a.bin", data=b"A" * 1000)
+        cli.put("dir/b.bin", data=b"")
+        cli.put("other.bin", data=b"B")
+        assert cli.list("dir/") == ["dir/a.bin", "dir/b.bin"]
+        assert cli.get("dir/b.bin") == b""
+        cli.delete("dir/a.bin")
+        assert cli.list("dir/") == ["dir/b.bin"]
+        with pytest.raises(ClusterError):
+            cli.get("dir/a.bin")
+        # overwrite: new content wins
+        cli.put("other.bin", data=b"CC")
+        assert cli.get("other.bin") == b"CC"
+    finally:
+        cli.close()
+        for n in nodes:
+            n.stop()
+        meta.stop()
+
+
+def test_cluster_rebalance_e2e(tmp_path):
+    """Blocks written while only one node was up spread out after new
+    nodes join and the rebalancer runs; data stays intact and sources
+    are only dropped after destinations confirm."""
+    meta = MetaNode(replication=1, heartbeat_timeout=0.5,
+                    tick_interval=0.1).start()
+    n0 = DataNode(meta.address, str(tmp_path / "n0"), node_id="n0",
+                  heartbeat_interval=0.05).start()
+    cli = ClusterClient(meta.address, block_size=64 << 10)
+    others = []
+    try:
+        data = os.urandom(640 << 10)  # 10 blocks, all on n0
+        cli.put("r.bin", data=data)
+        others = [
+            DataNode(meta.address, str(tmp_path / f"n{i}"),
+                     node_id=f"n{i}", heartbeat_interval=0.05).start()
+            for i in (1, 2)
+        ]
+        _await(lambda: len(cli.state()["nodes"]) == 3, msg="nodes joined")
+        # block reports must land before the planner sees n0's holdings
+        _await(lambda: sum(n["blocks"] for n in cli.state()["nodes"]) == 10,
+               msg="block reports")
+        assert meta.rebalance()
+
+        def balanced():
+            h = {n["node_id"]: n["blocks"] for n in cli.state()["nodes"]}
+            return (max(h.values()) - min(h.values()) <= 1
+                    and sum(h.values()) == 10)
+
+        _await(balanced, msg="rebalance convergence")
+        assert cli.get("r.bin") == data
+        assert meta.stats["rebalance_moves"] > 0
+    finally:
+        cli.close()
+        for n in [n0, *others]:
+            n.stop()
+        meta.stop()

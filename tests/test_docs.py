@@ -91,6 +91,55 @@ def test_channel_event_table_matches_enum():
 
 
 # ---------------------------------------------------------------------------
+# cluster control plane
+# ---------------------------------------------------------------------------
+
+
+def _cluster_section() -> str:
+    text = _arch_text()
+    start = text.index("## Cluster control plane")
+    return text[start:]
+
+
+def test_cluster_message_table_matches_enum():
+    """The Cluster control plane message table is normative: every
+    documented (name, value) row must match wire.ClusterMsg exactly."""
+    from repro.cluster.wire import ClusterMsg
+
+    rows = re.findall(r"^\|\s*`(\w+)`\s*\|\s*(\d+)\s*\|", _cluster_section(),
+                      re.M)
+    documented = {name: int(val) for name, val in rows}
+    actual = {m.name: int(m) for m in ClusterMsg}
+    assert documented == actual, (
+        f"ARCHITECTURE.md cluster message table drifted from ClusterMsg: "
+        f"documented {documented}, actual {actual}"
+    )
+
+
+def test_cluster_framing_documented():
+    from repro.cluster import wire
+
+    text = _cluster_section()
+    assert f"`{wire._FMT.format}`" in text, (
+        "documented cluster control header struct drifted from wire.py"
+    )
+    assert f"`{wire.MAGIC:#010x}`" in text
+    assert f"version `{wire.VERSION}`" in text
+
+
+def test_cluster_command_ops_documented():
+    """The heartbeat command table must carry exactly the op strings the
+    DataNode executes (wire.CMD_REPLICATE / wire.CMD_DROP)."""
+    from repro.cluster.wire import CMD_DROP, CMD_REPLICATE
+
+    text = _cluster_section()
+    ops = re.findall(r"^\|\s*`(\w+)`\s*\|\s*`block_id`", text, re.M)
+    assert set(ops) == {CMD_REPLICATE, CMD_DROP}, (
+        f"documented command ops {ops} drifted from wire.py constants"
+    )
+
+
+# ---------------------------------------------------------------------------
 # FSM transition tables
 # ---------------------------------------------------------------------------
 
