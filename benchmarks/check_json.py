@@ -6,7 +6,9 @@ Two modes (docs/BENCHMARKING.md has the full story):
   section with every required row key, scalar values only; the
   ``zero_copy_batched`` section additionally carries a baseline-free
   invariant: batched rows must show at least ``SYSCALL_BATCH_FACTOR``x
-  fewer syscalls/GB than their per-frame twin::
+  fewer syscalls/GB than their per-frame twin, and ``integrity`` crc_on
+  rows must keep ``1 - INTEGRITY_MAX_PENALTY`` of their crc_off twin's
+  throughput::
 
       PYTHONPATH=src python -m benchmarks.check_json BENCH_host.json
 
@@ -42,12 +44,22 @@ REQUIRED_SECTIONS = {
     "host_transfer": {"engine", "channels", "block_kb", "mb_s",
                       "writev_calls"},
     "cluster_stripe": {"mode", "path", "nodes", "mb_s", "gain_vs_single"},
+    "integrity": {"mode", "path", "block_kb", "mb_s", "gain_vs_off"},
 }
 SCALAR = (int, float, str, bool)
 
 # the batched datapath's reason to exist: every batched row must issue at
 # most 1/SYSCALL_BATCH_FACTOR the syscalls/GB of its per-frame twin
 SYSCALL_BATCH_FACTOR = 4
+
+# Ceiling on the end-to-end integrity penalty: every crc_on row must keep
+# gain_vs_off >= 1 - INTEGRITY_MAX_PENALTY. On a single-core host with
+# both endpoints colocated the CRC compute floor alone costs ~13% and the
+# steady-state penalty is ~25% (benchmarks/integrity_bench.py has the
+# budget math); 0.45 clears the worst scheduler-noise outliers while
+# still failing the failure modes that matter — an unmemoized
+# crc32_combine or a lost native-CRC path costs 10-20x, not 1.45x.
+INTEGRITY_MAX_PENALTY = 0.45
 
 # regression-gate config: identity key (matches a candidate row to its
 # baseline row) and the higher-is-better throughput metric per section
@@ -58,6 +70,7 @@ SECTION_KEYS = {
     "zero_copy_batched": ("mode", "path", "block_kb"),
     "host_transfer": ("engine", "channels", "block_kb"),
     "cluster_stripe": ("mode", "path", "nodes"),
+    "integrity": ("mode", "path", "block_kb"),
 }
 SECTION_METRIC = {
     "session_reuse": "speedup",
@@ -66,6 +79,7 @@ SECTION_METRIC = {
     "zero_copy_batched": "mb_s",
     "host_transfer": "mb_s",
     "cluster_stripe": "mb_s",
+    "integrity": "mb_s",
 }
 # Default allowed fractional drop below the baseline before the gate
 # fails. The microbench sections are best-of-N on one process (tight);
@@ -81,6 +95,10 @@ SECTION_TOLERANCE = {
     # scheduler noise on a shared host dominates (best-of-N still swings
     # ~2x run to run); the gate only catches order-of-magnitude breaks
     "cluster_stripe": 0.60,
+    # absolute MB/s of the integrity A/B swings with the host like
+    # host_transfer; the tight check is the baseline-free ratio invariant
+    # (check_integrity_invariant), not this cross-run throughput gate
+    "integrity": 0.40,
 }
 
 
@@ -159,6 +177,32 @@ def check_batched_invariant(doc: dict) -> List[str]:
     return errors
 
 
+def check_integrity_invariant(doc: dict) -> List[str]:
+    """The integrity section's acceptance invariant, checked on EVERY
+    candidate (no baseline needed): each crc_on row must keep at least
+    ``1 - INTEGRITY_MAX_PENALTY`` of its crc_off twin's throughput —
+    both rows come from the same run, so the ratio is immune to the
+    host-speed drift that the cross-run gate must tolerate."""
+    errors: List[str] = []
+    rows = (doc.get("sections") or {}).get("integrity") or []
+    floor = 1.0 - INTEGRITY_MAX_PENALTY
+    for row in rows:
+        if not isinstance(row, dict) or row.get("path") != "crc_on":
+            continue
+        gain = row.get("gain_vs_off")
+        ident = f"mode={row.get('mode')}, block_kb={row.get('block_kb')}"
+        if not isinstance(gain, (int, float)):
+            errors.append(f"integrity[{ident}]: non-numeric gain_vs_off")
+            continue
+        if gain < floor:
+            errors.append(
+                f"integrity[{ident}]: crc_on keeps only {gain:.0%} of "
+                f"crc_off throughput (must keep >= {floor:.0%}; "
+                f"integrity penalty {1 - gain:.0%} exceeds "
+                f"{INTEGRITY_MAX_PENALTY:.0%})")
+    return errors
+
+
 def _index_rows(rows: List[dict], key_fields: Tuple[str, ...]) -> Dict:
     out = {}
     for row in rows:
@@ -209,7 +253,8 @@ def check(path: str, baseline_path: Optional[str] = None,
     doc, errors = _load(path)
     if doc is None:
         return errors
-    errors = check_schema(doc) + check_batched_invariant(doc)
+    errors = (check_schema(doc) + check_batched_invariant(doc)
+              + check_integrity_invariant(doc))
     if errors or baseline_path is None:
         return errors
     base, base_errors = _load(baseline_path)

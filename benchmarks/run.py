@@ -18,6 +18,7 @@ Sections:
   0b3. zero_copy_batched — per-frame vs syscall-batched framing (+ syscalls/GB)
   0c. host_transfer  — engine x channels matrix (MB/s + writev calls)
   0d. cluster_stripe — striped 3-node cluster vs single-node session
+  0e. integrity      — CRC-on vs CRC-off A/B on the batched datapath
   1. paper_figs      — Figs. 12-19 transfer reproductions (MTEDP vs MT vs MP)
   2. device_channels — xDFS ring collectives vs lax.psum (8-dev subprocess)
   3. kernels_bench   — attention / wkv / rglru scaling micro-benches
@@ -129,6 +130,12 @@ def main() -> None:
     from benchmarks import cluster_stripe
 
     sections["cluster_stripe"] = cluster_stripe.run(
+        smoke=args.smoke or args.quick)
+
+    print("== section 0e: integrity CRC-on vs CRC-off A/B ==", flush=True)
+    from benchmarks import integrity_bench
+
+    sections["integrity"] = integrity_bench.run(
         smoke=args.smoke or args.quick)
 
     if args.smoke:

@@ -47,13 +47,14 @@ ENGINE = "mtedp"
 
 
 @contextmanager
-def _session(root: Path):
+def _session(root: Path, integrity: bool = False):
     """A loopback xDFS session rooted at ``root`` (server + client pair)."""
     from repro.core.api import XdfsClient, XdfsServer
 
     srv = XdfsServer(engine=ENGINE, root=str(root)).start()
     cli = XdfsClient.connect(
-        srv.address, n_channels=N_CHANNELS, engine=ENGINE, block_size=BLOCK
+        srv.address, n_channels=N_CHANNELS, engine=ENGINE, block_size=BLOCK,
+        integrity=integrity,
     )
     try:
         yield cli
@@ -139,24 +140,34 @@ def _restore_one_cluster(directory: str, step: int, like: Any,
 
 
 def save(tree: Any, directory: str, step: int, keep_last: int = 3,
-         cluster=None) -> str:
+         cluster=None, resume: bool = False, integrity: bool = False) -> str:
     """Blocking sharded save; returns the committed directory.
 
     ``cluster`` (opt-in): a ``repro.cluster.ClusterClient`` — leaves
-    stripe across the cluster's data nodes instead of a local step dir.
+    stripe across the fleet of data nodes instead of a local step dir.
+
+    ``resume`` (opt-in, implies ``integrity``): a save interrupted
+    mid-step left its ``.tmp`` dir and per-file resume sidecars behind;
+    a re-save with ``resume=True`` keeps them and re-``put``\\ s every
+    leaf with the RESUME protocol, so complete leaves cost a CRC
+    exchange and zero data bytes, and a torn leaf only re-sends its
+    missing/stale blocks.
     """
     if cluster is not None:
+        if resume:
+            raise ValueError("resume is not supported for cluster saves")
         return _save_cluster(tree, directory, step, keep_last, cluster)
+    integrity = integrity or resume
     base = Path(directory)
     base.mkdir(parents=True, exist_ok=True)
     rel = f"step_{step:08d}.tmp"
     tmp = base / rel
     final = base / f"step_{step:08d}"
-    if tmp.exists():
+    if tmp.exists() and not resume:
         shutil.rmtree(tmp)
-    tmp.mkdir()
+    tmp.mkdir(exist_ok=True)
     manifest = {"step": step, "leaves": []}
-    with _session(base) as cli:
+    with _session(base, integrity=integrity) as cli:
         # one negotiation for the whole step; leaves pipeline depth-2
         # through the session worker (bounded host memory: only the leaf in
         # flight and the one being prepared are materialized)
@@ -173,14 +184,20 @@ def save(tree: Any, directory: str, step: int, keep_last: int = 3,
                     "crc32": zlib.crc32(raw) & 0xFFFFFFFF,
                 }
             )
-            fut = cli.put(None, f"{rel}/{fname}", data=raw)
+            fut = cli.put(None, f"{rel}/{fname}", data=raw, resume=resume)
             if prev is not None:
                 prev.result()
             prev = fut
         if prev is not None:
             prev.result()
         cli.put(None, f"{rel}/manifest.json",
-                data=json.dumps(manifest).encode()).result()
+                data=json.dumps(manifest).encode(), resume=resume).result()
+    # integrity puts keep resume sidecars next to the data files; a fully
+    # landed step no longer needs them, so don't commit them
+    from repro.core.resume import SIDECAR_SUFFIX
+
+    for sc in tmp.glob("*" + SIDECAR_SUFFIX):
+        sc.unlink()
     if final.exists():  # re-save after fault recovery: replace the old step
         shutil.rmtree(final)
     os.replace(tmp, final)  # atomic commit

@@ -20,7 +20,6 @@ from __future__ import annotations
 import os
 import socket
 import threading
-import zlib
 from typing import Dict, List, Optional, Tuple
 
 from repro.cluster.wire import (
@@ -30,13 +29,15 @@ from repro.cluster.wire import (
     request,
 )
 from repro.core.api import SessionPool
+from repro.core.faults import RetryPolicy
+from repro.core.integrity import block_crc
 from repro.core.session import DEFAULT_BLOCK
 
 DEFAULT_CLUSTER_BLOCK = 4 << 20
 
 
 def _crc(view) -> int:
-    return zlib.crc32(view) & 0xFFFFFFFF
+    return block_crc(view)
 
 
 class ClusterClient:
@@ -47,9 +48,14 @@ class ClusterClient:
                  n_channels: int = 2, engine: str = "mtedp",
                  batch_frames: int = 1,
                  session_block: int = DEFAULT_BLOCK,
-                 pool: Optional[SessionPool] = None):
+                 pool: Optional[SessionPool] = None,
+                 policy: Optional[RetryPolicy] = None,
+                 connect_timeout: float = 10.0):
         self.meta_address = (meta_address[0], int(meta_address[1]))
         self.block_size = block_size
+        # one policy drives every deadline/retry decision: metanode dials,
+        # metanode requests, and the bounded put re-plan loop
+        self.policy = policy or RetryPolicy(connect_timeout=connect_timeout)
         self.pool = pool or SessionPool(
             n_channels=n_channels, engine=engine,
             block_size=min(session_block, block_size),
@@ -59,30 +65,32 @@ class ClusterClient:
         self._meta_lock = threading.Lock()
         self.stats: Dict[str, int] = {
             "puts": 0, "gets": 0, "blocks_written": 0, "blocks_read": 0,
-            "replica_failovers": 0, "degraded_blocks": 0,
+            "replica_failovers": 0, "degraded_blocks": 0, "replans": 0,
         }
 
     # -- metanode control --------------------------------------------------
 
     def _call(self, msg: ClusterMsg, body: dict) -> dict:
-        with self._meta_lock:
-            for attempt in (0, 1):
-                if self._meta is None:
-                    self._meta = socket.create_connection(
-                        self.meta_address, timeout=10.0)
-                    self._meta.setsockopt(socket.IPPROTO_TCP,
-                                          socket.TCP_NODELAY, 1)
+        def attempt() -> dict:
+            if self._meta is None:
+                self._meta = socket.create_connection(
+                    self.meta_address, timeout=self.policy.connect_timeout)
+                self._meta.setsockopt(socket.IPPROTO_TCP,
+                                      socket.TCP_NODELAY, 1)
+            try:
+                return request(self._meta, msg, body)
+            except (ConnectionError, OSError):
                 try:
-                    return request(self._meta, msg, body)
-                except (ConnectionError, OSError):
-                    try:
-                        self._meta.close()
-                    except OSError:
-                        pass
-                    self._meta = None
-                    if attempt:
-                        raise
-        raise AssertionError("unreachable")
+                    self._meta.close()
+                except OSError:
+                    pass
+                self._meta = None
+                raise
+
+        with self._meta_lock:
+            # ClusterError replies pass straight through (a refused request
+            # is not a transport fault); only dead-connection errors retry
+            return self.policy.run(attempt, what=f"metanode {msg.name}")
 
     # -- put ---------------------------------------------------------------
 
@@ -99,37 +107,69 @@ class ClusterClient:
         plan = self._call(ClusterMsg.PLAN_PUT, {
             "name": name, "size": len(view), "block_size": self.block_size,
         })
-        # fan out: every (block, replica) is one pipelined put future on
-        # that node's pooled session; sessions serialize per node, nodes
-        # stream in parallel
-        writes = []  # (block index, node dict, future or error)
-        for i, blk in enumerate(plan["blocks"]):
-            piece = view[blk["offset"]:blk["offset"] + blk["length"]]
-            for node in blk["nodes"]:
-                addr = (node["host"], node["port"])
+        blocks_plan: List[dict] = list(plan["blocks"])
+        achieved: List[List[str]] = [[] for _ in blocks_plan]
+        failed_nodes: set = set()
+
+        def write_round(indices: List[int]) -> None:
+            # fan out: every (block, replica) is one pipelined put future
+            # on that node's pooled session; sessions serialize per node,
+            # nodes stream in parallel
+            writes = []  # (block index, node dict, future or error)
+            for i in indices:
+                blk = blocks_plan[i]
+                piece = view[blk["offset"]:blk["offset"] + blk["length"]]
+                for node in blk["nodes"]:
+                    if node["node_id"] in achieved[i]:
+                        continue
+                    addr = (node["host"], node["port"])
+                    try:
+                        cli = self.pool.lease(addr)
+                        fut = cli.put(None, block_name(blk["id"]), data=piece)
+                    except Exception as e:  # noqa: BLE001 - dead node: the
+                        # block's other replicas may still land
+                        self.pool.invalidate(addr)
+                        fut = e
+                    writes.append((i, node, fut))
+            for i, node, fut in writes:
+                if isinstance(fut, Exception):
+                    failed_nodes.add(node["node_id"])
+                    continue
                 try:
-                    cli = self.pool.lease(addr)
-                    fut = cli.put(None, block_name(blk["id"]), data=piece)
-                except Exception as e:  # noqa: BLE001 - dead node: the
-                    # block's other replicas may still land
-                    self.pool.invalidate(addr)
-                    fut = e
-                writes.append((i, node, fut))
-        achieved: List[List[str]] = [[] for _ in plan["blocks"]]
-        for i, node, fut in writes:
-            if isinstance(fut, Exception):
-                continue
+                    fut.result()
+                    achieved[i].append(node["node_id"])
+                    self.stats["blocks_written"] += 1
+                except Exception:  # noqa: BLE001
+                    failed_nodes.add(node["node_id"])
+                    self.pool.invalidate((node["host"], node["port"]))
+
+        write_round(list(range(len(blocks_plan))))
+        pending = [i for i in range(len(blocks_plan)) if not achieved[i]]
+        delays = iter(self.policy.delays())
+        while pending:
+            # every replica of some block failed: back off, then ask the
+            # metanode for fresh placements that avoid the nodes we just
+            # watched die, and retry only the holeful blocks
             try:
-                fut.result()
-                achieved[i].append(node["node_id"])
-                self.stats["blocks_written"] += 1
-            except Exception:  # noqa: BLE001
-                self.pool.invalidate((node["host"], node["port"]))
-        blocks = []
-        for i, blk in enumerate(plan["blocks"]):
-            if not achieved[i]:
+                delay = next(delays)
+            except StopIteration:
                 raise ClusterError(
-                    f"block {i} of {name!r} failed on every planned node")
+                    f"block {pending[0]} of {name!r} failed on every "
+                    f"planned node after {self.policy.attempts} rounds"
+                    ) from None
+            self.policy.sleep(delay)
+            replan = self._call(ClusterMsg.PLAN_PUT, {
+                "name": name, "size": len(view),
+                "block_size": self.block_size,
+                "exclude": sorted(failed_nodes),
+            })
+            self.stats["replans"] += 1
+            for i in pending:
+                blocks_plan[i] = replan["blocks"][i]
+            write_round(pending)
+            pending = [i for i in pending if not achieved[i]]
+        blocks = []
+        for i, blk in enumerate(blocks_plan):
             if len(achieved[i]) < len(blk["nodes"]):
                 self.stats["degraded_blocks"] += 1
             piece = view[blk["offset"]:blk["offset"] + blk["length"]]

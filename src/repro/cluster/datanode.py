@@ -37,6 +37,7 @@ from repro.cluster.wire import (
     request,
 )
 from repro.core.api import SessionPool, XdfsServer
+from repro.core.faults import RetryPolicy
 
 BLOCK_PREFIX = "blk_"
 BLOCK_SUFFIX = ".bin"
@@ -53,8 +54,14 @@ class DataNode:
                  heartbeat_interval: float = 0.5,
                  auto_heartbeat: bool = True,
                  n_channels: int = 2, batch_frames: int = 1,
-                 pool: Optional[SessionPool] = None):
+                 pool: Optional[SessionPool] = None,
+                 connect_timeout: float = 10.0,
+                 policy: Optional[RetryPolicy] = None):
         self.meta_address = (meta_address[0], int(meta_address[1]))
+        # two attempts preserves the historical redial-once behaviour;
+        # pass a policy to trade it for deeper backoff
+        self.policy = policy or RetryPolicy(attempts=2,
+                                            connect_timeout=connect_timeout)
         self.root = Path(root)
         self.node_id = node_id or f"dn-{uuid.uuid4().hex[:8]}"
         self.heartbeat_interval = heartbeat_interval
@@ -126,25 +133,25 @@ class DataNode:
 
     def _meta_request(self, msg: ClusterMsg, body: dict) -> dict:
         """One request on the persistent MetaNode control connection,
-        re-dialing once if the connection went away."""
-        with self._ctrl_lock:
-            for attempt in (0, 1):
-                if self._ctrl is None:
-                    self._ctrl = socket.create_connection(
-                        self.meta_address, timeout=10.0)
-                    self._ctrl.setsockopt(socket.IPPROTO_TCP,
-                                          socket.TCP_NODELAY, 1)
+        re-dialing (policy-bounded) if the connection went away."""
+        def attempt() -> dict:
+            if self._ctrl is None:
+                self._ctrl = socket.create_connection(
+                    self.meta_address, timeout=self.policy.connect_timeout)
+                self._ctrl.setsockopt(socket.IPPROTO_TCP,
+                                      socket.TCP_NODELAY, 1)
+            try:
+                return request(self._ctrl, msg, body)
+            except (ConnectionError, OSError):
                 try:
-                    return request(self._ctrl, msg, body)
-                except (ConnectionError, OSError):
-                    try:
-                        self._ctrl.close()
-                    except OSError:
-                        pass
-                    self._ctrl = None
-                    if attempt:
-                        raise
-        raise AssertionError("unreachable")
+                    self._ctrl.close()
+                except OSError:
+                    pass
+                self._ctrl = None
+                raise
+
+        with self._ctrl_lock:
+            return self.policy.run(attempt, what=f"metanode {msg.name}")
 
     def register(self) -> dict:
         host, port = self.server.address

@@ -366,8 +366,15 @@ class MetaNode:
         block_size = int(body["block_size"])
         if block_size <= 0:
             raise ClusterError(f"bad block_size {block_size}")
+        exclude = set(body.get("exclude") or ())
         with self._lock:
             alive = sorted(self.detector.alive() & set(self.nodes))
+            if exclude:
+                # a re-planning client saw these nodes fail mid-put; steer
+                # around them, unless that would leave nothing to place on
+                pref = [n for n in alive if n not in exclude]
+                if pref:
+                    alive = pref
             if not alive:
                 raise ClusterError("no live data nodes to place on")
             rf = min(self.replication, len(alive))

@@ -36,11 +36,20 @@ from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 from repro.core.engines import Engine, Sink, Source, get_engine
-from repro.core.header import ChannelEvent, Negotiation, new_session_id
+from repro.core.faults import Deadline
+from repro.core.header import (
+    ChannelEvent,
+    Negotiation,
+    ProtocolError,
+    new_session_id,
+)
+from repro.core.integrity import CrcManifest, IntegrityError, crc32_combine
+from repro.core.resume import ResumeSidecar, throttled_autosave
 from repro.core.session import (
     CTRL_CHANNEL,
     DEFAULT_BLOCK,
     MAX_BATCH_FRAMES,
+    IntegrityFailure,
     ServerSession,
     SessionError,
     SessionStats,
@@ -125,7 +134,7 @@ class XdfsServer:
                  root: Optional[str] = None, host: str = "127.0.0.1",
                  port: int = 0, pool_slots: int = 32, backlog: int = 128,
                  tuning: Optional[SocketTuning] = None,
-                 splice: bool = False):
+                 splice: bool = False, io_timeout: Optional[float] = None):
         self.engine = get_engine(engine)  # fail fast on unknown engines
         self.root = root
         self.host = host
@@ -134,6 +143,10 @@ class XdfsServer:
         self.backlog = backlog
         # opt-in kernel-side receive (os.splice) for engines that support it
         self.splice = splice
+        # per-operation stall bound applied while a transfer is in flight
+        # (a client that stops moving bytes mid-file surfaces as a
+        # TimeoutError in that session instead of pinning it forever)
+        self.io_timeout = io_timeout
         # server-side default tuning; buffer sizes land on the LISTENING
         # socket so accepted channels inherit them before the TCP
         # handshake fixes the window scale
@@ -155,7 +168,7 @@ class XdfsServer:
             "sessions": 0, "sessions_closed": 0, "negotiations": 0,
             "files": 0, "bytes": 0, "eofr_frames": 0, "eoft_frames": 0,
             "writev_calls": 0, "splice_bytes": 0, "recv_calls": 0,
-            "splice_autodisables": 0,
+            "splice_autodisables": 0, "crc_mismatches": 0,
         }
 
     # -- lifecycle ---------------------------------------------------------
@@ -352,7 +365,8 @@ class XdfsServer:
             # pool_slots/n_channels combination) — that must still close
             # the channels and count the session as closed
             sess = ServerSession(socks, neg, self.engine, self.root,
-                                 self.pool_slots, splice=self.splice)
+                                 self.pool_slots, splice=self.splice,
+                                 io_timeout=self.io_timeout)
             sess.run()
         except BaseException as e:  # noqa: BLE001 - keep the server alive
             self.errors.append(e)
@@ -372,6 +386,7 @@ class XdfsServer:
                 self.stats["splice_bytes"] += st.splice_bytes
                 self.stats["recv_calls"] += st.recv_calls
                 self.stats["splice_autodisables"] += st.splice_autodisables
+                self.stats["crc_mismatches"] += st.crc_mismatches
                 self.stats["sessions_closed"] += 1
                 # prune finished threads so a long-lived server stays bounded
                 me = threading.current_thread()
@@ -396,14 +411,20 @@ class XdfsClient:
     def __init__(self, socks: List[socket.socket], session_id: bytes,
                  engine: Engine, n_channels: int, block_size: int,
                  tuning: Optional[SocketTuning] = None,
-                 splice: bool = False, batch_frames: int = 1):
+                 splice: bool = False, batch_frames: int = 1,
+                 integrity: bool = False,
+                 io_timeout: Optional[float] = None):
         self.socks = socks
         self.session_id = session_id
         self.engine = engine
         self.n_channels = n_channels
         self.block_size = block_size
         self.tuning = tuning or SocketTuning()
-        self.splice = splice  # opt-in kernel-side receive for gets
+        self.integrity = integrity  # negotiated end-to-end CRC datapath
+        # splice cannot see payload bytes (no CRC verify) and cannot run on
+        # a timeout-mode (non-blocking) fd, so either feature disables it
+        self.splice = splice and not integrity and io_timeout is None
+        self.io_timeout = io_timeout  # per-operation stall bound
         # negotiated syscall-batching ceiling, both directions
         self.batch_frames = max(1, min(int(batch_frames), MAX_BATCH_FRAMES))
         self.stats: Dict[str, int] = {
@@ -428,7 +449,10 @@ class XdfsClient:
                 block_size: int = DEFAULT_BLOCK,
                 timeout: float = HANDSHAKE_TIMEOUT,
                 tuning: Optional[SocketTuning] = None,
-                splice: bool = False, batch_frames: int = 1) -> "XdfsClient":
+                splice: bool = False, batch_frames: int = 1,
+                integrity: bool = False,
+                io_timeout: Optional[float] = None,
+                connect_deadline: Optional[float] = None) -> "XdfsClient":
         """``tuning`` — negotiated socket knobs (TCP_NODELAY + SO_SNDBUF /
         SO_RCVBUF); carried in the Negotiation so the server applies the
         same values to its side of every channel. ``splice`` — opt this
@@ -436,15 +460,27 @@ class XdfsClient:
         autotuner may still switch it off when it measures slower).
         ``batch_frames`` — negotiated ceiling on frames per scatter-gather
         syscall batch, BOTH directions (1 = per-frame datapath; actual
-        depth is hill-climbed per channel)."""
+        depth is hill-climbed per channel). ``integrity`` — negotiate the
+        end-to-end CRC datapath (per-block trailers + file manifest), a
+        prerequisite for ``put/get(resume=True)``. ``io_timeout`` — stall
+        bound applied to every in-flight operation (typed ``TimeoutError``
+        instead of a hang). ``connect_deadline`` — wall-clock budget for
+        the WHOLE multi-channel handshake, on top of the per-socket
+        ``timeout``."""
         eng = get_engine(engine)
         tuning = tuning or SocketTuning()
         batch_frames = max(1, min(int(batch_frames), MAX_BATCH_FRAMES))
+        deadline = (Deadline(connect_deadline)
+                    if connect_deadline is not None else None)
         session_id = new_session_id()
         socks: List[socket.socket] = []
         try:
             for i in range(n_channels):
-                s = _connect_tuned(address, timeout, tuning)
+                dial_timeout = timeout
+                if deadline is not None:
+                    deadline.check(f"connect channel {i} to {address}")
+                    dial_timeout = deadline.budget(timeout)
+                s = _connect_tuned(address, dial_timeout, tuning)
                 socks.append(s)  # before the hello: a failed write must
                 # still find the socket in the cleanup loop below
                 send_hello(s, session_id, i)
@@ -454,24 +490,35 @@ class XdfsClient:
                         "", "", file_size=0,
                         so_sndbuf=tuning.sndbuf, so_rcvbuf=tuning.rcvbuf,
                         so_nodelay=tuning.nodelay, batch_frames=batch_frames,
+                        integrity=integrity,
                     ))
         except BaseException:
             for s in socks:
                 s.close()
             raise
         for s in socks:
-            s.settimeout(None)
+            s.settimeout(io_timeout)  # None = plain blocking mode
         return cls(socks, session_id, eng, n_channels, block_size,
-                   tuning=tuning, splice=splice, batch_frames=batch_frames)
+                   tuning=tuning, splice=splice, batch_frames=batch_frames,
+                   integrity=integrity, io_timeout=io_timeout)
 
     # -- public operations (pipelined) -------------------------------------
 
     def put(self, src: Optional[str], dst: Optional[str] = None,
             size: Optional[int] = None,
-            data: Optional[bytes] = None) -> TransferResult:
+            data: Optional[bytes] = None,
+            resume: bool = False) -> TransferResult:
         """Upload ``src`` (or in-memory ``data``; or ``size`` zero bytes in
         mem-to-mem mode) to remote name ``dst`` (None discards server-side).
-        An explicit ``size`` bounds how much of ``src``/``data`` is sent."""
+        An explicit ``size`` bounds how much of ``src``/``data`` is sent.
+        ``resume=True`` asks the server which verified blocks it already
+        holds for ``dst`` and re-sends ONLY the missing/stale ones
+        (requires an integrity session)."""
+        if resume and not self.integrity:
+            raise ValueError("resume requires an integrity session "
+                             "(connect with integrity=True)")
+        if resume and dst is None:
+            raise ValueError("resume needs a remote name to resume onto")
         if size is None:
             if data is not None:
                 size = len(data)
@@ -485,20 +532,29 @@ class XdfsClient:
             raise ValueError(f"size {size} exceeds len(data) {len(data)}")
         elif src is not None and size > os.path.getsize(src):
             raise ValueError(f"size {size} exceeds file size of {src!r}")
-        return self._submit(self._do_put, src, dst, size, data)
+        return self._submit(self._do_put, src, dst, size, data, resume)
 
     def get(self, src: Optional[str], dst: Optional[str] = None,
-            size: Optional[int] = None) -> TransferResult:
+            size: Optional[int] = None,
+            resume: bool = False) -> TransferResult:
         """Download remote ``src`` into local path ``dst`` (None discards).
-        ``src=None`` is mem-to-mem mode and needs ``size``."""
+        ``src=None`` is mem-to-mem mode and needs ``size``.
+        ``resume=True`` reads the local ``.xdfs-resume`` sidecar and
+        requests ONLY the blocks it is missing (requires an integrity
+        session; falls back to a full get when no usable sidecar exists)."""
+        if resume and not self.integrity:
+            raise ValueError("resume requires an integrity session "
+                             "(connect with integrity=True)")
+        if resume and (src is None or dst is None):
+            raise ValueError("resume needs both a remote and a local path")
         if src is None and size is None:
             raise ValueError("mem-mode get needs an explicit size")
-        return self._submit(self._do_get, src, dst, size, False)
+        return self._submit(self._do_get, src, dst, size, False, resume)
 
     def get_bytes(self, src: str) -> TransferResult:
         """Download remote ``src`` into memory; the FileResult carries it
         in ``.data``."""
-        return self._submit(self._do_get, src, None, None, True)
+        return self._submit(self._do_get, src, None, None, True, False)
 
     def put_many(self, items: Sequence) -> List[TransferResult]:
         """Queue many uploads over the SAME channels: one negotiation total,
@@ -590,30 +646,96 @@ class XdfsClient:
                     self._broken = e  # transport is gone; fail the rest fast
                 res._future.set_exception(e)
 
-    def _do_put(self, src, dst, size, data) -> FileResult:
+    def _do_put(self, src, dst, size, data, resume=False) -> FileResult:
         ctrl = self.socks[CTRL_CHANNEL]
         t0 = time.perf_counter()
-        send_ctrl(ctrl, ChannelEvent.xFTSMU, self.session_id,
-                  {"remote": dst, "size": size, "block_size": self.block_size})
-        recv_ctrl(ctrl)  # OK, or raises SessionError on EXCEPTION
+        meta = {"remote": dst, "size": size, "block_size": self.block_size}
+        if resume:
+            meta["mode"] = "put"
+            send_ctrl(ctrl, ChannelEvent.RESUME, self.session_id, meta)
+        else:
+            send_ctrl(ctrl, ChannelEvent.xFTSMU, self.session_id, meta)
+        _, resp = recv_ctrl(ctrl)  # OK, or raises SessionError on EXCEPTION
         source = Source(src, size, self.block_size, data=data)
         try:
+            blocks = None
+            sent = size
+            crcs: Optional[Dict[int, int]] = {} if self.integrity else None
+            if resume:
+                # diff the server's verified blocks against OUR block CRCs:
+                # re-send whatever is missing or stale on the far side (the
+                # diff pass covers every block, so it also completes `crcs`)
+                have = resp.get("have", {})
+                blocks = []
+                for b in range(source.n_blocks):
+                    c = source.block_crc(b)
+                    crcs[b] = c
+                    if have.get(str(b * self.block_size)) != c:
+                        blocks.append(b)
+                sent = sum(source.block_len(b) for b in blocks)
             self.engine.send(self.socks, source, self.session_id,
-                             reusable=True, batch_frames=self.batch_frames)
+                             reusable=True, batch_frames=self.batch_frames,
+                             integrity=self.integrity, blocks=blocks,
+                             io_timeout=self.io_timeout, crc_out=crcs)
+            if self.integrity:
+                # end-to-end manifest exchange: the server folds the CRCs
+                # of what LANDED and must match our whole-file CRC. Fold
+                # the per-block CRCs the send path already computed (fork
+                # engines can't report them back -> serial fallback pass).
+                if len(crcs) == source.n_blocks:
+                    file_crc = 0
+                    for b in range(source.n_blocks):
+                        file_crc = crc32_combine(file_crc, crcs[b],
+                                                 source.block_len(b))
+                else:
+                    file_crc = source.file_crc()
+                send_ctrl(ctrl, ChannelEvent.CONM, self.session_id,
+                          {"file_crc": file_crc})
+                recv_ctrl(ctrl)  # ok, or raises IntegrityFailure
         finally:
             source.close()
         self.stats["files"] += 1
-        self.stats["bytes"] += size
+        self.stats["bytes"] += sent
         self.stats["eofr_sent"] += self.n_channels
-        return FileResult(dst, size, time.perf_counter() - t0)
+        return FileResult(dst, sent, time.perf_counter() - t0)
 
-    def _do_get(self, src, dst, size, capture) -> FileResult:
+    def _do_get(self, src, dst, size, capture, resume=False) -> FileResult:
         ctrl = self.socks[CTRL_CHANNEL]
         t0 = time.perf_counter()
-        send_ctrl(ctrl, ChannelEvent.xFTSMD, self.session_id,
-                  {"remote": src, "size": size, "block_size": self.block_size})
+        sidecar = (ResumeSidecar(dst)
+                   if self.integrity and dst is not None else None)
+        prev: Optional[CrcManifest] = None
+        want: Optional[List[int]] = None
+        if resume and sidecar is not None:
+            got = sidecar.load_any()  # size is unknown until the reply
+            if got is not None and got[1] == self.block_size:
+                prev_size, _bs, prev = got
+                want = prev.missing(prev_size, self.block_size)
+            # no usable sidecar -> silently degrade to a full get
+        if prev is None:
+            resume = False
+        meta = {"remote": src, "size": size, "block_size": self.block_size}
+        if resume:
+            meta["mode"] = "get"
+            meta["want"] = want
+            send_ctrl(ctrl, ChannelEvent.RESUME, self.session_id, meta)
+        else:
+            if sidecar is not None:
+                sidecar.clear()  # a fresh get invalidates old resume state
+            send_ctrl(ctrl, ChannelEvent.xFTSMD, self.session_id, meta)
         _, resp = recv_ctrl(ctrl)
         size = int(resp["size"])
+        if resume and size != prev_size:
+            # the remote file changed size: the sidecar describes some other
+            # version. The server is already streaming the requested blocks,
+            # so this session cannot be cleanly reused — surface a transport
+            # (not session-level) error and restart on a fresh connection.
+            sidecar.clear()
+            raise ProtocolError(
+                f"cannot resume {src!r}: remote size {size} != "
+                f"sidecar size {prev_size}")
+        expected = (sum(min(self.block_size, size - off) for off in want)
+                    if resume else size)
         sink = Sink(dst, size, capture=capture)
         if self.engine.uses_pool and self.batch_frames <= 1 and (
             self._recv_pool is None
@@ -632,18 +754,43 @@ class XdfsClient:
             span = slab_span(self.batch_frames, self.block_size)
             if self._recv_slabs is None or self._recv_slabs.slab_bytes != span:
                 self._recv_slabs = SlabSet(self.n_channels, span)
+        crc_acc: Optional[CrcManifest] = None
+        if self.integrity:
+            crc_acc = CrcManifest(
+                autosave=throttled_autosave(sidecar, size, self.block_size)
+                if sidecar is not None else None)
+            if prev is not None:
+                crc_acc.merge(prev)
         try:
             self.engine.receive(
                 self.socks, sink, self.block_size, reusable=True,
                 pool=self._recv_pool, splice=self.splice,
                 batch_frames=self.batch_frames, slabs=self._recv_slabs,
+                crc_acc=crc_acc, io_timeout=self.io_timeout,
             )
             payload = sink.data if capture else None
+        except BaseException:
+            # the stream died mid-file: persist what WAS verified so a
+            # later get(resume=True) re-fetches only the rest
+            if sidecar is not None and crc_acc is not None and len(crc_acc):
+                sidecar.save(size, self.block_size, crc_acc)
+            raise
         finally:
             sink.close()
+        if crc_acc is not None and dst is not None:
+            try:
+                crc_acc.file_crc(size)  # raises on any unverified gap
+            except IntegrityError as e:
+                if sidecar is not None:
+                    sidecar.save(size, self.block_size, crc_acc)
+                raise IntegrityFailure(
+                    f"download of {src!r} is incomplete: {e}")
+            if sidecar is not None:
+                sidecar.clear()  # fully verified: no resume state to keep
         self.stats["files"] += 1
-        self.stats["bytes"] += size
-        return FileResult(src, size, time.perf_counter() - t0, data=payload)
+        self.stats["bytes"] += expected
+        return FileResult(src, expected, time.perf_counter() - t0,
+                          data=payload)
 
     def _do_close(self) -> FileResult:
         send_ctrl(self.socks[CTRL_CHANNEL], ChannelEvent.EOFT, self.session_id)
@@ -672,13 +819,17 @@ class SessionPool:
                  block_size: int = DEFAULT_BLOCK,
                  batch_frames: int = 1,
                  tuning: Optional[SocketTuning] = None,
-                 timeout: float = HANDSHAKE_TIMEOUT):
+                 timeout: float = HANDSHAKE_TIMEOUT,
+                 integrity: bool = False,
+                 io_timeout: Optional[float] = None):
         self.n_channels = n_channels
         self.engine = engine
         self.block_size = block_size
         self.batch_frames = batch_frames
         self.tuning = tuning
         self.timeout = timeout
+        self.integrity = integrity
+        self.io_timeout = io_timeout
         self._lock = threading.Lock()
         self._sessions: Dict[Tuple[str, int], XdfsClient] = {}
         self.stats: Dict[str, int] = {"connects": 0, "reuses": 0}
@@ -700,6 +851,7 @@ class SessionPool:
                 address, n_channels=self.n_channels, engine=self.engine,
                 block_size=self.block_size, timeout=self.timeout,
                 tuning=self.tuning, batch_frames=self.batch_frames,
+                integrity=self.integrity, io_timeout=self.io_timeout,
             )
             self._sessions[address] = cli
             self.stats["connects"] += 1

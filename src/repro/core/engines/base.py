@@ -44,11 +44,20 @@ from dataclasses import dataclass
 from typing import List, Optional, Tuple
 
 from repro.core.header import (
+    CRC_TRAILER,
+    FLAG_BLOCK_CRC,
     HEADER_SIZE,
+    TRAILER_SIZE,
     ChannelEvent,
     ChannelHeader,
     ProtocolError,
     pack_header_into,
+)
+from repro.core.integrity import (
+    HAVE_NATIVE_CRC,
+    buffer_address,
+    crc32_update,
+    crc32_update_at,
 )
 
 ACK = b"\x06"
@@ -307,7 +316,8 @@ class FrameBuilder:
     legacy ``hdr.pack() + payload`` path (header bytes + concatenated
     frame)."""
 
-    __slots__ = ("session", "depth", "_bufs", "_views", "_next")
+    __slots__ = ("session", "depth", "_bufs", "_views", "_next",
+                 "_tbufs", "_tviews", "_tnext")
 
     def __init__(self, session: bytes, n_channels: int, depth: int = 1):
         self.session = session
@@ -316,6 +326,12 @@ class FrameBuilder:
                       for _ in range(n_channels)]
         self._views = [[memoryview(b) for b in row] for row in self._bufs]
         self._next = [0] * n_channels
+        # integrity-mode CRC trailers ride the same reuse discipline: one
+        # 4-byte buffer per in-flight frame, handed out round-robin
+        self._tbufs = [[bytearray(TRAILER_SIZE) for _ in range(self.depth)]
+                       for _ in range(n_channels)]
+        self._tviews = [[memoryview(b) for b in row] for row in self._tbufs]
+        self._tnext = [0] * n_channels
 
     def header(self, channel: int, event: ChannelEvent, offset: int,
                length: int, flags: int = 0) -> memoryview:
@@ -324,6 +340,13 @@ class FrameBuilder:
         pack_header_into(self._bufs[channel][slot], event, self.session,
                          channel, offset, length, flags)
         return self._views[channel][slot]
+
+    def trailer(self, channel: int, crc: int) -> memoryview:
+        """A packed CRC32 trailer view for the channel's next data frame."""
+        slot = self._tnext[channel]
+        self._tnext[channel] = (slot + 1) % self.depth
+        CRC_TRAILER.pack_into(self._tbufs[channel][slot], 0, crc & 0xFFFFFFFF)
+        return self._tviews[channel][slot]
 
 
 @dataclass
@@ -383,7 +406,11 @@ def slab_span(batch_frames: int, block_size: int) -> int:
     trailing header fits, clamped to a sane memory ceiling (a smaller
     slab stays CORRECT — frames spanning the slab edge are committed as
     partial payload views — it just flushes more often)."""
-    want = batch_frames * (HEADER_SIZE + block_size) + HEADER_SIZE
+    # TRAILER_SIZE is budgeted unconditionally: integrity frames carry a
+    # 4-byte CRC trailer, and a slab sized without it fills 4*batch_frames
+    # bytes short of a full batch — every batch then splits its last frame
+    # across an extra flush/compact round-trip
+    want = batch_frames * (HEADER_SIZE + block_size + TRAILER_SIZE) + HEADER_SIZE
     return max(4 * HEADER_SIZE, min(want, MAX_SLAB_BYTES))
 
 
@@ -412,11 +439,17 @@ class SlabChannel:
 
     __slots__ = ("mem", "block_size", "filled", "parsed", "pending",
                  "pending_bytes", "hdr", "payload_left", "payload_off",
-                 "end_event", "recv_calls", "bytes", "blocks")
+                 "end_event", "recv_calls", "bytes", "blocks",
+                 "_crc_on", "_crc", "_trl_left", "_trl_buf",
+                 "_addr", "verified", "crc_mismatches")
 
     def __init__(self, slab, block_size: int):
         # ``slab`` is a ringbuf.RecvSlab (or anything with a ``mem`` view)
         self.mem: memoryview = slab.mem
+        # slab memory is fixed for the channel's lifetime, so the native
+        # CRC can run from a base address computed once (the per-call
+        # ctypes extraction otherwise costs ~3µs per parsed chunk)
+        self._addr = buffer_address(self.mem) if HAVE_NATIVE_CRC else None
         self.block_size = block_size
         self.filled = 0
         self.parsed = 0
@@ -429,6 +462,17 @@ class SlabChannel:
         self.recv_calls = 0
         self.bytes = 0  # payload bytes landed
         self.blocks = 0  # frames fully landed
+        # integrity mode (FLAG_BLOCK_CRC frames): running payload CRC, the
+        # 4-byte trailer assembled across reads, and the per-frame verdicts.
+        # ``verified`` holds (offset, length, crc) of CRC-clean frames; the
+        # flush path drains it into the manifest only AFTER the frame's
+        # pending views are on disk (take_verified).
+        self._crc_on = False
+        self._crc = 0
+        self._trl_left = 0
+        self._trl_buf = bytearray(TRAILER_SIZE)
+        self.verified: List[Tuple[int, int, int]] = []
+        self.crc_mismatches = 0
 
     def free_space(self) -> int:
         return len(self.mem) - self.filled
@@ -454,9 +498,14 @@ class SlabChannel:
                 if not avail:
                     break
                 take = min(self.payload_left, avail)
-                self.pending.append(
-                    (self.payload_off, self.mem[self.parsed:self.parsed + take])
-                )
+                chunk = self.mem[self.parsed:self.parsed + take]
+                self.pending.append((self.payload_off, chunk))
+                if self._crc_on:
+                    if self._addr is not None:
+                        self._crc = crc32_update_at(
+                            self._crc, self._addr + self.parsed, take)
+                    else:
+                        self._crc = crc32_update(self._crc, chunk)
                 self.pending_bytes += take
                 self.parsed += take
                 self.payload_off += take
@@ -464,6 +513,35 @@ class SlabChannel:
                 self.bytes += take
                 if self.payload_left:
                     break  # rest of this frame arrives in a later read
+                if self._crc_on:
+                    self._trl_left = TRAILER_SIZE  # trailer follows payload
+                    continue
+                self.hdr = None
+                self.blocks += 1
+                done += 1
+                continue
+            if self._trl_left:
+                avail = self.filled - self.parsed
+                if not avail:
+                    break
+                take = min(self._trl_left, avail)
+                at = TRAILER_SIZE - self._trl_left
+                self._trl_buf[at:at + take] = self.mem[
+                    self.parsed:self.parsed + take]
+                self.parsed += take
+                self._trl_left -= take
+                if self._trl_left:
+                    break  # trailer split across reads
+                (want,) = CRC_TRAILER.unpack(self._trl_buf)
+                hdr = self.hdr
+                if (self._crc & 0xFFFFFFFF) == want:
+                    self.verified.append((hdr.offset, hdr.length, want))
+                else:
+                    # keep the stream synced; the manifest check at EOF
+                    # reports the gap and RESUME re-fetches the block
+                    self.crc_mismatches += 1
+                self._crc_on = False
+                self._crc = 0
                 self.hdr = None
                 self.blocks += 1
                 done += 1
@@ -484,12 +562,24 @@ class SlabChannel:
             self.hdr = hdr
             self.payload_left = hdr.length
             self.payload_off = hdr.offset
+            self._crc_on = bool(hdr.flags & FLAG_BLOCK_CRC)
+            self._crc = 0
         return done
 
     def take_pending(self) -> List[Tuple[int, memoryview]]:
         out = self.pending
         self.pending = []
         self.pending_bytes = 0
+        return out
+
+    def take_verified(self) -> List[Tuple[int, int, int]]:
+        """CRC-clean ``(offset, length, crc)`` frames accumulated since
+        the last call. Callers drain this into the manifest AFTER writing
+        ``take_pending`` out — a frame's trailer always parses after its
+        last payload chunk entered ``pending``, so at flush time every
+        verified frame's bytes are on disk."""
+        out = self.verified
+        self.verified = []
         return out
 
     def compact(self) -> None:
@@ -514,6 +604,7 @@ class SlabChannel:
         ``payload_off``). The two are mutually exclusive — a parser mid-
         payload never holds header bytes."""
         assert self.filled == 0 and self.payload_left == 0
+        assert self._trl_left == 0
         assert not (header_tail and payload_left)
         if header_tail:
             self.mem[:len(header_tail)] = header_tail
@@ -530,6 +621,9 @@ class SlabChannel:
         current frame still owes ``payload_left`` bytes at file offset
         ``payload_off``. Pending must have been taken/flushed first."""
         assert not self.pending, "flush pending views before handoff"
+        # datapath switches never happen mid-trailer: the splice arbiter
+        # (the only handoff caller) is disabled on integrity sessions
+        assert self._trl_left == 0
         tail = bytes(self.mem[self.parsed:self.filled])
         hdr, off, left = self.hdr, self.payload_off, self.payload_left
         self.hdr = None
@@ -571,6 +665,7 @@ class Source:
                             if self._zeros is not None else None)
         self._map: Optional[mmap.mmap] = None
         self._map_view: Optional[memoryview] = None
+        self._crc_addr = False  # lazily resolved base address (False=unset)
         if self._fd >= 0 and use_mmap and size > 0:
             try:
                 self._map = mmap.mmap(self._fd, 0, access=mmap.ACCESS_READ)
@@ -606,6 +701,38 @@ class Source:
             return self._zeros_view[:ln]
         Source.materializations += 1
         return memoryview(os.pread(self._fd, ln, off))
+
+    def _crc_base(self) -> Optional[int]:
+        """Base address of the source's fixed backing memory (mmap or
+        in-memory buffer), computed once — the map/buffer outlives the
+        Source, so per-block CRCs can run straight from offsets."""
+        if self._crc_addr is False:
+            backing = (self._map_view if self._map_view is not None
+                       else self._mem)
+            self._crc_addr = (buffer_address(backing)
+                              if HAVE_NATIVE_CRC and backing is not None
+                              else None)
+        return self._crc_addr
+
+    def block_crc(self, i: int) -> int:
+        """CRC32 of block ``i`` (integrity senders pack it into the frame
+        trailer; the RESUME flow compares it against the peer's sidecar)."""
+        addr = self._crc_base()
+        if addr is not None:
+            return crc32_update_at(0, addr + i * self.block_size,
+                                   self.block_len(i))
+        return crc32_update(0, self.block_view(i))
+
+    def file_crc(self) -> int:
+        """CRC32 of the whole source, computed as one sequential pass over
+        the block views (mmap/in-memory — no per-block heap copies)."""
+        addr = self._crc_base()
+        if addr is not None:
+            return crc32_update_at(0, addr, self.size)
+        crc = 0
+        for i in range(self.n_blocks):
+            crc = crc32_update(crc, self.block_view(i))
+        return crc
 
     def read_block(self, i: int) -> bytes:
         """Legacy materializing read (the copy path senders no longer use)."""
@@ -746,3 +873,6 @@ class RecvStats:
     # times the autotuner switched a WORKING splice path off because it
     # measured slower than the pool path (mechanical fallbacks not counted)
     splice_autodisables: int = 0
+    # integrity mode: data frames whose CRC32 trailer did not match the
+    # payload — skipped (never written/manifested), re-fetched via RESUME
+    crc_mismatches: int = 0

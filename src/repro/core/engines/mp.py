@@ -25,7 +25,7 @@ from __future__ import annotations
 import json
 import os
 import socket
-from typing import List
+from typing import List, Optional
 
 from repro.core.autotune import SpliceArbiter
 from repro.core.engines.base import (
@@ -44,8 +44,12 @@ from repro.core.engines.base import (
 )
 from repro.core.engines.mt import worker_send
 from repro.core.engines.registry import Engine, register_engine
+from repro.core.integrity import block_crc
 from repro.core.header import (
+    CRC_TRAILER,
+    FLAG_BLOCK_CRC,
     HEADER_SIZE,
+    TRAILER_SIZE,
     ChannelEvent,
     ChannelHeader,
     ProtocolError,
@@ -53,13 +57,17 @@ from repro.core.header import (
 
 
 def _child_receive(s, wsink: Sink, block_size: int, use_splice: bool,
-                   batch_frames: int, arbiter_factory) -> dict:
-    """One forked channel's receive loop; returns its counters."""
+                   batch_frames: int, arbiter_factory,
+                   io_timeout: Optional[float] = None) -> dict:
+    """One forked channel's receive loop; returns its counters (including
+    the verified ``crcs`` records, since the manifest lives in the parent)."""
     from repro.core.ringbuf import RecvBufferPool, RecvSlab
 
     child = {"bytes": 0, "eofr": 0, "eoft": 0, "splice": 0,
-             "recv_calls": 0, "autodisables": 0}
+             "recv_calls": 0, "autodisables": 0, "crcs": [],
+             "crc_mismatches": 0}
     hdr_buf = memoryview(bytearray(HEADER_SIZE))
+    trl_buf = memoryview(bytearray(TRAILER_SIZE))
     batched = batch_frames > 1
     sc = (SlabChannel(RecvSlab(slab_span(batch_frames, block_size)),
                       block_size) if batched else None)
@@ -72,6 +80,10 @@ def _child_receive(s, wsink: Sink, block_size: int, use_splice: bool,
                    else SpliceArbiter())
         except SpliceUnsupported:
             spl = None
+    if io_timeout is not None and spl is None:
+        # settimeout makes the fd non-blocking, which os.splice cannot
+        # tolerate — deadlines only cover the recv paths
+        s.settimeout(io_timeout)
 
     def note(nbytes):
         if arb is not None and arb.note(nbytes):
@@ -85,6 +97,9 @@ def _child_receive(s, wsink: Sink, block_size: int, use_splice: bool,
         for off, mv in sc.take_pending():
             # GridFTP-faithful: every fragment is its own scattered pwrite
             wsink.write_at(off, mv)
+        # a frame's chunks always precede its trailer, so every verified
+        # frame is fully on disk once the pending list drained
+        child["crcs"].extend(sc.take_verified())
         sc.compact()
 
     try:
@@ -125,6 +140,10 @@ def _child_receive(s, wsink: Sink, block_size: int, use_splice: bool,
                     arb.force_pool()  # nothing consumed; pool path resumes
                     resume = (hdr.offset, hdr.length)
                     continue
+                if hdr.flags & FLAG_BLOCK_CRC:
+                    # payload moved kernel-side: nothing to checksum, just
+                    # drain the trailer to stay framed
+                    recv_exact(s, TRAILER_SIZE, trl_buf)
                 child["bytes"] += hdr.length
                 note(hdr.length)
                 if not spl.ok:
@@ -145,6 +164,7 @@ def _child_receive(s, wsink: Sink, block_size: int, use_splice: bool,
                         end_frame(sc.end_event)
                         child["bytes"] += sc.bytes
                         child["recv_calls"] += sc.recv_calls
+                        child["crc_mismatches"] += sc.crc_mismatches
                         return child
                     if arb is not None and arb.decided and arb.chose_splice:
                         flush_slab()
@@ -153,7 +173,8 @@ def _child_receive(s, wsink: Sink, block_size: int, use_splice: bool,
                         resume = (off, left) if left else None
                         child["bytes"] += sc.bytes
                         child["recv_calls"] += sc.recv_calls
-                        sc.bytes = sc.recv_calls = 0
+                        child["crc_mismatches"] += sc.crc_mismatches
+                        sc.bytes = sc.recv_calls = sc.crc_mismatches = 0
                         break
             else:
                 # ---- per-frame private-pool phase ----
@@ -181,6 +202,24 @@ def _child_receive(s, wsink: Sink, block_size: int, use_splice: bool,
                     continue  # arbiter flipped back mid-stream
                 slot = pool.acquire()
                 recv_exact(s, hdr.length, pool.view(slot))
+                if hdr.flags & FLAG_BLOCK_CRC:
+                    recv_exact(s, TRAILER_SIZE, trl_buf)
+                    want = CRC_TRAILER.unpack(trl_buf)[0]
+                    got = block_crc(pool.view(slot)[: hdr.length])
+                    if got != want:
+                        # corrupt block: drop it (the manifest hole drives
+                        # a RESUME re-fetch); the stream itself stays framed
+                        pool.release(slot)
+                        child["bytes"] += hdr.length
+                        child["crc_mismatches"] += 1
+                        note(hdr.length)
+                        continue
+                    wsink.write_at(hdr.offset, pool.view(slot)[: hdr.length])
+                    child["crcs"].append((hdr.offset, hdr.length, want))
+                    pool.release(slot)
+                    child["bytes"] += hdr.length
+                    note(hdr.length)
+                    continue
                 wsink.write_at(hdr.offset, pool.view(slot)[: hdr.length])
                 pool.release(slot)
                 child["bytes"] += hdr.length
@@ -188,6 +227,16 @@ def _child_receive(s, wsink: Sink, block_size: int, use_splice: bool,
     finally:
         if spl is not None:
             spl.close()
+
+
+def _read_all(fd: int) -> bytes:
+    """Drain a pipe to EOF (a child's crcs list can exceed one pipe read)."""
+    chunks = []
+    while True:
+        part = os.read(fd, 65536)
+        if not part:
+            return b"".join(chunks)
+        chunks.append(part)
 
 
 def mp_receive(
@@ -198,10 +247,15 @@ def mp_receive(
     use_splice: bool = False,
     batch_frames: int = 1,
     arbiter_factory=None,
+    crc_acc=None,
+    io_timeout: Optional[float] = None,
 ) -> RecvStats:
     """MP model (GridFTP-like): fork per channel, n file handles, per-block
     pwrite at scattered offsets — no coalescing, no shared state. Per-child
-    counters travel back over a pipe and are summed into the parent stats."""
+    counters (and verified CRC records, merged into ``crc_acc``) travel back
+    over a pipe and are summed into the parent stats. A failed child reports
+    a typed error record so timeouts surface as ``TimeoutError`` in the
+    parent, not a bare exit code."""
     if sink.capture:
         raise ValueError("mp engine cannot receive into a capture sink "
                          "(forked children do not share parent memory)")
@@ -215,22 +269,44 @@ def mp_receive(
             try:
                 wsink = sink.open_worker()
                 child = _child_receive(s, wsink, block_size, use_splice,
-                                       batch_frames, arbiter_factory)
+                                       batch_frames, arbiter_factory,
+                                       io_timeout)
                 wsink.close()
                 os.write(w_cnt, json.dumps(child).encode())
                 os.close(w_cnt)
                 send_all(s, ACK)
                 os._exit(0)
-            except BaseException:
+            except BaseException as e:  # noqa: BLE001 - reported over pipe
+                kind = ("timeout" if isinstance(e, TimeoutError)
+                        else "protocol" if isinstance(e, ProtocolError)
+                        else "other")
+                try:
+                    os.write(w_cnt, json.dumps(
+                        {"error": str(e) or type(e).__name__,
+                         "kind": kind}).encode())
+                    os.close(w_cnt)
+                except OSError:
+                    pass
                 os._exit(1)
         os.close(w_cnt)
         procs.append((pid, r_cnt))
+    failure = None
     for pid, r_cnt in procs:
-        raw = os.read(r_cnt, 4096)
+        raw = _read_all(r_cnt)
         os.close(r_cnt)
         _, status = os.waitpid(pid, 0)
         if os.waitstatus_to_exitcode(status) != 0:
-            raise RuntimeError("mp receiver child failed")
+            if failure is None:
+                try:
+                    err = json.loads(raw.decode())
+                except (ValueError, UnicodeDecodeError):
+                    err = {}
+                msg = err.get("error", "mp receiver child failed")
+                kind = err.get("kind", "other")
+                failure = (TimeoutError(msg) if kind == "timeout"
+                           else ProtocolError(msg) if kind == "protocol"
+                           else RuntimeError(msg))
+            continue  # keep reaping siblings before raising
         child = json.loads(raw.decode())
         stats.bytes += child["bytes"]
         stats.eofr_frames += child["eofr"]
@@ -238,19 +314,32 @@ def mp_receive(
         stats.splice_bytes += child.get("splice", 0)
         stats.recv_calls += child.get("recv_calls", 0)
         stats.splice_autodisables += child.get("autodisables", 0)
+        stats.crc_mismatches += child.get("crc_mismatches", 0)
+        if crc_acc is not None:
+            for off, ln, crc in child.get("crcs", ()):
+                crc_acc.add(off, ln, crc)
+    if failure is not None:
+        raise failure
     return stats
 
 
 def _receive(socks, sink, block_size, *, pool_slots=32, fsm=None,
              conformance=True, reusable=False, pool=None, splice=False,
-             batch_frames=1, slabs=None):
+             batch_frames=1, slabs=None, crc_acc=None, io_timeout=None):
     return mp_receive(socks, sink, block_size, reusable=reusable,
-                      use_splice=splice, batch_frames=batch_frames)
+                      use_splice=splice, batch_frames=batch_frames,
+                      crc_acc=crc_acc, io_timeout=io_timeout)
 
 
-def _send(socks, source, session, *, reusable=False, batch_frames=1):
+def _send(socks, source, session, *, reusable=False, batch_frames=1,
+          integrity=False, blocks=None, io_timeout=None, crc_out=None):
+    # fork-mode workers can't report their trailer CRCs back to the
+    # parent: crc_out is accepted for signature uniformity but stays
+    # empty, and callers fall back to a serial whole-file pass
     return worker_send(socks, source, session, use_processes=True,
-                       reusable=reusable, batch_frames=batch_frames)
+                       reusable=reusable, batch_frames=batch_frames,
+                       integrity=integrity, blocks=blocks,
+                       io_timeout=io_timeout)
 
 
 ENGINE = register_engine(Engine(

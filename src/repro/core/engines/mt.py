@@ -34,7 +34,7 @@ from __future__ import annotations
 
 import socket
 import threading
-from typing import List, Optional
+from typing import Dict, List, Optional
 
 from repro.core.autotune import ChannelTuner, SpliceArbiter
 from repro.core.engines.base import (
@@ -59,8 +59,12 @@ from repro.core.engines.base import (
     slab_span,
 )
 from repro.core.engines.registry import Engine, register_engine
+from repro.core.integrity import block_crc
 from repro.core.header import (
+    CRC_TRAILER,
+    FLAG_BLOCK_CRC,
     HEADER_SIZE,
+    TRAILER_SIZE,
     ChannelEvent,
     ChannelHeader,
     ProtocolError,
@@ -83,6 +87,8 @@ def mt_receive(
     batch_frames: int = 1,
     slabs=None,
     arbiter_factory=None,
+    crc_acc=None,
+    io_timeout: Optional[float] = None,
 ) -> RecvStats:
     """MT model: thread per channel + locked shared handoff + disk thread.
 
@@ -92,7 +98,13 @@ def mt_receive(
     ``pwritev``. ``use_splice`` opts into the kernel-side path under the
     goodput arbiter; ``arbiter_factory`` overrides arbiter construction
     (tests script deterministic decisions through it). Channel-thread
-    failures are re-raised in the caller, not swallowed."""
+    failures are re-raised in the caller, not swallowed.
+
+    ``crc_acc`` (a ``CrcManifest``) collects verified blocks from
+    CRC-flagged frames — a block is only manifested AFTER its pwritev
+    landed, so the manifest never claims bytes that aren't on disk.
+    ``io_timeout`` bounds every blocking socket wait; a stalled peer
+    surfaces as ``TimeoutError`` instead of a hung channel thread."""
     from repro.core.ringbuf import (
         LockedBatchRelay,
         LockedRecvPool,
@@ -116,6 +128,20 @@ def mt_receive(
     lock = threading.Lock()
     errors: List[BaseException] = []
     splice_ok = use_splice and SPLICE and sink.file_backed
+    # slot -> (offset, length, crc) for verified-but-not-yet-written blocks;
+    # the disk thread pops entries into crc_acc after their pwritev lands
+    pending_crcs = {}
+    if io_timeout is not None and not splice_ok:
+        # settimeout puts the fd in non-blocking mode, which os.splice
+        # cannot tolerate — deadlines apply to the recv/sendmsg paths only
+        for s in socks:
+            s.settimeout(io_timeout)
+
+    def manifest_verified(records) -> None:
+        if crc_acc is not None:
+            with lock:
+                for rec in records:
+                    crc_acc.add(*rec)
 
     def fail(e: BaseException) -> None:
         with lock:
@@ -173,6 +199,12 @@ def mt_receive(
                 # nothing consumed: the whole payload moves to the pool path
                 arb.force_pool()
                 return _TO_POOL, (hdr.offset, hdr.length)
+            if hdr.flags & FLAG_BLOCK_CRC:
+                # splice moved the payload kernel-side, so there is nothing
+                # to checksum — drain the trailer to stay framed (the
+                # session layer disables splice under integrity; this is
+                # belt-and-braces for mixed peers)
+                recv_exact(sock, TRAILER_SIZE)
             with lock:
                 stats.bytes += hdr.length
                 stats.splice_bytes += n_k
@@ -184,6 +216,7 @@ def mt_receive(
     def pool_phase(sock, arb, spl, hdr_buf, resume):
         """Per-frame shared-pool receive (``batch_frames == 1``). Runs to
         the end frame unless the arbiter picks splice back mid-trial."""
+        trl_buf = memoryview(bytearray(TRAILER_SIZE))
         if resume is not None:
             off, left = resume
             slot = shared.acquire()
@@ -211,6 +244,22 @@ def mt_receive(
                 )
             slot = shared.acquire()  # blocks when exhausted: backpressure
             recv_exact(sock, hdr.length, shared.view(slot))
+            if hdr.flags & FLAG_BLOCK_CRC:
+                recv_exact(sock, TRAILER_SIZE, trl_buf)
+                want = CRC_TRAILER.unpack(trl_buf)[0]
+                got = block_crc(shared.view(slot)[:hdr.length])
+                if got != want:
+                    # corrupt block: never commit it — the manifest gap
+                    # drives a RESUME re-fetch; the stream itself stays
+                    # framed (trailer is length-delimited) and alive
+                    shared.release_all([slot])
+                    with lock:
+                        stats.bytes += hdr.length
+                        stats.crc_mismatches += 1
+                    note_arbiter(arb, spl, hdr.length)
+                    continue
+                with lock:
+                    pending_crcs[slot] = (hdr.offset, hdr.length, want)
             shared.commit(slot, hdr.offset, hdr.length)
             with lock:
                 stats.bytes += hdr.length
@@ -226,12 +275,16 @@ def mt_receive(
         while True:
             if sc.free_space() == 0:
                 relay.submit_wait(sc.take_pending())
+                # submit_wait returns only after the disk thread's pwritev,
+                # so every chunk of a verified frame is on disk by now
+                manifest_verified(sc.take_verified())
                 sc.compact()
             sc.receive_once(sock)
             note_arbiter(arb, spl, sc.bytes - last_bytes)
             last_bytes = sc.bytes
             if sc.end_event is not None:
                 relay.submit_wait(sc.take_pending())
+                manifest_verified(sc.take_verified())
                 with lock:
                     if sc.end_event == ChannelEvent.EOFR:
                         stats.eofr_frames += 1
@@ -240,6 +293,7 @@ def mt_receive(
                 return _END, b"", None
             if arb is not None and arb.decided and arb.chose_splice:
                 relay.submit_wait(sc.take_pending())
+                manifest_verified(sc.take_verified())
                 tail, hdr, off, left = sc.handoff()
                 return _TO_SPLICE, tail, ((off, left) if left else None)
 
@@ -291,6 +345,7 @@ def mt_receive(
                 with lock:
                     stats.bytes += sc.bytes
                     stats.recv_calls += sc.recv_calls
+                    stats.crc_mismatches += sc.crc_mismatches
         except BaseException as e:  # noqa: BLE001 - surfaced after join
             fail(e)
         finally:
@@ -309,6 +364,15 @@ def mt_receive(
                          for off, ln, slot in batch]
                     )
                     stats.flushes += 1
+                    if pending_crcs:
+                        # the batch is on disk: its blocks may enter the
+                        # manifest (slots pop even without crc_acc so a
+                        # reused slot never inherits a stale record)
+                        with lock:
+                            for _, _, slot in batch:
+                                rec = pending_crcs.pop(slot, None)
+                                if rec is not None and crc_acc is not None:
+                                    crc_acc.add(*rec)
                     shared.release_all(slot for _, _, slot in batch)
                 elif shared.closed:
                     return
@@ -358,6 +422,10 @@ def worker_send(
     reusable: bool = False,
     allow_sendfile: bool = True,
     batch_frames: int = 1,
+    integrity: bool = False,
+    blocks: Optional[List[int]] = None,
+    io_timeout: Optional[float] = None,
+    crc_out: Optional[Dict[int, int]] = None,
 ) -> int:
     """Baseline sender: blocking worker (thread or fork) per channel, each
     with a PRIVATE fd reading its stripe (seek-heavy, GridFTP-like).
@@ -367,36 +435,63 @@ def worker_send(
     else is scatter-gather ``sendmsg``. With ``batch_frames > 1`` the
     sendfile path steps aside and each worker coalesces a hill-climbed
     number of frames into one ``sendmsg_batched`` call (headers cycle
-    through a ring of reusable per-worker buffers)."""
+    through a ring of reusable per-worker buffers).
+
+    ``integrity`` flags every data frame and appends its CRC32 trailer.
+    ``blocks`` restricts the transfer to those block indices (the RESUME
+    re-send plan); channels stripe over the PLAN, not the file, so a
+    short plan still spreads across all channels. ``io_timeout`` bounds
+    every blocking send/ACK wait. ``crc_out`` (thread mode only) collects
+    the per-block CRCs the workers compute for the trailers, so callers
+    can fold the whole-file CRC without a second serial pass."""
     import os
 
     n = len(socks)
     end_event = ChannelEvent.EOFR if reusable else ChannelEvent.EOFT
     cap = max(1, batch_frames)
+    plan = (list(range(source.n_blocks)) if blocks is None
+            else sorted(set(blocks)))
+    data_flags = FLAG_BLOCK_CRC if integrity else 0
     # reusable header buffers per channel: one per potentially in-flight
     # frame (the batch ceiling plus the end frame)
     frames = FrameBuilder(session, n, depth=cap + 1)
+    # fork-mode children can't write back to the parent; crc_out stays
+    # incomplete there and callers fall back to a serial file pass
+    collect = integrity and crc_out is not None and not use_processes
+    crc_lock = threading.Lock()
 
     def tx(i: int, sock: socket.socket):
         src = source.open_worker()
+        local_crcs: Optional[Dict[int, int]] = {} if collect else None
+        if io_timeout is not None:
+            sock.settimeout(io_timeout)
 
-        def hdr(event, off, ln):
-            return frames.header(i, event, off, ln)
+        def hdr(event, off, ln, flags=0):
+            return frames.header(i, event, off, ln, flags)
+
+        def bcrc(b: int) -> int:
+            c = src.block_crc(b)
+            if local_crcs is not None:
+                local_crcs[b] = c
+            return c
 
         # sendfile precludes gathering many frames into one syscall, so
         # the batched mode always takes the scatter-gather path
         use_sf = (allow_sendfile and SENDFILE and src.file_backed
                   and cap == 1)
         tuner = ChannelTuner(cap=cap) if cap > 1 else None
-        b = i
-        while b < src.n_blocks:
+        mine = plan[i::n]  # this channel's stripe of the send plan
+        k = 0
+        while k < len(mine):
+            b = mine[k]
             if tuner is None:
                 ln = src.block_len(b)
                 off = b * src.block_size
                 if use_sf:
                     # MSG_MORE keeps the tiny header out of its own NODELAY
                     # segment: it coalesces with the first sendfile payload
-                    send_all(sock, hdr(mode_event, off, ln), MSG_MORE)
+                    send_all(sock, hdr(mode_event, off, ln, data_flags),
+                             MSG_MORE)
                     try:
                         sendfile_all(sock, src.fileno(), off, ln)
                     except SendfileUnsupported:
@@ -404,23 +499,42 @@ def worker_send(
                         # the mmap view and stay on the generic path
                         use_sf = False
                         send_all(sock, src.block_view(b))
+                    if integrity:
+                        # MSG_MORE again: the 4-byte trailer must not ride
+                        # its own segment — it coalesces with the next
+                        # frame's header (or the end frame flushes it)
+                        send_all(sock, frames.trailer(i, bcrc(b)),
+                                 MSG_MORE)
                 else:
-                    sendmsg_all(sock, [hdr(mode_event, off, ln),
-                                       src.block_view(b)])
-                b += n
+                    iov = [hdr(mode_event, off, ln, data_flags),
+                           src.block_view(b)]
+                    if integrity:
+                        iov.append(frames.trailer(i, bcrc(b)))
+                    sendmsg_all(sock, iov)
+                k += 1
                 continue
             iov = []
             sizes = []
-            while len(sizes) < tuner.depth and b < src.n_blocks:
+            while len(sizes) < tuner.depth and k < len(mine):
+                b = mine[k]
                 ln = src.block_len(b)
-                iov.append(hdr(mode_event, b * src.block_size, ln))
+                iov.append(hdr(mode_event, b * src.block_size, ln,
+                               data_flags))
                 iov.append(src.block_view(b))
-                sizes.append(HEADER_SIZE + ln)
-                b += n
+                fsz = HEADER_SIZE + ln
+                if integrity:
+                    iov.append(frames.trailer(i, bcrc(b)))
+                    fsz += TRAILER_SIZE
+                sizes.append(fsz)
+                k += 1
             sent = sendmsg_batched(sock, iov, sizes)
             tuner.note(sent)
         send_all(sock, hdr(end_event, 0, 0))
-        sock.setblocking(True)
+        if local_crcs:
+            with crc_lock:
+                crc_out.update(local_crcs)
+        if io_timeout is None:
+            sock.setblocking(True)
         recv_exact(sock, 1)
         src.close()
 
@@ -465,20 +579,25 @@ def worker_send(
             # mirror the fork path's exit-code check: a dead channel must
             # fail the transfer, not return success
             raise errors[0]
-    return source.size
+    if blocks is None:
+        return source.size
+    return sum(source.block_len(b) for b in plan)
 
 
 def _receive(socks, sink, block_size, *, pool_slots=32, fsm=None,
              conformance=True, reusable=False, pool=None, splice=False,
-             batch_frames=1, slabs=None):
+             batch_frames=1, slabs=None, crc_acc=None, io_timeout=None):
     return mt_receive(socks, sink, block_size, pool_slots, reusable=reusable,
                       pool=pool, use_splice=splice, batch_frames=batch_frames,
-                      slabs=slabs)
+                      slabs=slabs, crc_acc=crc_acc, io_timeout=io_timeout)
 
 
-def _send(socks, source, session, *, reusable=False, batch_frames=1):
+def _send(socks, source, session, *, reusable=False, batch_frames=1,
+          integrity=False, blocks=None, io_timeout=None, crc_out=None):
     return worker_send(socks, source, session, use_processes=False,
-                       reusable=reusable, batch_frames=batch_frames)
+                       reusable=reusable, batch_frames=batch_frames,
+                       integrity=integrity, blocks=blocks,
+                       io_timeout=io_timeout, crc_out=crc_out)
 
 
 ENGINE = register_engine(Engine(

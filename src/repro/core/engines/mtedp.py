@@ -45,8 +45,12 @@ from repro.core.engines.base import (
 )
 from repro.core.engines.registry import Engine, register_engine
 from repro.core.fsm import FSM_BUILDERS, Machine
+from repro.core.integrity import block_crc
 from repro.core.header import (
+    CRC_TRAILER,
+    FLAG_BLOCK_CRC,
     HEADER_SIZE,
+    TRAILER_SIZE,
     ChannelEvent,
     ChannelHeader,
     ProtocolError,
@@ -75,6 +79,8 @@ def mtedp_receive(
     pool=None,
     batch_frames: int = 1,
     slabs=None,
+    crc_acc=None,
+    io_timeout: Optional[float] = None,
 ) -> RecvStats:
     """The xDFS MTEDP receiver: PIOD event loop + registered
     ``RecvBufferPool`` + vectored I/O.
@@ -91,16 +97,20 @@ def mtedp_receive(
     ``batch_frames`` — the negotiated batch ceiling; above 1 the receiver
     runs the slab datapath (``slabs`` optionally carries a caller-owned
     ``SlabSet`` reused across the session's files).
+    ``crc_acc`` — integrity manifest (``integrity.CrcManifest``): verified
+    blocks are recorded only AFTER their bytes land on disk.
+    ``io_timeout`` — event-loop stall bound + ACK-write timeout; a peer
+    that stops moving bytes surfaces as a typed ``TimeoutError``.
     """
     own_fsm = fsm is None and conformance
     if own_fsm:
         fsm = _session_fsm()
     if batch_frames > 1:
         stats = _receive_batched(socks, sink, block_size, fsm, reusable,
-                                 batch_frames, slabs)
+                                 batch_frames, slabs, crc_acc, io_timeout)
     else:
         stats = _receive_pooled(socks, sink, block_size, pool_slots, fsm,
-                                reusable, pool)
+                                reusable, pool, crc_acc, io_timeout)
     if own_fsm:
         if reusable:
             assert fsm.state == "9_open_file", (
@@ -109,18 +119,21 @@ def mtedp_receive(
         else:
             assert fsm.done, f"conformance: receiver FSM ended in {fsm.state}"
     for s in socks:
-        s.setblocking(True)
+        s.settimeout(io_timeout)  # None = blocking without a deadline
         send_all(s, ACK)
     return stats
 
 
 def _receive_pooled(socks, sink, block_size, pool_slots, fsm, reusable,
-                    pool) -> RecvStats:
+                    pool, crc_acc=None, io_timeout=None) -> RecvStats:
     """The per-frame registered-pool datapath (batch_frames == 1)."""
     from repro.core.ringbuf import RecvBufferPool
 
     stats = RecvStats()
     n = len(socks)
+    # verified-but-unflushed blocks: slot -> (offset, length, crc); the
+    # manifest only learns about a block once its pwritev landed
+    pending_crcs: Dict[int, tuple] = {}
     if pool is None or pool.block_size != block_size:
         pool = RecvBufferPool(pool_slots, block_size)
     if pool.slots <= n:
@@ -136,7 +149,7 @@ def _receive_pooled(socks, sink, block_size, pool_slots, fsm, reusable,
 
     class Chan:
         __slots__ = ("sock", "idx", "hdr_buf", "hdr_got", "hdr", "slot",
-                     "view", "got")
+                     "view", "got", "need_trl", "trl_got", "trl_buf")
 
         def __init__(self, sock, idx):
             self.sock = sock
@@ -147,6 +160,9 @@ def _receive_pooled(socks, sink, block_size, pool_slots, fsm, reusable,
             self.slot = None  # claimed pool slot handle
             self.view = None  # its registered buffer view
             self.got = 0
+            self.need_trl = False  # payload done, CRC trailer pending
+            self.trl_got = 0
+            self.trl_buf = memoryview(bytearray(TRAILER_SIZE))
 
     def fsm_steps(*events):
         if fsm is not None:
@@ -161,6 +177,10 @@ def _receive_pooled(socks, sink, block_size, pool_slots, fsm, reusable,
             )
             stats.flushes += 1
             for _, _, slot in blocks:
+                if crc_acc is not None:
+                    rec = pending_crcs.pop(slot, None)
+                    if rec is not None:
+                        crc_acc.add(*rec)  # bytes are on disk now
                 pool.release(slot)
         if fsm is None:
             return
@@ -224,6 +244,37 @@ def _receive_pooled(socks, sink, block_size, pool_slots, fsm, reusable,
                     c.view = pool.view(c.slot)
                     c.got = 0
                     continue
+                if c.need_trl:
+                    # integrity mode: the 4-byte CRC32 trailer after the
+                    # payload; verify BEFORE commit, so a corrupt block
+                    # never reaches the pool (let alone the disk)
+                    r = sock.recv_into(c.trl_buf[c.trl_got:],
+                                       TRAILER_SIZE - c.trl_got)
+                    if r == 0:
+                        raise ConnectionError("peer closed mid-trailer")
+                    c.trl_got += r
+                    if c.trl_got < TRAILER_SIZE:
+                        continue
+                    (want_crc,) = CRC_TRAILER.unpack(c.trl_buf)
+                    if block_crc(c.view[:c.hdr.length]) == want_crc:
+                        pool.commit(c.slot, c.hdr.offset, c.hdr.length)
+                        if crc_acc is not None:
+                            pending_crcs[c.slot] = (
+                                c.hdr.offset, c.hdr.length, want_crc)
+                    else:
+                        # stream stays synced (trailer is length-framed);
+                        # skip the block — RESUME re-fetches it
+                        stats.crc_mismatches += 1
+                        pool.release(c.slot)
+                    fsm_steps("read_ready", "block", "buffered")
+                    c.hdr = None
+                    c.slot = None
+                    c.view = None
+                    c.need_trl = False
+                    c.trl_got = 0
+                    if pool.n_free == 0:
+                        flush()
+                    continue
                 # payload lands straight in the registered slot view
                 want = c.hdr.length - c.got
                 r = sock.recv_into(c.view[c.got : c.hdr.length], want)
@@ -232,6 +283,10 @@ def _receive_pooled(socks, sink, block_size, pool_slots, fsm, reusable,
                 c.got += r
                 stats.bytes += r
                 if c.got == c.hdr.length:
+                    if c.hdr.flags & FLAG_BLOCK_CRC:
+                        c.need_trl = True
+                        c.trl_got = 0
+                        continue
                     pool.commit(c.slot, c.hdr.offset, c.hdr.length)
                     # milestone: full block moved through 10 -> 11 -> 12 -> 10
                     fsm_steps("read_ready", "block", "buffered")
@@ -253,14 +308,14 @@ def _receive_pooled(socks, sink, block_size, pool_slots, fsm, reusable,
             flush()
 
     piod.idle_callback = drained_if_idle
-    piod.run(until=lambda: all(eof))
+    piod.run(until=lambda: all(eof), stall_timeout=io_timeout)
     flush(final=True)
     piod.close()
     return stats
 
 
 def _receive_batched(socks, sink, block_size, fsm, reusable, batch_frames,
-                     slabs) -> RecvStats:
+                     slabs, crc_acc=None, io_timeout=None) -> RecvStats:
     """The slab datapath: per-channel registered slabs, many frames per
     ``recv_into``, flush = pwritev of the slab views + compact."""
     from repro.core.ringbuf import SlabSet
@@ -285,6 +340,12 @@ def _receive_batched(socks, sink, block_size, fsm, reusable, batch_frames,
         if batch or final:
             stats.writev_calls += sink.writev_views(batch)
             stats.flushes += 1
+        # a verified frame's chunks always precede its trailer in the
+        # stream, so after this write they are ALL on disk — safe to
+        # manifest now
+        for rec in sc.take_verified():
+            if crc_acc is not None:
+                crc_acc.add(*rec)
         sc.compact()
         if fsm is None or final:
             return
@@ -330,11 +391,12 @@ def _receive_batched(socks, sink, block_size, fsm, reusable, batch_frames,
                 flush_chan(sc)
 
     piod.idle_callback = drained_if_idle
-    piod.run(until=lambda: all(eof))
+    piod.run(until=lambda: all(eof), stall_timeout=io_timeout)
     for sc in chans.values():  # terminal flush of every channel's tail
         flush_chan(sc, final=True)
         stats.bytes += sc.bytes
         stats.recv_calls += sc.recv_calls
+        stats.crc_mismatches += sc.crc_mismatches
     if fsm is not None:
         fsm.step("eofr_flush" if reusable else "final_flush")
     piod.close()
@@ -348,6 +410,10 @@ def event_send(
     mode_event: ChannelEvent = ChannelEvent.xFTSMU,
     reusable: bool = False,
     batch_frames: int = 1,
+    integrity: bool = False,
+    blocks: Optional[List[int]] = None,
+    io_timeout: Optional[float] = None,
+    crc_out: Optional[Dict[int, int]] = None,
 ) -> int:
     """xDFS event-driven sender: one thread, write-readiness multiplexing.
 
@@ -360,34 +426,53 @@ def event_send(
     ``batch_frames`` caps how many frames one pending iovec coalesces;
     above 1, each channel's actual depth is hill-climbed by a
     ``ChannelTuner`` from measured goodput.
+
+    ``integrity`` appends a CRC32 trailer to every data frame (the
+    FLAG_BLOCK_CRC wire contract); ``blocks`` restricts the transfer to
+    a sorted subset of block indices (the RESUME flow's missing set —
+    each channel strips the PLAN, not the whole file); ``io_timeout``
+    bounds event-loop stalls and the final ACK wait. ``crc_out`` collects
+    the per-block trailer CRCs (single-threaded loop, no lock needed) so
+    callers can fold the whole-file CRC without a second serial pass.
     """
     n = len(socks)
     cap = max(1, batch_frames)
     piod = PIOD()
     frames = FrameBuilder(session, n, depth=cap + 1)  # batch + end frame
     tuners = ([ChannelTuner(cap=cap) for _ in range(n)] if cap > 1 else None)
-    next_block = [c for c in range(n)]  # block index each channel sends next
+    plan = (list(range(source.n_blocks)) if blocks is None
+            else sorted(set(blocks)))
+    queues = [plan[i::n] for i in range(n)]  # channel i sends plan[i::n]
+    qpos = [0] * n
     pending: Dict[socket.socket, List[memoryview]] = {}  # in-flight iovecs
     done = [False] * n
     sent = 0
     end_event = ChannelEvent.EOFR if reusable else ChannelEvent.EOFT
+    data_flags = FLAG_BLOCK_CRC if integrity else 0
 
     def make_batch(i_chan: int) -> List[memoryview]:
         """Up to the tuned depth of frames for this channel; the end
         frame rides the batch that exhausts the stripe."""
         depth = tuners[i_chan].depth if tuners is not None else 1
         iov: List[memoryview] = []
+        q = queues[i_chan]
         for _ in range(depth):
-            blk = next_block[i_chan]
-            next_block[i_chan] += n
-            if blk >= source.n_blocks:
+            if qpos[i_chan] >= len(q):
                 iov.append(frames.header(i_chan, end_event, 0, 0))
                 done[i_chan] = True
                 break
+            blk = q[qpos[i_chan]]
+            qpos[i_chan] += 1
             ln = source.block_len(blk)
             iov.append(frames.header(i_chan, mode_event,
-                                     blk * source.block_size, ln))
+                                     blk * source.block_size, ln,
+                                     flags=data_flags))
             iov.append(source.block_view(blk))
+            if integrity:
+                c = source.block_crc(blk)
+                if crc_out is not None:
+                    crc_out[blk] = c
+                iov.append(frames.trailer(i_chan, c))
         return iov
 
     idx = {s: i for i, s in enumerate(socks)}
@@ -416,28 +501,32 @@ def event_send(
 
     for s in socks:
         piod.register(s, selectors.EVENT_WRITE, on_writable)
-    piod.run(until=lambda: all(done) and not pending)
+    piod.run(until=lambda: all(done) and not pending,
+             stall_timeout=io_timeout)
     piod.close()
     for s in socks:
-        s.setblocking(True)
+        s.settimeout(io_timeout)  # None = blocking without a deadline
         recv_exact(s, 1)  # final ack (exception-header channel)
     return sent
 
 
 def _receive(socks, sink, block_size, *, pool_slots=32, fsm=None,
              conformance=True, reusable=False, pool=None, splice=False,
-             batch_frames=1, slabs=None):
+             batch_frames=1, slabs=None, crc_acc=None, io_timeout=None):
     # ``splice`` is accepted for signature uniformity but ignored: the
     # blocking socket->pipe splice would stall the nonblocking event loop
     # (the same reason the mtedp sender has no sendfile path).
     return mtedp_receive(socks, sink, block_size, pool_slots,
                          conformance=conformance, fsm=fsm, reusable=reusable,
-                         pool=pool, batch_frames=batch_frames, slabs=slabs)
+                         pool=pool, batch_frames=batch_frames, slabs=slabs,
+                         crc_acc=crc_acc, io_timeout=io_timeout)
 
 
-def _send(socks, source, session, *, reusable=False, batch_frames=1):
+def _send(socks, source, session, *, reusable=False, batch_frames=1,
+          integrity=False, blocks=None, io_timeout=None, crc_out=None):
     return event_send(socks, source, session, reusable=reusable,
-                      batch_frames=batch_frames)
+                      batch_frames=batch_frames, integrity=integrity,
+                      blocks=blocks, io_timeout=io_timeout, crc_out=crc_out)
 
 
 ENGINE = register_engine(Engine(

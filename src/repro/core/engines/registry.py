@@ -11,8 +11,14 @@ Uniform callable signatures:
   receive(socks, sink, block_size, *, pool_slots=32, fsm=None,
           conformance=True, reusable=False, pool=None, splice=False,
           batch_frames=1, slabs=None) -> RecvStats
-  send(socks, source, session, *, reusable=False,
-       batch_frames=1) -> int  (bytes on the wire)
+  send(socks, source, session, *, reusable=False, batch_frames=1,
+       integrity=False, blocks=None, io_timeout=None,
+       crc_out=None) -> int  (bytes on the wire)
+
+``crc_out`` is an optional caller-owned dict the sender fills with the
+``block_index -> crc32`` trailer values it computes under ``integrity``
+(fork-based senders leave it incomplete; callers fall back to a serial
+whole-file pass).
 
 ``pool`` is an optional caller-owned registered ``RecvBufferPool`` reused
 across a session's files (engines that don't pool blocks ignore it).

@@ -1,0 +1,333 @@
+"""Failure policy + fault injection for the xDFS datapath.
+
+One policy object owns every "how long / how often" knob so callers stop
+growing ad-hoc retry loops:
+
+* :class:`Deadline` — a monotonic budget shared across the steps of one
+  operation (e.g. dialing all n channels of a connect). ``remaining()``
+  feeds socket timeouts; expiry raises :class:`DeadlineExceeded`, a
+  ``TimeoutError`` subclass so callers can catch the stdlib type.
+* :class:`RetryPolicy` — capped, jittered exponential backoff with an
+  injectable clock/sleep/rng (tests run it on a fake clock).
+  :meth:`RetryPolicy.run` retries a callable and raises
+  :class:`RetriesExhausted` chained to the last failure.
+* :class:`FaultyProxy` — the fault-injection harness: a TCP proxy that
+  forwards byte streams between a client and an upstream server and, at
+  configured per-direction byte offsets, corrupts a byte, severs every
+  connection (crash), or stalls forever (hang). Built for the e2e
+  kill/resume/corruption matrix in ``tests/test_robustness.py``.
+"""
+from __future__ import annotations
+
+import random
+import socket
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Tuple, Type
+
+
+class DeadlineExceeded(TimeoutError):
+    """An operation ran past its deadline (subclass of TimeoutError)."""
+
+
+class RetriesExhausted(Exception):
+    """Every attempt of a retried operation failed; ``__cause__`` is the
+    last underlying failure."""
+
+
+class Deadline:
+    """A monotonic time budget. ``Deadline(None)`` never expires."""
+
+    __slots__ = ("_clock", "_expires")
+
+    def __init__(self, seconds: Optional[float],
+                 clock: Callable[[], float] = time.monotonic):
+        self._clock = clock
+        self._expires = None if seconds is None else clock() + seconds
+
+    @classmethod
+    def after(cls, seconds: Optional[float], **kw) -> "Deadline":
+        return cls(seconds, **kw)
+
+    def remaining(self) -> float:
+        if self._expires is None:
+            return float("inf")
+        return self._expires - self._clock()
+
+    def expired(self) -> bool:
+        return self.remaining() <= 0
+
+    def check(self, what: str = "operation") -> None:
+        if self.expired():
+            raise DeadlineExceeded(f"{what} deadline exceeded")
+
+    def budget(self, cap: Optional[float] = None) -> Optional[float]:
+        """A socket-timeout value: min(cap, remaining), None = unbounded."""
+        rem = self.remaining()
+        if rem == float("inf"):
+            return cap
+        rem = max(rem, 0.001)  # settimeout(0) would mean non-blocking
+        return rem if cap is None else min(cap, rem)
+
+
+@dataclass
+class RetryPolicy:
+    """Capped jittered exponential backoff + the datapath timeout knobs.
+
+    ``connect_timeout`` bounds one TCP dial; ``io_timeout`` (when set)
+    bounds one read/write/stall on an established stream. The clock,
+    sleeper, and rng are injectable so tests drive it deterministically.
+    """
+
+    attempts: int = 3
+    base_delay: float = 0.05
+    max_delay: float = 2.0
+    multiplier: float = 2.0
+    jitter: float = 0.5           # each delay is scaled by [1-j, 1+j]
+    connect_timeout: float = 10.0
+    io_timeout: Optional[float] = None
+    clock: Callable[[], float] = field(default=time.monotonic, repr=False)
+    sleep: Callable[[float], None] = field(default=time.sleep, repr=False)
+    rng: random.Random = field(default_factory=random.Random, repr=False)
+
+    def __post_init__(self) -> None:
+        if self.attempts < 1:
+            raise ValueError("attempts must be >= 1")
+        if not 0.0 <= self.jitter < 1.0:
+            raise ValueError("jitter must be in [0, 1)")
+
+    def delays(self) -> List[float]:
+        """The ``attempts - 1`` backoff delays (jittered, capped)."""
+        out = []
+        delay = self.base_delay
+        for _ in range(self.attempts - 1):
+            capped = min(delay, self.max_delay)
+            scale = 1.0 + self.jitter * (2.0 * self.rng.random() - 1.0)
+            out.append(capped * scale)
+            delay *= self.multiplier
+        return out
+
+    def run(self, fn: Callable[[], object], *,
+            retry_on: Tuple[Type[BaseException], ...] = (
+                ConnectionError, TimeoutError, OSError),
+            deadline: Optional[Deadline] = None,
+            what: str = "operation"):
+        """Call ``fn`` up to ``attempts`` times. DeadlineExceeded is never
+        retried (the budget is gone by definition)."""
+        last: Optional[BaseException] = None
+        for i, delay in enumerate(self.delays() + [None]):
+            if deadline is not None:
+                deadline.check(what)
+            try:
+                return fn()
+            except DeadlineExceeded:
+                raise
+            except retry_on as e:
+                last = e
+                if delay is None:
+                    break
+                if deadline is not None and deadline.remaining() <= delay:
+                    break
+                self.sleep(delay)
+        raise RetriesExhausted(
+            f"{what} failed after {self.attempts} attempts: {last!r}"
+        ) from last
+
+    def connect(self, address: Tuple[str, int], *,
+                deadline: Optional[Deadline] = None) -> socket.socket:
+        """``socket.create_connection`` with the policy's timeout, retried
+        with backoff (the cluster control-plane dial path)."""
+        def dial() -> socket.socket:
+            timeout = self.connect_timeout
+            if deadline is not None:
+                timeout = deadline.budget(timeout)
+            s = socket.create_connection(address, timeout=timeout)
+            s.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+            return s
+        return self.run(dial, deadline=deadline,
+                        what=f"connect to {address[0]}:{address[1]}")
+
+
+# ---------------------------------------------------------------------------
+# fault injection
+
+
+@dataclass
+class Fault:
+    """One direction's fault spec for :class:`FaultyProxy`.
+
+    Offsets are byte positions within ONE proxied connection's stream for
+    that direction (accept order selects the connection via ``conn``;
+    ``conn=None`` applies the spec independently to every connection).
+    """
+
+    corrupt_at: Optional[int] = None   # XOR 0xFF the byte at this offset
+    drop_after: Optional[int] = None   # forward this many bytes, then sever
+    #                                    EVERY proxied connection (crash)
+    stall_after: Optional[int] = None  # forward this many bytes, then stop
+    #                                    forwarding but keep the link open
+    conn: Optional[int] = None         # accept-order connection index
+
+
+class _Pump(threading.Thread):
+    """One direction of one proxied connection."""
+
+    def __init__(self, proxy: "FaultyProxy", src: socket.socket,
+                 dst: socket.socket, fault: Optional[Fault], name: str):
+        super().__init__(name=name, daemon=True)
+        self.proxy = proxy
+        self.src = src
+        self.dst = dst
+        self.fault = fault
+        self.forwarded = 0
+
+    def run(self) -> None:  # noqa: C901 - linear fault ladder
+        f = self.fault
+        try:
+            while not self.proxy._stop.is_set():
+                try:
+                    chunk = bytearray(self.src.recv(65536))
+                except OSError:
+                    break
+                if not chunk:
+                    break
+                pos = self.forwarded
+                if f is not None:
+                    if (f.corrupt_at is not None
+                            and pos <= f.corrupt_at < pos + len(chunk)):
+                        chunk[f.corrupt_at - pos] ^= 0xFF
+                    cut = None
+                    for limit in (f.drop_after, f.stall_after):
+                        if limit is not None and pos + len(chunk) > limit:
+                            cut = limit if cut is None else min(cut, limit)
+                    if cut is not None:
+                        head = chunk[: max(0, cut - pos)]
+                        if head:
+                            self.dst.sendall(head)
+                            self.forwarded += len(head)
+                        if (f.drop_after is not None
+                                and self.forwarded >= f.drop_after):
+                            self.proxy.kill_all()
+                            return
+                        # stall: hold both endpoints open, forward nothing
+                        self.proxy._stop.wait()
+                        return
+                try:
+                    self.dst.sendall(chunk)
+                except OSError:
+                    break
+                self.forwarded += len(chunk)
+        finally:
+            for s in (self.src, self.dst):
+                try:
+                    s.shutdown(socket.SHUT_RDWR)
+                except OSError:
+                    pass
+
+
+class FaultyProxy:
+    """A byte-level TCP fault injector between a client and ``upstream``.
+
+    Clients connect to :attr:`address` instead of the real server; every
+    accepted connection gets its own upstream dial and two pump threads
+    (client->server and server->client) that apply the configured
+    :class:`Fault` specs at exact byte offsets. ``kill_all()`` severs
+    every proxied connection at once — the "network died" event the
+    RESUME flow recovers from.
+    """
+
+    def __init__(self, upstream: Tuple[str, int], host: str = "127.0.0.1",
+                 c2s: Optional[Fault] = None, s2c: Optional[Fault] = None):
+        self.upstream = (upstream[0], int(upstream[1]))
+        self.c2s = c2s
+        self.s2c = s2c
+        self._stop = threading.Event()
+        self._lock = threading.Lock()
+        self._socks: List[socket.socket] = []
+        self._pumps: List[_Pump] = []
+        self._n_accepted = 0
+        self.stats: Dict[str, int] = {"connections": 0, "c2s_bytes": 0,
+                                      "s2c_bytes": 0}
+        self._listener = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+        self._listener.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+        self._listener.bind((host, 0))
+        self._listener.listen(64)
+        self._listener.settimeout(0.2)
+        self.address: Tuple[str, int] = self._listener.getsockname()
+        self._accept_thread = threading.Thread(
+            target=self._accept_loop, name="faulty-proxy-accept", daemon=True)
+        self._accept_thread.start()
+
+    def _pick(self, spec: Optional[Fault], idx: int) -> Optional[Fault]:
+        if spec is None or (spec.conn is not None and spec.conn != idx):
+            return None
+        return spec
+
+    def _accept_loop(self) -> None:
+        while not self._stop.is_set():
+            try:
+                cli, _ = self._listener.accept()
+            except socket.timeout:
+                continue
+            except OSError:
+                break
+            try:
+                srv = socket.create_connection(self.upstream, timeout=10.0)
+            except OSError:
+                cli.close()
+                continue
+            for s in (cli, srv):
+                s.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+            with self._lock:
+                idx = self._n_accepted
+                self._n_accepted += 1
+                self.stats["connections"] += 1
+                self._socks += [cli, srv]
+                pumps = [
+                    _Pump(self, cli, srv, self._pick(self.c2s, idx),
+                          f"proxy-c2s-{idx}"),
+                    _Pump(self, srv, cli, self._pick(self.s2c, idx),
+                          f"proxy-s2c-{idx}"),
+                ]
+                self._pumps += pumps
+            for p in pumps:
+                p.start()
+
+    def kill_all(self) -> None:
+        """Sever every proxied connection (both sides see a dead peer);
+        the proxy keeps accepting NEW connections afterwards."""
+        with self._lock:
+            socks, self._socks = self._socks, []
+        for s in socks:
+            try:
+                s.shutdown(socket.SHUT_RDWR)
+            except OSError:
+                pass
+            try:
+                s.close()
+            except OSError:
+                pass
+
+    def close(self) -> None:
+        self._stop.set()
+        try:
+            self._listener.close()
+        except OSError:
+            pass
+        self.kill_all()
+        self._accept_thread.join(2.0)
+        with self._lock:
+            pumps, self._pumps = self._pumps, []
+        for p in pumps:
+            p.join(2.0)
+            if p.name.startswith("proxy-c2s"):
+                self.stats["c2s_bytes"] += p.forwarded
+            else:
+                self.stats["s2c_bytes"] += p.forwarded
+
+    def __enter__(self) -> "FaultyProxy":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()

@@ -104,6 +104,9 @@ def server_download_fsm() -> Machine:
         ("7_await_channels", "more_channels"): "1_accept",
         ("7_await_channels", "all_channels"): "9_open_file",
         ("9_open_file", "opened"): "10_dispatch",
+        # RESUME (interrupted-transfer recovery): re-open the file and
+        # dispatch only the blocks the requester is missing
+        ("9_open_file", "resume"): "10_dispatch",
         ("10_dispatch", "write_ready"): "12_send_blocks",
         ("12_send_blocks", "block_sent"): "10_dispatch",
         ("10_dispatch", "eof_reached"): "15_eof_check",
@@ -145,6 +148,8 @@ def client_download_fsm() -> Machine:
         # the already-open channels, or close the session with EOFT
         ("8_eof_check", "all_eofr"): "3_request",
         ("3_request", "request_sent_reuse"): "6_dispatch",
+        # RESUME: request only the blocks missing from the local sidecar
+        ("3_request", "resume_sent"): "6_dispatch",
         ("3_request", "session_close"): "12_end",
     }
     for s in list(states - {"12_end", "err"}):
@@ -172,6 +177,9 @@ def server_upload_fsm() -> Machine:
         ("7_await_channels", "more_channels"): "1_accept",
         ("7_await_channels", "all_channels"): "9_open_file",
         ("9_open_file", "opened"): "10_dispatch",
+        # RESUME (interrupted upload): the file re-opens with its verified
+        # blocks intact; only the missing/corrupt blocks arrive
+        ("9_open_file", "resume"): "10_dispatch",
         ("10_dispatch", "read_ready"): "11_recv_block",
         ("10_dispatch", "flush"): "13_flush",  # backpressure / idle drain
         ("11_recv_block", "block"): "12_buffer",
@@ -217,6 +225,8 @@ def client_upload_fsm() -> Machine:
         # return to the request state; the open channels carry the next file
         ("10_await_acks", "acked_reusable"): "3_request",
         ("3_request", "request_sent_reuse"): "6_dispatch",
+        # RESUME: re-send only the blocks the server's sidecar is missing
+        ("3_request", "resume_sent"): "6_dispatch",
         ("3_request", "session_close"): "12_end",
     }
     for s in list(states - {"12_end", "err"}):

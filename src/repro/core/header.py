@@ -28,7 +28,16 @@ class ChannelEvent(enum.IntEnum):
     CONM = 6  # continue/maintain last channel event state
     ZxDFS = 7  # compressed (zero-copy) channel negotiation
     EXCEPTION = 8  # exception header (error propagation)
+    RESUME = 9  # resume an interrupted transfer: only missing blocks move
 
+
+# per-frame flag bits (byte 3 of the header). FLAG_BLOCK_CRC marks a data
+# frame whose payload is followed by a 4-byte little-endian CRC32 trailer;
+# frames self-describe, so receivers verify whenever the bit is set.
+FLAG_BLOCK_CRC = 0x01
+
+CRC_TRAILER = struct.Struct("<I")
+TRAILER_SIZE = CRC_TRAILER.size
 
 # magic, version, event, flags, session(16s), channel, offset, length, crc
 _FMT = struct.Struct("<IHBB16sIQQI")
@@ -127,6 +136,10 @@ class Negotiation:
     # hill-climb actual depth below it. 1 (or an absent tail on the
     # wire) = the per-frame legacy datapath.
     batch_frames: int = 1
+    # negotiated end-to-end integrity: every data frame carries a CRC32
+    # trailer (FLAG_BLOCK_CRC) and the put/get completes with a file-level
+    # manifest check. False (or an absent tail) = the unchecked datapath.
+    integrity: bool = False
 
     def pack(self) -> bytes:
         rn = self.remote_name.encode()
@@ -141,7 +154,8 @@ class Negotiation:
                 + struct.pack("<H", len(self.credentials)) + self.credentials
                 + struct.pack("<II?", self.so_sndbuf, self.so_rcvbuf,
                               self.so_nodelay)
-                + struct.pack("<H", self.batch_frames))
+                + struct.pack("<H", self.batch_frames)
+                + struct.pack("<B", 1 if self.integrity else 0))
 
     @classmethod
     def unpack(cls, buf) -> "Negotiation":
@@ -174,8 +188,10 @@ class Negotiation:
         if len(buf) >= p + 11:
             (batch,) = struct.unpack_from("<H", buf, p + 9)
             batch = max(1, batch)
+        # integrity tail optional: pre-integrity blobs mean no trailers
+        integrity = len(buf) >= p + 12 and bool(buf[p + 11])
         return cls(session, n, bs, win, rn, ln, ver, comp, fsize, creds,
-                   sndbuf, rcvbuf, nodelay, batch)
+                   sndbuf, rcvbuf, nodelay, batch, integrity)
 
 
 def new_session_id() -> bytes:

@@ -10,7 +10,10 @@ from __future__ import annotations
 
 import selectors
 import socket
+import time
 from typing import Callable, Dict, Optional
+
+from repro.core.faults import DeadlineExceeded
 
 
 class PIOD:
@@ -35,12 +38,26 @@ class PIOD:
     def active(self) -> int:
         return self._n
 
-    def run(self, until: Callable[[], bool], timeout: float = 0.05) -> None:
-        """Dispatch readiness events until ``until()`` is true."""
+    def run(self, until: Callable[[], bool], timeout: float = 0.05,
+            stall_timeout: Optional[float] = None) -> None:
+        """Dispatch readiness events until ``until()`` is true.
+
+        ``stall_timeout`` bounds how long the loop tolerates ZERO
+        readiness events across all channels: a peer that stops moving
+        bytes surfaces as a typed ``TimeoutError`` (DeadlineExceeded)
+        instead of hanging the dispatcher forever.
+        """
+        last_progress = time.monotonic()
         while not until():
             events = self.sel.select(timeout)
             for key, mask in events:
                 key.data(key.fileobj, mask)
+            if events:
+                last_progress = time.monotonic()
+            elif (stall_timeout is not None
+                    and time.monotonic() - last_progress > stall_timeout):
+                raise DeadlineExceeded(
+                    f"no channel readiness for {stall_timeout:.1f}s")
             if self.idle_callback is not None:
                 self.idle_callback()
 

@@ -1,0 +1,111 @@
+"""Interrupted-transfer resume sidecars (the RESUME flow's durable state).
+
+A sidecar is a small JSON file next to the data file
+(``<path>.xdfs-resume``) recording which blocks of the file are already
+present AND verified::
+
+    {"size": 1048576, "block_size": 65536,
+     "blocks": {"0": [65536, 3735928559], ...}}   # offset -> [length, crc]
+
+Writers: the server saves one whenever an integrity put dies mid-stream
+(and autosaves every N verified blocks, so a hard crash also leaves one);
+the client saves one when an integrity get dies or fails verification.
+Readers: the RESUME handshake (``core/session.py`` / ``core/api.py``)
+loads it to compute the missing/corrupt block set, so only those blocks
+cross the wire again.
+
+Writes are atomic (temp file + ``os.replace``) and loads are paranoid: a
+missing, corrupt, or geometry-mismatched sidecar simply means "no resume
+state" — the transfer restarts from byte 0, never from bad state.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Callable, Optional, Tuple
+
+from repro.core.integrity import CrcManifest
+
+SIDECAR_SUFFIX = ".xdfs-resume"
+
+# floor between two autosaves of the same transfer: each autosave dumps
+# the WHOLE growing manifest, so a pure per-N-blocks cadence costs
+# O(blocks^2) over a long transfer; crash durability only needs a
+# "recent" sidecar (the exception paths save the final state anyway)
+AUTOSAVE_MIN_INTERVAL = 0.25
+
+
+def throttled_autosave(sidecar: "ResumeSidecar", size: int, block_size: int,
+                       min_interval: float = AUTOSAVE_MIN_INTERVAL,
+                       ) -> Callable[[CrcManifest], None]:
+    """The ``CrcManifest.autosave`` hook both transfer directions install:
+    saves ``sidecar`` at most once per ``min_interval`` seconds."""
+    last = [float("-inf")]
+
+    def save(manifest: CrcManifest) -> None:
+        now = time.monotonic()
+        if now - last[0] >= min_interval:
+            last[0] = now
+            sidecar.save(size, block_size, manifest)
+
+    return save
+
+
+class ResumeSidecar:
+    """Atomic load/save of one file's verified-block manifest."""
+
+    __slots__ = ("path",)
+
+    def __init__(self, data_path: str):
+        self.path = str(data_path) + SIDECAR_SUFFIX
+
+    def exists(self) -> bool:
+        return os.path.exists(self.path)
+
+    def save(self, size: int, block_size: int, manifest: CrcManifest) -> None:
+        doc = {
+            "size": int(size),
+            "block_size": int(block_size),
+            "blocks": {str(off): [length, crc]
+                       for off, (length, crc) in manifest.blocks.items()},
+        }
+        tmp = f"{self.path}.tmp.{os.getpid()}"
+        with open(tmp, "w") as f:
+            json.dump(doc, f)
+        os.replace(tmp, self.path)
+
+    def load_any(self) -> Optional[Tuple[int, int, CrcManifest]]:
+        """``(size, block_size, manifest)`` from disk, or None if the
+        sidecar is missing or unusable in any way."""
+        try:
+            with open(self.path) as f:
+                doc = json.load(f)
+            size = int(doc["size"])
+            block_size = int(doc["block_size"])
+            if size < 0 or block_size <= 0:
+                return None
+            manifest = CrcManifest()
+            for off, (length, crc) in doc["blocks"].items():
+                manifest.blocks[int(off)] = (int(length), int(crc) & 0xFFFFFFFF)
+        except (OSError, ValueError, KeyError, TypeError):
+            return None
+        return size, block_size, manifest
+
+    def load(self, size: int, block_size: int) -> Optional[CrcManifest]:
+        """The manifest, but only if the recorded geometry matches the
+        transfer being resumed — otherwise the state is for some OTHER
+        version of the file and resuming from it would corrupt it."""
+        got = self.load_any()
+        if got is None:
+            return None
+        got_size, got_block, manifest = got
+        if got_size != size or got_block != block_size:
+            return None
+        return manifest
+
+    def clear(self) -> None:
+        try:
+            os.unlink(self.path)
+        except FileNotFoundError:
+            pass

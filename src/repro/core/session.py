@@ -51,6 +51,8 @@ from repro.core.header import (
     Negotiation,
     ProtocolError,
 )
+from repro.core.integrity import CrcManifest, IntegrityError
+from repro.core.resume import ResumeSidecar, throttled_autosave
 
 CTRL_CHANNEL = 0
 DEFAULT_BLOCK = 1 << 20
@@ -61,6 +63,12 @@ MAX_BATCH_FRAMES = 64
 
 class SessionError(ProtocolError):
     """A control-level session failure (bad request, remote exception)."""
+
+
+class IntegrityFailure(SessionError):
+    """The peer reported an end-to-end verification failure (manifest hole
+    or whole-file CRC mismatch). The session itself survives — the caller
+    can RESUME the same transfer to re-fetch the bad blocks."""
 
 
 @dataclass(frozen=True)
@@ -120,7 +128,10 @@ def recv_ctrl(sock: socket.socket) -> Tuple[ChannelHeader, dict]:
     body = str(recv_exact(sock, hdr.length), "utf-8") if hdr.length else "{}"
     payload = json.loads(body)
     if hdr.event == ChannelEvent.EXCEPTION:
-        raise SessionError(payload.get("error", "remote exception"))
+        msg = payload.get("error", "remote exception")
+        if payload.get("kind") == "integrity":
+            raise IntegrityFailure(msg)
+        raise SessionError(msg)
     return hdr, payload
 
 
@@ -181,6 +192,7 @@ class SessionStats:
     splice_bytes: int = 0
     recv_calls: int = 0
     splice_autodisables: int = 0
+    crc_mismatches: int = 0
 
     def absorb(self, st: RecvStats) -> None:
         self.bytes += st.bytes
@@ -190,6 +202,7 @@ class SessionStats:
         self.splice_bytes += st.splice_bytes
         self.recv_calls += st.recv_calls
         self.splice_autodisables += st.splice_autodisables
+        self.crc_mismatches += st.crc_mismatches
 
 
 class ServerSession:
@@ -197,12 +210,18 @@ class ServerSession:
 
     def __init__(self, socks, neg: Negotiation, engine: Engine,
                  root: Optional[str], pool_slots: int = 32,
-                 splice: bool = False):
+                 splice: bool = False, io_timeout: Optional[float] = None):
         self.socks = list(socks)
         self.neg = neg
         self.engine = engine
         self.root = root
-        self.splice = splice
+        self.integrity = bool(neg.integrity)
+        # splice moves payload bytes kernel-side where no CPU can see them,
+        # so it cannot verify trailers — integrity sessions stay in userspace
+        self.splice = splice and not self.integrity
+        # per-operation stall bound while a transfer is in flight (idle
+        # control waits between files stay unbounded)
+        self.io_timeout = io_timeout
         if engine.pool_livelock_guard and pool_slots <= neg.n_channels:
             # every pool slot could be pinned by a partially-filled block of
             # some channel, livelocking the receiver's backpressure flush
@@ -245,15 +264,35 @@ class ServerSession:
                     self._handle_put(ctrl, meta)
                 elif hdr.event == ChannelEvent.xFTSMD:
                     self._handle_get(ctrl, meta)
+                elif hdr.event == ChannelEvent.RESUME:
+                    self._handle_resume(ctrl, meta)
                 else:
                     send_ctrl(ctrl, ChannelEvent.EXCEPTION, self.neg.session,
                               {"error": f"unexpected control event {hdr.event!r}"})
             except SessionError as e:
                 send_ctrl(ctrl, ChannelEvent.EXCEPTION, self.neg.session,
                           {"error": str(e)})
+            finally:
+                if self.io_timeout is not None:
+                    # transfer deadlines must not bound the idle wait for
+                    # the session's NEXT control frame
+                    for s in self.socks:
+                        s.settimeout(None)
         return self.stats
 
-    def _handle_put(self, ctrl, meta: dict) -> None:
+    def _handle_resume(self, ctrl, meta: dict) -> None:
+        if not self.integrity:
+            raise SessionError(
+                "RESUME requires an integrity session (negotiate integrity=True)")
+        mode = meta.get("mode")
+        if mode == "put":
+            self._handle_put(ctrl, meta, resume=True)
+        elif mode == "get":
+            self._handle_get(ctrl, meta, resume=True)
+        else:
+            raise SessionError(f"unknown resume mode {mode!r}")
+
+    def _handle_put(self, ctrl, meta: dict, resume: bool = False) -> None:
         size = int(meta["size"])
         block_size = int(meta.get("block_size", self.neg.block_size))
         try:
@@ -261,9 +300,27 @@ class ServerSession:
             sink = Sink(path, size)
         except OSError as e:
             raise SessionError(f"cannot open {meta.get('remote')!r}: {e}")
-        send_ctrl(ctrl, ChannelEvent.CONM, self.neg.session, {"ok": True})
+        sidecar = (ResumeSidecar(path)
+                   if self.integrity and path is not None else None)
+        crc_acc: Optional[CrcManifest] = None
+        if self.integrity:
+            crc_acc = CrcManifest(
+                autosave=throttled_autosave(sidecar, size, block_size)
+                if sidecar is not None else None)
+        reply = {"ok": True}
+        if resume:
+            prev = sidecar.load(size, block_size) if sidecar is not None else None
+            if prev is not None:
+                crc_acc.merge(prev)
+            # the client diffs these against its LOCAL block CRCs and only
+            # re-sends what the server is missing (or holds a stale copy of)
+            reply["have"] = {str(off): crc
+                            for off, (_ln, crc) in crc_acc.blocks.items()}
+        elif sidecar is not None:
+            sidecar.clear()  # a fresh put invalidates old resume state
+        send_ctrl(ctrl, ChannelEvent.CONM, self.neg.session, reply)
         if self.fsm is not None:
-            self.fsm.step("opened")
+            self.fsm.step("resume" if resume else "opened")
         if self.engine.uses_pool and self.batch_frames <= 1 and (
             self._pool is None or self._pool.block_size != block_size
         ):
@@ -283,13 +340,51 @@ class ServerSession:
                 fsm=self.fsm, conformance=self.fsm is not None, reusable=True,
                 pool=self._pool, splice=self.splice,
                 batch_frames=self.batch_frames, slabs=self._slabs,
+                crc_acc=crc_acc, io_timeout=self.io_timeout,
             )
+        except BaseException:
+            # the stream died mid-file: persist what WAS verified so the
+            # client can RESUME over a fresh connection
+            if sidecar is not None and crc_acc is not None and len(crc_acc):
+                sidecar.save(size, block_size, crc_acc)
+            raise
         finally:
             sink.close()
         self.stats.files += 1
         self.stats.absorb(st)
+        if self.integrity:
+            self._verify_put(ctrl, crc_acc, sidecar, size, block_size)
 
-    def _handle_get(self, ctrl, meta: dict) -> None:
+    def _verify_put(self, ctrl, crc_acc: CrcManifest,
+                    sidecar: Optional[ResumeSidecar],
+                    size: int, block_size: int) -> None:
+        """End-of-put manifest exchange: the client reports its whole-file
+        CRC; the server folds its verified-block manifest and answers ok or
+        a typed integrity EXCEPTION (keeping the sidecar either way — on
+        success it makes an identical re-put a no-op, on failure it is the
+        RESUME state)."""
+        if self.io_timeout is not None:
+            ctrl.settimeout(self.io_timeout)
+        _hdr, fin = recv_ctrl(ctrl)
+        if sidecar is not None:
+            sidecar.save(size, block_size, crc_acc)
+        try:
+            mine = crc_acc.file_crc(size)
+        except IntegrityError as e:
+            send_ctrl(ctrl, ChannelEvent.EXCEPTION, self.neg.session,
+                      {"error": str(e), "kind": "integrity"})
+            return
+        theirs = fin.get("file_crc")
+        if theirs is not None and int(theirs) != mine:
+            send_ctrl(ctrl, ChannelEvent.EXCEPTION, self.neg.session,
+                      {"error": f"file CRC mismatch: client 0x{int(theirs):08x} "
+                                f"!= server 0x{mine:08x}",
+                       "kind": "integrity"})
+            return
+        send_ctrl(ctrl, ChannelEvent.CONM, self.neg.session,
+                  {"ok": True, "file_crc": mine})
+
+    def _handle_get(self, ctrl, meta: dict, resume: bool = False) -> None:
         block_size = int(meta.get("block_size", self.neg.block_size))
         remote = meta.get("remote")
         if remote is None:  # mem-to-mem mode: serve zeros
@@ -302,12 +397,22 @@ class ServerSession:
                 source = Source(path, size, block_size)
             except OSError as e:
                 raise SessionError(f"cannot read {remote!r}: {e}")
+        blocks = None
+        payload = size
+        if resume:
+            # the client's sidecar names the block offsets it still wants
+            want = meta.get("want") or []
+            blocks = sorted({int(off) // block_size for off in want
+                             if 0 <= int(off) < size})
+            payload = sum(source.block_len(b) for b in blocks)
         send_ctrl(ctrl, ChannelEvent.CONM, self.neg.session,
                   {"ok": True, "size": size})
         try:
             self.engine.send(self.socks, source, self.neg.session,
-                             reusable=True, batch_frames=self.batch_frames)
+                             reusable=True, batch_frames=self.batch_frames,
+                             integrity=self.integrity, blocks=blocks,
+                             io_timeout=self.io_timeout)
         finally:
             source.close()
         self.stats.files += 1
-        self.stats.bytes += size
+        self.stats.bytes += payload

@@ -89,3 +89,22 @@ def test_batched_syscall_invariant_passes_committed_baseline():
     from benchmarks.check_json import check_batched_invariant
 
     assert check_batched_invariant(_baseline_doc()) == []
+
+
+def test_integrity_invariant_fails_on_collapsed_crc_path(tmp_path):
+    """A crc_on row that keeps less than 1 - INTEGRITY_MAX_PENALTY of its
+    crc_off twin's throughput fails with NO baseline — an integrity
+    datapath that collapses (unmemoized combine, lost native CRC) is a
+    bug regardless of absolute host speed."""
+    doc = copy.deepcopy(_baseline_doc())
+    row = next(r for r in doc["sections"]["integrity"]
+               if r["path"] == "crc_on")
+    row["gain_vs_off"] = 0.05  # the pre-fix 20x collapse
+    errors = check(_write(tmp_path, doc))
+    assert any("integrity" in e and "penalty" in e for e in errors), errors
+
+
+def test_integrity_invariant_passes_committed_baseline():
+    from benchmarks.check_json import check_integrity_invariant
+
+    assert check_integrity_invariant(_baseline_doc()) == []

@@ -78,6 +78,43 @@ def test_autotuner_constants_documented():
     )
 
 
+def test_integrity_trailer_documented():
+    from repro.core.header import FLAG_BLOCK_CRC, TRAILER_SIZE
+
+    text = _arch_text()
+    assert "### Integrity trailer" in text
+    assert f"`FLAG_BLOCK_CRC` (" in text or "`FLAG_BLOCK_CRC`" in text
+    assert f"`{FLAG_BLOCK_CRC:#04x}`" in text, (
+        "documented FLAG_BLOCK_CRC bit drifted from header.py"
+    )
+    assert f"**{TRAILER_SIZE}-byte `<I` CRC32 trailer**" in text, (
+        "documented trailer format drifted from header.CRC_TRAILER"
+    )
+    assert re.search(r"\|\s*integrity tail\s*\|\s*`<B`\s*\|\s*integrity",
+                     text), "integrity negotiation tail row missing"
+
+
+def test_resume_flow_documented():
+    from repro.core.resume import SIDECAR_SUFFIX
+
+    text = _arch_text()
+    assert "## RESUME flow" in text
+    assert f"`<path>{SIDECAR_SUFFIX}`" in text, (
+        "documented sidecar suffix drifted from resume.SIDECAR_SUFFIX"
+    )
+    # both resume request shapes are documented
+    assert '{"mode": "put"' in text
+    assert '{"mode": "get"' in text
+
+
+def test_failure_policy_documented():
+    text = _arch_text()
+    assert "## Failure policy" in text
+    for name in ("Deadline", "RetryPolicy", "DeadlineExceeded",
+                 "connect_timeout", "io_timeout"):
+        assert f"`{name}`" in text, f"Failure policy section missing {name}"
+
+
 def test_channel_event_table_matches_enum():
     text = _arch_text()
     rows = re.findall(r"^\|\s*`(\w+)`\s*\|\s*(\d+)\s*\|", text, re.M)

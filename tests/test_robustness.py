@@ -1,0 +1,585 @@
+"""Robustness: end-to-end integrity (CRC trailers + manifest verify),
+interrupted-transfer RESUME, deadline/retry policy, and the
+fault-injection matrix (kill / corrupt / stall, single-host and cluster).
+
+The e2e matrix drives real sockets through ``FaultyProxy``, which
+corrupts, severs, or stalls the byte stream at exact offsets — so every
+recovery path here is exercised against an actual mid-flight failure,
+not a mock.
+"""
+import os
+import tempfile
+import time
+import zlib
+from pathlib import Path
+
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.api import XdfsClient, XdfsServer
+from repro.core.faults import (
+    Deadline,
+    DeadlineExceeded,
+    Fault,
+    FaultyProxy,
+    RetriesExhausted,
+    RetryPolicy,
+)
+from repro.core.header import (
+    FLAG_BLOCK_CRC,
+    HEADER_SIZE,
+    TRAILER_SIZE,
+    ChannelEvent,
+    ChannelHeader,
+    Negotiation,
+    new_session_id,
+)
+from repro.core.integrity import (
+    CrcManifest,
+    IntegrityError,
+    block_crc,
+    crc32_combine,
+)
+from repro.core.resume import SIDECAR_SUFFIX, ResumeSidecar
+from repro.core.session import IntegrityFailure
+
+BS = 32 << 10  # block size for the e2e matrix: small enough for many
+#                blocks per file, big enough to stay fast
+
+
+class FakeClock:
+    def __init__(self, t=0.0):
+        self.t = t
+
+    def __call__(self):
+        return self.t
+
+    def advance(self, dt):
+        self.t += dt
+
+
+def _await(pred, timeout=30.0, msg="condition"):
+    deadline = time.monotonic() + timeout
+    while time.monotonic() < deadline:
+        if pred():
+            return
+        time.sleep(0.02)
+    raise AssertionError(f"timed out waiting for {msg}")
+
+
+# ---------------------------------------------------------------------------
+# crc32_combine + CrcManifest (pure units)
+# ---------------------------------------------------------------------------
+
+
+@given(a=st.binary(min_size=0, max_size=4096),
+       b=st.binary(min_size=0, max_size=4096))
+@settings(max_examples=50, deadline=None)
+def test_crc32_combine_matches_zlib(a, b):
+    assert crc32_combine(zlib.crc32(a) & 0xFFFFFFFF,
+                         zlib.crc32(b) & 0xFFFFFFFF,
+                         len(b)) == (zlib.crc32(a + b) & 0xFFFFFFFF)
+
+
+def test_manifest_fold_and_holes():
+    data = os.urandom(5 * 1000 + 17)
+    m = CrcManifest()
+    # add out of order; the fold must still match a straight crc32
+    offs = list(range(0, len(data), 1000))
+    for off in reversed(offs):
+        chunk = data[off:off + 1000]
+        m.add(off, len(chunk), block_crc(chunk))
+    assert m.file_crc(len(data)) == (zlib.crc32(data) & 0xFFFFFFFF)
+    assert m.missing(len(data), 1000) == []
+    hole = CrcManifest()
+    hole.add(0, 1000, 1)
+    hole.add(2000, 1000, 2)
+    assert hole.missing(5017, 1000) == [1000, 3000, 4000, 5000]
+    with pytest.raises(IntegrityError):
+        hole.file_crc(5017)
+
+
+def test_manifest_merge_and_autosave_cadence():
+    saves = []
+    m = CrcManifest(autosave=lambda man: saves.append(len(man)),
+                    autosave_every=4)
+    for i in range(9):
+        m.add(i * 10, 10, i)
+    assert saves == [4, 8]  # every 4 verified blocks, not per add
+    other = CrcManifest()
+    other.add(0, 10, 999)   # merge must NOT overwrite verified entries
+    other.add(90, 10, 9)
+    m.merge(other)
+    assert len(m) == 10
+    assert m.blocks[0] == (10, 0)  # the verified entry won
+    assert 90 in m
+
+
+def test_resume_sidecar_roundtrip_and_geometry(tmp_path):
+    p = tmp_path / "f.bin"
+    sc = ResumeSidecar(str(p))
+    m = CrcManifest()
+    m.add(0, 100, 7)
+    m.add(100, 100, 8)
+    sc.save(200, 100, m)
+    assert Path(str(p) + SIDECAR_SUFFIX).exists()
+    size, bs, loaded = sc.load_any()
+    assert (size, bs) == (200, 100) and 100 in loaded
+    assert sc.load(200, 100) is not None
+    assert sc.load(200, 64) is None      # geometry mismatch -> unusable
+    assert sc.load(999, 100) is None
+    sc.clear()
+    assert sc.load_any() is None
+
+
+# ---------------------------------------------------------------------------
+# wire format: flags + integrity negotiation tail
+# ---------------------------------------------------------------------------
+
+
+def test_header_flag_roundtrip():
+    sid = new_session_id()
+    h = ChannelHeader(ChannelEvent.xFTSMU, sid, 3, 1 << 20, 4096,
+                      flags=FLAG_BLOCK_CRC)
+    h2 = ChannelHeader.unpack(h.pack())
+    assert h2.flags == FLAG_BLOCK_CRC
+    assert len(h.pack()) == HEADER_SIZE
+    assert TRAILER_SIZE == 4
+
+
+def test_negotiation_integrity_tail():
+    sid = new_session_id()
+    neg = Negotiation(sid, 2, 1 << 16, 1 << 20, "", "", file_size=0,
+                      integrity=True)
+    assert Negotiation.unpack(neg.pack()).integrity is True
+    off = Negotiation(sid, 2, 1 << 16, 1 << 20, "", "", file_size=0)
+    blob = off.pack()
+    assert Negotiation.unpack(blob).integrity is False
+    # pre-integrity peer: blob truncated before the tail still parses
+    assert Negotiation.unpack(blob[:-1]).integrity is False
+
+
+# ---------------------------------------------------------------------------
+# Deadline / RetryPolicy (fake clock, no sleeping)
+# ---------------------------------------------------------------------------
+
+
+def test_deadline_budget_and_expiry():
+    clk = FakeClock()
+    d = Deadline(5.0, clock=clk)
+    assert d.budget(10.0) == 5.0 and d.budget(2.0) == 2.0
+    clk.advance(4.9999)
+    assert d.budget(10.0) >= 0.001  # never settimeout(0) == non-blocking
+    clk.advance(1.0)
+    assert d.expired()
+    with pytest.raises(DeadlineExceeded):
+        d.check("op")
+    assert Deadline(None, clock=clk).budget(3.0) == 3.0
+
+
+def test_retry_policy_backoff_shape():
+    import random
+
+    p = RetryPolicy(attempts=5, base_delay=0.1, multiplier=2.0,
+                    max_delay=0.3, jitter=0.0, rng=random.Random(0))
+    assert p.delays() == [0.1, 0.2, 0.3, 0.3]  # capped, 4 = attempts-1
+    with pytest.raises(ValueError):
+        RetryPolicy(attempts=0)
+    with pytest.raises(ValueError):
+        RetryPolicy(jitter=1.5)
+
+
+def test_retry_policy_run_retries_then_exhausts():
+    slept = []
+    p = RetryPolicy(attempts=3, base_delay=0.01, jitter=0.0,
+                    sleep=slept.append)
+    calls = []
+
+    def flaky():
+        calls.append(1)
+        if len(calls) < 3:
+            raise ConnectionResetError("boom")
+        return "ok"
+
+    assert p.run(flaky, what="flaky") == "ok"
+    assert len(calls) == 3 and len(slept) == 2
+
+    def always():
+        raise TimeoutError("stall")
+
+    with pytest.raises(RetriesExhausted):
+        p.run(always, what="always")
+
+
+def test_retry_policy_never_retries_deadline_or_app_errors():
+    p = RetryPolicy(attempts=3, base_delay=0.01, sleep=lambda _: None)
+    calls = []
+
+    def dead():
+        calls.append(1)
+        raise DeadlineExceeded("gone")
+
+    with pytest.raises(DeadlineExceeded):
+        p.run(dead)
+    assert len(calls) == 1  # the budget is gone; retrying is lying
+
+    def app():
+        calls.append(1)
+        raise ValueError("not a transport fault")
+
+    calls.clear()
+    with pytest.raises(ValueError):
+        p.run(app)
+    assert len(calls) == 1
+
+
+# ---------------------------------------------------------------------------
+# FaultyProxy (the injector itself)
+# ---------------------------------------------------------------------------
+
+
+def _echo_server():
+    import socket
+    import threading
+
+    lst = socket.socket()
+    lst.bind(("127.0.0.1", 0))
+    lst.listen(8)
+
+    def serve():
+        while True:
+            try:
+                c, _ = lst.accept()
+            except OSError:
+                return
+            def pump(conn=c):
+                try:
+                    while True:
+                        b = conn.recv(65536)
+                        if not b:
+                            return
+                        conn.sendall(b)
+                except OSError:
+                    pass
+            threading.Thread(target=pump, daemon=True).start()
+
+    threading.Thread(target=serve, daemon=True).start()
+    return lst
+
+
+def test_faulty_proxy_corrupts_exact_byte():
+    import socket
+
+    lst = _echo_server()
+    try:
+        with FaultyProxy(lst.getsockname(),
+                         c2s=Fault(corrupt_at=5, conn=0)) as px:
+            s = socket.create_connection(px.address)
+            s.sendall(b"0123456789")
+            got = b""
+            while len(got) < 10:
+                got += s.recv(10 - len(got))
+            assert got[5] == (b"5"[0] ^ 0xFF) and got[:5] == b"01234"
+            s.close()
+    finally:
+        lst.close()
+
+
+def test_faulty_proxy_drop_severs_all_connections():
+    import socket
+
+    lst = _echo_server()
+    try:
+        with FaultyProxy(lst.getsockname(),
+                         c2s=Fault(drop_after=4, conn=1)) as px:
+            bystander = socket.create_connection(px.address)
+            victim = socket.create_connection(px.address)
+            bystander.sendall(b"hi")
+            assert bystander.recv(2) == b"hi"
+            victim.sendall(b"123456")  # crosses drop_after=4 -> kill_all
+            for s in (victim, bystander):
+                s.settimeout(5.0)
+                with pytest.raises((ConnectionError, OSError)) as ei:
+                    while True:
+                        if s.recv(4096) == b"":
+                            raise ConnectionResetError("peer gone")
+                assert ei.value is not None
+                s.close()
+    finally:
+        lst.close()
+
+
+# ---------------------------------------------------------------------------
+# integrity e2e: CRC-clean roundtrips on every engine, batched and not
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("engine,batch", [
+    ("mtedp", 1), ("mtedp", 4), ("mt", 1), ("mt", 4), ("mp", 1), ("mp", 4),
+])
+def test_integrity_roundtrip_all_engines(engine, batch, tmp_path):
+    data = os.urandom(6 * BS + 123)
+    src = tmp_path / "src.bin"
+    src.write_bytes(data)
+    with XdfsServer(engine=engine, root=str(tmp_path / "srv")) as srv:
+        with XdfsClient.connect(srv.address, n_channels=2, engine=engine,
+                                block_size=BS, batch_frames=batch,
+                                integrity=True) as cli:
+            assert cli.put(str(src), "up.bin").result().bytes == len(data)
+            cli.get("up.bin", str(tmp_path / "back.bin")).result()
+        srv.wait_closed_sessions(1, timeout=60)
+        assert not srv.errors, srv.errors
+    assert (tmp_path / "back.bin").read_bytes() == data
+    assert srv.stats["crc_mismatches"] == 0
+
+
+# ---------------------------------------------------------------------------
+# corruption: detected on the wire, healed by an in-session resume
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.fault
+def test_corrupt_block_detected_and_resumed_same_session(tmp_path):
+    data = os.urandom(6 * BS + 123)
+    src = tmp_path / "src.bin"
+    src.write_bytes(data)
+    # conn 1 == data channel 1; its c2s stream is hello(48) then block 1's
+    # frame — corrupt byte 7 of block 1's payload, surgically
+    fault = Fault(conn=1, corrupt_at=48 + HEADER_SIZE + 7)
+    with XdfsServer(engine="mtedp", root=str(tmp_path / "srv")) as srv:
+        with FaultyProxy(srv.address, c2s=fault) as px:
+            with XdfsClient.connect(px.address, n_channels=2,
+                                    block_size=BS, integrity=True) as cli:
+                with pytest.raises(IntegrityFailure):
+                    cli.put(str(src), "up.bin").result()
+                # the session SURVIVED the integrity failure: resume on it
+                r = cli.put(str(src), "up.bin", resume=True).result()
+                assert r.bytes == BS  # exactly the one corrupted block
+            srv.wait_closed_sessions(1, timeout=60)
+            assert not srv.errors, srv.errors
+    assert (tmp_path / "srv" / "up.bin").read_bytes() == data
+    assert srv.stats["crc_mismatches"] == 1
+
+
+# ---------------------------------------------------------------------------
+# kill mid-flight: resume over a FRESH connection moves only the delta
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.fault
+def test_kill_mid_put_then_resume_fresh_connection(tmp_path):
+    # 96 blocks through a 32-slot pool: by the time channel 1 has pushed
+    # 40 frames, the receiver has flushed (and manifested) at least one
+    # pool's worth of verified blocks to disk — the resume delta is real
+    data = os.urandom(96 * BS)
+    src = tmp_path / "src.bin"
+    src.write_bytes(data)
+    sidecar = tmp_path / "srv" / ("up.bin" + SIDECAR_SUFFIX)
+    fault = Fault(conn=1, drop_after=48 + 40 * (HEADER_SIZE + BS
+                                                + TRAILER_SIZE) + 99)
+    with XdfsServer(engine="mtedp", root=str(tmp_path / "srv")) as srv:
+        with FaultyProxy(srv.address, c2s=fault) as px:
+            cli = XdfsClient.connect(px.address, n_channels=2,
+                                     block_size=BS, integrity=True)
+            try:
+                with pytest.raises((OSError, RuntimeError)):
+                    cli.put(str(src), "up.bin").result()
+            finally:
+                cli.close()
+        # the dying server session persisted its verified-block manifest
+        _await(sidecar.exists, msg="server resume sidecar")
+        with XdfsClient.connect(srv.address, n_channels=2, block_size=BS,
+                                integrity=True) as cli:
+            r = cli.put(str(src), "up.bin", resume=True).result()
+            assert 0 < r.bytes < len(data)  # only missing blocks re-sent
+            # idempotent re-resume: the manifest is complete, zero data moves
+            assert cli.put(str(src), "up.bin", resume=True).result().bytes == 0
+    assert (tmp_path / "srv" / "up.bin").read_bytes() == data
+
+
+@pytest.mark.fault
+def test_kill_mid_get_then_resume_fresh_connection(tmp_path):
+    data = os.urandom(96 * BS)
+    dst = tmp_path / "back.bin"
+    sidecar = Path(str(dst) + SIDECAR_SUFFIX)
+    (tmp_path / "srv").mkdir()
+    with XdfsServer(engine="mtedp", root=str(tmp_path / "srv")) as srv:
+        (tmp_path / "srv" / "f.bin").write_bytes(data)
+        fault = Fault(conn=1, drop_after=40 * (HEADER_SIZE + BS
+                                               + TRAILER_SIZE) + 99)
+        with FaultyProxy(srv.address, s2c=fault) as px:
+            cli = XdfsClient.connect(px.address, n_channels=2,
+                                     block_size=BS, integrity=True)
+            try:
+                with pytest.raises((OSError, RuntimeError)):
+                    cli.get("f.bin", str(dst)).result()
+            finally:
+                cli.close()
+        assert sidecar.exists()  # client persisted its own manifest
+        with XdfsClient.connect(srv.address, n_channels=2, block_size=BS,
+                                integrity=True) as cli:
+            r = cli.get("f.bin", str(dst), resume=True).result()
+            assert 0 < r.bytes < len(data)
+    assert dst.read_bytes() == data
+    assert not sidecar.exists()  # verified-complete download cleans up
+
+
+@pytest.mark.fault
+def test_stall_surfaces_as_typed_timeout(tmp_path):
+    data = os.urandom(8 * BS)
+    (tmp_path / "srv").mkdir()
+    with XdfsServer(engine="mtedp", root=str(tmp_path / "srv")) as srv:
+        (tmp_path / "srv" / "f.bin").write_bytes(data)
+        fault = Fault(conn=1, stall_after=HEADER_SIZE + BS + TRAILER_SIZE)
+        with FaultyProxy(srv.address, s2c=fault) as px:
+            cli = XdfsClient.connect(px.address, n_channels=2,
+                                     block_size=BS, integrity=True,
+                                     io_timeout=0.5)
+            try:
+                t0 = time.monotonic()
+                with pytest.raises(TimeoutError):
+                    cli.get("f.bin", str(tmp_path / "back.bin")).result()
+                assert time.monotonic() - t0 < 30.0  # typed, not a hang
+            finally:
+                cli.close()
+
+
+def test_connect_deadline_is_enforced(tmp_path):
+    with XdfsServer(engine="mtedp", root=str(tmp_path / "srv")) as srv:
+        with pytest.raises(DeadlineExceeded):
+            XdfsClient.connect(srv.address, n_channels=2,
+                               connect_deadline=0.0)
+
+
+# ---------------------------------------------------------------------------
+# cluster: node death mid-put -> bounded re-plan onto the survivors
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.fault
+def test_cluster_put_replans_around_dead_node(tmp_path):
+    from repro.cluster import ClusterClient, DataNode, MetaNode
+
+    # heartbeat_timeout huge: the detector still believes in the dead
+    # node, so the FIRST plan places blocks on it and the client's
+    # re-plan (with exclude) is what saves the put
+    meta = MetaNode(replication=1, heartbeat_timeout=300.0,
+                    tick_interval=60.0).start()
+    nodes = [DataNode(meta.address, str(tmp_path / f"n{i}"),
+                      node_id=f"n{i}", heartbeat_interval=60.0).start()
+             for i in range(2)]
+    cli = ClusterClient(meta.address, block_size=64 << 10,
+                        policy=RetryPolicy(attempts=3, base_delay=0.01,
+                                           jitter=0.0))
+    try:
+        nodes[1].kill()
+        data = os.urandom(8 * (64 << 10) + 17)
+        cli.put("f.bin", data=data)
+        assert cli.stats["replans"] >= 1
+        assert cli.get("f.bin") == data
+    finally:
+        cli.close()
+        for n in nodes:
+            n.stop()
+        meta.stop()
+
+
+# ---------------------------------------------------------------------------
+# property: random kill/corrupt points always converge to a clean file
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.fault
+@given(offset=st.integers(min_value=96, max_value=140_000),
+       kill=st.booleans())
+@settings(max_examples=5, deadline=None)
+def test_random_faults_always_resume_byte_identical(offset, kill):
+    workdir = Path(tempfile.mkdtemp(prefix="xdfs-fuzz-"))
+    data = os.urandom(8 * BS + 321)
+    src = workdir / "src.bin"
+    src.write_bytes(data)
+    fault = (Fault(drop_after=offset) if kill
+             else Fault(conn=1, corrupt_at=offset))
+    with XdfsServer(engine="mtedp", root=str(workdir / "srv")) as srv:
+        with FaultyProxy(srv.address, c2s=fault) as px:
+            cli = XdfsClient.connect(px.address, n_channels=2,
+                                     block_size=BS, integrity=True)
+            try:
+                cli.put(str(src), "f.bin").result()
+            except Exception:
+                pass  # any failure mode is fine; resume must heal it
+            finally:
+                try:
+                    cli.close()
+                except Exception:
+                    pass
+        # bounded resume loop over FRESH direct connections
+        for _ in range(5):
+            try:
+                with XdfsClient.connect(srv.address, n_channels=2,
+                                        block_size=BS,
+                                        integrity=True) as cli:
+                    cli.put(str(src), "f.bin", resume=True).result()
+                    # CRC-clean proof: a second resume moves zero bytes
+                    r = cli.put(str(src), "f.bin", resume=True).result()
+                    assert r.bytes == 0
+                break
+            except Exception:
+                continue
+        else:
+            raise AssertionError("resume never converged")
+        assert (workdir / "srv" / "f.bin").read_bytes() == data
+
+
+# ---------------------------------------------------------------------------
+# checkpoint: kill mid-save, resume the save instead of re-sending
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.fault
+def test_checkpoint_kill_mid_save_then_resume(tmp_path, monkeypatch):
+    np = pytest.importorskip("numpy")
+    from contextlib import contextmanager
+
+    from repro.checkpoint import xdfs_ckpt
+
+    monkeypatch.setattr(xdfs_ckpt, "BLOCK", 64 << 10)
+    tree = {"w": np.arange(256 * 1024, dtype=np.uint8),
+            "b": np.ones((64 * 1024,), dtype=np.uint8)}
+    ckdir = tmp_path / "ck"
+    real_session = xdfs_ckpt._session
+
+    @contextmanager
+    def faulty_session(root, integrity=False):
+        srv = XdfsServer(engine=xdfs_ckpt.ENGINE, root=str(root)).start()
+        px = FaultyProxy(srv.address, c2s=Fault(drop_after=96 << 10))
+        cli = XdfsClient.connect(px.address,
+                                 n_channels=xdfs_ckpt.N_CHANNELS,
+                                 engine=xdfs_ckpt.ENGINE,
+                                 block_size=xdfs_ckpt.BLOCK,
+                                 integrity=True)
+        try:
+            yield cli
+        finally:
+            try:
+                cli.close()
+            except Exception:
+                pass
+            px.close()
+            srv.stop()
+
+    monkeypatch.setattr(xdfs_ckpt, "_session", faulty_session)
+    with pytest.raises(Exception):
+        xdfs_ckpt.save(tree, str(ckdir), step=1, integrity=True)
+    tmp_step = ckdir / "step_00000001.tmp"
+    assert tmp_step.exists()  # torn save left the in-flight dir ...
+    assert list(tmp_step.glob("*" + SIDECAR_SUFFIX))  # ... with manifests
+    monkeypatch.setattr(xdfs_ckpt, "_session", real_session)
+    committed = xdfs_ckpt.save(tree, str(ckdir), step=1, resume=True)
+    assert not list(Path(committed).glob("*" + SIDECAR_SUFFIX))
+    like = {k: np.empty_like(v) for k, v in tree.items()}
+    restored, step = xdfs_ckpt.restore(str(ckdir), like)
+    assert step == 1
+    assert np.array_equal(restored["w"], tree["w"])
+    assert np.array_equal(restored["b"], tree["b"])
