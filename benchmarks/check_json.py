@@ -45,6 +45,7 @@ REQUIRED_SECTIONS = {
                       "writev_calls"},
     "cluster_stripe": {"mode", "path", "nodes", "mb_s", "gain_vs_single"},
     "integrity": {"mode", "path", "block_kb", "mb_s", "gain_vs_off"},
+    "control_plane": {"mode", "path", "ops_per_s"},
 }
 SCALAR = (int, float, str, bool)
 
@@ -61,6 +62,23 @@ SYSCALL_BATCH_FACTOR = 4
 # crc32_combine or a lost native-CRC path costs 10-20x, not 1.45x.
 INTEGRITY_MAX_PENALTY = 0.45
 
+# Ceiling on the WAL's commit-path cost: every control_plane
+# commit/fsync_on row must keep gain_vs_nofsync >= 1/DURABILITY_MAX_SLOWDOWN
+# of its fsync_off twin (same run, so host disk speed cancels out of the
+# comparison between the two arms). The fsync itself legitimately costs a
+# large constant factor — ~10x measured on this container's overlay fs
+# (benchmarks/control_plane.py; docs/BENCHMARKING.md has the budget) — so
+# the bound sits at 100x: wide enough for slower commit-path storage,
+# tight enough to catch the structural failure it exists for (per-commit
+# snapshot re-serialization or multi-fsync appends land 1000x+).
+DURABILITY_MAX_SLOWDOWN = 100
+
+# A failover row records wall clock from leader kill to a read served by
+# the promoted standby; with the benchmark's 0.5 s lease, anything past
+# this many seconds means promotion or client failover is structurally
+# broken, not slow (ops_per_s = 1/seconds, hence the 1/x floor).
+FAILOVER_MAX_SECONDS = 10.0
+
 # regression-gate config: identity key (matches a candidate row to its
 # baseline row) and the higher-is-better throughput metric per section
 SECTION_KEYS = {
@@ -71,6 +89,7 @@ SECTION_KEYS = {
     "host_transfer": ("engine", "channels", "block_kb"),
     "cluster_stripe": ("mode", "path", "nodes"),
     "integrity": ("mode", "path", "block_kb"),
+    "control_plane": ("mode", "path"),
 }
 SECTION_METRIC = {
     "session_reuse": "speedup",
@@ -80,6 +99,7 @@ SECTION_METRIC = {
     "host_transfer": "mb_s",
     "cluster_stripe": "mb_s",
     "integrity": "mb_s",
+    "control_plane": "ops_per_s",
 }
 # Default allowed fractional drop below the baseline before the gate
 # fails. The microbench sections are best-of-N on one process (tight);
@@ -99,6 +119,11 @@ SECTION_TOLERANCE = {
     # host_transfer; the tight check is the baseline-free ratio invariant
     # (check_integrity_invariant), not this cross-run throughput gate
     "integrity": 0.40,
+    # commit rate is fsync-latency dominated (container fs barriers swing
+    # run to run) and the failover row tracks a configured lease timeout;
+    # the tight checks are the baseline-free invariants
+    # (check_durability_invariant), not this cross-run gate
+    "control_plane": 0.60,
 }
 
 
@@ -203,6 +228,44 @@ def check_integrity_invariant(doc: dict) -> List[str]:
     return errors
 
 
+def check_durability_invariant(doc: dict) -> List[str]:
+    """The control_plane section's acceptance invariants, checked on
+    EVERY candidate (no baseline needed): the journal's fsync arm must
+    keep ``1/DURABILITY_MAX_SLOWDOWN`` of its no-fsync twin's commit
+    rate (both from the same run, so absolute disk speed cancels), and
+    a failover row must complete within ``FAILOVER_MAX_SECONDS``."""
+    errors: List[str] = []
+    rows = (doc.get("sections") or {}).get("control_plane") or []
+    floor = 1.0 / DURABILITY_MAX_SLOWDOWN
+    for row in rows:
+        if not isinstance(row, dict):
+            continue
+        if row.get("mode") == "commit" and row.get("path") == "fsync_on":
+            gain = row.get("gain_vs_nofsync")
+            if not isinstance(gain, (int, float)):
+                errors.append(
+                    "control_plane[commit/fsync_on]: missing or "
+                    "non-numeric gain_vs_nofsync")
+            elif gain < floor:
+                errors.append(
+                    f"control_plane[commit/fsync_on]: journaled commits "
+                    f"run {1 / gain:.0f}x slower than no-fsync (must be "
+                    f"<= {DURABILITY_MAX_SLOWDOWN}x; the WAL is doing "
+                    f"per-commit work beyond one append+fsync)")
+        if row.get("mode") == "failover":
+            ops = row.get("ops_per_s")
+            if not isinstance(ops, (int, float)) or ops <= 0:
+                errors.append(
+                    f"control_plane[failover/{row.get('path')}]: missing "
+                    f"or non-positive ops_per_s")
+            elif 1.0 / ops > FAILOVER_MAX_SECONDS:
+                errors.append(
+                    f"control_plane[failover/{row.get('path')}]: "
+                    f"{1.0 / ops:.1f} s to serve reads from the promoted "
+                    f"standby (must be <= {FAILOVER_MAX_SECONDS:.0f} s)")
+    return errors
+
+
 def _index_rows(rows: List[dict], key_fields: Tuple[str, ...]) -> Dict:
     out = {}
     for row in rows:
@@ -254,7 +317,8 @@ def check(path: str, baseline_path: Optional[str] = None,
     if doc is None:
         return errors
     errors = (check_schema(doc) + check_batched_invariant(doc)
-              + check_integrity_invariant(doc))
+              + check_integrity_invariant(doc)
+              + check_durability_invariant(doc))
     if errors or baseline_path is None:
         return errors
     base, base_errors = _load(baseline_path)

@@ -1,0 +1,143 @@
+"""Control-plane durability/failover benchmark: what the WAL costs and
+what failover buys.
+
+Three rows in one section (``control_plane``):
+
+* ``commit/fsync_on`` and ``commit/fsync_off`` — in-process journaled
+  MetaNode commit throughput (``handle_commit`` calls/s, best of N), the
+  A/B being the per-record ``fsync``. This is the price of "an
+  acknowledged commit survives kill -9": one fsync on the commit path.
+  Each fsync_on row carries ``gain_vs_nofsync`` (its throughput relative
+  to the fsync_off twin, same run) — ``check_json.py`` gates it with the
+  baseline-free ``DURABILITY_MAX_SLOWDOWN`` invariant: fsyncing may cost
+  a large constant factor (it is a disk barrier per commit; tens of
+  microseconds to milliseconds depending on the backing store), but a
+  collapse beyond that factor means the journal started doing per-commit
+  work it shouldn't (re-serializing the namespace, re-opening the file,
+  fsyncing more than once).
+* ``failover/standby_promotion`` — real-socket wall clock from killing
+  the leader to a committed name being readable from the promoted
+  standby (lease expiry + promotion + client failover). Reported as
+  ``ops_per_s`` = 1/seconds so the regression gate's higher-is-better
+  convention holds; the absolute number tracks the configured lease
+  timeout, so the gate only catches order-of-magnitude breaks (a
+  standby that never promotes, a client that never fails over).
+
+docs/BENCHMARKING.md ("Control plane") has the threshold derivation.
+"""
+from __future__ import annotations
+
+import shutil
+import tempfile
+import time
+from pathlib import Path
+from typing import List
+
+HEARTBEAT = 0.25
+LEASE = 0.5
+
+
+def _best(fn, repeats: int) -> float:
+    return max(fn() for _ in range(repeats))
+
+
+def _commit_rate(journal_dir, fsync: bool, n_commits: int,
+                 repeats: int) -> float:
+    from repro.cluster import MetaNode
+
+    def once() -> float:
+        d = Path(tempfile.mkdtemp(dir=journal_dir))
+        meta = MetaNode(journal_dir=str(d), journal_fsync=fsync,
+                        snapshot_every=10 ** 9)  # pure append path
+        meta.handle_register({"node_id": "a", "host": "h", "port": 1})
+        t0 = time.perf_counter()
+        for i in range(n_commits):
+            meta.handle_commit({
+                "name": f"f{i}", "size": 4096, "block_size": 4096,
+                "blocks": [{"id": f"b{i}", "offset": 0, "length": 4096,
+                            "crc32": 0, "nodes": ["a"]}],
+            })
+        dt = time.perf_counter() - t0
+        meta.journal.close()
+        shutil.rmtree(d, ignore_errors=True)
+        return n_commits / dt
+
+    return _best(once, repeats)
+
+
+def _failover_seconds(tmp: Path) -> float:
+    """Wall clock: leader killed -> committed name readable from the
+    promoted standby through a failover client."""
+    from repro.cluster import ClusterClient, ClusterError, MetaNode
+    from repro.core.faults import RetriesExhausted, RetryPolicy
+
+    m1 = MetaNode(heartbeat_timeout=HEARTBEAT, tick_interval=0.05,
+                  journal_dir=str(tmp / "m1"), meta_id="m1").start()
+    m2 = MetaNode(heartbeat_timeout=HEARTBEAT, tick_interval=0.05,
+                  journal_dir=str(tmp / "m2"), meta_id="m2",
+                  peers=[m1.address], lease_timeout=LEASE).start()
+    cli = ClusterClient([m1.address, m2.address],
+                        policy=RetryPolicy(attempts=2, base_delay=0.02,
+                                           connect_timeout=1.0,
+                                           io_timeout=2.0))
+    try:
+        # a name in the namespace (no datanodes needed for LOOKUP)
+        m1.handle_register({"node_id": "a", "host": "h", "port": 1})
+        m1.handle_commit({
+            "name": "probe", "size": 1, "block_size": 1,
+            "blocks": [{"id": "p", "offset": 0, "length": 1, "crc32": 0,
+                        "nodes": ["a"]}],
+        })
+        deadline = time.monotonic() + 30.0
+        while m2.seq < m1.seq:  # standby must have tailed the commit
+            time.sleep(0.01)
+            if time.monotonic() > deadline:
+                raise RuntimeError("standby never caught up")
+        t0 = time.perf_counter()
+        m1.kill()
+        while True:
+            try:
+                from repro.cluster.wire import ClusterMsg
+                cli._call(ClusterMsg.LOOKUP, {"name": "probe"})
+                break
+            except (ClusterError, RetriesExhausted, OSError):
+                if time.monotonic() > deadline:
+                    raise RuntimeError("failover never completed")
+                time.sleep(0.02)
+        return time.perf_counter() - t0
+    finally:
+        cli.close()
+        m2.stop()
+
+
+def run(smoke: bool = False) -> List[dict]:
+    n_commits = 200 if smoke else 1000
+    repeats = 2 if smoke else 3
+    tmp = Path(tempfile.mkdtemp(prefix="xdfs_ctrl_"))
+
+    measured = {
+        "fsync_off": _commit_rate(tmp, False, n_commits, repeats),
+        "fsync_on": _commit_rate(tmp, True, n_commits, repeats),
+    }
+    rows = []
+    for path_name in ("fsync_off", "fsync_on"):
+        ops = measured[path_name]
+        rows.append({
+            "mode": "commit", "path": path_name,
+            "ops_per_s": round(ops, 1),
+            "gain_vs_nofsync": round(ops / measured["fsync_off"], 4),
+        })
+    seconds = _failover_seconds(tmp)
+    rows.append({
+        "mode": "failover", "path": "standby_promotion",
+        "ops_per_s": round(1.0 / seconds, 3),
+        "seconds": round(seconds, 3),
+    })
+    for row in rows:
+        print(",".join(f"{k}={v}" for k, v in row.items()), flush=True)
+    shutil.rmtree(tmp, ignore_errors=True)
+    return rows
+
+
+if __name__ == "__main__":
+    run(smoke=True)

@@ -138,6 +138,12 @@ def main() -> None:
     sections["integrity"] = integrity_bench.run(
         smoke=args.smoke or args.quick)
 
+    print("== section 0f: control-plane durability + failover ==", flush=True)
+    from benchmarks import control_plane
+
+    sections["control_plane"] = control_plane.run(
+        smoke=args.smoke or args.quick)
+
     if args.smoke:
         if args.json:
             write_json(args.json, sections)

@@ -17,16 +17,21 @@ Fault-tolerance invariants (tested):
   * checksum mismatch -> that step is rejected and the previous one loads;
   * keep_last bounds disk usage.
 
-Cluster mode (opt-in): pass ``cluster=ClusterClient(...)`` to ``save`` /
-``restore`` / ``latest_step`` and every leaf stripes across the fleet of
-data nodes with the MetaNode's replication factor — sharded JAX
-checkpoint shards become replicated cluster blocks, and a data node
-dying between save and restore costs nothing. ``directory`` then names a
-prefix in the cluster namespace instead of a local path; the manifest is
-written LAST, so it is the commit point (restore only considers steps
-whose manifest exists — the same torn-save invariant as the atomic
-rename, without needing a rename primitive). The single-node local path
-stays the default and is untouched.
+Cluster mode (opt-in): pass ``cluster=ClusterClient(...)`` — or just a
+metanode address / list of metanode addresses, and a client is built
+and closed per call — to ``save`` / ``restore`` / ``latest_step`` and
+every leaf stripes across the fleet of data nodes with the MetaNode's
+replication factor — sharded JAX checkpoint shards become replicated
+cluster blocks, and a data node dying between save and restore costs
+nothing. With a journaled, multi-metanode control plane, so does the
+MetaNode: commits are write-ahead journaled and standbys take over, so
+a checkpoint save survives metanode death mid-run and a restore works
+against whichever metanode currently leads. ``directory`` then names a
+prefix in the cluster namespace instead of a local path; the manifest
+is written LAST, so it is the commit point (restore only considers
+steps whose manifest exists — the same torn-save invariant as the
+atomic rename, without needing a rename primitive). The single-node
+local path stays the default and is untouched.
 """
 from __future__ import annotations
 
@@ -74,6 +79,23 @@ def _leaf_files(tree):
 
 def _step_prefix(directory: str, step: int) -> str:
     return f"{directory.rstrip('/')}/step_{step:08d}"
+
+
+@contextmanager
+def _as_client(cluster):
+    """Accept a live ``ClusterClient`` (caller owns it) or one-or-more
+    metanode addresses (a throwaway failover client is built and closed
+    around the call)."""
+    if hasattr(cluster, "put") and hasattr(cluster, "list"):
+        yield cluster
+        return
+    from repro.cluster import ClusterClient
+
+    cli = ClusterClient(cluster)
+    try:
+        yield cli
+    finally:
+        cli.close()
 
 
 def _cluster_steps(directory: str, cluster) -> list:
@@ -156,7 +178,8 @@ def save(tree: Any, directory: str, step: int, keep_last: int = 3,
     if cluster is not None:
         if resume:
             raise ValueError("resume is not supported for cluster saves")
-        return _save_cluster(tree, directory, step, keep_last, cluster)
+        with _as_client(cluster) as cli:
+            return _save_cluster(tree, directory, step, keep_last, cli)
     integrity = integrity or resume
     base = Path(directory)
     base.mkdir(parents=True, exist_ok=True)
@@ -213,7 +236,8 @@ def _gc(base: Path, keep_last: int):
 
 def latest_step(directory: str, cluster=None) -> Optional[int]:
     if cluster is not None:
-        steps = _cluster_steps(directory, cluster)
+        with _as_client(cluster) as cli:
+            steps = _cluster_steps(directory, cli)
         return steps[-1] if steps else None
     base = Path(directory)
     if not base.exists():
@@ -236,16 +260,17 @@ def restore(directory: str, like: Any, step: Optional[int] = None,
     the ``ClusterClient``, and the leaf-level checksum walk-back across
     steps is the same as the local path."""
     if cluster is not None:
-        candidates = _cluster_steps(directory, cluster)
-        if step is not None:
-            candidates = [s for s in candidates if s == step]
-        last_err: Optional[Exception] = None
-        for s in reversed(candidates):
-            try:
-                return _restore_one_cluster(directory, s, like, shardings,
-                                            cluster), s
-            except Exception as e:  # corrupt/lost step: fall back
-                last_err = e
+        with _as_client(cluster) as cli:
+            candidates = _cluster_steps(directory, cli)
+            if step is not None:
+                candidates = [s for s in candidates if s == step]
+            last_err: Optional[Exception] = None
+            for s in reversed(candidates):
+                try:
+                    return _restore_one_cluster(directory, s, like,
+                                                shardings, cli), s
+                except Exception as e:  # corrupt/lost step: fall back
+                    last_err = e
         raise FileNotFoundError(
             f"no restorable checkpoint under {directory!r} in cluster: "
             f"{last_err}")

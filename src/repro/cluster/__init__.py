@@ -8,11 +8,23 @@ ordinary xDFS sessions (the tuned zero-copy, syscall-batched datapath);
 this package is only the control plane: placement, heartbeats + block
 reports, failure detection, re-replication, and rebalancing.
 
+The control plane is durable and fail-over-able: every namespace
+mutation is write-ahead journaled (:class:`Journal`, with periodic
+atomic snapshots), so a crashed MetaNode restarts with every
+acknowledged commit intact; standby metanodes tail the leader's journal
+and promote themselves — bumping the leader **epoch** — when its lease
+expires, while clients and data nodes fail over along a metanode
+address list (:class:`ControlChannel`) and fence replies from deposed
+leaders. See docs/ARCHITECTURE.md ("Control-plane durability" and
+"Leader epochs and fencing").
+
 See docs/ARCHITECTURE.md ("Cluster control plane") for the wire spec
 and examples/cluster_quickstart.py for a runnable 3-node demo.
 """
 from repro.cluster.client import DEFAULT_CLUSTER_BLOCK, ClusterClient
 from repro.cluster.datanode import DataNode
+from repro.cluster.journal import Journal
+from repro.cluster.leader import ControlChannel, LeaderLease
 from repro.cluster.metanode import FailureDetector, MetaNode, NodeInfo
 from repro.cluster.placement import (
     Move,
@@ -20,11 +32,15 @@ from repro.cluster.placement import (
     plan_put,
     plan_rebalance,
     plan_replication,
+    scan_replication,
     spread,
 )
 from repro.cluster.wire import (
     CMD_DROP,
     CMD_REPLICATE,
+    EPOCH_FIELD,
+    ERR_NOT_LEADER,
+    ERR_UNREGISTERED,
     ClusterError,
     ClusterMsg,
     block_name,
@@ -37,9 +53,15 @@ __all__ = [
     "ClusterClient",
     "ClusterError",
     "ClusterMsg",
+    "ControlChannel",
     "DEFAULT_CLUSTER_BLOCK",
     "DataNode",
+    "EPOCH_FIELD",
+    "ERR_NOT_LEADER",
+    "ERR_UNREGISTERED",
     "FailureDetector",
+    "Journal",
+    "LeaderLease",
     "MetaNode",
     "Move",
     "NodeInfo",
@@ -49,5 +71,6 @@ __all__ = [
     "plan_put",
     "plan_rebalance",
     "plan_replication",
+    "scan_replication",
     "spread",
 ]

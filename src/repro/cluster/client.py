@@ -14,19 +14,23 @@ A get resolves block locations (``LOOKUP``), fans the fetches out across
 replicas (block *i* prefers holder ``i mod len(holders)``, spreading
 read load), verifies each block's CRC, and **fails over**: a dead node
 or a corrupt replica just moves the fetch to the next live holder.
+
+Metanode traffic rides a :class:`~repro.cluster.leader.ControlChannel`:
+``meta_address`` may be one ``(host, port)`` or a *list* of metanode
+addresses. Transport faults rotate the list with the policy's backoff;
+``not_leader`` rejections hop to the hinted leader, so a client created
+against the whole metanode group keeps working across a failover.
 """
 from __future__ import annotations
 
 import os
-import socket
-import threading
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional
 
+from repro.cluster.leader import ControlChannel
 from repro.cluster.wire import (
     ClusterError,
     ClusterMsg,
     block_name,
-    request,
 )
 from repro.core.api import SessionPool
 from repro.core.faults import RetryPolicy
@@ -43,7 +47,7 @@ def _crc(view) -> int:
 class ClusterClient:
     """Client-side striping/replication over per-node pooled sessions."""
 
-    def __init__(self, meta_address: Tuple[str, int],
+    def __init__(self, meta_address,
                  block_size: int = DEFAULT_CLUSTER_BLOCK,
                  n_channels: int = 2, engine: str = "mtedp",
                  batch_frames: int = 1,
@@ -51,18 +55,17 @@ class ClusterClient:
                  pool: Optional[SessionPool] = None,
                  policy: Optional[RetryPolicy] = None,
                  connect_timeout: float = 10.0):
-        self.meta_address = (meta_address[0], int(meta_address[1]))
         self.block_size = block_size
         # one policy drives every deadline/retry decision: metanode dials,
-        # metanode requests, and the bounded put re-plan loop
+        # metanode requests (including failover rotation), and the bounded
+        # put re-plan loop
         self.policy = policy or RetryPolicy(connect_timeout=connect_timeout)
+        self._ctrl = ControlChannel(meta_address, policy=self.policy)
         self.pool = pool or SessionPool(
             n_channels=n_channels, engine=engine,
             block_size=min(session_block, block_size),
             batch_frames=batch_frames)
         self._owns_pool = pool is None
-        self._meta: Optional[socket.socket] = None
-        self._meta_lock = threading.Lock()
         self.stats: Dict[str, int] = {
             "puts": 0, "gets": 0, "blocks_written": 0, "blocks_read": 0,
             "replica_failovers": 0, "degraded_blocks": 0, "replans": 0,
@@ -71,26 +74,15 @@ class ClusterClient:
     # -- metanode control --------------------------------------------------
 
     def _call(self, msg: ClusterMsg, body: dict) -> dict:
-        def attempt() -> dict:
-            if self._meta is None:
-                self._meta = socket.create_connection(
-                    self.meta_address, timeout=self.policy.connect_timeout)
-                self._meta.setsockopt(socket.IPPROTO_TCP,
-                                      socket.TCP_NODELAY, 1)
-            try:
-                return request(self._meta, msg, body)
-            except (ConnectionError, OSError):
-                try:
-                    self._meta.close()
-                except OSError:
-                    pass
-                self._meta = None
-                raise
+        # ClusterError replies pass straight through (a refused request is
+        # not a transport fault); dead connections and not_leader redirects
+        # fail over along the address list inside the channel
+        return self._ctrl.call(msg, body)
 
-        with self._meta_lock:
-            # ClusterError replies pass straight through (a refused request
-            # is not a transport fault); only dead-connection errors retry
-            return self.policy.run(attempt, what=f"metanode {msg.name}")
+    @property
+    def meta_address(self):
+        """The metanode address currently in use (failover-aware)."""
+        return self._ctrl.current
 
     # -- put ---------------------------------------------------------------
 
@@ -269,13 +261,7 @@ class ClusterClient:
     # -- lifecycle ---------------------------------------------------------
 
     def close(self) -> None:
-        with self._meta_lock:
-            if self._meta is not None:
-                try:
-                    self._meta.close()
-                except OSError:
-                    pass
-                self._meta = None
+        self._ctrl.close()
         if self._owns_pool:
             self.pool.close()
 

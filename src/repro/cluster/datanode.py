@@ -16,6 +16,18 @@ glue:
   session (node-to-node copy on the same zero-copy path — file-backed
   ``put`` means mmap/sendfile end to end), ``drop`` unlinks it.
 
+Control traffic rides a :class:`~repro.cluster.leader.ControlChannel`:
+``meta_address`` may be one ``(host, port)`` or a *list* of metanode
+addresses, and the node fails over between them (transport faults back
+off and rotate; ``not_leader`` rejections hop to the hinted leader). A
+heartbeat answered with the ``unregistered`` error code — the metanode
+restarted with a blank namespace, or a fresh standby promoted — makes
+the node re-``REGISTER`` and retry, so a control-plane wipe heals
+itself on the next beat. Command batches are **epoch-fenced**: a reply
+stamped with a lower leader epoch than the channel has ever seen comes
+from a deposed leader and its replicate/drop commands are discarded
+(``stats["fenced_commands"]``).
+
 ``kill()`` simulates a crash for tests and demos: the server stops
 accepting, in-flight sessions die, and heartbeats stop — the MetaNode's
 failure detector takes it from there.
@@ -23,24 +35,29 @@ failure detector takes it from there.
 from __future__ import annotations
 
 import os
-import socket
 import threading
 import uuid
+from collections import deque
 from pathlib import Path
 from typing import Dict, List, Optional, Tuple
 
+from repro.cluster.leader import ControlChannel
 from repro.cluster.wire import (
     CMD_DROP,
     CMD_REPLICATE,
+    ERR_UNREGISTERED,
+    ClusterError,
     ClusterMsg,
     block_name,
-    request,
 )
 from repro.core.api import SessionPool, XdfsServer
 from repro.core.faults import RetryPolicy
 
 BLOCK_PREFIX = "blk_"
 BLOCK_SUFFIX = ".bin"
+# recent control/command failures kept for inspection; older ones are
+# counted in stats["errors_dropped"] instead of growing without bound
+ERROR_BUFFER = 64
 
 
 class DataNode:
@@ -48,7 +65,7 @@ class DataNode:
     MetaNode control loop. ``auto_heartbeat=False`` hands the beat to
     the caller (:meth:`heartbeat_once`) for deterministic tests."""
 
-    def __init__(self, meta_address: Tuple[str, int], root: str,
+    def __init__(self, meta_address, root: str,
                  node_id: Optional[str] = None, engine: str = "mtedp",
                  host: str = "127.0.0.1",
                  heartbeat_interval: float = 0.5,
@@ -57,11 +74,12 @@ class DataNode:
                  pool: Optional[SessionPool] = None,
                  connect_timeout: float = 10.0,
                  policy: Optional[RetryPolicy] = None):
-        self.meta_address = (meta_address[0], int(meta_address[1]))
         # two attempts preserves the historical redial-once behaviour;
         # pass a policy to trade it for deeper backoff
         self.policy = policy or RetryPolicy(attempts=2,
-                                            connect_timeout=connect_timeout)
+                                            connect_timeout=connect_timeout,
+                                            io_timeout=10.0)
+        self._ctrl = ControlChannel(meta_address, policy=self.policy)
         self.root = Path(root)
         self.node_id = node_id or f"dn-{uuid.uuid4().hex[:8]}"
         self.heartbeat_interval = heartbeat_interval
@@ -74,15 +92,19 @@ class DataNode:
                                         engine=engine,
                                         batch_frames=batch_frames)
         self._owns_pool = pool is None
-        self._ctrl: Optional[socket.socket] = None
-        self._ctrl_lock = threading.Lock()
         self._hb_thread: Optional[threading.Thread] = None
         self._stop = threading.Event()
-        self.errors: List[BaseException] = []
+        self.errors: deque = deque(maxlen=ERROR_BUFFER)
         self.stats: Dict[str, int] = {
             "heartbeats": 0, "replicated_out": 0, "dropped": 0,
-            "command_errors": 0,
+            "command_errors": 0, "reregisters": 0, "fenced_commands": 0,
+            "errors_dropped": 0,
         }
+
+    @property
+    def meta_address(self) -> Tuple[str, int]:
+        """The metanode address currently in use (failover-aware)."""
+        return self._ctrl.current
 
     # -- lifecycle ---------------------------------------------------------
 
@@ -107,13 +129,7 @@ class DataNode:
         blocks, and stop heartbeating. The MetaNode notices via its
         failure detector."""
         self._stop.set()
-        with self._ctrl_lock:
-            if self._ctrl is not None:
-                try:
-                    self._ctrl.close()
-                except OSError:
-                    pass
-                self._ctrl = None
+        self._ctrl.close()
         self.server.abort()
         if self._hb_thread is not None:
             self._hb_thread.join(5.0)
@@ -132,26 +148,8 @@ class DataNode:
     # -- control loop ------------------------------------------------------
 
     def _meta_request(self, msg: ClusterMsg, body: dict) -> dict:
-        """One request on the persistent MetaNode control connection,
-        re-dialing (policy-bounded) if the connection went away."""
-        def attempt() -> dict:
-            if self._ctrl is None:
-                self._ctrl = socket.create_connection(
-                    self.meta_address, timeout=self.policy.connect_timeout)
-                self._ctrl.setsockopt(socket.IPPROTO_TCP,
-                                      socket.TCP_NODELAY, 1)
-            try:
-                return request(self._ctrl, msg, body)
-            except (ConnectionError, OSError):
-                try:
-                    self._ctrl.close()
-                except OSError:
-                    pass
-                self._ctrl = None
-                raise
-
-        with self._ctrl_lock:
-            return self.policy.run(attempt, what=f"metanode {msg.name}")
+        """One request over the failover control channel."""
+        return self._ctrl.call(msg, body)
 
     def register(self) -> dict:
         host, port = self.server.address
@@ -168,11 +166,27 @@ class DataNode:
 
     def heartbeat_once(self) -> List[dict]:
         """Send one heartbeat + block report; execute every command the
-        MetaNode piggybacked on the reply. Returns those commands."""
-        reply = self._meta_request(ClusterMsg.HEARTBEAT, {
-            "node_id": self.node_id, "blocks": self.block_ids(),
-        })
+        MetaNode piggybacked on the reply (unless the reply is fenced as
+        coming from a deposed leader). A metanode that forgot us —
+        restarted blank, or a freshly promoted standby whose journal
+        predates our registration — answers ``unregistered``; recover by
+        re-registering and beating again. Returns the executed commands."""
+        body = {"node_id": self.node_id, "blocks": self.block_ids()}
+        try:
+            reply = self._meta_request(ClusterMsg.HEARTBEAT, body)
+        except ClusterError as e:
+            if e.code != ERR_UNREGISTERED:
+                raise
+            self.stats["reregisters"] += 1
+            self.register()
+            reply = self._meta_request(ClusterMsg.HEARTBEAT, body)
         self.stats["heartbeats"] += 1
+        if self._ctrl.stale(reply):
+            # a deposed leader answered before noticing its demotion:
+            # executing its commands could resurrect deleted blocks or
+            # drop live ones, so the whole batch is a no-op
+            self.stats["fenced_commands"] += len(reply.get("commands", ()))
+            return []
         cmds = reply.get("commands", [])
         for cmd in cmds:
             try:
@@ -180,7 +194,7 @@ class DataNode:
             except Exception as e:  # noqa: BLE001 - a failed copy must not
                 # kill the beat loop; the MetaNode replans after the grace
                 self.stats["command_errors"] += 1
-                self.errors.append(e)
+                self._note_error(e)
         return cmds
 
     def _heartbeat_loop(self) -> None:
@@ -188,7 +202,12 @@ class DataNode:
             try:
                 self.heartbeat_once()
             except Exception as e:  # noqa: BLE001 - meta may be restarting
-                self.errors.append(e)
+                self._note_error(e)
+
+    def _note_error(self, e: BaseException) -> None:
+        if len(self.errors) == self.errors.maxlen:
+            self.stats["errors_dropped"] += 1
+        self.errors.append(e)
 
     # -- command execution -------------------------------------------------
 

@@ -1,0 +1,223 @@
+"""MetaNode write-ahead journal + snapshot (control-plane durability).
+
+The MetaNode's namespace used to be purely in-memory: one ``kill -9``
+lost every file->block mapping even though every block survived on the
+data nodes' disks. This module makes namespace mutations durable with
+the classic WAL + checkpoint pair:
+
+* **Journal** — an append-only log, one record per namespace mutation
+  (``register`` / ``commit`` / ``delete`` / rebalance ``move`` and
+  ``move_done`` / leader ``epoch`` bumps). Each record is a fixed
+  little-endian header (magic, sequence number, tag, body length) plus a
+  UTF-8 JSON body, protected by a CRC32 of header-and-body computed with
+  the ``core/integrity.py`` helpers. ``append()`` optionally fsyncs
+  before returning — a record the caller acked is on disk.
+* **Snapshot** — a periodic atomic-replace (`tmp` + ``os.replace``)
+  JSON image of the full state. After a snapshot lands, the journal is
+  truncated: recovery cost is bounded by ``snapshot_every`` records, not
+  by cluster lifetime.
+* **Replay** — ``replay()`` is torn-tail tolerant: a crash mid-append
+  leaves a short or CRC-broken final record, and replay simply stops at
+  the first record that does not verify (everything before it was
+  acked-and-fsynced and is applied; everything after was never acked).
+
+Recovery = load snapshot -> replay journal -> let the next round of
+full block reports reconcile the location index against reality. The
+journal never records soft state (heartbeat liveness, queued commands,
+in-flight copy timers): all of that re-derives from heartbeats, which is
+what makes a restarted MetaNode converge on the truth instead of
+trusting a stale image of it.
+
+The record-tag table in docs/ARCHITECTURE.md ("Control-plane
+durability") is normative and machine-checked against :data:`RECORDS`
+by ``tests/test_docs.py``.
+"""
+from __future__ import annotations
+
+import json
+import os
+import struct
+from pathlib import Path
+from typing import Dict, Iterator, List, Optional, Tuple
+
+from repro.core.integrity import crc32_update
+
+REC_MAGIC = 0x784A4E4C  # 'xJNL'
+
+# record header: magic, sequence number, tag, body length, CRC32 of the
+# packed header-minus-crc concatenated with the body
+_REC = struct.Struct("<IQHII")
+REC_HEADER_SIZE = _REC.size
+
+# a journal body is one namespace mutation; anything bigger is a torn or
+# garbage record, not a message (same cap spirit as wire.MAX_BODY)
+MAX_RECORD_BODY = 8 << 20
+
+# Normative record-tag table (docs/ARCHITECTURE.md, machine-checked).
+REC_REGISTER = "register"    # a data node joined (id, host, port)
+REC_COMMIT = "commit"        # a striped put committed (name -> blocks)
+REC_DELETE = "delete"        # a name was unlinked (blocks reclaimed)
+REC_MOVE = "move"            # rebalance copy commanded; source drop pending
+REC_MOVE_DONE = "move_done"  # the pending source drop settled or expired
+REC_EPOCH = "epoch"          # leader epoch bump (election / promotion)
+
+RECORDS: Dict[int, str] = {
+    1: REC_REGISTER,
+    2: REC_COMMIT,
+    3: REC_DELETE,
+    4: REC_MOVE,
+    5: REC_MOVE_DONE,
+    6: REC_EPOCH,
+}
+_TAG_IDS = {name: tag for tag, name in RECORDS.items()}
+
+JOURNAL_NAME = "journal.log"
+SNAPSHOT_NAME = "snapshot.json"
+
+
+def _record_crc(head: bytes, body: bytes) -> int:
+    return crc32_update(crc32_update(0, head), body)
+
+
+def encode_record(seq: int, tag: str, body: dict) -> bytes:
+    raw = json.dumps(body, separators=(",", ":")).encode()
+    head = _REC.pack(REC_MAGIC, seq, _TAG_IDS[tag], len(raw), 0)
+    crc = _record_crc(head[:-4], raw)
+    return _REC.pack(REC_MAGIC, seq, _TAG_IDS[tag], len(raw), crc) + raw
+
+
+def replay(path) -> Iterator[Tuple[int, str, dict]]:
+    """Yield every intact ``(seq, tag, body)`` record of a journal file,
+    stopping silently at the first torn/corrupt record (a crash mid-
+    append, a partial disk write, or trailing garbage). Records past a
+    bad one are never yielded: without the prefix they continue, their
+    meaning cannot be trusted."""
+    path = Path(path)
+    if not path.exists():
+        return
+    with open(path, "rb") as f:
+        while True:
+            head = f.read(REC_HEADER_SIZE)
+            if len(head) < REC_HEADER_SIZE:
+                return  # torn tail: header never fully landed
+            magic, seq, tag_id, length, crc = _REC.unpack(head)
+            if magic != REC_MAGIC or tag_id not in RECORDS:
+                return  # garbage where a record should start
+            if length > MAX_RECORD_BODY:
+                return
+            raw = f.read(length)
+            if len(raw) < length:
+                return  # torn tail: body never fully landed
+            if _record_crc(head[:-4], raw) != crc:
+                return  # bit rot or a torn overwrite
+            try:
+                body = json.loads(raw)
+            except ValueError:
+                return
+            yield seq, RECORDS[tag_id], body
+
+
+class Journal:
+    """Append-fsync write-ahead log under ``directory``.
+
+    ``fsync=False`` trades durability of the last few records for
+    latency (the benchmark's A/B knob); the format and replay path are
+    identical either way.
+    """
+
+    def __init__(self, directory, fsync: bool = True):
+        self.directory = Path(directory)
+        self.directory.mkdir(parents=True, exist_ok=True)
+        self.fsync = fsync
+        self.path = self.directory / JOURNAL_NAME
+        self._f = open(self.path, "ab")
+        self.stats: Dict[str, int] = {
+            "appends": 0, "fsyncs": 0, "bytes": 0, "truncations": 0,
+        }
+
+    def append(self, seq: int, tag: str, body: dict) -> None:
+        rec = encode_record(seq, tag, body)
+        self._f.write(rec)
+        self._f.flush()
+        if self.fsync:
+            os.fsync(self._f.fileno())
+            self.stats["fsyncs"] += 1
+        self.stats["appends"] += 1
+        self.stats["bytes"] += len(rec)
+
+    def replay(self) -> List[Tuple[int, str, dict]]:
+        return list(replay(self.path))
+
+    def truncate(self) -> None:
+        """Drop every record (called right after a snapshot landed: the
+        snapshot now carries their effects)."""
+        self._f.close()
+        self._f = open(self.path, "wb")
+        if self.fsync:
+            os.fsync(self._f.fileno())
+        self.stats["truncations"] += 1
+
+    def close(self) -> None:
+        try:
+            self._f.close()
+        except OSError:
+            pass
+
+    # -- snapshot ----------------------------------------------------------
+
+    @property
+    def snapshot_path(self) -> Path:
+        return self.directory / SNAPSHOT_NAME
+
+    def write_snapshot(self, state: dict) -> None:
+        """Atomic-replace snapshot, then truncate the journal. A crash
+        between the two steps is safe: replaying the old records onto
+        the new snapshot is idempotent (they are already reflected in
+        it, and apply functions overwrite rather than accumulate)."""
+        write_snapshot(self.snapshot_path, state)
+        self.truncate()
+
+    def load_snapshot(self) -> Optional[dict]:
+        return load_snapshot(self.snapshot_path)
+
+
+def write_snapshot(path, state: dict) -> None:
+    path = Path(path)
+    tmp = path.with_suffix(".tmp")
+    with open(tmp, "w") as f:
+        json.dump(state, f, separators=(",", ":"))
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, path)
+    # fsync the directory so the rename itself survives a power cut
+    fd = os.open(path.parent, os.O_RDONLY)
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
+def load_snapshot(path) -> Optional[dict]:
+    """The snapshot state, or None when absent/unreadable (a torn tmp
+    never replaces the previous good snapshot, so corruption here means
+    no snapshot was ever completed)."""
+    path = Path(path)
+    if not path.exists():
+        return None
+    try:
+        with open(path) as f:
+            state = json.load(f)
+    except (ValueError, OSError):
+        return None
+    return state if isinstance(state, dict) else None
+
+
+def recover(directory, fsync: bool = True):
+    """``(journal, state, records)``: open the journal under
+    ``directory``, load the snapshot (None on a cold start), and replay
+    the intact journal suffix. The caller applies ``state`` then every
+    record in order."""
+    journal = Journal(directory, fsync=fsync)
+    state = journal.load_snapshot()
+    records = journal.replay()
+    return journal, state, records

@@ -1,0 +1,196 @@
+"""Leader lease/epoch bookkeeping + the failover control transport.
+
+The control plane runs N metanodes: one **leader** (accepts every
+message) and standbys that tail the leader's journal over ``SYNC``
+polls (see ``metanode.py``). This module holds the two pieces both
+sides of that arrangement share:
+
+* :class:`LeaderLease` — the standby's view of the leader's liveness.
+  Every successful ``SYNC`` renews the lease; when the lease has been
+  expired for the standby's (rank-staggered) timeout, the standby
+  promotes itself and bumps the epoch. An injectable clock keeps the
+  election logic unit-testable without sockets (the ``autotune.py``
+  controller idiom).
+* :class:`ControlChannel` — a metadata connection that takes a *list*
+  of metanode addresses and fails over: transport faults advance to the
+  next address with ``RetryPolicy`` backoff, ``not_leader`` rejections
+  hop immediately (following the standby's leader hint when it has
+  one), and the channel tracks the highest leader epoch it has ever
+  observed so callers can fence replies from deposed leaders
+  (``wire.EPOCH_FIELD``). ``DataNode`` and ``ClusterClient`` both speak
+  through one of these instead of hand-rolled redial loops.
+
+Election model (documented in ARCHITECTURE.md "Leader epochs and
+fencing"): there is no quorum — correctness does not come from electing
+exactly one leader but from **epoch fencing**: every promotion bumps
+the epoch, every reply carries it, and any command stamped with a lower
+epoch than the receiver has seen is a no-op. A deposed leader can keep
+talking; nobody with newer information listens.
+"""
+from __future__ import annotations
+
+import socket
+import threading
+import time
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+from repro.core.faults import RetriesExhausted, RetryPolicy
+from repro.cluster.wire import (
+    EPOCH_FIELD,
+    ERR_NOT_LEADER,
+    ClusterError,
+    ClusterMsg,
+    request,
+)
+
+Address = Tuple[str, int]
+
+
+def normalize_addresses(meta_address) -> List[Address]:
+    """Accept one ``(host, port)`` or a sequence of them; always return
+    a non-empty list (the single-metanode call sites stay unchanged)."""
+    if (isinstance(meta_address, (tuple, list)) and len(meta_address) == 2
+            and isinstance(meta_address[0], str)):
+        return [(meta_address[0], int(meta_address[1]))]
+    out = [(a[0], int(a[1])) for a in meta_address]
+    if not out:
+        raise ValueError("need at least one metanode address")
+    return out
+
+
+class LeaderLease:
+    """A standby's lease on its belief that the leader is alive.
+
+    ``rank`` staggers promotion: standby *k* waits ``(k + 1) x timeout``
+    of silence before promoting, so when several standbys lose the
+    leader at once the lowest-ranked one wins the race by default."""
+
+    def __init__(self, timeout: float, rank: int = 0,
+                 clock: Callable[[], float] = time.monotonic):
+        self.timeout = timeout * (rank + 1)
+        self.rank = rank
+        self._clock = clock
+        self._last_ok = clock()
+
+    def renew(self) -> None:
+        self._last_ok = self._clock()
+
+    def remaining(self) -> float:
+        return self.timeout - (self._clock() - self._last_ok)
+
+    def expired(self) -> bool:
+        return self.remaining() <= 0
+
+
+class ControlChannel:
+    """One persistent metadata connection over a failover address list.
+
+    ``call()`` is the only entry point: it serializes callers, dials
+    lazily, retries transport faults across the address list with the
+    policy's backoff, follows ``not_leader`` redirects immediately
+    (they spend a hop, not a backoff delay), and records the highest
+    ``EPOCH_FIELD`` ever seen in a reply. Callers fence with
+    :meth:`stale` BEFORE acting on a reply's commands."""
+
+    def __init__(self, addresses, policy: Optional[RetryPolicy] = None,
+                 what: str = "metanode"):
+        self.addresses = normalize_addresses(addresses)
+        self.policy = policy or RetryPolicy()
+        self.what = what
+        self.epoch = 0  # highest leader epoch ever observed
+        self._idx = 0
+        self._sock: Optional[socket.socket] = None
+        self._lock = threading.Lock()
+        self.stats: Dict[str, int] = {
+            "dials": 0, "failovers": 0, "redirects": 0,
+        }
+
+    # -- address rotation --------------------------------------------------
+
+    @property
+    def current(self) -> Address:
+        return self.addresses[self._idx]
+
+    def _advance(self, hint: Optional[Address]) -> None:
+        self._close_sock()
+        if hint is not None:
+            hint = (hint[0], int(hint[1]))
+            if hint not in self.addresses:
+                self.addresses.append(hint)
+            self._idx = self.addresses.index(hint)
+        else:
+            self._idx = (self._idx + 1) % len(self.addresses)
+
+    # -- transport ---------------------------------------------------------
+
+    def _attempt(self, msg: ClusterMsg, body: dict) -> dict:
+        if self._sock is None:
+            self._sock = socket.create_connection(
+                self.current, timeout=self.policy.connect_timeout)
+            self._sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+            self._sock.settimeout(self.policy.io_timeout)
+            self.stats["dials"] += 1
+        try:
+            return request(self._sock, msg, body)
+        except (ConnectionError, TimeoutError, OSError):
+            self._close_sock()
+            raise
+
+    def call(self, msg: ClusterMsg, body: dict) -> dict:
+        """One control round-trip with failover. Raises
+        :class:`ClusterError` for non-redirect application errors and
+        :class:`RetriesExhausted` when every address stayed unreachable
+        (or kept answering ``not_leader``) through every attempt."""
+        with self._lock:
+            last: Optional[BaseException] = None
+            for delay in self.policy.delays() + [None]:
+                # not_leader hops are free (no backoff) but bounded by
+                # the address count so a leaderless interregnum cannot
+                # spin the redirect loop forever
+                for _ in range(len(self.addresses) + 1):
+                    try:
+                        payload = self._attempt(msg, body)
+                    except ClusterError as e:
+                        if e.code != ERR_NOT_LEADER:
+                            raise
+                        last = e
+                        self.stats["redirects"] += 1
+                        self._advance(e.hint)
+                        continue
+                    except (ConnectionError, TimeoutError, OSError) as e:
+                        last = e
+                        self.stats["failovers"] += 1
+                        self._advance(None)
+                        break  # transport fault: back off, then retry
+                    got = payload.get(EPOCH_FIELD)
+                    if isinstance(got, int) and got > self.epoch:
+                        self.epoch = got
+                    return payload
+                if delay is None:
+                    break
+                self.policy.sleep(delay)
+            raise RetriesExhausted(
+                f"{self.what} {msg.name} failed over "
+                f"{len(self.addresses)} address(es) after "
+                f"{self.policy.attempts} attempts: {last!r}") from last
+
+    def stale(self, payload: dict) -> bool:
+        """True when ``payload`` was produced by a deposed leader: its
+        epoch is below the highest this channel has ever observed.
+        (A payload with no epoch predates epochs and is never fenced.)"""
+        got = payload.get(EPOCH_FIELD)
+        return isinstance(got, int) and got < self.epoch
+
+    # -- lifecycle ---------------------------------------------------------
+
+    def _close_sock(self) -> None:
+        if self._sock is not None:
+            try:
+                self._sock.close()
+            except OSError:
+                pass
+            self._sock = None
+
+    def close(self) -> None:
+        with self._lock:
+            self._close_sock()

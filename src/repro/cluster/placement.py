@@ -50,6 +50,30 @@ def plan_put(n_blocks: int, load: Dict[str, int], rf: int) -> List[List[str]]:
     return plan
 
 
+def scan_replication(files: Mapping[str, dict],
+                     locations: Mapping[str, Set[str]],
+                     alive: Set[str], rf: int
+                     ) -> Tuple[Dict[str, Set[str]], Set[str]]:
+    """One pass over the namespace: ``(under_replicated, lost)``.
+
+    ``under_replicated`` maps block id -> its live holders for every
+    block below ``rf`` that still has at least one live copy (the input
+    :func:`plan_replication` consumes); ``lost`` is the set of blocks
+    with zero live holders. Pure — the MetaNode calls it under its lock
+    with snapshots of its state, and recovery reuses it to re-derive
+    health from the first post-restart block reports."""
+    under: Dict[str, Set[str]] = {}
+    lost: Set[str] = set()
+    for meta in files.values():
+        for blk in meta["blocks"]:
+            live = locations.get(blk["id"], set()) & alive
+            if not live:
+                lost.add(blk["id"])
+            elif len(live) < rf:
+                under[blk["id"]] = live
+    return under, lost
+
+
 def plan_replication(replicas: Mapping[str, Set[str]], alive: Set[str],
                      rf: int, load: Mapping[str, int],
                      skip: Iterable[Tuple[str, str]] = ()) -> List[Move]:

@@ -46,6 +46,8 @@ class ClusterMsg(enum.IntEnum):
     STATE = 8  # client -> meta: cluster health snapshot
     OK = 9  # meta -> any: success reply, JSON result body
     ERR = 10  # meta -> any: failure reply, {"error": ...}
+    PING = 11  # any -> meta: identity probe ({epoch, role, seq, meta_id})
+    SYNC = 12  # standby -> leader: tail journal records since a sequence
 
 
 # command ops carried in a HEARTBEAT OK reply ({"commands": [...]}) —
@@ -54,9 +56,31 @@ class ClusterMsg(enum.IntEnum):
 CMD_REPLICATE = "replicate"  # push one block to a peer data node
 CMD_DROP = "drop"  # delete one block from the local store
 
+# Every OK reply from a MetaNode carries the sender's leader epoch under
+# this key; command batches and commit acks inherit it. Receivers fence:
+# a reply whose epoch is below the highest epoch ever observed comes
+# from a deposed leader, and its commands are no-ops.
+EPOCH_FIELD = "epoch"
+
+# machine-readable ERR codes (carried next to the human-readable
+# "error" string) so recovery paths do not have to pattern-match text
+ERR_UNREGISTERED = "unregistered"  # heartbeat from a node the meta forgot
+#                                    (blank restart): re-REGISTER to recover
+ERR_NOT_LEADER = "not_leader"  # mutating request hit a standby; the body
+#                                may carry {"leader": [host, port]} as a hint
+
 
 class ClusterError(RuntimeError):
-    """A control request failed (ERR reply or protocol violation)."""
+    """A control request failed (ERR reply or protocol violation).
+
+    ``code`` is the machine-readable ERR code (``ERR_UNREGISTERED``,
+    ``ERR_NOT_LEADER``, or None); ``hint`` is the optional leader
+    address a standby redirects to."""
+
+    def __init__(self, message: str, code: str = None, hint=None):
+        super().__init__(message)
+        self.code = code
+        self.hint = tuple(hint) if hint else None
 
 
 def new_block_id() -> str:
@@ -102,7 +126,9 @@ def request(sock: socket.socket, msg: ClusterMsg, body: dict) -> dict:
     send_msg(sock, msg, body)
     reply, payload = recv_msg(sock)
     if reply == ClusterMsg.ERR:
-        raise ClusterError(payload.get("error", "unknown cluster error"))
+        raise ClusterError(payload.get("error", "unknown cluster error"),
+                           code=payload.get("code"),
+                           hint=payload.get("leader"))
     if reply != ClusterMsg.OK:
         raise ClusterError(f"unexpected reply {reply!r}")
     return payload

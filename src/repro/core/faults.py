@@ -331,3 +331,102 @@ class FaultyProxy:
 
     def __exit__(self, *exc) -> None:
         self.close()
+
+
+class Trigger:
+    """Fire ``action`` exactly once, the first time ``predicate()`` turns
+    true. A background thread polls the predicate (``poll`` seconds apart)
+    until it fires, ``timeout`` elapses, or the owning harness closes.
+
+    The building block of :class:`ChaosHarness`: chaos scenarios are
+    written as *state-triggered* events ("kill the leader after the first
+    re-replication is planned") instead of timer-based ones, so they fire
+    at the interesting moment on fast and slow machines alike.
+    """
+
+    def __init__(self, predicate: Callable[[], bool],
+                 action: Callable[[], None], name: str = "trigger",
+                 poll: float = 0.01, timeout: float = 30.0):
+        self.predicate = predicate
+        self.action = action
+        self.name = name
+        self.poll = poll
+        self.timeout = timeout
+        self.fired = threading.Event()
+        self.timed_out = False
+        self.error: Optional[BaseException] = None
+        self._stop = threading.Event()
+        self._thread = threading.Thread(target=self._run,
+                                        name=f"chaos-{name}", daemon=True)
+        self._thread.start()
+
+    def _run(self) -> None:
+        deadline = time.monotonic() + self.timeout
+        while not self._stop.is_set():
+            try:
+                if self.predicate():
+                    try:
+                        self.action()
+                    finally:
+                        self.fired.set()
+                    return
+            except Exception as e:  # noqa: BLE001 - a racing predicate
+                # (peer mid-death) must not kill the trigger thread
+                self.error = e
+            if time.monotonic() >= deadline:
+                self.timed_out = True
+                return
+            self._stop.wait(self.poll)
+
+    def wait(self, timeout: float = 30.0) -> bool:
+        """Block until the trigger fired; False on timeout."""
+        return self.fired.wait(timeout)
+
+    def cancel(self) -> None:
+        self._stop.set()
+        self._thread.join(2.0)
+
+
+class ChaosHarness:
+    """A scenario's worth of state-triggered fault injections.
+
+    Register events with :meth:`when` ("once this predicate holds, run
+    this action"), drive the workload under test, then :meth:`wait` for
+    every trigger to have fired (asserting the scenario actually
+    exercised the faults it meant to — a chaos test whose kill never
+    fired is a false pass). Use as a context manager so stray trigger
+    threads never outlive a failing test.
+    """
+
+    def __init__(self, poll: float = 0.01, timeout: float = 30.0):
+        self.poll = poll
+        self.timeout = timeout
+        self.triggers: List[Trigger] = []
+
+    def when(self, predicate: Callable[[], bool],
+             action: Callable[[], None], name: str = "") -> Trigger:
+        trig = Trigger(predicate, action,
+                       name=name or f"event-{len(self.triggers)}",
+                       poll=self.poll, timeout=self.timeout)
+        self.triggers.append(trig)
+        return trig
+
+    def wait(self, timeout: float = 30.0) -> None:
+        """Block until every registered trigger fired; raises
+        :class:`DeadlineExceeded` naming the stragglers otherwise."""
+        deadline = time.monotonic() + timeout
+        for trig in self.triggers:
+            if not trig.fired.wait(max(0.0, deadline - time.monotonic())):
+                raise DeadlineExceeded(
+                    f"chaos trigger {trig.name!r} never fired "
+                    f"(timed_out={trig.timed_out}, error={trig.error!r})")
+
+    def close(self) -> None:
+        for trig in self.triggers:
+            trig.cancel()
+
+    def __enter__(self) -> "ChaosHarness":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()

@@ -114,3 +114,48 @@ def test_cluster_checkpoint_roundtrip_gc_and_failover(tmp_path):
         for n in nodes[1:]:
             n.stop()
         meta.stop()
+
+
+def test_cluster_checkpoint_survives_metanode_death(tmp_path):
+    """The control plane is no longer the single point of checkpoint
+    loss: with a journaled MetaNode, a save / kill-metanode / restart /
+    restore cycle round-trips — and ``cluster=`` accepts plain metanode
+    addresses (a throwaway failover client per call) as well as a live
+    ``ClusterClient``."""
+    from repro.cluster import DataNode, MetaNode
+    from repro.core.faults import RetryPolicy
+
+    jdir = tmp_path / "wal"
+    meta = MetaNode(replication=2, heartbeat_timeout=0.5,
+                    tick_interval=0.1, journal_dir=str(jdir)).start()
+    port = meta.address[1]
+    nodes = [
+        DataNode(meta.address, str(tmp_path / f"n{i}"), node_id=f"n{i}",
+                 heartbeat_interval=0.05,
+                 policy=RetryPolicy(attempts=4, base_delay=0.05,
+                                    connect_timeout=2.0)).start()
+        for i in range(2)
+    ]
+    try:
+        like = jax.eval_shape(_tree)
+        # address form instead of a client instance
+        xdfs_ckpt.save(_tree(1), "ckpt", step=1, cluster=meta.address)
+        meta.kill()  # crash between save and restore
+        meta = MetaNode(replication=2, heartbeat_timeout=0.5,
+                        tick_interval=0.1, port=port,
+                        journal_dir=str(jdir)).start()
+        assert xdfs_ckpt.latest_step("ckpt", cluster=meta.address) == 1
+        restored, step = xdfs_ckpt.restore("ckpt", like,
+                                           cluster=meta.address)
+        assert step == 1
+        for a, b in zip(jax.tree.leaves(_tree(1)),
+                        jax.tree.leaves(restored)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        # the recovered control plane keeps checkpointing: next step
+        # saves and becomes the latest
+        xdfs_ckpt.save(_tree(2), "ckpt", step=2, cluster=meta.address)
+        assert xdfs_ckpt.latest_step("ckpt", cluster=meta.address) == 2
+    finally:
+        for n in nodes:
+            n.stop()
+        meta.stop()

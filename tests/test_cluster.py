@@ -504,3 +504,233 @@ def test_cluster_rebalance_e2e(tmp_path):
         for n in [n0, *others]:
             n.stop()
         meta.stop()
+
+
+# ---------------------------------------------------------------------------
+# control-plane durability + failover
+# ---------------------------------------------------------------------------
+
+
+def test_metanode_restart_without_journal_loses_namespace(tmp_path):
+    """Regression pin for the pre-journal data-loss shape: a MetaNode
+    restart with no journal_dir forgets every committed file even though
+    the blocks still sit on the data nodes' disks. Kept as the contrast
+    case for test_metanode_restart_with_journal_recovers below."""
+    meta, nodes = _cluster(tmp_path, n=2)
+    cli = ClusterClient(meta.address, block_size=64 << 10)
+    port = meta.address[1]
+    try:
+        cli.put("gone.bin", data=b"x" * 1000)
+        assert cli.get("gone.bin") == b"x" * 1000
+        meta.stop()
+        meta = MetaNode(replication=2, heartbeat_timeout=0.5,
+                        tick_interval=0.1, port=port).start()
+        cli2 = ClusterClient(meta.address, block_size=64 << 10)
+        with pytest.raises(ClusterError, match="unknown file"):
+            cli2.get("gone.bin")
+        cli2.close()
+    finally:
+        cli.close()
+        for n in nodes:
+            n.stop()
+        meta.stop()
+
+
+def test_metanode_restart_with_journal_recovers(tmp_path):
+    """The tentpole: kill the journaled MetaNode (no snapshot, no
+    goodbye), restart it on the same port + journal dir, and every
+    acknowledged commit is back — lookups serve, datanodes re-attach via
+    their heartbeats, and new puts work."""
+    jdir = tmp_path / "journal"
+    meta = MetaNode(replication=2, heartbeat_timeout=0.5,
+                    tick_interval=0.1, journal_dir=str(jdir)).start()
+    port = meta.address[1]
+    nodes = [
+        DataNode(meta.address, str(tmp_path / f"n{i}"), node_id=f"n{i}",
+                 heartbeat_interval=0.05).start()
+        for i in range(2)
+    ]
+    cli = ClusterClient(meta.address, block_size=64 << 10)
+    data = os.urandom(256 << 10)
+    try:
+        cli.put("kept.bin", data=data)
+        meta.kill()  # crash: whatever fsync'd is all the restart gets
+        meta = MetaNode(replication=2, heartbeat_timeout=0.5,
+                        tick_interval=0.1, port=port,
+                        journal_dir=str(jdir)).start()
+        cli2 = ClusterClient(meta.address, block_size=64 << 10)
+        try:
+            assert meta.stats["replayed_records"] > 0
+            assert cli2.get("kept.bin") == data
+            # datanodes heartbeat their way back in (same node_ids were
+            # replayed from the journal, so no re-register needed) and a
+            # fresh put stripes normally
+            _await(lambda: all(n["alive"]
+                               for n in cli2.state()["nodes"]),
+                   msg="datanodes re-attach after metanode restart")
+            cli2.put("new.bin", data=b"n" * 100)
+            assert cli2.get("new.bin") == b"n" * 100
+        finally:
+            cli2.close()
+    finally:
+        cli.close()
+        for n in nodes:
+            n.stop()
+        meta.stop()
+
+
+def test_heartbeat_unregistered_auto_reregisters(tmp_path):
+    """A metanode that forgot a node (restarted with a blank namespace)
+    answers its heartbeat with the `unregistered` code; the datanode
+    recovers by re-registering and beating again instead of erroring
+    until a human notices."""
+    meta = MetaNode(replication=1, heartbeat_timeout=0.5,
+                    tick_interval=0).start()
+    dn = DataNode(meta.address, str(tmp_path / "n0"), node_id="n0",
+                  auto_heartbeat=False).start()
+    try:
+        dn.heartbeat_once()
+        # simulate the blank restart: forget the node server-side
+        with meta._lock:
+            meta.nodes.pop("n0")
+            meta.detector.forget("n0")
+        dn.heartbeat_once()  # would raise before the satellite fix
+        assert dn.stats["reregisters"] == 1
+        assert dn.stats["heartbeats"] == 2
+        assert "n0" in meta.nodes
+    finally:
+        dn.stop()
+        meta.stop()
+
+
+def test_datanode_error_buffer_is_bounded(tmp_path):
+    """The heartbeat loop's error list no longer grows without bound
+    while the metanode is down: it is a deque(maxlen) plus a dropped
+    counter."""
+    meta = MetaNode(replication=1, heartbeat_timeout=0.5,
+                    tick_interval=0).start()
+    dn = DataNode(meta.address, str(tmp_path / "n0"), node_id="n0",
+                  auto_heartbeat=False).start()
+    try:
+        cap = dn.errors.maxlen
+        assert cap is not None and cap > 0
+        for _ in range(cap + 5):
+            dn._note_error(RuntimeError("x"))
+        assert len(dn.errors) == cap
+        assert dn.stats["errors_dropped"] == 5
+        assert meta.errors.maxlen is not None  # metanode side too
+    finally:
+        dn.stop()
+        meta.stop()
+
+
+def test_epoch_fencing_discards_stale_commands():
+    """A reply stamped with a lower epoch than the channel has observed
+    is from a deposed leader: its command batch must be a no-op."""
+    from repro.cluster import ControlChannel, EPOCH_FIELD
+
+    ch = ControlChannel([("127.0.0.1", 1)])
+    assert not ch.stale({EPOCH_FIELD: 0})  # nothing observed yet
+    ch.epoch = 3
+    assert ch.stale({EPOCH_FIELD: 2})
+    assert not ch.stale({EPOCH_FIELD: 3})
+    assert not ch.stale({})  # pre-epoch peers are never fenced
+    ch.close()
+
+
+def test_standby_rejects_mutations_with_leader_hint():
+    """A standby answers mutating requests with the not_leader code and
+    its leader hint; PING and STATE still serve (observability)."""
+    clock = FakeClock()
+    meta = MetaNode(clock=clock, peers=[("127.0.0.1", 9)])
+    assert meta.role == "standby"
+    meta._leader_addr = ("127.0.0.1", 9)
+    with pytest.raises(ClusterError) as ei:
+        meta.dispatch(ClusterMsg.COMMIT, {"name": "f", "size": 0,
+                                          "block_size": 1, "blocks": []})
+    assert ei.value.code == wire.ERR_NOT_LEADER
+    assert ei.value.hint == ("127.0.0.1", 9)
+    assert meta.dispatch(ClusterMsg.PING, {})["role"] == "standby"
+    assert meta.dispatch(ClusterMsg.STATE, {})["role"] == "standby"
+
+
+def test_sync_serves_tail_or_snapshot(tmp_path):
+    """SYNC returns the journal tail when the follower is close behind,
+    a full snapshot when it is too far behind (or ahead, post-divergence),
+    and replies carry the leader's epoch for fencing."""
+    clock = FakeClock()
+    meta = MetaNode(clock=clock, journal_dir=str(tmp_path))
+    meta._assume_leadership(1)
+    meta.handle_register({"node_id": "a", "host": "h", "port": 1})
+    meta.handle_commit({
+        "name": "f", "size": 128, "block_size": 128,
+        "blocks": [{"id": "x", "offset": 0, "length": 128, "crc32": 0,
+                    "nodes": ["a"]}],
+    })
+    reply = meta.dispatch(ClusterMsg.SYNC, {"since": 1})
+    assert [r[1] for r in reply["records"]] == ["register", "commit"]
+    assert reply[wire.EPOCH_FIELD] == 1
+    # fully caught up: empty tail
+    assert meta.dispatch(ClusterMsg.SYNC, {"since": meta.seq})["records"] == []
+    # ahead of the leader (divergence): full snapshot
+    assert "snapshot" in meta.dispatch(ClusterMsg.SYNC,
+                                       {"since": meta.seq + 10})
+    meta.journal.close()
+
+
+def test_standby_applies_sync_and_promotes():
+    """Fake-clock standby lifecycle: applying a SYNC reply replays the
+    leader's records; when the lease expires the standby promotes with a
+    bumped epoch."""
+    clock = FakeClock()
+    leader = MetaNode(clock=clock)
+    leader._assume_leadership(1)
+    leader.handle_register({"node_id": "a", "host": "h", "port": 1})
+    leader.handle_commit({
+        "name": "f", "size": 128, "block_size": 128,
+        "blocks": [{"id": "x", "offset": 0, "length": 128, "crc32": 0,
+                    "nodes": ["a"]}],
+    })
+    standby = MetaNode(clock=clock, peers=[("127.0.0.1", 9)],
+                       lease_timeout=1.0)
+    reply = leader.handle_sync({"since": 0})
+    reply[wire.EPOCH_FIELD] = leader.epoch
+    standby._apply_sync(reply)
+    assert standby.seq == leader.seq
+    assert "f" in standby.files
+    assert standby.epoch == 1
+    # lease expiry -> promotion past every observed epoch
+    clock.advance(1.5)
+    assert standby.lease.expired()
+    standby.promote()
+    assert standby.role == "leader"
+    assert standby.epoch == 2
+    assert standby.stats["promotions"] == 1
+
+
+def test_client_fails_over_metanode_list(tmp_path):
+    """A client created against [dead, live] metanode addresses fails
+    over transparently on the first call."""
+    meta = MetaNode(replication=1, heartbeat_timeout=0.5,
+                    tick_interval=0.1).start()
+    dn = DataNode(meta.address, str(tmp_path / "n0"), node_id="n0",
+                  heartbeat_interval=0.05).start()
+    # a dead address: bind+close to get a port nobody listens on
+    s = socket.socket()
+    s.bind(("127.0.0.1", 0))
+    dead = s.getsockname()[:2]
+    s.close()
+    from repro.core.faults import RetryPolicy
+    cli = ClusterClient([dead, meta.address],
+                        block_size=64 << 10,
+                        policy=RetryPolicy(attempts=3, base_delay=0.01,
+                                           connect_timeout=2.0))
+    try:
+        cli.put("x.bin", data=b"hello")
+        assert cli.get("x.bin") == b"hello"
+        assert cli._ctrl.stats["failovers"] >= 1
+        assert cli.meta_address == meta.address
+    finally:
+        cli.close()
+        dn.stop()
+        meta.stop()

@@ -1,0 +1,276 @@
+"""Cluster chaos matrix: state-triggered fault injection against the
+durable, fail-over-able control plane.
+
+Every scenario drives a real multi-node cluster and fires its faults
+with :class:`repro.core.faults.ChaosHarness` triggers — predicates over
+live stats ("the first re-replication was planned", "three commits
+landed") rather than timers, so the fault hits the interesting moment on
+fast and slow machines alike. The invariant under test throughout: **no
+acknowledged commit is lost** — every ``put`` that returned is readable
+after the dust settles — and puts/gets/checkpoints complete through
+metanode crashes, leader failover, and partitions.
+
+Select with ``-m chaos`` (the CI fault-matrix job runs ``fault or
+chaos``).
+"""
+import os
+import socket
+import time
+
+import pytest
+
+from repro.cluster import ClusterClient, ClusterError, DataNode, MetaNode
+from repro.cluster.journal import JOURNAL_NAME
+from repro.core.faults import ChaosHarness, FaultyProxy, RetryPolicy
+
+pytestmark = pytest.mark.chaos
+
+T = 0.5  # heartbeat timeout driving every detector/lease in the matrix
+
+
+def _await(pred, timeout=30.0, msg="condition"):
+    deadline = time.monotonic() + timeout
+    while time.monotonic() < deadline:
+        if pred():
+            return
+        time.sleep(0.05)
+    raise AssertionError(f"timed out waiting for {msg}")
+
+
+def _deep_policy():
+    """A client policy deep enough to ride out a metanode restart or a
+    standby promotion (~2s of backoff across redials)."""
+    return RetryPolicy(attempts=8, base_delay=0.05, max_delay=0.5,
+                       connect_timeout=2.0, io_timeout=5.0)
+
+
+def _dead_port():
+    s = socket.socket()
+    s.bind(("127.0.0.1", 0))
+    addr = s.getsockname()[:2]
+    s.close()
+    return addr
+
+
+def _datanodes(metas, tmp_path, n):
+    return [
+        DataNode(metas, str(tmp_path / f"n{i}"), node_id=f"n{i}",
+                 heartbeat_interval=0.05,
+                 policy=RetryPolicy(attempts=3, base_delay=0.05,
+                                    connect_timeout=2.0, io_timeout=5.0))
+        .start()
+        for i in range(n)
+    ]
+
+
+def test_metanode_kill_restart_mid_put_stream(tmp_path):
+    """Kill -9 the journaled MetaNode in the middle of a stream of puts
+    and restart it on the same port: the client retries through the
+    outage, every acknowledged commit is readable afterwards, and the
+    restarted instance recovered from its journal."""
+    jdir = tmp_path / "wal"
+    state = {"meta": MetaNode(replication=2, heartbeat_timeout=T,
+                              tick_interval=0.1,
+                              journal_dir=str(jdir)).start()}
+    port = state["meta"].address[1]
+    nodes = _datanodes(state["meta"].address, tmp_path, 3)
+    cli = ClusterClient(state["meta"].address, block_size=32 << 10,
+                        policy=_deep_policy())
+
+    def crash_and_restart():
+        state["meta"].kill()
+        state["meta"] = MetaNode(replication=2, heartbeat_timeout=T,
+                                 tick_interval=0.1, port=port,
+                                 journal_dir=str(jdir)).start()
+
+    acked = {}
+    try:
+        with ChaosHarness() as chaos:
+            chaos.when(lambda: state["meta"].stats["commits"] >= 3,
+                       crash_and_restart, name="metanode crash+restart")
+            for i in range(8):
+                data = os.urandom(96 << 10)
+                cli.put(f"f{i}.bin", data=data)
+                acked[f"f{i}.bin"] = data
+            chaos.wait()
+        assert state["meta"].stats["replayed_records"] > 0
+        for name, data in acked.items():  # no acked commit lost
+            assert cli.get(name) == data
+        assert sorted(cli.list()) == sorted(acked)
+    finally:
+        cli.close()
+        for n in nodes:
+            n.stop()
+        state["meta"].stop()
+
+
+def test_leader_kill_during_rereplication_fails_over(tmp_path):
+    """A datanode dies; the leader plans its re-replication — and dies
+    mid-heal. The standby's lease expires, it promotes with a bumped
+    epoch, datanodes and the client fail over along their address
+    lists, and the heal completes under the new leader."""
+    m1 = MetaNode(replication=2, heartbeat_timeout=T, tick_interval=0.1,
+                  journal_dir=str(tmp_path / "m1"), meta_id="m1").start()
+    m2 = MetaNode(replication=2, heartbeat_timeout=T, tick_interval=0.1,
+                  journal_dir=str(tmp_path / "m2"), meta_id="m2",
+                  peers=[m1.address], lease_timeout=1.0).start()
+    assert m1.role == "leader" and m2.role == "standby"
+    metas = [m1.address, m2.address]
+    nodes = _datanodes(metas, tmp_path, 3)
+    cli = ClusterClient(metas, block_size=64 << 10, policy=_deep_policy())
+    data = os.urandom(512 << 10)
+    try:
+        cli.put("r.bin", data=data)
+        # the failover guarantee is bounded by replication: wait for the
+        # standby to have tailed the commit before faulting
+        _await(lambda: m2.seq >= m1.seq, msg="standby caught up")
+        with ChaosHarness() as chaos:
+            chaos.when(lambda: m1.stats["re_replications"] >= 1,
+                       m1.kill, name="leader dies mid-heal")
+            nodes[0].kill()
+            chaos.wait()
+        _await(lambda: m2.role == "leader", msg="standby promotion")
+        assert m2.epoch > m1.epoch - 1  # promoted past the dead leader
+        assert cli.get("r.bin") == data  # client failed over
+        _await(lambda: all(c >= 2 for c in m2.replication_of("r.bin")),
+               msg="re-replication heal under the new leader")
+        # the cluster is fully writable under the new leader
+        cli.put("after.bin", data=b"alive")
+        assert cli.get("after.bin") == b"alive"
+        assert cli._ctrl.epoch == m2.epoch
+    finally:
+        cli.close()
+        for n in nodes[1:]:
+            n.stop()
+        m2.stop()
+
+
+def test_journal_corruption_keeps_intact_prefix(tmp_path):
+    """Disk damage to the journal: trailing garbage is ignored entirely,
+    and a torn final record costs exactly the mutations from that record
+    on — everything before the tear replays."""
+    jdir = tmp_path / "wal"
+    meta = MetaNode(replication=2, heartbeat_timeout=T, tick_interval=0.1,
+                    journal_dir=str(jdir)).start()
+    port = meta.address[1]
+    nodes = _datanodes(meta.address, tmp_path, 2)
+    cli = ClusterClient(meta.address, block_size=64 << 10,
+                        policy=_deep_policy())
+    a = os.urandom(64 << 10)
+    b = os.urandom(64 << 10)
+    try:
+        cli.put("a.bin", data=a)
+        cli.put("b.bin", data=b)
+        meta.kill()
+        jpath = jdir / JOURNAL_NAME
+        raw = jpath.read_bytes()
+        # torn tail: garbage appended by a crashing writer
+        jpath.write_bytes(raw + b"\xde\xad\xbe\xef")
+        meta = MetaNode(replication=2, heartbeat_timeout=T,
+                        tick_interval=0.1, port=port,
+                        journal_dir=str(jdir)).start()
+        assert cli.get("a.bin") == a
+        assert cli.get("b.bin") == b
+        # torn final record: the last commit (b.bin) is cut mid-record —
+        # its ack never left a real crash, so only IT is lost
+        meta.kill()
+        jpath.write_bytes(raw[:-3])
+        meta = MetaNode(replication=2, heartbeat_timeout=T,
+                        tick_interval=0.1, port=port,
+                        journal_dir=str(jdir)).start()
+        assert cli.get("a.bin") == a
+        with pytest.raises(ClusterError):
+            cli.get("b.bin")
+        # and the survivor is a fully functional control plane
+        cli.put("c.bin", data=b"c")
+        assert cli.get("c.bin") == b"c"
+    finally:
+        cli.close()
+        for n in nodes:
+            n.stop()
+        meta.stop()
+
+
+def test_datanode_and_leader_double_fault(tmp_path):
+    """The double fault: a datanode and the leader die at the same
+    moment. The standby promotes, re-detects the dead datanode with its
+    own failure detector, heals replication on the survivors, and the
+    data never stops being readable."""
+    m1 = MetaNode(replication=2, heartbeat_timeout=T, tick_interval=0.1,
+                  journal_dir=str(tmp_path / "m1"), meta_id="m1").start()
+    m2 = MetaNode(replication=2, heartbeat_timeout=T, tick_interval=0.1,
+                  journal_dir=str(tmp_path / "m2"), meta_id="m2",
+                  peers=[m1.address], lease_timeout=1.0).start()
+    metas = [m1.address, m2.address]
+    nodes = _datanodes(metas, tmp_path, 3)
+    cli = ClusterClient(metas, block_size=64 << 10, policy=_deep_policy())
+    data = os.urandom(256 << 10)
+    try:
+        cli.put("d.bin", data=data)
+        _await(lambda: m2.seq >= m1.seq, msg="standby caught up")
+        with ChaosHarness() as chaos:
+            # both faults keyed on the same predicate = simultaneous
+            started = time.monotonic()
+            chaos.when(lambda: time.monotonic() >= started,
+                       nodes[1].kill, name="datanode dies")
+            chaos.when(lambda: time.monotonic() >= started,
+                       m1.kill, name="leader dies")
+            chaos.wait()
+        _await(lambda: m2.role == "leader", msg="standby promotion")
+        assert cli.get("d.bin") == data
+        _await(lambda: all(c >= 2 for c in m2.replication_of("d.bin")),
+               msg="heal on survivors under new leader")
+        st = cli.state()
+        assert st["meta_id"] == "m2" and st["lost"] == []
+    finally:
+        cli.close()
+        for n in (nodes[0], nodes[2]):
+            n.stop()
+        m2.stop()
+
+
+def test_heartbeat_partition_declares_dead_then_heals(tmp_path):
+    """A FaultyProxy between one datanode and the MetaNode simulates a
+    control-plane partition: heartbeats stop crossing, the detector
+    declares the node dead (reads keep serving from replicas), and when
+    the partition heals the node beats its way right back to alive —
+    no restart, no re-registration storm."""
+    meta = MetaNode(replication=2, heartbeat_timeout=T,
+                    tick_interval=0.1).start()
+    proxy = FaultyProxy(meta.address)
+    n0 = DataNode(proxy.address, str(tmp_path / "n0"), node_id="n0",
+                  heartbeat_interval=0.05,
+                  policy=RetryPolicy(attempts=2, base_delay=0.05,
+                                     connect_timeout=1.0,
+                                     io_timeout=2.0)).start()
+    n1 = DataNode(meta.address, str(tmp_path / "n1"), node_id="n1",
+                  heartbeat_interval=0.05).start()
+    cli = ClusterClient(meta.address, block_size=64 << 10,
+                        policy=_deep_policy())
+    data = os.urandom(128 << 10)
+
+    def alive(node_id):
+        st = {n["node_id"]: n["alive"] for n in cli.state()["nodes"]}
+        return st.get(node_id, False)
+
+    try:
+        cli.put("p.bin", data=data)
+        _await(lambda: alive("n0") and alive("n1"), msg="both nodes alive")
+        # partition: the proxy forwards to a dead port and severs every
+        # live control connection
+        proxy.upstream = _dead_port()
+        proxy.kill_all()
+        _await(lambda: not alive("n0"), msg="partitioned node declared dead")
+        assert alive("n1")
+        assert cli.get("p.bin") == data  # rf=2: the replica serves
+        # heal: heartbeats cross again, the detector revives the node
+        proxy.upstream = meta.address
+        _await(lambda: alive("n0"), msg="partition heal")
+        assert cli.get("p.bin") == data
+        assert cli.state()["lost"] == []
+    finally:
+        cli.close()
+        proxy.close()
+        n0.stop()
+        n1.stop()
+        meta.stop()

@@ -164,6 +164,53 @@ def test_cluster_framing_documented():
     assert f"version `{wire.VERSION}`" in text
 
 
+def test_journal_record_table_matches_module():
+    """The Control-plane durability record-tag table is normative: the
+    documented (tag, id) rows must match journal.RECORDS exactly. Ids
+    are backticked in the doc so these rows stay invisible to the
+    ClusterMsg table scraper above."""
+    from repro.cluster import journal
+
+    rows = re.findall(r"^\|\s*`(\w+)`\s*\|\s*`(\d+)`\s*\|",
+                      _cluster_section(), re.M)
+    documented = {name: int(val) for name, val in rows}
+    actual = {tag: tag_id for tag_id, tag in journal.RECORDS.items()}
+    assert documented == actual, (
+        f"ARCHITECTURE.md journal record table drifted from "
+        f"journal.RECORDS: documented {documented}, actual {actual}"
+    )
+
+
+def test_durability_section_documented():
+    from repro.cluster.journal import JOURNAL_NAME, SNAPSHOT_NAME
+
+    text = _cluster_section()
+    assert "### Control-plane durability" in text
+    assert f"`{JOURNAL_NAME}`" in text, (
+        "documented journal file name drifted from journal.JOURNAL_NAME"
+    )
+    assert f"`{SNAPSHOT_NAME}`" in text, (
+        "documented snapshot file name drifted from journal.SNAPSHOT_NAME"
+    )
+
+
+def test_epoch_fencing_documented():
+    """The fencing contract names the wire constants: the epoch reply
+    field and both control-plane error codes."""
+    from repro.cluster.wire import (EPOCH_FIELD, ERR_NOT_LEADER,
+                                    ERR_UNREGISTERED)
+
+    text = _cluster_section()
+    assert "### Leader epochs and fencing" in text
+    assert f"`{EPOCH_FIELD}`" in text, (
+        "documented epoch reply field drifted from wire.EPOCH_FIELD"
+    )
+    for code in (ERR_NOT_LEADER, ERR_UNREGISTERED):
+        assert f"`{code}`" in text, (
+            f"documented error code {code!r} drifted from wire.py"
+        )
+
+
 def test_cluster_command_ops_documented():
     """The heartbeat command table must carry exactly the op strings the
     DataNode executes (wire.CMD_REPLICATE / wire.CMD_DROP)."""

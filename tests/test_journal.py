@@ -1,0 +1,243 @@
+"""Unit tests for the MetaNode write-ahead journal (cluster/journal.py).
+
+Covers the durability contract in isolation: append/replay round-trips,
+torn-tail tolerance (every way a crash can mangle the final record),
+replay idempotence at the MetaNode level, and the snapshot+truncate
+cycle being equivalent to replaying the full history.
+"""
+import json
+import struct
+
+import pytest
+
+from repro.cluster.journal import (
+    JOURNAL_NAME,
+    REC_COMMIT,
+    REC_HEADER_SIZE,
+    REC_MAGIC,
+    RECORDS,
+    Journal,
+    encode_record,
+    load_snapshot,
+    recover,
+    replay,
+    write_snapshot,
+)
+from repro.cluster.metanode import MetaNode
+
+
+def _records(n, start=1):
+    return [(start + i, REC_COMMIT,
+             {"name": f"f{start + i}", "size": 1, "block_size": 1,
+              "blocks": []})
+            for i in range(n)]
+
+
+# -- append / replay round-trip ---------------------------------------------
+
+
+def test_round_trip(tmp_path):
+    j = Journal(tmp_path)
+    for seq, tag, body in _records(5):
+        j.append(seq, tag, body)
+    j.close()
+    assert j.replay() == _records(5)
+
+
+def test_replay_empty_and_missing(tmp_path):
+    assert list(replay(tmp_path / "nope")) == []
+    (tmp_path / JOURNAL_NAME).write_bytes(b"")
+    assert list(replay(tmp_path / JOURNAL_NAME)) == []
+
+
+def test_fsync_off_same_format(tmp_path):
+    j = Journal(tmp_path, fsync=False)
+    for seq, tag, body in _records(3):
+        j.append(seq, tag, body)
+    j.close()
+    assert j.stats["fsyncs"] == 0
+    assert len(j.replay()) == 3
+
+
+# -- torn tails --------------------------------------------------------------
+
+
+def _journal_with(tmp_path, n=3):
+    j = Journal(tmp_path)
+    for seq, tag, body in _records(n):
+        j.append(seq, tag, body)
+    j.close()
+    return j.path
+
+
+@pytest.mark.parametrize("cut", [1, REC_HEADER_SIZE - 1,
+                                 REC_HEADER_SIZE + 2])
+def test_torn_final_record(tmp_path, cut):
+    """A crash mid-append leaves a partial final record: replay returns
+    every earlier record and stops, never raising."""
+    path = _journal_with(tmp_path, n=3)
+    whole = path.read_bytes()
+    last = encode_record(*_records(1, start=3)[0])
+    path.write_bytes(whole[:len(whole) - len(last) + cut])
+    got = list(replay(path))
+    assert got == _records(2)
+
+
+def test_corrupt_crc_stops_replay(tmp_path):
+    path = _journal_with(tmp_path, n=3)
+    data = bytearray(path.read_bytes())
+    data[-1] ^= 0xFF  # flip a bit in the last record's body
+    path.write_bytes(bytes(data))
+    assert list(replay(path)) == _records(2)
+
+
+def test_garbage_mid_file_hides_suffix(tmp_path):
+    """Records after a corrupt one are never yielded, even if they would
+    verify individually — their prefix is broken."""
+    recs = _records(3)
+    good = b"".join(encode_record(*r) for r in recs)
+    first = encode_record(*recs[0])
+    data = bytearray(good)
+    data[len(first) + 4] ^= 0xFF  # corrupt record 2's seq field
+    path = tmp_path / JOURNAL_NAME
+    path.write_bytes(bytes(data))
+    assert list(replay(path)) == recs[:1]
+
+
+def test_bad_magic_and_tag_rejected(tmp_path):
+    path = tmp_path / JOURNAL_NAME
+    head = struct.Struct("<IQHII").pack(0xDEAD, 1, 1, 0, 0)
+    path.write_bytes(head)
+    assert list(replay(path)) == []
+    bad_tag = struct.Struct("<IQHII").pack(REC_MAGIC, 1, 999, 0, 0)
+    path.write_bytes(bad_tag)
+    assert list(replay(path)) == []
+
+
+# -- snapshot ----------------------------------------------------------------
+
+
+def test_snapshot_atomic_replace(tmp_path):
+    p = tmp_path / "snap.json"
+    write_snapshot(p, {"v": 1})
+    assert load_snapshot(p) == {"v": 1}
+    write_snapshot(p, {"v": 2})
+    assert load_snapshot(p) == {"v": 2}
+    assert not p.with_suffix(".tmp").exists()
+
+
+def test_load_snapshot_rejects_garbage(tmp_path):
+    p = tmp_path / "snap.json"
+    assert load_snapshot(p) is None
+    p.write_text("{not json")
+    assert load_snapshot(p) is None
+    p.write_text("[1,2]")  # valid JSON, wrong shape
+    assert load_snapshot(p) is None
+
+
+def test_snapshot_truncates_journal(tmp_path):
+    j = Journal(tmp_path)
+    for seq, tag, body in _records(4):
+        j.append(seq, tag, body)
+    j.write_snapshot({"seq": 4})
+    assert j.replay() == []
+    assert j.load_snapshot() == {"seq": 4}
+    assert j.stats["truncations"] == 1
+    j.close()
+
+
+def test_recover_cold_start(tmp_path):
+    j, state, records = recover(tmp_path)
+    assert state is None and records == []
+    j.close()
+
+
+# -- MetaNode-level equivalences ---------------------------------------------
+
+
+def _commit(meta, name, nodes=("n1", "n2"), block="b"):
+    meta.handle_commit({
+        "name": name, "size": 4, "block_size": 4,
+        "blocks": [{"id": f"{block}-{name}", "offset": 0, "length": 4,
+                    "crc32": 7, "nodes": list(nodes)}],
+    })
+
+
+def _namespace(meta):
+    return (meta.files, {b: sorted(h) for b, h in meta.locations.items()})
+
+
+def test_replay_recovers_namespace(tmp_path):
+    m1 = MetaNode(journal_dir=tmp_path)
+    m1.handle_register({"node_id": "n1", "host": "h", "port": 1})
+    m1.handle_register({"node_id": "n2", "host": "h", "port": 2})
+    _commit(m1, "a")
+    _commit(m1, "b")
+    m1.handle_delete({"name": "a"})
+    want = _namespace(m1)
+    m1.journal.close()
+
+    m2 = MetaNode(journal_dir=tmp_path)
+    assert _namespace(m2) == want
+    assert set(m2.nodes) == {"n1", "n2"}
+    assert m2.seq == m1.seq
+    assert m2.stats["replayed_records"] == m1.stats["journal_records"]
+    m2.journal.close()
+
+
+def test_replay_is_idempotent(tmp_path):
+    """Recovering twice from the same journal yields identical state
+    (apply overwrites, never accumulates)."""
+    m1 = MetaNode(journal_dir=tmp_path)
+    m1.handle_register({"node_id": "n1", "host": "h", "port": 1})
+    _commit(m1, "a")
+    _commit(m1, "a")  # overwrite: reclaim + re-commit
+    m1.journal.close()
+    m2 = MetaNode(journal_dir=tmp_path)
+    m2.journal.close()
+    m3 = MetaNode(journal_dir=tmp_path)
+    m3.journal.close()
+    assert _namespace(m2) == _namespace(m3) == _namespace(m1)
+
+
+def test_snapshot_then_replay_equivalent_to_full_replay(tmp_path, tmp_path_factory):
+    """snapshot + journal suffix == replaying the whole history."""
+    full_dir = tmp_path_factory.mktemp("full")
+    snap = MetaNode(journal_dir=tmp_path)
+    full = MetaNode(journal_dir=full_dir)
+    for m in (snap, full):
+        m.handle_register({"node_id": "n1", "host": "h", "port": 1})
+        _commit(m, "a")
+    snap.snapshot()  # snapshot mid-history; full keeps journaling
+    for m in (snap, full):
+        _commit(m, "b")
+        m.handle_delete({"name": "a"})
+        m.journal.close()
+    r_snap = MetaNode(journal_dir=tmp_path)
+    r_full = MetaNode(journal_dir=full_dir)
+    assert _namespace(r_snap) == _namespace(r_full)
+    assert r_snap.seq == r_full.seq
+    # and the snapshot path replayed only the post-snapshot suffix
+    assert r_snap.stats["replayed_records"] < r_full.stats["replayed_records"]
+    r_snap.journal.close()
+    r_full.journal.close()
+
+
+def test_epoch_survives_restart(tmp_path):
+    m1 = MetaNode(journal_dir=tmp_path)
+    m1._assume_leadership(7)
+    m1.journal.close()
+    m2 = MetaNode(journal_dir=tmp_path)
+    assert m2.epoch == 7
+    m2.journal.close()
+
+
+def test_record_table_is_dense_and_stable():
+    """Tag ids are a stable on-disk format: dense from 1, never reused."""
+    assert sorted(RECORDS) == list(range(1, len(RECORDS) + 1))
+    assert len(set(RECORDS.values())) == len(RECORDS)
+
+
+def test_encode_record_body_is_json(tmp_path):
+    rec = encode_record(1, REC_COMMIT, {"k": "v"})
+    assert json.loads(rec[REC_HEADER_SIZE:]) == {"k": "v"}
