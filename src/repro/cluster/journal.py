@@ -86,15 +86,15 @@ def encode_record(seq: int, tag: str, body: dict) -> bytes:
     return _REC.pack(REC_MAGIC, seq, _TAG_IDS[tag], len(raw), crc) + raw
 
 
-def replay(path) -> Iterator[Tuple[int, str, dict]]:
-    """Yield every intact ``(seq, tag, body)`` record of a journal file,
-    stopping silently at the first torn/corrupt record (a crash mid-
-    append, a partial disk write, or trailing garbage). Records past a
-    bad one are never yielded: without the prefix they continue, their
-    meaning cannot be trusted."""
+def _scan(path) -> Iterator[Tuple[int, int, str, dict]]:
+    """Yield ``(end_offset, seq, tag, body)`` for every intact record,
+    stopping silently at the first torn/corrupt one. ``end_offset`` is
+    the file offset just past the record — the length of the valid
+    prefix so far."""
     path = Path(path)
     if not path.exists():
         return
+    offset = 0
     with open(path, "rb") as f:
         while True:
             head = f.read(REC_HEADER_SIZE)
@@ -114,7 +114,45 @@ def replay(path) -> Iterator[Tuple[int, str, dict]]:
                 body = json.loads(raw)
             except ValueError:
                 return
-            yield seq, RECORDS[tag_id], body
+            offset += REC_HEADER_SIZE + length
+            yield offset, seq, RECORDS[tag_id], body
+
+
+def replay(path) -> Iterator[Tuple[int, str, dict]]:
+    """Yield every intact ``(seq, tag, body)`` record of a journal file,
+    stopping silently at the first torn/corrupt record (a crash mid-
+    append, a partial disk write, or trailing garbage). Records past a
+    bad one are never yielded: without the prefix they continue, their
+    meaning cannot be trusted."""
+    for _end, seq, tag, body in _scan(path):
+        yield seq, tag, body
+
+
+def valid_length(path) -> int:
+    """Byte length of the journal's intact prefix — where replay stops."""
+    end = 0
+    for end, _seq, _tag, _body in _scan(path):
+        pass
+    return end
+
+
+def truncate_torn_tail(path) -> int:
+    """Cut the journal back to its last intact record; returns the bytes
+    dropped. Without this, appending after a torn tail buries new
+    acked-and-fsynced records BEHIND garbage that replay stops at — the
+    next restart would silently lose every record written since."""
+    path = Path(path)
+    if not path.exists():
+        return 0
+    good = valid_length(path)
+    size = path.stat().st_size
+    if size <= good:
+        return 0
+    with open(path, "r+b") as f:
+        f.truncate(good)
+        f.flush()
+        os.fsync(f.fileno())
+    return size - good
 
 
 class Journal:
@@ -130,10 +168,15 @@ class Journal:
         self.directory.mkdir(parents=True, exist_ok=True)
         self.fsync = fsync
         self.path = self.directory / JOURNAL_NAME
-        self._f = open(self.path, "ab")
         self.stats: Dict[str, int] = {
             "appends": 0, "fsyncs": 0, "bytes": 0, "truncations": 0,
+            "torn_bytes_dropped": 0,
         }
+        # a crash can leave a torn/corrupt tail; cut it off BEFORE any
+        # append so new records land on the valid prefix, not after
+        # garbage that replay stops at
+        self.stats["torn_bytes_dropped"] = truncate_torn_tail(self.path)
+        self._f = open(self.path, "ab")
 
     def append(self, seq: int, tag: str, body: dict) -> None:
         rec = encode_record(seq, tag, body)

@@ -128,7 +128,12 @@ class ControlChannel:
             self._sock = socket.create_connection(
                 self.current, timeout=self.policy.connect_timeout)
             self._sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
-            self._sock.settimeout(self.policy.io_timeout)
+            # io_timeout=None must not mean block-forever here: a hung
+            # or partitioned metanode would wedge every control call, so
+            # fall back to the connect timeout
+            self._sock.settimeout(self.policy.io_timeout
+                                  if self.policy.io_timeout is not None
+                                  else self.policy.connect_timeout)
             self.stats["dials"] += 1
         try:
             return request(self._sock, msg, body)

@@ -204,6 +204,11 @@ class MetaNode:
             if state is not None:
                 self._load_state(state)
             for seq, tag, body in records:
+                if seq <= self.seq:
+                    # already reflected in the snapshot (a crash landed
+                    # between write_snapshot's os.replace and the
+                    # journal truncate); re-applying would re-reclaim
+                    continue
                 self._apply(tag, body)
                 self.seq = seq
                 self.stats["replayed_records"] += 1
@@ -421,8 +426,14 @@ class MetaNode:
             # metanode can serve lookups before its first reports)
             for b in body["blocks"]:
                 self.locations.setdefault(b["id"], set()).update(b["nodes"])
-            if old is not None:  # overwrite: reclaim the old blocks
-                self._reclaim(old)
+            if old is not None:
+                # overwrite: reclaim only blocks the new version dropped
+                # — a duplicated record (replay racing a snapshot) has
+                # old == new and must not drop the live blocks
+                kept = {b["id"] for b in body["blocks"]}
+                stale = [b for b in old["blocks"] if b["id"] not in kept]
+                if stale:
+                    self._reclaim({"blocks": stale})
         elif tag == REC_DELETE:
             meta = self.files.pop(body["name"], None)
             if meta is not None:
@@ -441,6 +452,9 @@ class MetaNode:
             raise ClusterError(f"unknown journal record tag {tag!r}")
 
     def _state_snapshot(self) -> dict:
+        # every container is copied, never aliased: handle_sync's reply
+        # is JSON-serialized AFTER the lock is released, racing live
+        # commits if the snapshot held references into self.files
         with self._lock:
             return {
                 "schema": 1,
@@ -448,7 +462,10 @@ class MetaNode:
                 "epoch": self.epoch,
                 "nodes": [{**n.as_dict(), "blocks": sorted(n.blocks)}
                           for n in self.nodes.values()],
-                "files": self.files,
+                "files": {name: {"size": m["size"],
+                                 "block_size": m["block_size"],
+                                 "blocks": [dict(b) for b in m["blocks"]]}
+                          for name, m in self.files.items()},
                 "locations": {b: sorted(h)
                               for b, h in self.locations.items()},
                 "pending_drops": [list(m) for m in self._pending_drops],

@@ -364,15 +364,21 @@ class Trigger:
         deadline = time.monotonic() + self.timeout
         while not self._stop.is_set():
             try:
-                if self.predicate():
-                    try:
-                        self.action()
-                    finally:
-                        self.fired.set()
-                    return
+                hit = self.predicate()
             except Exception as e:  # noqa: BLE001 - a racing predicate
                 # (peer mid-death) must not kill the trigger thread
                 self.error = e
+                hit = False
+            if hit:
+                # fire exactly once: even a raising action counts as
+                # the one invocation (recorded in .error, never retried)
+                try:
+                    self.action()
+                except Exception as e:  # noqa: BLE001
+                    self.error = e
+                finally:
+                    self.fired.set()
+                return
             if time.monotonic() >= deadline:
                 self.timed_out = True
                 return

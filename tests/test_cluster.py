@@ -638,6 +638,29 @@ def test_epoch_fencing_discards_stale_commands():
     ch.close()
 
 
+def test_control_channel_io_timeout_falls_back_to_connect_timeout():
+    """A hung (accepting but silent) metanode must time a control call
+    out: with io_timeout unset in the policy, the channel falls back to
+    connect_timeout instead of blocking forever on recv."""
+    from repro.cluster import ControlChannel
+    from repro.core.faults import RetriesExhausted, RetryPolicy
+
+    lsock = socket.socket()
+    lsock.bind(("127.0.0.1", 0))
+    lsock.listen(1)  # backlog accepts the dial; nobody ever replies
+    try:
+        ch = ControlChannel(
+            [lsock.getsockname()[:2]],
+            policy=RetryPolicy(attempts=1, connect_timeout=0.5))
+        t0 = time.monotonic()
+        with pytest.raises(RetriesExhausted):
+            ch.call(ClusterMsg.PING, {})
+        assert time.monotonic() - t0 < 5.0
+        ch.close()
+    finally:
+        lsock.close()
+
+
 def test_standby_rejects_mutations_with_leader_hint():
     """A standby answers mutating requests with the not_leader code and
     its leader hint; PING and STATE still serve (observability)."""

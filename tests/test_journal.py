@@ -21,9 +21,11 @@ from repro.cluster.journal import (
     load_snapshot,
     recover,
     replay,
+    valid_length,
     write_snapshot,
 )
 from repro.cluster.metanode import MetaNode
+from repro.cluster.wire import CMD_DROP
 
 
 def _records(n, start=1):
@@ -112,6 +114,38 @@ def test_bad_magic_and_tag_rejected(tmp_path):
     bad_tag = struct.Struct("<IQHII").pack(REC_MAGIC, 1, 999, 0, 0)
     path.write_bytes(bad_tag)
     assert list(replay(path)) == []
+
+
+def test_reopen_truncates_torn_tail(tmp_path):
+    """Reopening after a crash cuts the journal back to its last intact
+    record, so new appends land on the valid prefix — not after garbage
+    that replay stops at."""
+    path = _journal_with(tmp_path, n=3)
+    whole = path.read_bytes()
+    last = encode_record(*_records(1, start=3)[0])
+    path.write_bytes(whole[:len(whole) - len(last) + 3])  # tear record 3
+
+    j = Journal(tmp_path)
+    assert j.stats["torn_bytes_dropped"] > 0
+    assert valid_length(path) == path.stat().st_size
+    j.close()
+
+
+def test_appends_after_torn_tail_survive_second_restart(tmp_path):
+    """The double-crash data-loss shape: crash #1 tears the tail,
+    records are acked after restart, crash #2 replays. Before the
+    reopen-truncate fix those post-restart records sat behind the
+    garbage and were silently lost."""
+    path = _journal_with(tmp_path, n=3)
+    whole = path.read_bytes()
+    last = encode_record(*_records(1, start=3)[0])
+    path.write_bytes(whole[:len(whole) - len(last) + 3])  # crash #1
+
+    j = Journal(tmp_path)  # restart: torn tail truncated
+    j.append(*_records(1, start=3)[0])  # acked-and-fsynced post-crash
+    j.close()  # crash #2 (fsynced, so close == kill here)
+
+    assert list(replay(path)) == _records(3)
 
 
 # -- snapshot ----------------------------------------------------------------
@@ -221,6 +255,67 @@ def test_snapshot_then_replay_equivalent_to_full_replay(tmp_path, tmp_path_facto
     assert r_snap.stats["replayed_records"] < r_full.stats["replayed_records"]
     r_snap.journal.close()
     r_full.journal.close()
+
+
+def test_replay_skips_records_covered_by_snapshot(tmp_path):
+    """A crash between the snapshot's os.replace and the journal
+    truncate leaves both on disk. Replay must skip the overlap: before
+    the seq guard, a duplicated commit took the overwrite path and
+    reclaimed its OWN live blocks — enqueueing drops to every holder."""
+    m1 = MetaNode(journal_dir=tmp_path)
+    m1.handle_register({"node_id": "n1", "host": "h", "port": 1})
+    m1.handle_register({"node_id": "n2", "host": "h", "port": 2})
+    _commit(m1, "a")
+    want = _namespace(m1)
+    overlap = m1.journal.path.read_bytes()
+    m1.snapshot()
+    m1.journal.close()
+    m1.journal.path.write_bytes(overlap)  # crash window: truncate lost
+
+    m2 = MetaNode(journal_dir=tmp_path)
+    assert _namespace(m2) == want
+    assert m2.seq == m1.seq
+    assert m2.stats["replayed_records"] == 0
+    # the acknowledged file's blocks are still located and no drop was
+    # queued for them
+    assert "b-a" in m2.locations
+    assert all(not cmds for cmds in m2._commands.values())
+    m2.journal.close()
+
+
+def test_overwrite_reclaims_only_dropped_blocks(tmp_path):
+    """Re-committing a name drops exactly the blocks the new version no
+    longer references — never blocks both versions share."""
+    m = MetaNode(journal_dir=tmp_path)
+    m.handle_register({"node_id": "n1", "host": "h", "port": 1})
+    _commit(m, "a", nodes=("n1",), block="old")
+    _commit(m, "a", nodes=("n1",), block="new")
+    assert "old-a" not in m.locations
+    assert sorted(m.locations["new-a"]) == ["n1"]
+    drops = [c for c in m._commands["n1"] if c["op"] == CMD_DROP]
+    assert [c["block_id"] for c in drops] == ["old-a"]
+
+    # identical re-commit: nothing is stale, nothing gets dropped
+    _commit(m, "a", nodes=("n1",), block="new")
+    assert sorted(m.locations["new-a"]) == ["n1"]
+    drops = [c for c in m._commands["n1"] if c["op"] == CMD_DROP]
+    assert [c["block_id"] for c in drops] == ["old-a"]
+    m.journal.close()
+
+
+def test_state_snapshot_is_decoupled_from_live_state(tmp_path):
+    """handle_sync serializes the snapshot after the lock is released,
+    so it must hold copies, not references into the live namespace."""
+    m = MetaNode(journal_dir=tmp_path)
+    m.handle_register({"node_id": "n1", "host": "h", "port": 1})
+    _commit(m, "a")
+    snap = m._state_snapshot()
+    snap["files"]["a"]["blocks"][0]["id"] = "mutated"
+    snap["files"]["a"]["size"] = 999
+    snap["files"].pop("a")
+    assert m.files["a"]["size"] == 4
+    assert m.files["a"]["blocks"][0]["id"] == "b-a"
+    m.journal.close()
 
 
 def test_epoch_survives_restart(tmp_path):

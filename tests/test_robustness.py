@@ -25,6 +25,7 @@ from repro.core.faults import (
     FaultyProxy,
     RetriesExhausted,
     RetryPolicy,
+    Trigger,
 )
 from repro.core.header import (
     FLAG_BLOCK_CRC,
@@ -232,6 +233,25 @@ def test_retry_policy_never_retries_deadline_or_app_errors():
     with pytest.raises(ValueError):
         p.run(app)
     assert len(calls) == 1
+
+
+def test_trigger_fires_exactly_once_even_when_action_raises():
+    """A raising action still counts as the one firing: the error is
+    recorded and the poll loop exits instead of re-invoking the action
+    on every subsequent true predicate."""
+    calls = []
+
+    def boom():
+        calls.append(1)
+        raise RuntimeError("action failed")
+
+    trig = Trigger(lambda: True, boom, poll=0.001, timeout=5.0)
+    assert trig.wait(5.0)
+    trig._thread.join(2.0)
+    time.sleep(0.02)  # a few poll periods: the old bug re-fired here
+    assert calls == [1]
+    assert isinstance(trig.error, RuntimeError)
+    trig.cancel()
 
 
 # ---------------------------------------------------------------------------
