@@ -46,6 +46,8 @@ REQUIRED_SECTIONS = {
     "cluster_stripe": {"mode", "path", "nodes", "mb_s", "gain_vs_single"},
     "integrity": {"mode", "path", "block_kb", "mb_s", "gain_vs_off"},
     "control_plane": {"mode", "path", "ops_per_s"},
+    "c10k": {"mode", "path", "sessions", "ops_per_s", "p50_ms", "p99_ms",
+             "accepted", "rejected"},
 }
 SCALAR = (int, float, str, bool)
 
@@ -79,6 +81,15 @@ DURABILITY_MAX_SLOWDOWN = 100
 # broken, not slow (ops_per_s = 1/seconds, hence the 1/x floor).
 FAILOVER_MAX_SECONDS = 10.0
 
+# Baseline-free tail-latency invariant for the c10k session storm: every
+# traffic-mix row must keep p99 within this factor of p50. The measured
+# ratio on this host is ~1.6 for both server paths
+# (benchmarks/session_reuse.py run_c10k); 20x absorbs scheduler noise on
+# shared CI runners while still catching the structural failure the
+# event-loop core exists to prevent — a starved session's latency is
+# bounded by the whole storm's wall clock, which lands 100x+ over p50.
+C10K_P99_P50_MAX = 20
+
 # regression-gate config: identity key (matches a candidate row to its
 # baseline row) and the higher-is-better throughput metric per section
 SECTION_KEYS = {
@@ -90,6 +101,7 @@ SECTION_KEYS = {
     "cluster_stripe": ("mode", "path", "nodes"),
     "integrity": ("mode", "path", "block_kb"),
     "control_plane": ("mode", "path"),
+    "c10k": ("mode", "path"),
 }
 SECTION_METRIC = {
     "session_reuse": "speedup",
@@ -100,6 +112,7 @@ SECTION_METRIC = {
     "cluster_stripe": "mb_s",
     "integrity": "mb_s",
     "control_plane": "ops_per_s",
+    "c10k": "ops_per_s",
 }
 # Default allowed fractional drop below the baseline before the gate
 # fails. The microbench sections are best-of-N on one process (tight);
@@ -124,6 +137,10 @@ SECTION_TOLERANCE = {
     # the tight checks are the baseline-free invariants
     # (check_durability_invariant), not this cross-run gate
     "control_plane": 0.60,
+    # session-storm throughput multiplies short-lived threads and sockets,
+    # the noisiest thing a shared host schedules; the tight check is the
+    # baseline-free p99/p50 tail invariant (check_c10k_invariant)
+    "c10k": 0.60,
 }
 
 
@@ -266,6 +283,46 @@ def check_durability_invariant(doc: dict) -> List[str]:
     return errors
 
 
+def check_c10k_invariant(doc: dict) -> List[str]:
+    """The c10k section's acceptance invariants, checked on EVERY
+    candidate (no baseline needed): traffic-mix rows must keep
+    ``p99_ms <= C10K_P99_P50_MAX * p50_ms`` (both percentiles come from
+    the same storm, so host speed cancels out of the ratio), and the
+    admission row must show the cap actually refusing sessions while
+    still completing some."""
+    errors: List[str] = []
+    rows = (doc.get("sections") or {}).get("c10k") or []
+    for row in rows:
+        if not isinstance(row, dict):
+            continue
+        ident = f"mode={row.get('mode')}, path={row.get('path')}"
+        if row.get("mode") == "mix":
+            p50, p99 = row.get("p50_ms"), row.get("p99_ms")
+            if not all(isinstance(v, (int, float)) and v > 0
+                       for v in (p50, p99)):
+                errors.append(f"c10k[{ident}]: non-positive p50_ms/p99_ms")
+            elif p99 > C10K_P99_P50_MAX * p50:
+                errors.append(
+                    f"c10k[{ident}]: p99 {p99:g} ms is {p99 / p50:.1f}x "
+                    f"p50 {p50:g} ms (must be <= {C10K_P99_P50_MAX}x; "
+                    f"sessions are being starved, not scheduled)")
+            rej = row.get("rejected")
+            if isinstance(rej, (int, float)) and rej > 0:
+                errors.append(
+                    f"c10k[{ident}]: {rej:g} sessions refused with NO "
+                    f"admission cap configured")
+        if row.get("mode") == "admission":
+            acc, rej = row.get("accepted"), row.get("rejected")
+            if not isinstance(acc, (int, float)) or acc <= 0:
+                errors.append(
+                    f"c10k[{ident}]: capped storm completed no sessions")
+            if not isinstance(rej, (int, float)) or rej <= 0:
+                errors.append(
+                    f"c10k[{ident}]: admission cap refused no sessions — "
+                    f"the cap is not being enforced")
+    return errors
+
+
 def _index_rows(rows: List[dict], key_fields: Tuple[str, ...]) -> Dict:
     out = {}
     for row in rows:
@@ -318,7 +375,8 @@ def check(path: str, baseline_path: Optional[str] = None,
         return errors
     errors = (check_schema(doc) + check_batched_invariant(doc)
               + check_integrity_invariant(doc)
-              + check_durability_invariant(doc))
+              + check_durability_invariant(doc)
+              + check_c10k_invariant(doc))
     if errors or baseline_path is None:
         return errors
     base, base_errors = _load(baseline_path)

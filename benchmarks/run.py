@@ -19,6 +19,7 @@ Sections:
   0c. host_transfer  — engine x channels matrix (MB/s + writev calls)
   0d. cluster_stripe — striped 3-node cluster vs single-node session
   0e. integrity      — CRC-on vs CRC-off A/B on the batched datapath
+  0g. c10k           — session storm: event-loop vs thread-per-session core
   1. paper_figs      — Figs. 12-19 transfer reproductions (MTEDP vs MT vs MP)
   2. device_channels — xDFS ring collectives vs lax.psum (8-dev subprocess)
   3. kernels_bench   — attention / wkv / rglru scaling micro-benches
@@ -143,6 +144,9 @@ def main() -> None:
 
     sections["control_plane"] = control_plane.run(
         smoke=args.smoke or args.quick)
+
+    print("== section 0g: c10k session storm (loop vs threads) ==", flush=True)
+    sections["c10k"] = session_reuse.run_c10k(smoke=args.smoke or args.quick)
 
     if args.smoke:
         if args.json:

@@ -13,11 +13,14 @@ Moves N small files two ways and reports wall-clock per file:
 from __future__ import annotations
 
 import os
+import statistics
 import tempfile
+import threading
 import time
 from pathlib import Path
 
 from repro.core.api import XdfsClient, XdfsServer
+from repro.core.session import BusyError
 from repro.core.transfer import TransferSpec, run_transfer
 
 
@@ -71,6 +74,127 @@ def run(n_files: int = 8, size_kb: int = 256, n_channels: int = 4,
     return row
 
 
+def _pct(sorted_vals, q: float) -> float:
+    """Nearest-rank percentile on an already-sorted list."""
+    if not sorted_vals:
+        return 0.0
+    i = min(len(sorted_vals) - 1, int(round(q * (len(sorted_vals) - 1))))
+    return sorted_vals[i]
+
+
+def _session_storm(addr, sessions: int, concurrency: int, size: int,
+                   root: Path):
+    """``concurrency`` workers churn through ``sessions`` short sessions
+    (connect, 1 put + 1 get of a small file, close) and record the
+    end-to-end wall clock of each COMPLETED session. Returns
+    ``(latencies_s, completed_ops, refused, wall_s)``."""
+    payload = os.urandom(size)
+    lat: list = []
+    counters = {"next": 0, "ops": 0, "refused": 0}
+    lock = threading.Lock()
+
+    def worker(w: int) -> None:
+        name = f"c10k_w{w}.bin"
+        while True:
+            with lock:
+                if counters["next"] >= sessions:
+                    return
+                counters["next"] += 1
+            t0 = time.perf_counter()
+            try:
+                with XdfsClient.connect(addr, n_channels=1,
+                                        block_size=32 << 10) as cli:
+                    cli.put(None, name, data=payload).result(60)
+                    got = cli.get_bytes(name).result(60)
+                if len(got.data) != size:
+                    raise RuntimeError("short read in c10k mix")
+                dt = time.perf_counter() - t0
+                with lock:
+                    lat.append(dt)
+                    counters["ops"] += 2
+            except (BusyError, OSError):
+                # typed admission refusal (or the accept-side close of the
+                # pending-cap path): counted, not fatal — that is the point
+                with lock:
+                    counters["refused"] += 1
+
+    t0 = time.perf_counter()
+    threads = [threading.Thread(target=worker, args=(w,), daemon=True)
+               for w in range(concurrency)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    return lat, counters["ops"], counters["refused"], time.perf_counter() - t0
+
+
+def run_c10k(smoke: bool = False) -> list:
+    """C10k-style traffic mix: hundreds of short-lived small-file sessions
+    hammering one server, measured as per-session latency percentiles.
+
+    Rows (section ``c10k`` of BENCH_*.json):
+
+    * ``mix/loop``    — the sharded event-loop core (``loop=2``)
+    * ``mix/threads`` — the thread-per-session path, same storm
+    * ``admission/loop`` — the same storm against a ``max_sessions`` cap:
+      the interesting numbers are ``accepted``/``rejected`` (every refusal
+      is the TYPED ``ERR busy`` path, not a reset)
+
+    The baseline-free gate (`benchmarks/check_json.py`) checks
+    ``p99_ms <= C10K_P99_P50_MAX * p50_ms`` on the mix rows: a scheduler
+    that starves sessions fats the tail even when the mean stays healthy.
+    """
+    sessions = 150 if smoke else 600
+    concurrency = 32
+    size = 8 << 10
+    rows = []
+    for path, loop in (("loop", 2), ("threads", False)):
+        tmp = Path(tempfile.mkdtemp(prefix=f"xdfs_c10k_{path}_"))
+        with XdfsServer(engine="mtedp", root=str(tmp), loop=loop) as srv:
+            lat, ops, refused, wall = _session_storm(
+                srv.address, sessions, concurrency, size, tmp)
+            accepted = srv.stats["sessions"]
+        lat.sort()
+        rows.append({
+            "mode": "mix", "path": path, "sessions": sessions,
+            "concurrency": concurrency, "file_kb": size >> 10,
+            "accepted": accepted, "rejected": refused,
+            "ops_per_s": round(ops / wall, 1),
+            "p50_ms": round(1e3 * _pct(lat, 0.50), 2),
+            "p99_ms": round(1e3 * _pct(lat, 0.99), 2),
+            "mean_ms": round(1e3 * statistics.fmean(lat), 2) if lat else 0.0,
+        })
+        import shutil
+        shutil.rmtree(tmp, ignore_errors=True)
+
+    # admission arm: a hard session cap under the same storm — refusals
+    # must be typed (BusyError) and the survivors must still finish
+    cap = 8
+    tmp = Path(tempfile.mkdtemp(prefix="xdfs_c10k_adm_"))
+    with XdfsServer(engine="mtedp", root=str(tmp), loop=2,
+                    max_sessions=cap) as srv:
+        lat, ops, refused, wall = _session_storm(
+            srv.address, sessions // 2, concurrency, size, tmp)
+        accepted = srv.stats["sessions"]
+        srv_rejected = srv.stats["rejected"]
+    lat.sort()
+    rows.append({
+        "mode": "admission", "path": "loop", "sessions": sessions // 2,
+        "concurrency": concurrency, "file_kb": size >> 10,
+        "max_sessions": cap,
+        "accepted": accepted, "rejected": srv_rejected,
+        "ops_per_s": round(ops / wall, 1),
+        "p50_ms": round(1e3 * _pct(lat, 0.50), 2),
+        "p99_ms": round(1e3 * _pct(lat, 0.99), 2),
+        "mean_ms": round(1e3 * statistics.fmean(lat), 2) if lat else 0.0,
+    })
+    import shutil
+    shutil.rmtree(tmp, ignore_errors=True)
+    for row in rows:
+        print(",".join(f"{k}={v}" for k, v in row.items()), flush=True)
+    return rows
+
+
 if __name__ == "__main__":
     import argparse
 
@@ -79,5 +203,10 @@ if __name__ == "__main__":
     ap.add_argument("--kb", type=int, default=256)
     ap.add_argument("--channels", type=int, default=4)
     ap.add_argument("--engine", default="mtedp")
+    ap.add_argument("--c10k", action="store_true",
+                    help="run the c10k session-storm section instead")
     args = ap.parse_args()
-    run(args.files, args.kb, args.channels, args.engine)
+    if args.c10k:
+        run_c10k()
+    else:
+        run(args.files, args.kb, args.channels, args.engine)

@@ -134,7 +134,16 @@ class XdfsServer:
                  root: Optional[str] = None, host: str = "127.0.0.1",
                  port: int = 0, pool_slots: int = 32, backlog: int = 128,
                  tuning: Optional[SocketTuning] = None,
-                 splice: bool = False, io_timeout: Optional[float] = None):
+                 splice: bool = False, io_timeout: Optional[float] = None,
+                 loop: Union[bool, int] = False,
+                 max_sessions: Optional[int] = None,
+                 max_pending: Optional[int] = None,
+                 idle_timeout: Optional[float] = None,
+                 clock=time.monotonic,
+                 drr_quantum: Optional[int] = None,
+                 turn_budget: Optional[int] = None):
+        from repro.core import evloop
+
         self.engine = get_engine(engine)  # fail fast on unknown engines
         self.root = root
         self.host = host
@@ -151,6 +160,24 @@ class XdfsServer:
         # socket so accepted channels inherit them before the TCP
         # handshake fixes the window scale
         self.tuning = tuning or SocketTuning()
+        # ``loop`` selects the sharded event-loop core (core/evloop.py):
+        # True = default shard count, an int = that many shards, False =
+        # the thread-per-session path (still the default while engines
+        # with server-side thread affinity — mp splice — need it)
+        if isinstance(loop, bool):
+            self.loop_shards = evloop.DEFAULT_SHARDS if loop else 0
+        else:
+            self.loop_shards = max(1, int(loop))
+        # admission + scheduling knobs (loop mode)
+        self.max_sessions = max_sessions
+        self.max_pending = max_pending
+        self.idle_timeout = idle_timeout
+        self.handshake_timeout = HANDSHAKE_TIMEOUT
+        self.drr_quantum = drr_quantum or evloop.DRR_QUANTUM
+        self.turn_budget = turn_budget or evloop.TURN_BUDGET
+        self._clock = clock  # injectable for eviction/stall tests
+        self._shards: List["evloop.EventLoopShard"] = []
+        self._loop_live = 0  # admitted, not-yet-closed loop sessions
         self._lsock: Optional[socket.socket] = None
         self._accept_thread: Optional[threading.Thread] = None
         self._session_threads: List[threading.Thread] = []
@@ -161,6 +188,7 @@ class XdfsServer:
         self._lock = threading.Lock()
         self._closed_cv = threading.Condition(self._lock)
         self._stopping = False
+        self._draining = False
         self.errors: List[BaseException] = []  # session failures
         self.handshake_errors: List[BaseException] = []  # stray/bad connects
         self.last_tuning: Optional[SocketTuning] = None  # most recent session
@@ -169,20 +197,33 @@ class XdfsServer:
             "files": 0, "bytes": 0, "eofr_frames": 0, "eoft_frames": 0,
             "writev_calls": 0, "splice_bytes": 0, "recv_calls": 0,
             "splice_autodisables": 0, "crc_mismatches": 0,
+            "rejected": 0, "rejected_pending": 0, "evicted": 0,
         }
 
     # -- lifecycle ---------------------------------------------------------
 
     def start(self) -> "XdfsServer":
+        from repro.core.evloop import EventLoopShard
+
         lsock = socket.socket()
         lsock.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
         self.tuning.apply_buffers(lsock)
         lsock.bind((self.host, self._port))
         lsock.listen(self.backlog)
+        self._lsock = lsock
+        if self.loop_shards:
+            # sharded event-loop core: every shard registers the listener
+            # for accept fan-out; no accept thread, no session threads
+            lsock.setblocking(False)
+            self._shards = [EventLoopShard(self, i)
+                            for i in range(self.loop_shards)]
+            for sh in self._shards:
+                sh.attach_listener(lsock)
+                sh.start()
+            return self
         # a timeout so the accept loop notices _stopping: close() alone does
         # not wake a thread blocked in accept()
         lsock.settimeout(0.25)
-        self._lsock = lsock
         self._accept_thread = threading.Thread(
             target=self._accept_loop, name="xdfs-accept", daemon=True
         )
@@ -195,18 +236,52 @@ class XdfsServer:
         return self._lsock.getsockname()[:2]
 
     def stop(self, timeout: float = 10.0) -> None:
-        self._stopping = True
+        """Graceful shutdown bounded by ONE global deadline (joining each
+        session with the full timeout made worst-case stop time
+        ``timeout x n_sessions``). Loop mode drains: in-flight files (and
+        their verify exchange) complete, new work is refused with a typed
+        ``draining`` answer, idle sessions close immediately."""
+        deadline = time.monotonic() + timeout
+        self._draining = True
+        self._stopping = self._stopping or not self._shards
         if self._lsock is not None:
             try:
                 self._lsock.close()
             except OSError:
                 pass
+        if self._shards:
+            # unblock clients stuck mid-connect: a half-assembled session
+            # will never complete once the listener is gone
+            with self._lock:
+                parked = [s for chans in self._pending.values()
+                          for s in chans.values()]
+                self._pending.clear()
+                self._pending_neg.clear()
+                self._pending_since.clear()
+            for s in parked:
+                try:
+                    s.close()
+                except OSError:
+                    pass
+            for sh in self._shards:
+                sh.wake()
+            while time.monotonic() < deadline:
+                if all(not sh.sessions and not sh.handshakes
+                       for sh in self._shards):
+                    break
+                time.sleep(0.01)
+            self._stopping = True
+            for sh in self._shards:
+                sh.halt()
+            for sh in self._shards:
+                sh.join(max(0.2, deadline - time.monotonic()))
+            return
         if self._accept_thread is not None:
-            self._accept_thread.join(timeout)
+            self._accept_thread.join(max(0.0, deadline - time.monotonic()))
         with self._lock:
             live = list(self._session_threads)
         for t in live:
-            t.join(timeout)
+            t.join(max(0.0, deadline - time.monotonic()))
 
     def abort(self) -> None:
         """Crash the server: close the listener AND every live session's
@@ -215,6 +290,7 @@ class XdfsServer:
         cluster's node-kill uses (:meth:`stop` is the graceful path —
         it waits for open sessions, which a crash must not)."""
         self._stopping = True
+        self._draining = True
         if self._lsock is not None:
             try:
                 self._lsock.close()
@@ -224,6 +300,10 @@ class XdfsServer:
             socks = [s for lst in self._live_socks.values() for s in lst]
             socks.extend(s for chans in self._pending.values()
                          for s in chans.values())
+        for sh in self._shards:
+            socks.extend(hs.sock for hs in list(sh.handshakes.values()))
+            for sess in list(sh.sessions):
+                socks.extend(sess.socks)
         for s in socks:
             try:
                 s.shutdown(socket.SHUT_RDWR)
@@ -233,6 +313,10 @@ class XdfsServer:
                 s.close()
             except OSError:
                 pass
+        for sh in self._shards:
+            sh.halt()
+        for sh in self._shards:
+            sh.join(2.0)
         if self._accept_thread is not None:
             self._accept_thread.join(2.0)
 
@@ -271,10 +355,10 @@ class XdfsServer:
     def _prune_stale_handshakes(self) -> None:
         """Drop sessions whose remaining channels never arrived (client died
         mid-connect) so parked sockets and negotiations don't leak."""
-        now = time.monotonic()
+        now = self._clock()
         with self._lock:
             stale = [sid for sid, t0 in self._pending_since.items()
-                     if now - t0 > HANDSHAKE_TIMEOUT]
+                     if now - t0 > self.handshake_timeout]
             dropped = []
             for sid in stale:
                 dropped.extend(self._pending.pop(sid, {}).values())
@@ -305,7 +389,7 @@ class XdfsServer:
                 chans = self._pending.setdefault(hello.session, {})
                 stale = chans.get(hello.channel)
                 chans[hello.channel] = conn
-                self._pending_since.setdefault(hello.session, time.monotonic())
+                self._pending_since.setdefault(hello.session, self._clock())
             if stale is not None:
                 # a reconnect/duplicate hello for the same channel: the
                 # newer socket wins, the old one must not leak
@@ -396,6 +480,103 @@ class XdfsServer:
                     if t is not me and t.is_alive()
                 ]
                 self._closed_cv.notify_all()
+
+    # -- loop-mode session assembly (called from shard threads) ------------
+
+    def _pending_load(self) -> int:
+        """In-flight handshake work: demuxing connections plus parked
+        channels of half-assembled sessions (approximate across shards —
+        admission is a load-shedding valve, not an exact semaphore)."""
+        load = sum(len(sh.handshakes) for sh in self._shards)
+        with self._lock:
+            load += sum(len(chans) for chans in self._pending.values())
+        return load
+
+    def _park_from_loop(self, shard, hello, neg, sock) -> None:
+        """Loop-mode twin of :meth:`_handshake`'s parking step: record the
+        negotiation, park the channel under its session id (newer socket
+        wins a duplicate hello), then try to assemble the session."""
+        with self._lock:
+            if neg is not None:
+                self._pending_neg[hello.session] = neg
+                self.stats["negotiations"] += 1
+            chans = self._pending.setdefault(hello.session, {})
+            stale = chans.get(hello.channel)
+            chans[hello.channel] = sock
+            self._pending_since.setdefault(hello.session, self._clock())
+        if stale is not None:
+            try:
+                stale.close()
+            except OSError:
+                pass
+        self._maybe_start_loop_session(shard, hello.session)
+
+    def _maybe_start_loop_session(self, shard, session_id: bytes) -> None:
+        from repro.core.evloop import ERR_BUSY, ERR_DRAINING, LoopSession
+
+        with self._lock:
+            neg = self._pending_neg.get(session_id)
+            chans = self._pending.get(session_id, {})
+            if neg is None or len(chans) < neg.n_channels:
+                return
+            socks = [chans.get(i) for i in range(neg.n_channels)]
+            if any(s is None for s in socks):
+                return  # out-of-range/garbled indices — wait or prune
+            extras = [s for ch, s in chans.items() if ch >= neg.n_channels]
+            del self._pending_neg[session_id]
+            del self._pending[session_id]
+            self._pending_since.pop(session_id, None)
+            reject = None
+            if self._draining or self._stopping:
+                reject = ERR_DRAINING
+            elif (self.max_sessions is not None
+                  and self._loop_live >= self.max_sessions):
+                reject = ERR_BUSY
+            if reject is None:
+                self.stats["sessions"] += 1
+                self._loop_live += 1
+                tuning = SocketTuning.from_negotiation(neg)
+                for s in socks:
+                    tuning.apply(s)
+                self.last_tuning = tuning
+            else:
+                self.stats["rejected"] += 1
+        for s in extras:  # garbled out-of-range channel hellos must not leak
+            try:
+                s.close()
+            except OSError:
+                pass
+        # an admitted session lands on the least-loaded shard; a reject
+        # shell stays where the last handshake finished (it only answers)
+        target = (shard if reject is not None
+                  else min(self._shards, key=lambda sh: len(sh.sessions)))
+        sess = LoopSession(self, target, socks, neg, reject_kind=reject)
+        target.submit(sess.attach)
+
+    def _loop_session_closed(self, sess, error) -> None:
+        if sess.reject_kind is not None:
+            return  # never admitted: no stats, no closed count
+        st = sess.stats
+        with self._closed_cv:
+            self.stats["files"] += st.files
+            self.stats["bytes"] += st.bytes
+            self.stats["eofr_frames"] += st.eofr_frames
+            self.stats["eoft_frames"] += st.eoft_frames
+            self.stats["writev_calls"] += st.writev_calls
+            self.stats["splice_bytes"] += st.splice_bytes
+            self.stats["recv_calls"] += st.recv_calls
+            self.stats["splice_autodisables"] += st.splice_autodisables
+            self.stats["crc_mismatches"] += st.crc_mismatches
+            self.stats["sessions_closed"] += 1
+            self._loop_live -= 1
+            if error is not None:
+                self.errors.append(error)
+            self._closed_cv.notify_all()
+
+    def loop_sessions(self) -> list:
+        """Snapshot of live loop-mode sessions (observability + tests)."""
+        return [sess for sh in self._shards for sess in list(sh.sessions)
+                if sess.reject_kind is None]
 
 
 # ---------------------------------------------------------------------------

@@ -441,7 +441,7 @@ class SlabChannel:
                  "pending_bytes", "hdr", "payload_left", "payload_off",
                  "end_event", "recv_calls", "bytes", "blocks",
                  "_crc_on", "_crc", "_trl_left", "_trl_buf",
-                 "_addr", "verified", "crc_mismatches")
+                 "_addr", "verified", "crc_mismatches", "last_recv")
 
     def __init__(self, slab, block_size: int):
         # ``slab`` is a ringbuf.RecvSlab (or anything with a ``mem`` view)
@@ -460,6 +460,7 @@ class SlabChannel:
         self.payload_off = 0
         self.end_event: Optional[ChannelEvent] = None
         self.recv_calls = 0
+        self.last_recv = 0
         self.bytes = 0  # payload bytes landed
         self.blocks = 0  # frames fully landed
         # integrity mode (FLAG_BLOCK_CRC frames): running payload CRC, the
@@ -477,17 +478,26 @@ class SlabChannel:
     def free_space(self) -> int:
         return len(self.mem) - self.filled
 
-    def receive_once(self, sock: socket.socket) -> int:
+    def receive_once(self, sock: socket.socket, max_bytes: int = None) -> int:
         """One ``recv_into`` into the slab's free tail, then parse
         everything that landed. Returns the number of frames COMPLETED by
         this read (the caller's FSM/stat hook). Raises ``ConnectionError``
         on EOF and propagates ``BlockingIOError`` untouched (nonblocking
-        callers use it to yield)."""
-        r = sock.recv_into(self.mem[self.filled:])
+        callers use it to yield).
+
+        ``max_bytes`` caps the read below the slab's free space so a
+        fair-share scheduler (the server event loop's DRR queue) can bound
+        how much one channel drains per service turn. The raw byte count
+        of the last read is exposed as ``last_recv``."""
+        want = len(self.mem) - self.filled
+        if max_bytes is not None and max_bytes < want:
+            want = max_bytes
+        r = sock.recv_into(self.mem[self.filled:self.filled + want])
         if r == 0:
             raise ConnectionError("peer closed mid-stream")
         self.recv_calls += 1
         self.filled += r
+        self.last_recv = r
         return self._parse()
 
     def _parse(self) -> int:

@@ -1,0 +1,1077 @@
+"""Sharded server event loop — the C10k core of the xDFS server.
+
+The paper's server claim is *high concurrency*: thousands of mostly-idle
+sessions must cost neither a thread each nor unbounded memory, and busy
+sessions must not starve each other. ``XdfsServer(loop=True)`` replaces
+the thread-per-session internals with N event-loop *shards*, each a
+single thread owning one ``selectors`` instance:
+
+* **accept fan-out** — every shard registers the (nonblocking) listening
+  socket; whichever shard wakes first wins the ``accept`` race and keeps
+  the connection (losers see ``BlockingIOError`` and move on);
+* **handshake demux** — a per-connection :class:`HandshakeConn` state
+  machine parses the channel hello (and the control channel's
+  negotiation) incrementally, tolerating arbitrary fragmentation — a
+  byte-at-a-time client holds only a tiny parse state, never a thread;
+* **session scheduling** — every channel of every admitted session lives
+  on one shard as a :class:`LoopSession`, a nonblocking port of the
+  blocking ``ServerSession`` loop reusing the mtedp datapath primitives
+  (``SlabChannel`` receive parsing, ``FrameBuilder``/``advance_iovec``
+  scatter-gather send, the ``server_upload`` conformance FSM);
+* **fair shares** — channel readiness feeds a deficit-round-robin ready
+  queue: each loop turn spends a global byte budget, each session earns
+  a quantum of deficit when served, and channels the budget ran out on
+  keep their place at the FRONT of the queue (starved work ages forward;
+  freshly re-armed work joins at the back);
+* **admission control** — ``max_sessions`` caps live sessions and
+  ``max_pending`` caps in-flight handshakes; a refused session is parked
+  in a reject shell that answers every request with a typed
+  ``EXCEPTION {kind: "busy"|"draining"}`` (the client surfaces it as
+  ``BusyError``) so refusal is an answer, not a reset;
+* **idle eviction & graceful drain** — the shard tick (injectable clock,
+  the same idiom as ``autotune.ChannelTuner``/``FailureDetector``)
+  evicts sessions idle past ``idle_timeout`` and bounds mid-transfer
+  stalls by ``io_timeout``; ``stop()`` drains: in-flight files (and
+  their integrity verify exchange) complete, new work is refused.
+
+Layering: this module owns scheduling and nonblocking protocol state;
+the wire format and per-file semantics are imported from
+``core/session.py`` and ``core/engines`` — the loop datapath IS the
+slab datapath, byte for byte.
+"""
+from __future__ import annotations
+
+import json
+import os
+import selectors
+import socket
+import struct
+import threading
+import time
+from collections import deque
+from typing import Dict, List, Optional, Tuple
+
+from repro.core.autotune import ChannelTuner
+from repro.core.engines.base import (
+    ACK,
+    FrameBuilder,
+    Sink,
+    SlabChannel,
+    Source,
+    advance_iovec,
+    slab_span,
+)
+from repro.core.fsm import FSM_BUILDERS
+from repro.core.header import (
+    HEADER_SIZE,
+    FLAG_BLOCK_CRC,
+    ChannelEvent,
+    ChannelHeader,
+    Negotiation,
+    ProtocolError,
+)
+from repro.core.integrity import CrcManifest, IntegrityError
+from repro.core.resume import ResumeSidecar, throttled_autosave
+from repro.core.session import (
+    CTRL_CHANNEL,
+    MAX_BATCH_FRAMES,
+    SessionError,
+    SessionStats,
+    resolve_path,
+)
+
+# -- scheduling constants ----------------------------------------------------
+
+# selector timeout = the shard's housekeeping cadence (eviction, stale
+# handshakes, io stalls, drain) — real time, independent of the
+# injectable clock that DECIDES those policies
+TICK = 0.05
+# DRR: deficit earned per service grant; a session may move at most its
+# accumulated deficit per grant, so two greedy sessions converge to
+# equal byte shares within one quantum of each other
+DRR_QUANTUM = 256 << 10
+# global bytes one loop turn may move before yielding back to select();
+# bounds per-turn latency for control-frame traffic behind bulk data
+TURN_BUDGET = 4 << 20
+# shards when ``loop=True`` picks the count (an explicit int overrides)
+DEFAULT_SHARDS = min(4, os.cpu_count() or 1)
+
+# -- handshake demux states (normative: docs/ARCHITECTURE.md table) ----------
+
+HS_HELLO = "hello"          # accumulating the 48-byte channel hello
+HS_NEG_LEN = "neg_len"      # control channel: the 4-byte negotiation length
+HS_NEG_BODY = "neg_body"    # control channel: the negotiation blob
+HS_PARKED = "parked"        # handed to the session assembler
+HS_STATES: Tuple[str, ...] = (HS_HELLO, HS_NEG_LEN, HS_NEG_BODY, HS_PARKED)
+
+# -- admission/eviction error kinds (normative: docs table) ------------------
+
+ERR_BUSY = "busy"           # over max_sessions at admission
+ERR_DRAINING = "draining"   # server is stopping; finishes in-flight only
+ERR_IDLE = "idle"           # evicted after idle_timeout of inactivity
+ERR_KINDS: Tuple[str, ...] = (ERR_BUSY, ERR_DRAINING, ERR_IDLE)
+
+_NEG_LEN = struct.Struct("<I")
+
+# LoopSession states
+ST_CTRL = "ctrl"
+ST_RECV = "recv"
+ST_SEND = "send"
+
+
+class HandshakeConn:
+    """Per-connection nonblocking handshake parser.
+
+    Frame boundaries land anywhere: every read appends to the current
+    stage's buffer and the stage advances only when its exact byte count
+    arrived. A garbled hello (bad magic, wrong event) raises out of
+    :meth:`on_io` into ``server.handshake_errors`` and closes the socket
+    — a stray connection never takes a shard down and never leaks."""
+
+    __slots__ = ("shard", "sock", "state", "t0", "_buf", "_got", "_want",
+                 "hello", "neg")
+
+    def __init__(self, shard: "EventLoopShard", sock: socket.socket):
+        self.shard = shard
+        self.sock = sock
+        self.state = HS_HELLO
+        self.t0 = shard.server._clock()
+        self._buf = memoryview(bytearray(HEADER_SIZE))
+        self._got = 0
+        self._want = HEADER_SIZE
+        self.hello: Optional[ChannelHeader] = None
+        self.neg: Optional[Negotiation] = None
+
+    def on_io(self, sock: socket.socket, mask: int) -> None:
+        try:
+            while True:
+                r = sock.recv_into(self._buf[self._got:self._want])
+                if r == 0:
+                    raise ConnectionError("peer closed during handshake")
+                self._got += r
+                if self._got < self._want:
+                    continue
+                if self.state == HS_HELLO:
+                    hdr = ChannelHeader.unpack(self._buf)
+                    if hdr.event != ChannelEvent.CONM or hdr.length != 0:
+                        raise ProtocolError(
+                            f"expected channel hello, got {hdr.event!r}")
+                    self.hello = hdr
+                    if hdr.channel == CTRL_CHANNEL:
+                        self.state = HS_NEG_LEN
+                        self._rearm(_NEG_LEN.size)
+                        continue
+                    self._park()
+                    return
+                if self.state == HS_NEG_LEN:
+                    (nlen,) = _NEG_LEN.unpack(self._buf[:4])
+                    if not 0 < nlen <= 1 << 20:
+                        raise ProtocolError(
+                            f"implausible negotiation length {nlen}")
+                    self.state = HS_NEG_BODY
+                    self._rearm(nlen)
+                    continue
+                # HS_NEG_BODY
+                self.neg = Negotiation.unpack(self._buf[:self._want])
+                self._park()
+                return
+        except BlockingIOError:
+            return
+        except Exception as e:  # noqa: BLE001 - bad/stray connections are
+            # recorded, closed, and must not take the shard down
+            self.shard.server.handshake_errors.append(e)
+            self.close()
+
+    def _rearm(self, want: int) -> None:
+        if want > len(self._buf):
+            self._buf = memoryview(bytearray(want))
+        self._got = 0
+        self._want = want
+
+    def _park(self) -> None:
+        """Hand the completed (hello[, negotiation]) to the server-level
+        session assembler; the socket leaves this shard's selector until
+        the session (or reject shell) re-registers it."""
+        self.state = HS_PARKED
+        shard = self.shard
+        shard.handshakes.pop(self.sock, None)
+        try:
+            shard.sel.unregister(self.sock)
+        except (KeyError, ValueError, OSError):
+            pass
+        shard.server._park_from_loop(shard, self.hello, self.neg, self.sock)
+
+    def close(self) -> None:
+        self.shard.handshakes.pop(self.sock, None)
+        try:
+            self.shard.sel.unregister(self.sock)
+        except (KeyError, ValueError, OSError):
+            pass
+        try:
+            self.sock.close()
+        except OSError:
+            pass
+
+
+class _CtrlParser:
+    """Incremental control-frame parser: header + JSON body, one frame
+    per :meth:`read_one` so the caller can stop consuming the moment a
+    dispatched frame flips the session into a transfer state."""
+
+    __slots__ = ("_hdr_buf", "_hdr_got", "_hdr", "_body", "_body_got")
+
+    def __init__(self):
+        self._hdr_buf = memoryview(bytearray(HEADER_SIZE))
+        self._hdr_got = 0
+        self._hdr: Optional[ChannelHeader] = None
+        self._body: Optional[memoryview] = None
+        self._body_got = 0
+
+    def read_one(self, sock: socket.socket) -> Tuple[ChannelHeader, dict]:
+        while True:
+            if self._hdr is None:
+                r = sock.recv_into(self._hdr_buf[self._hdr_got:])
+                if r == 0:
+                    raise ConnectionError("peer closed")
+                self._hdr_got += r
+                if self._hdr_got < HEADER_SIZE:
+                    continue
+                self._hdr = ChannelHeader.unpack(self._hdr_buf)
+                self._hdr_got = 0
+                self._body = (memoryview(bytearray(self._hdr.length))
+                              if self._hdr.length else None)
+                self._body_got = 0
+            if self._body is not None and self._body_got < len(self._body):
+                r = sock.recv_into(self._body[self._body_got:])
+                if r == 0:
+                    raise ConnectionError("peer closed mid-frame")
+                self._body_got += r
+                if self._body_got < len(self._body):
+                    continue
+            hdr, body = self._hdr, self._body
+            self._hdr = None
+            self._body = None
+            meta = json.loads(str(body, "utf-8")) if body is not None else {}
+            return hdr, meta
+
+
+class LoopSession:
+    """One admitted session, scheduled cooperatively on its shard.
+
+    A nonblocking port of ``ServerSession.run()``: the CTRL state parses
+    control frames (one in flight at a time — the client serializes
+    operations); a put flips to RECV (the slab datapath of
+    ``mtedp._receive_batched``, byte for byte, including the
+    ``server_upload`` FSM milestones); a get flips to SEND (the
+    ``event_send`` scatter-gather batches, per-channel depth hill-climbed
+    by ``ChannelTuner``). Bulk states are served through the shard's DRR
+    queue so concurrent sessions get fair byte shares.
+
+    ``reject_kind`` turns the session into an admission-reject shell: it
+    answers every control frame with a typed ``EXCEPTION`` (never
+    transfers, never counts as a session) until the client goes away —
+    refusing with an answer instead of a close avoids the RST race that
+    would destroy the error before the client could read it."""
+
+    def __init__(self, server, shard: "EventLoopShard", socks, neg: Negotiation,
+                 reject_kind: Optional[str] = None):
+        self.server = server
+        self.shard = shard
+        self.socks = list(socks)
+        self.neg = neg
+        self.n = neg.n_channels
+        self.root = server.root
+        self.integrity = bool(neg.integrity)
+        self.batch = max(1, min(int(neg.batch_frames), MAX_BATCH_FRAMES))
+        self.reject_kind = reject_kind
+        self.stats = SessionStats()
+        # one conformance machine for the WHOLE session, exactly as the
+        # thread path threads it (loop mode always runs the mtedp datapath)
+        self.fsm = FSM_BUILDERS["server_upload"]()
+        for ev in ("conn", "auth_ok", "ftsm", "params_ok", "new_session",
+                   "registered", "all_channels"):
+            self.fsm.step(ev)
+        self.state = ST_CTRL
+        self.closed = False
+        self.last_activity = server._clock()
+        # DRR bookkeeping (owned by the shard's serve loop)
+        self.deficit = 0
+        self.queued: set = set()
+        self._masks = [0] * self.n
+        self._outq = [bytearray() for _ in range(self.n)]
+        self._parser = _CtrlParser()
+        self._verify_ctx = None
+        self._end_close = False  # drain/evict: close once replies flush
+        # receive-transfer state
+        self._slabs = None  # SlabSet reused across the session's files
+        self._chans: Optional[List[SlabChannel]] = None
+        self._eof: Optional[List[bool]] = None
+        self._sink: Optional[Sink] = None
+        self._crc_acc: Optional[CrcManifest] = None
+        self._sidecar: Optional[ResumeSidecar] = None
+        self._file_size = 0
+        self._block_size = neg.block_size
+        # send-transfer state
+        self._source: Optional[Source] = None
+        self._frames: Optional[FrameBuilder] = None
+        self._tuners = None
+        self._queues = None
+        self._qpos = None
+        self._pend: Optional[List[Optional[list]]] = None
+        self._done: Optional[List[bool]] = None
+        self._acked: Optional[List[bool]] = None
+        self._payload = 0
+        # bytes moved for the CURRENT transfer (fairness observability)
+        self.progress = 0
+
+    # -- shard plumbing ----------------------------------------------------
+
+    def attach(self) -> None:
+        """Runs on the owning shard's thread: register the channels."""
+        self.shard.sessions.add(self)
+        self._apply_all_masks()
+
+    def _cb(self, ch: int):
+        return lambda sock, mask, _ch=ch: self.on_io(_ch, sock, mask)
+
+    def _want_mask(self, ch: int) -> int:
+        if self.closed:
+            return 0
+        mask = selectors.EVENT_WRITE if self._outq[ch] else 0
+        if self.state == ST_CTRL:
+            if ch == CTRL_CHANNEL:
+                mask |= selectors.EVENT_READ
+        elif self.state == ST_RECV:
+            if not self._eof[ch]:
+                mask |= selectors.EVENT_READ
+        elif self.state == ST_SEND:
+            if self._acked[ch]:
+                pass
+            elif self._done[ch] and self._pend[ch] is None:
+                mask |= selectors.EVENT_READ  # awaiting the 1-byte ack
+            else:
+                mask |= selectors.EVENT_WRITE
+        return mask
+
+    def _apply_mask(self, ch: int) -> None:
+        want = self._want_mask(ch)
+        cur = self._masks[ch]
+        if want == cur:
+            return
+        sock = self.socks[ch]
+        try:
+            if cur == 0:
+                self.shard.sel.register(sock, want, self._cb(ch))
+            elif want == 0:
+                self.shard.sel.unregister(sock)
+            else:
+                self.shard.sel.modify(sock, want, self._cb(ch))
+        except (KeyError, ValueError, OSError):
+            pass
+        self._masks[ch] = want
+
+    def _apply_all_masks(self) -> None:
+        for ch in range(self.n):
+            self._apply_mask(ch)
+
+    def _enqueue(self, ch: int) -> None:
+        if ch not in self.queued:
+            self.queued.add(ch)
+            self.shard.ready.append((self, ch))
+
+    # -- event entry points ------------------------------------------------
+
+    def on_io(self, ch: int, sock: socket.socket, mask: int) -> None:
+        if self.closed:
+            return
+        self.last_activity = self.server._clock()
+        try:
+            if mask & selectors.EVENT_WRITE and self._outq[ch]:
+                self._flush_out(ch)
+            if self.closed:
+                return
+            if self.state == ST_CTRL:
+                if ch == CTRL_CHANNEL and mask & selectors.EVENT_READ:
+                    self._pump_ctrl(sock)
+            elif self.state == ST_RECV:
+                if mask & selectors.EVENT_READ and not self._eof[ch]:
+                    self._enqueue(ch)
+            elif self.state == ST_SEND:
+                if self._acked[ch]:
+                    pass
+                elif self._done[ch] and self._pend[ch] is None:
+                    if mask & selectors.EVENT_READ:
+                        self._read_ack(ch, sock)
+                elif mask & selectors.EVENT_WRITE:
+                    self._enqueue(ch)
+            if not self.closed:
+                self._apply_mask(ch)
+        except BaseException as e:  # noqa: BLE001 - a session failure must
+            # not take the shard (and every other session) down
+            self._fail(e)
+
+    def service(self, ch: int, limit: int) -> Tuple[int, bool]:
+        """One DRR grant: move up to ``limit`` bytes on this channel.
+        Returns ``(moved, more)`` — ``more`` means the grant was exhausted
+        with the socket still willing (re-queue me); blocked or finished
+        channels return ``more=False`` and the selector re-arms them."""
+        try:
+            if self.state == ST_RECV:
+                moved, more = self._serve_recv(ch, limit)
+            elif self.state == ST_SEND:
+                moved, more = self._serve_send(ch, limit)
+            else:
+                return 0, False
+            if not self.closed:
+                self._apply_mask(ch)
+            return moved, more and not self.closed
+        except BaseException as e:  # noqa: BLE001
+            self._fail(e)
+            return 0, False
+
+    # -- outbound queue (ctrl replies + acks) ------------------------------
+
+    def _queue_out(self, ch: int, data: bytes) -> None:
+        self._outq[ch] += data
+        self._flush_out(ch)
+        if not self.closed:
+            self._apply_mask(ch)
+
+    def _flush_out(self, ch: int) -> None:
+        buf = self._outq[ch]
+        sock = self.socks[ch]
+        while buf:
+            try:
+                w = sock.send(buf)
+            except BlockingIOError:
+                return
+            del buf[:w]
+        self._maybe_finish_close()
+
+    def _send_ctrl_frame(self, event: ChannelEvent, payload: dict) -> None:
+        body = json.dumps(payload).encode()
+        hdr = ChannelHeader(event, self.neg.session, CTRL_CHANNEL, 0, len(body))
+        self._queue_out(CTRL_CHANNEL, hdr.pack() + body)
+
+    # -- CTRL state --------------------------------------------------------
+
+    def _pump_ctrl(self, sock: socket.socket) -> None:
+        while self.state == ST_CTRL and not self.closed:
+            try:
+                hdr, meta = self._parser.read_one(sock)
+            except BlockingIOError:
+                return
+            except (ConnectionError, OSError):
+                # client vanished between operations; channels die with it
+                # (the blocking path's clean `break`)
+                self._close()
+                return
+            self._dispatch(hdr, meta)
+
+    def _dispatch(self, hdr: ChannelHeader, meta: dict) -> None:
+        if self.reject_kind is not None:
+            self._dispatch_reject(hdr)
+            return
+        if self._verify_ctx is not None:
+            self._finish_verify(meta)
+            return
+        ev = hdr.event
+        if ev == ChannelEvent.EOFT:
+            self.stats.eoft_frames += 1
+            self.fsm.step("eoft")
+            assert self.fsm.done, (
+                f"conformance: session FSM ended in {self.fsm.state}"
+            )
+            self._close()
+            return
+        try:
+            if self.server._draining:
+                # graceful drain refuses NEW work with a typed answer
+                self._send_ctrl_frame(
+                    ChannelEvent.EXCEPTION,
+                    {"error": "server draining", "kind": ERR_DRAINING})
+                self._end_close = True
+                self._maybe_finish_close()
+                return
+            if ev == ChannelEvent.xFTSMU:
+                self._start_put(meta)
+            elif ev == ChannelEvent.xFTSMD:
+                self._start_get(meta)
+            elif ev == ChannelEvent.RESUME:
+                self._start_resume(meta)
+            else:
+                self._send_ctrl_frame(
+                    ChannelEvent.EXCEPTION,
+                    {"error": f"unexpected control event {ev!r}"})
+        except SessionError as e:
+            self._send_ctrl_frame(ChannelEvent.EXCEPTION, {"error": str(e)})
+
+    def _dispatch_reject(self, hdr: ChannelHeader) -> None:
+        if hdr.event == ChannelEvent.EOFT:
+            self._close()
+            return
+        self._send_ctrl_frame(
+            ChannelEvent.EXCEPTION,
+            {"error": f"server refused session ({self.reject_kind})",
+             "kind": self.reject_kind})
+
+    def _start_resume(self, meta: dict) -> None:
+        if not self.integrity:
+            raise SessionError(
+                "RESUME requires an integrity session (negotiate integrity=True)")
+        mode = meta.get("mode")
+        if mode == "put":
+            self._start_put(meta, resume=True)
+        elif mode == "get":
+            self._start_get(meta, resume=True)
+        else:
+            raise SessionError(f"unknown resume mode {mode!r}")
+
+    # -- RECV (put) --------------------------------------------------------
+
+    def _start_put(self, meta: dict, resume: bool = False) -> None:
+        size = int(meta["size"])
+        block_size = int(meta.get("block_size", self.neg.block_size))
+        try:
+            path = resolve_path(self.root, meta.get("remote"), for_write=True)
+            sink = Sink(path, size)
+        except OSError as e:
+            raise SessionError(f"cannot open {meta.get('remote')!r}: {e}")
+        sidecar = (ResumeSidecar(path)
+                   if self.integrity and path is not None else None)
+        crc_acc: Optional[CrcManifest] = None
+        if self.integrity:
+            crc_acc = CrcManifest(
+                autosave=throttled_autosave(sidecar, size, block_size)
+                if sidecar is not None else None)
+        reply = {"ok": True}
+        if resume:
+            prev = sidecar.load(size, block_size) if sidecar is not None else None
+            if prev is not None:
+                crc_acc.merge(prev)
+            reply["have"] = {str(off): crc
+                             for off, (_ln, crc) in crc_acc.blocks.items()}
+        elif sidecar is not None:
+            sidecar.clear()
+        self._send_ctrl_frame(ChannelEvent.CONM, reply)
+        self.fsm.step("resume" if resume else "opened")
+        from repro.core.ringbuf import SlabSet
+
+        span = slab_span(self.batch, block_size)
+        if self._slabs is None or self._slabs.slab_bytes != span:
+            self._slabs = SlabSet(self.n, span)
+        self._sink = sink
+        self._sidecar = sidecar
+        self._crc_acc = crc_acc
+        self._file_size = size
+        self._block_size = block_size
+        self._chans = [SlabChannel(self._slabs.slab(i), block_size)
+                       for i in range(self.n)]
+        self._eof = [False] * self.n
+        self.progress = 0
+        self.state = ST_RECV
+        self._apply_all_masks()
+
+    def _fsm_steps(self, *events: str) -> None:
+        for e in events:
+            self.fsm.step(e)
+
+    def _flush_chan(self, sc: SlabChannel, final: bool = False) -> None:
+        batch = sc.take_pending()
+        if batch or final:
+            self.stats.writev_calls += self._sink.writev_views(batch)
+        for rec in sc.take_verified():
+            if self._crc_acc is not None:
+                self._crc_acc.add(*rec)
+        sc.compact()
+        if final:
+            return
+        if self.fsm.state == "10_dispatch":
+            self._fsm_steps("flush", "flushed")
+
+    def _serve_recv(self, ch: int, limit: int) -> Tuple[int, bool]:
+        sc = self._chans[ch]
+        sock = self.socks[ch]
+        moved = 0
+        while moved < limit:
+            if sc.end_event is not None:
+                return moved, False
+            if sc.free_space() == 0:
+                self._flush_chan(sc)
+            try:
+                done = sc.receive_once(sock, max_bytes=limit - moved)
+            except BlockingIOError:
+                return moved, False
+            moved += sc.last_recv
+            self.progress += sc.last_recv
+            for _ in range(done):
+                self._fsm_steps("read_ready", "block", "buffered")
+            if sc.end_event is not None:
+                if sc.end_event == ChannelEvent.EOFR:
+                    self.stats.eofr_frames += 1
+                else:
+                    self.stats.eoft_frames += 1
+                self._eof[ch] = True
+                self._fsm_steps("read_ready", "eof_header",
+                                "all_eof" if all(self._eof) else "channels_open")
+                if all(self._eof):
+                    self._finish_recv()
+                else:
+                    # the LAST channel's tail rides the final flush (the
+                    # FSM is already in 13_flush by then)
+                    self._flush_chan(sc)
+                return moved, False
+        return moved, True
+
+    def _finish_recv(self) -> None:
+        for sc in self._chans:  # terminal flush of every channel's tail
+            self._flush_chan(sc, final=True)
+            self.stats.bytes += sc.bytes
+            self.stats.recv_calls += sc.recv_calls
+            self.stats.crc_mismatches += sc.crc_mismatches
+        self.fsm.step("eofr_flush")
+        self.stats.files += 1
+        sink, self._sink = self._sink, None
+        sink.close()
+        if self.integrity:
+            self._verify_ctx = (self._crc_acc, self._sidecar,
+                                self._file_size, self._block_size)
+        self._chans = None
+        self._eof = None
+        self.state = ST_CTRL
+        for ch in range(self.n):
+            self._queue_out(ch, ACK)
+        if not self.integrity and self.server._draining:
+            self._end_close = True
+        self._apply_all_masks()
+        self._maybe_finish_close()
+
+    def _finish_verify(self, fin: dict) -> None:
+        crc_acc, sidecar, size, block_size = self._verify_ctx
+        self._verify_ctx = None
+        if sidecar is not None:
+            sidecar.save(size, block_size, crc_acc)
+        try:
+            mine = crc_acc.file_crc(size)
+        except IntegrityError as e:
+            self._send_ctrl_frame(ChannelEvent.EXCEPTION,
+                                  {"error": str(e), "kind": "integrity"})
+            mine = None
+        if mine is not None:
+            theirs = fin.get("file_crc")
+            if theirs is not None and int(theirs) != mine:
+                self._send_ctrl_frame(
+                    ChannelEvent.EXCEPTION,
+                    {"error": f"file CRC mismatch: client 0x{int(theirs):08x} "
+                              f"!= server 0x{mine:08x}",
+                     "kind": "integrity"})
+            else:
+                self._send_ctrl_frame(ChannelEvent.CONM,
+                                      {"ok": True, "file_crc": mine})
+        self._crc_acc = None
+        self._sidecar = None
+        if self.server._draining:
+            self._end_close = True
+            self._maybe_finish_close()
+
+    # -- SEND (get) --------------------------------------------------------
+
+    def _start_get(self, meta: dict, resume: bool = False) -> None:
+        block_size = int(meta.get("block_size", self.neg.block_size))
+        remote = meta.get("remote")
+        if remote is None:  # mem-to-mem mode: serve zeros
+            size = int(meta["size"])
+            source = Source(None, size, block_size)
+        else:
+            try:
+                path = resolve_path(self.root, remote)
+                size = os.path.getsize(path)
+                source = Source(path, size, block_size)
+            except OSError as e:
+                raise SessionError(f"cannot read {remote!r}: {e}")
+        blocks = None
+        payload = size
+        if resume:
+            want = meta.get("want") or []
+            blocks = sorted({int(off) // block_size for off in want
+                             if 0 <= int(off) < size})
+            payload = sum(source.block_len(b) for b in blocks)
+        self._send_ctrl_frame(ChannelEvent.CONM, {"ok": True, "size": size})
+        cap = self.batch
+        self._source = source
+        self._frames = FrameBuilder(self.neg.session, self.n, depth=cap + 1)
+        self._tuners = ([ChannelTuner(cap=cap) for _ in range(self.n)]
+                        if cap > 1 else None)
+        plan = (list(range(source.n_blocks)) if blocks is None else blocks)
+        self._queues = [plan[i::self.n] for i in range(self.n)]
+        self._qpos = [0] * self.n
+        self._pend = [None] * self.n
+        self._done = [False] * self.n
+        self._acked = [False] * self.n
+        self._payload = payload
+        self.progress = 0
+        self.state = ST_SEND
+        self._apply_all_masks()
+
+    def _make_batch(self, ch: int) -> list:
+        depth = self._tuners[ch].depth if self._tuners is not None else 1
+        iov: list = []
+        q = self._queues[ch]
+        source = self._source
+        data_flags = FLAG_BLOCK_CRC if self.integrity else 0
+        for _ in range(depth):
+            if self._qpos[ch] >= len(q):
+                iov.append(self._frames.header(ch, ChannelEvent.EOFR, 0, 0))
+                self._done[ch] = True
+                break
+            blk = q[self._qpos[ch]]
+            self._qpos[ch] += 1
+            ln = source.block_len(blk)
+            iov.append(self._frames.header(ch, ChannelEvent.xFTSMU,
+                                           blk * source.block_size, ln,
+                                           flags=data_flags))
+            iov.append(source.block_view(blk))
+            if self.integrity:
+                iov.append(self._frames.trailer(ch, source.block_crc(blk)))
+        return iov
+
+    def _serve_send(self, ch: int, limit: int) -> Tuple[int, bool]:
+        sock = self.socks[ch]
+        moved = 0
+        while moved < limit:
+            iov = self._pend[ch]
+            if iov is None:
+                if self._done[ch]:
+                    return moved, False  # stripe done; awaiting the ack
+                iov = self._make_batch(ch)
+                self._pend[ch] = iov
+            try:
+                w = sock.sendmsg(iov)
+            except BlockingIOError:
+                return moved, False
+            moved += w
+            self.progress += w
+            if self._tuners is not None:
+                self._tuners[ch].note(w)
+            if advance_iovec(iov, w):
+                continue  # partial batch still pending on this channel
+            self._pend[ch] = None
+        return moved, True
+
+    def _read_ack(self, ch: int, sock: socket.socket) -> None:
+        try:
+            b = sock.recv(1)
+        except BlockingIOError:
+            return
+        if not b:
+            raise ConnectionError("peer closed before transfer ack")
+        self._acked[ch] = True
+        if all(self._acked):
+            self._finish_send()
+
+    def _finish_send(self) -> None:
+        self.stats.files += 1
+        self.stats.bytes += self._payload
+        source, self._source = self._source, None
+        source.close()
+        self._frames = None
+        self._tuners = None
+        self._queues = None
+        self._pend = None
+        self._done = None
+        self._acked = None
+        self.state = ST_CTRL
+        if self.server._draining:
+            self._end_close = True
+        self._apply_all_masks()
+        self._maybe_finish_close()
+
+    # -- lifecycle ---------------------------------------------------------
+
+    def idle_in_ctrl(self) -> bool:
+        """Idle = between operations: no transfer, no pending verify."""
+        return (self.state == ST_CTRL and self._verify_ctx is None
+                and not self._end_close)
+
+    def evict(self, kind: str = ERR_IDLE) -> None:
+        """Best-effort typed notice, then close once the notice flushes."""
+        if self.closed:
+            return
+        try:
+            self._send_ctrl_frame(
+                ChannelEvent.EXCEPTION,
+                {"error": f"session evicted ({kind})", "kind": kind})
+        except BaseException:  # noqa: BLE001
+            pass
+        self._end_close = True
+        self._maybe_finish_close()
+
+    def _maybe_finish_close(self) -> None:
+        if (self._end_close and not self.closed and self.state == ST_CTRL
+                and self._verify_ctx is None
+                and all(not q for q in self._outq)):
+            self._close()
+
+    def _fail(self, e: BaseException) -> None:
+        if self.closed:
+            return
+        if self.state == ST_RECV and self._sink is not None:
+            # the stream died mid-file: persist what WAS verified so the
+            # client can RESUME over a fresh connection
+            if (self._sidecar is not None and self._crc_acc is not None
+                    and len(self._crc_acc)):
+                try:
+                    self._sidecar.save(self._file_size, self._block_size,
+                                       self._crc_acc)
+                except OSError:
+                    pass
+            try:
+                self._sink.close()
+            except OSError:
+                pass
+            self._sink = None
+        if self._source is not None:
+            try:
+                self._source.close()
+            except OSError:
+                pass
+            self._source = None
+        self._close(error=e)
+
+    def _close(self, error: Optional[BaseException] = None) -> None:
+        if self.closed:
+            return
+        self.closed = True
+        for ch, s in enumerate(self.socks):
+            if self._masks[ch]:
+                try:
+                    self.shard.sel.unregister(s)
+                except (KeyError, ValueError, OSError):
+                    pass
+                self._masks[ch] = 0
+            try:
+                s.close()
+            except OSError:
+                pass
+        if self._sink is not None:
+            try:
+                self._sink.close()
+            except OSError:
+                pass
+            self._sink = None
+        if self._source is not None:
+            try:
+                self._source.close()
+            except OSError:
+                pass
+            self._source = None
+        self.shard.sessions.discard(self)
+        self.server._loop_session_closed(self, error)
+
+
+class EventLoopShard(threading.Thread):
+    """One event-loop thread: a selector, a task queue (with a socketpair
+    self-pipe so cross-thread submits interrupt ``select``), the DRR
+    ready queue, and the housekeeping tick."""
+
+    def __init__(self, server, idx: int):
+        super().__init__(name=f"xdfs-shard-{idx}", daemon=True)
+        self.server = server
+        self.idx = idx
+        self.sel = selectors.DefaultSelector()
+        self.handshakes: Dict[socket.socket, HandshakeConn] = {}
+        self.sessions: set = set()
+        self.ready: deque = deque()
+        self._tasks: deque = deque()
+        self._tasks_lock = threading.Lock()
+        self._halt = False
+        self._wake_r, self._wake_w = socket.socketpair()
+        self._wake_r.setblocking(False)
+        self._wake_w.setblocking(False)
+        self.sel.register(self._wake_r, selectors.EVENT_READ, self._on_wake)
+        self._lsock: Optional[socket.socket] = None
+        self._next_tick = 0.0
+
+    # -- cross-thread API --------------------------------------------------
+
+    def attach_listener(self, lsock: socket.socket) -> None:
+        self._lsock = lsock
+        self.sel.register(lsock, selectors.EVENT_READ, self._on_accept)
+
+    def submit(self, fn) -> None:
+        with self._tasks_lock:
+            self._tasks.append(fn)
+        self.wake()
+
+    def wake(self) -> None:
+        try:
+            self._wake_w.send(b"\x00")
+        except (BlockingIOError, OSError):
+            pass
+
+    def halt(self) -> None:
+        self._halt = True
+        self.wake()
+
+    # -- loop --------------------------------------------------------------
+
+    def run(self) -> None:
+        try:
+            while not self._halt:
+                try:
+                    events = self.sel.select(TICK)
+                except OSError:
+                    # a socket was force-closed under us (abort); per-object
+                    # error paths clean up on their next callback
+                    events = []
+                for key, mask in events:
+                    if self._halt:
+                        break
+                    try:
+                        key.data(key.fileobj, mask)
+                    except Exception as e:  # noqa: BLE001 - defensive: the
+                        # per-object handlers catch their own failures
+                        self.server.errors.append(e)
+                self._drain_tasks()
+                self._serve_ready()
+                now = time.monotonic()
+                if now >= self._next_tick:
+                    self._next_tick = now + TICK
+                    self._tick()
+        finally:
+            self._cleanup()
+
+    def _on_wake(self, sock, mask) -> None:
+        try:
+            while sock.recv(4096):
+                pass
+        except (BlockingIOError, OSError):
+            pass
+
+    def _drain_tasks(self) -> None:
+        while True:
+            with self._tasks_lock:
+                if not self._tasks:
+                    return
+                fn = self._tasks.popleft()
+            try:
+                fn()
+            except Exception as e:  # noqa: BLE001
+                self.server.errors.append(e)
+
+    def _on_accept(self, lsock, mask) -> None:
+        srv = self.server
+        while True:
+            try:
+                conn, _ = lsock.accept()
+            except BlockingIOError:
+                return  # another shard won this wakeup's race
+            except OSError:
+                try:
+                    self.sel.unregister(lsock)
+                except (KeyError, ValueError, OSError):
+                    pass
+                return
+            if srv._stopping or srv._draining:
+                try:
+                    conn.close()
+                except OSError:
+                    pass
+                continue
+            if (srv.max_pending is not None
+                    and srv._pending_load() >= srv.max_pending):
+                with srv._lock:
+                    srv.stats["rejected_pending"] += 1
+                try:
+                    conn.close()
+                except OSError:
+                    pass
+                continue
+            try:
+                conn.setblocking(False)
+                conn.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+            except OSError:
+                try:
+                    conn.close()
+                except OSError:
+                    pass
+                continue
+            hs = HandshakeConn(self, conn)
+            self.handshakes[conn] = hs
+            self.sel.register(conn, selectors.EVENT_READ, hs.on_io)
+
+    def _serve_ready(self) -> None:
+        """Deficit round robin over ready channels. Budget exhaustion
+        leaves unserved items AT THE FRONT (starved work ages forward);
+        served-but-still-hungry items re-queue at the back; blocked items
+        drop out and the level-triggered selector re-arms them."""
+        srv = self.server
+        budget = srv.turn_budget
+        while self.ready and budget > 0:
+            sess, ch = self.ready.popleft()
+            sess.queued.discard(ch)
+            if sess.closed:
+                continue
+            if sess.deficit <= 0:
+                sess.deficit = min(sess.deficit + srv.drr_quantum,
+                                   srv.drr_quantum)
+            limit = min(sess.deficit, budget)
+            moved, more = sess.service(ch, limit)
+            sess.deficit -= moved
+            budget -= moved
+            if more and not sess.closed and ch not in sess.queued:
+                sess.queued.add(ch)
+                self.ready.append((sess, ch))
+
+    def _tick(self) -> None:
+        srv = self.server
+        now = srv._clock()
+        for sess in list(self.sessions):
+            if sess.closed:
+                continue
+            if sess.reject_kind is not None:
+                # reject shells live only long enough to answer; bound by
+                # the handshake timeout so a silent client can't pin one
+                if now - sess.last_activity > srv.handshake_timeout:
+                    sess._close()
+                continue
+            idle = now - sess.last_activity
+            if sess.idle_in_ctrl():
+                if srv._draining:
+                    sess._end_close = True
+                    sess._maybe_finish_close()
+                elif (srv.idle_timeout is not None
+                      and idle > srv.idle_timeout):
+                    with srv._lock:
+                        srv.stats["evicted"] += 1
+                    sess.evict(ERR_IDLE)
+            elif srv.io_timeout is not None and idle > srv.io_timeout:
+                # a peer that stops moving bytes mid-transfer surfaces as
+                # a typed TimeoutError in that session, not a pinned shard
+                sess._fail(TimeoutError(
+                    f"session stalled > {srv.io_timeout}s mid-transfer"))
+        for hs in list(self.handshakes.values()):
+            if now - hs.t0 > srv.handshake_timeout:
+                srv.handshake_errors.append(
+                    TimeoutError("handshake timed out"))
+                hs.close()
+        if self.idx == 0:
+            srv._prune_stale_handshakes()
+
+    def _cleanup(self) -> None:
+        for hs in list(self.handshakes.values()):
+            hs.close()
+        for sess in list(self.sessions):
+            try:
+                sess._close()
+            except Exception as e:  # noqa: BLE001
+                self.server.errors.append(e)
+        try:
+            self.sel.close()
+        except OSError:
+            pass
+        for s in (self._wake_r, self._wake_w):
+            try:
+                s.close()
+            except OSError:
+                pass

@@ -204,7 +204,14 @@ class _Pump(threading.Thread):
                     if cut is not None:
                         head = chunk[: max(0, cut - pos)]
                         if head:
-                            self.dst.sendall(head)
+                            try:
+                                self.dst.sendall(head)
+                            except OSError:
+                                # a sibling pump crossed ITS drop point and
+                                # kill_all()ed every socket mid-send — that
+                                # severing is the intended fault, not an
+                                # error in this pump
+                                break
                             self.forwarded += len(head)
                         if (f.drop_after is not None
                                 and self.forwarded >= f.drop_after):

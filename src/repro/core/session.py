@@ -71,6 +71,12 @@ class IntegrityFailure(SessionError):
     can RESUME the same transfer to re-fetch the bad blocks."""
 
 
+class BusyError(SessionError):
+    """The server refused the session at admission (over ``max_sessions``
+    or draining for shutdown). Typed so callers can distinguish back-off
+    and retry-elsewhere from a protocol failure."""
+
+
 @dataclass(frozen=True)
 class SocketTuning:
     """Per-session socket knobs, carried in the ``Negotiation`` so client
@@ -131,6 +137,8 @@ def recv_ctrl(sock: socket.socket) -> Tuple[ChannelHeader, dict]:
         msg = payload.get("error", "remote exception")
         if payload.get("kind") == "integrity":
             raise IntegrityFailure(msg)
+        if payload.get("kind") in ("busy", "draining"):
+            raise BusyError(msg)
         raise SessionError(msg)
     return hdr, payload
 

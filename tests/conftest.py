@@ -25,6 +25,36 @@ import jax  # noqa: E402
 import pytest  # noqa: E402
 
 
+# ---------------------------------------------------------------------------
+# server-mode matrix: every server-side e2e test runs against BOTH the
+# thread-per-session path (loop=False) and the sharded event-loop core
+# (loop=True). The loop leg carries the `loopmatrix` marker so CI can
+# bound tier-1 time with `-m "not loopmatrix"` if the matrix ever grows.
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(params=[
+    pytest.param(False, id="threads"),
+    pytest.param(True, id="loop", marks=pytest.mark.loopmatrix),
+])
+def loop_mode(request):
+    return request.param
+
+
+@pytest.fixture
+def xdfs_server(loop_mode):
+    """Factory: builds an ``XdfsServer`` pinned to the matrix's server
+    mode. Tests call it exactly like the class (``with xdfs_server(...)``)
+    so assertions and error paths stay construction-identical."""
+    from repro.core.api import XdfsServer
+
+    def make(*args, **kwargs):
+        kwargs.setdefault("loop", loop_mode)
+        return XdfsServer(*args, **kwargs)
+
+    return make
+
+
 @pytest.fixture(scope="session")
 def mesh11():
     from repro.launch.mesh import make_local_mesh

@@ -128,6 +128,65 @@ def test_channel_event_table_matches_enum():
 
 
 # ---------------------------------------------------------------------------
+# server event loop
+# ---------------------------------------------------------------------------
+
+
+def _evloop_section(sub_start: str, sub_end: str) -> str:
+    text = _arch_text()
+    start = text.index("## Server event loop")
+    end = text.index("## Cluster control plane", start)
+    section = text[start:end]
+    lo = section.index(sub_start)
+    hi = section.index(sub_end, lo) if sub_end else len(section)
+    return section[lo:hi]
+
+
+def test_evloop_demux_state_table_matches_module():
+    """The handshake demux state table is normative: its rows must be
+    exactly ``evloop.HS_STATES``."""
+    from repro.core import evloop
+
+    sub = _evloop_section("### Handshake demux", "### Admission")
+    rows = re.findall(r"^\|\s*`(\w+)`\s*\|", sub, re.M)
+    assert rows == list(evloop.HS_STATES), (
+        f"ARCHITECTURE.md demux state table drifted from evloop.HS_STATES: "
+        f"documented {rows}, actual {list(evloop.HS_STATES)}"
+    )
+
+
+def test_evloop_error_kind_table_matches_module():
+    """The admission/eviction error-kind table is normative: its rows
+    must be exactly ``evloop.ERR_KINDS``, and the two kinds the client
+    types as BusyError must say so."""
+    from repro.core import evloop
+
+    sub = _evloop_section("### Admission and typed errors", "### Fairness")
+    rows = re.findall(r"^\|\s*`(\w+)`\s*\|", sub, re.M)
+    assert rows == list(evloop.ERR_KINDS), (
+        f"ARCHITECTURE.md error-kind table drifted from evloop.ERR_KINDS: "
+        f"documented {rows}, actual {list(evloop.ERR_KINDS)}"
+    )
+    for kind, exc in ((evloop.ERR_BUSY, "BusyError"),
+                      (evloop.ERR_DRAINING, "BusyError"),
+                      (evloop.ERR_IDLE, "SessionError")):
+        assert re.search(rf"^\|\s*`{kind}`\s*\|.*\|\s*`{exc}`\s*\|", sub,
+                         re.M), f"kind {kind!r} must document raising {exc}"
+
+
+def test_evloop_scheduler_constants_documented():
+    from repro.core import evloop
+
+    sub = _evloop_section("### Fairness and drain", "")
+    assert f"**{evloop.DRR_QUANTUM >> 10} KiB**" in sub, (
+        "documented DRR quantum drifted from evloop.DRR_QUANTUM"
+    )
+    assert f"**{evloop.TURN_BUDGET >> 20} MiB**" in sub, (
+        "documented turn budget drifted from evloop.TURN_BUDGET"
+    )
+
+
+# ---------------------------------------------------------------------------
 # cluster control plane
 # ---------------------------------------------------------------------------
 

@@ -338,11 +338,11 @@ def test_faulty_proxy_drop_severs_all_connections():
 @pytest.mark.parametrize("engine,batch", [
     ("mtedp", 1), ("mtedp", 4), ("mt", 1), ("mt", 4), ("mp", 1), ("mp", 4),
 ])
-def test_integrity_roundtrip_all_engines(engine, batch, tmp_path):
+def test_integrity_roundtrip_all_engines(engine, batch, tmp_path, xdfs_server):
     data = os.urandom(6 * BS + 123)
     src = tmp_path / "src.bin"
     src.write_bytes(data)
-    with XdfsServer(engine=engine, root=str(tmp_path / "srv")) as srv:
+    with xdfs_server(engine=engine, root=str(tmp_path / "srv")) as srv:
         with XdfsClient.connect(srv.address, n_channels=2, engine=engine,
                                 block_size=BS, batch_frames=batch,
                                 integrity=True) as cli:
@@ -360,14 +360,14 @@ def test_integrity_roundtrip_all_engines(engine, batch, tmp_path):
 
 
 @pytest.mark.fault
-def test_corrupt_block_detected_and_resumed_same_session(tmp_path):
+def test_corrupt_block_detected_and_resumed_same_session(tmp_path, xdfs_server):
     data = os.urandom(6 * BS + 123)
     src = tmp_path / "src.bin"
     src.write_bytes(data)
     # conn 1 == data channel 1; its c2s stream is hello(48) then block 1's
     # frame — corrupt byte 7 of block 1's payload, surgically
     fault = Fault(conn=1, corrupt_at=48 + HEADER_SIZE + 7)
-    with XdfsServer(engine="mtedp", root=str(tmp_path / "srv")) as srv:
+    with xdfs_server(engine="mtedp", root=str(tmp_path / "srv")) as srv:
         with FaultyProxy(srv.address, c2s=fault) as px:
             with XdfsClient.connect(px.address, n_channels=2,
                                     block_size=BS, integrity=True) as cli:
@@ -388,7 +388,7 @@ def test_corrupt_block_detected_and_resumed_same_session(tmp_path):
 
 
 @pytest.mark.fault
-def test_kill_mid_put_then_resume_fresh_connection(tmp_path):
+def test_kill_mid_put_then_resume_fresh_connection(tmp_path, xdfs_server):
     # 96 blocks through a 32-slot pool: by the time channel 1 has pushed
     # 40 frames, the receiver has flushed (and manifested) at least one
     # pool's worth of verified blocks to disk — the resume delta is real
@@ -398,7 +398,7 @@ def test_kill_mid_put_then_resume_fresh_connection(tmp_path):
     sidecar = tmp_path / "srv" / ("up.bin" + SIDECAR_SUFFIX)
     fault = Fault(conn=1, drop_after=48 + 40 * (HEADER_SIZE + BS
                                                 + TRAILER_SIZE) + 99)
-    with XdfsServer(engine="mtedp", root=str(tmp_path / "srv")) as srv:
+    with xdfs_server(engine="mtedp", root=str(tmp_path / "srv")) as srv:
         with FaultyProxy(srv.address, c2s=fault) as px:
             cli = XdfsClient.connect(px.address, n_channels=2,
                                      block_size=BS, integrity=True)
@@ -419,12 +419,12 @@ def test_kill_mid_put_then_resume_fresh_connection(tmp_path):
 
 
 @pytest.mark.fault
-def test_kill_mid_get_then_resume_fresh_connection(tmp_path):
+def test_kill_mid_get_then_resume_fresh_connection(tmp_path, xdfs_server):
     data = os.urandom(96 * BS)
     dst = tmp_path / "back.bin"
     sidecar = Path(str(dst) + SIDECAR_SUFFIX)
     (tmp_path / "srv").mkdir()
-    with XdfsServer(engine="mtedp", root=str(tmp_path / "srv")) as srv:
+    with xdfs_server(engine="mtedp", root=str(tmp_path / "srv")) as srv:
         (tmp_path / "srv" / "f.bin").write_bytes(data)
         fault = Fault(conn=1, drop_after=40 * (HEADER_SIZE + BS
                                                + TRAILER_SIZE) + 99)
@@ -446,10 +446,10 @@ def test_kill_mid_get_then_resume_fresh_connection(tmp_path):
 
 
 @pytest.mark.fault
-def test_stall_surfaces_as_typed_timeout(tmp_path):
+def test_stall_surfaces_as_typed_timeout(tmp_path, xdfs_server):
     data = os.urandom(8 * BS)
     (tmp_path / "srv").mkdir()
-    with XdfsServer(engine="mtedp", root=str(tmp_path / "srv")) as srv:
+    with xdfs_server(engine="mtedp", root=str(tmp_path / "srv")) as srv:
         (tmp_path / "srv" / "f.bin").write_bytes(data)
         fault = Fault(conn=1, stall_after=HEADER_SIZE + BS + TRAILER_SIZE)
         with FaultyProxy(srv.address, s2c=fault) as px:
@@ -465,8 +465,8 @@ def test_stall_surfaces_as_typed_timeout(tmp_path):
                 cli.close()
 
 
-def test_connect_deadline_is_enforced(tmp_path):
-    with XdfsServer(engine="mtedp", root=str(tmp_path / "srv")) as srv:
+def test_connect_deadline_is_enforced(tmp_path, xdfs_server):
+    with xdfs_server(engine="mtedp", root=str(tmp_path / "srv")) as srv:
         with pytest.raises(DeadlineExceeded):
             XdfsClient.connect(srv.address, n_channels=2,
                                connect_deadline=0.0)
@@ -511,17 +511,22 @@ def test_cluster_put_replans_around_dead_node(tmp_path):
 
 
 @pytest.mark.fault
+@pytest.mark.parametrize("loop", [
+    pytest.param(False, id="threads"),
+    pytest.param(True, id="loop", marks=pytest.mark.loopmatrix),
+])
 @given(offset=st.integers(min_value=96, max_value=140_000),
        kill=st.booleans())
 @settings(max_examples=5, deadline=None)
-def test_random_faults_always_resume_byte_identical(offset, kill):
+def test_random_faults_always_resume_byte_identical(offset, kill, loop):
     workdir = Path(tempfile.mkdtemp(prefix="xdfs-fuzz-"))
     data = os.urandom(8 * BS + 321)
     src = workdir / "src.bin"
     src.write_bytes(data)
     fault = (Fault(drop_after=offset) if kill
              else Fault(conn=1, corrupt_at=offset))
-    with XdfsServer(engine="mtedp", root=str(workdir / "srv")) as srv:
+    with XdfsServer(engine="mtedp", root=str(workdir / "srv"),
+                    loop=loop) as srv:
         with FaultyProxy(srv.address, c2s=fault) as px:
             cli = XdfsClient.connect(px.address, n_channels=2,
                                      block_size=BS, integrity=True)

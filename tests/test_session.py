@@ -30,10 +30,10 @@ def _mkfiles(d, n, base=1 << 17):
 
 
 @pytest.mark.parametrize("engine", ["mtedp", "mt", "mp"])
-def test_multi_file_session_roundtrip(engine, tmp_path):
+def test_multi_file_session_roundtrip(engine, tmp_path, xdfs_server):
     """>= 3 files per session, byte-exact both directions, all engines."""
     files = _mkfiles(tmp_path, 3)
-    with XdfsServer(engine=engine, root=str(tmp_path / "srv")) as srv:
+    with xdfs_server(engine=engine, root=str(tmp_path / "srv")) as srv:
         with XdfsClient.connect(srv.address, n_channels=3, engine=engine,
                                 block_size=1 << 16) as cli:
             ups = cli.put_many(
@@ -56,13 +56,13 @@ def test_multi_file_session_roundtrip(engine, tmp_path):
     assert srv.stats["files"] == 6
 
 
-def test_put_many_reuses_channels(tmp_path):
+def test_put_many_reuses_channels(tmp_path, xdfs_server):
     """The acceptance claim: 8 small files over one session = exactly one
     negotiation, and every file ends with one EOFR per channel (channels
     stay open and are reused, Table 3)."""
     n_channels, n_files = 4, 8
     files = _mkfiles(tmp_path, n_files, base=1 << 15)
-    with XdfsServer(engine="mtedp", root=str(tmp_path / "srv")) as srv:
+    with xdfs_server(engine="mtedp", root=str(tmp_path / "srv")) as srv:
         with XdfsClient.connect(srv.address, n_channels=n_channels,
                                 block_size=1 << 14) as cli:
             for r in cli.put_many([(str(p), p.name) for p, _ in files]):
@@ -79,10 +79,10 @@ def test_put_many_reuses_channels(tmp_path):
     assert srv.stats["bytes"] == total
 
 
-def test_mp_receiver_reports_bytes(tmp_path):
+def test_mp_receiver_reports_bytes(tmp_path, xdfs_server):
     """Satellite fix: forked mp children pipe byte counts to the parent."""
     files = _mkfiles(tmp_path, 2)
-    with XdfsServer(engine="mp", root=str(tmp_path / "srv")) as srv:
+    with xdfs_server(engine="mp", root=str(tmp_path / "srv")) as srv:
         with XdfsClient.connect(srv.address, n_channels=2, engine="mp",
                                 block_size=1 << 16) as cli:
             for r in cli.put_many([(str(p), p.name) for p, _ in files]):
@@ -114,10 +114,10 @@ def test_register_custom_engine():
         reg._REGISTRY.pop("custom-mtedp", None)
 
 
-def test_get_missing_file_keeps_session_alive(tmp_path):
+def test_get_missing_file_keeps_session_alive(tmp_path, xdfs_server):
     """A bad request raises on ITS future; the session keeps serving."""
     files = _mkfiles(tmp_path, 1)
-    with XdfsServer(root=str(tmp_path / "srv")) as srv:
+    with xdfs_server(root=str(tmp_path / "srv")) as srv:
         with XdfsClient.connect(srv.address, n_channels=2) as cli:
             bad = cli.get("does/not/exist.bin", str(tmp_path / "x"))
             with pytest.raises(SessionError):
@@ -128,8 +128,8 @@ def test_get_missing_file_keeps_session_alive(tmp_path):
             assert back == data
 
 
-def test_path_escape_rejected(tmp_path):
-    with XdfsServer(root=str(tmp_path / "jail")) as srv:
+def test_path_escape_rejected(tmp_path, xdfs_server):
+    with xdfs_server(root=str(tmp_path / "jail")) as srv:
         with XdfsClient.connect(srv.address, n_channels=1) as cli:
             res = cli.put(None, "../escape.bin", data=b"x" * 64)
             with pytest.raises(SessionError, match="escape"):
@@ -137,10 +137,10 @@ def test_path_escape_rejected(tmp_path):
     assert not (tmp_path / "escape.bin").exists()
 
 
-def test_concurrent_sessions_one_server(tmp_path):
+def test_concurrent_sessions_one_server(tmp_path, xdfs_server):
     """The persistent server demuxes interleaved channels of many sessions."""
     files = _mkfiles(tmp_path, 2)
-    with XdfsServer(root=str(tmp_path / "srv")) as srv:
+    with xdfs_server(root=str(tmp_path / "srv")) as srv:
         clients = [XdfsClient.connect(srv.address, n_channels=2)
                    for _ in range(3)]
         try:
