@@ -48,6 +48,7 @@ REQUIRED_SECTIONS = {
     "control_plane": {"mode", "path", "ops_per_s"},
     "c10k": {"mode", "path", "sessions", "ops_per_s", "p50_ms", "p99_ms",
              "accepted", "rejected"},
+    "durability": {"mode", "path", "mb_s"},
 }
 SCALAR = (int, float, str, bool)
 
@@ -74,6 +75,12 @@ INTEGRITY_MAX_PENALTY = 0.45
 # tight enough to catch the structural failure it exists for (per-commit
 # snapshot re-serialization or multi-fsync appends land 1000x+).
 DURABILITY_MAX_SLOWDOWN = 100
+
+# Slack on the throttled scrub row: a token-bucket-limited pass may
+# overshoot its configured rate by at most the final chunk's rounding
+# plus timer coarseness. Anything past this factor means the limiter is
+# not actually pacing reads (the structural failure the row exists for).
+SCRUB_RATE_SLACK = 1.25
 
 # A failover row records wall clock from leader kill to a read served by
 # the promoted standby; with the benchmark's 0.5 s lease, anything past
@@ -102,6 +109,7 @@ SECTION_KEYS = {
     "integrity": ("mode", "path", "block_kb"),
     "control_plane": ("mode", "path"),
     "c10k": ("mode", "path"),
+    "durability": ("mode", "path"),
 }
 SECTION_METRIC = {
     "session_reuse": "speedup",
@@ -113,6 +121,7 @@ SECTION_METRIC = {
     "integrity": "mb_s",
     "control_plane": "ops_per_s",
     "c10k": "ops_per_s",
+    "durability": "mb_s",
 }
 # Default allowed fractional drop below the baseline before the gate
 # fails. The microbench sections are best-of-N on one process (tight);
@@ -141,6 +150,10 @@ SECTION_TOLERANCE = {
     # the noisiest thing a shared host schedules; the tight check is the
     # baseline-free p99/p50 tail invariant (check_c10k_invariant)
     "c10k": 0.60,
+    # fsync/rename latency is container-fs dependent and the throttled
+    # scrub row is pinned to its configured limit; the tight checks are
+    # the baseline-free invariants (check_scrub_invariant)
+    "durability": 0.60,
 }
 
 
@@ -283,6 +296,37 @@ def check_durability_invariant(doc: dict) -> List[str]:
     return errors
 
 
+def check_scrub_invariant(doc: dict) -> List[str]:
+    """The durability section's acceptance invariant, checked on EVERY
+    candidate (no baseline needed): the throttled scrub row must exist
+    and must NOT exceed its own configured ``limit_mb_s`` by more than
+    ``SCRUB_RATE_SLACK`` — the limit rides in the row, so the check
+    needs no baseline and no assumption about host speed."""
+    errors: List[str] = []
+    rows = (doc.get("sections") or {}).get("durability") or []
+    throttled = [r for r in rows if isinstance(r, dict)
+                 and r.get("mode") == "scrub"
+                 and r.get("path") == "throttled"]
+    if not throttled:
+        errors.append(
+            "durability: no throttled scrub row — the rate limiter is "
+            "not being exercised")
+    for row in throttled:
+        mb_s, limit = row.get("mb_s"), row.get("limit_mb_s")
+        if not all(isinstance(v, (int, float)) and v > 0
+                   for v in (mb_s, limit)):
+            errors.append(
+                "durability[scrub/throttled]: missing or non-positive "
+                "mb_s/limit_mb_s")
+        elif mb_s > limit * SCRUB_RATE_SLACK:
+            errors.append(
+                f"durability[scrub/throttled]: scrub ran at {mb_s:g} MB/s "
+                f"against a {limit:g} MB/s limit (must be <= "
+                f"{SCRUB_RATE_SLACK}x; the token bucket is not pacing "
+                f"reads)")
+    return errors
+
+
 def check_c10k_invariant(doc: dict) -> List[str]:
     """The c10k section's acceptance invariants, checked on EVERY
     candidate (no baseline needed): traffic-mix rows must keep
@@ -376,6 +420,7 @@ def check(path: str, baseline_path: Optional[str] = None,
     errors = (check_schema(doc) + check_batched_invariant(doc)
               + check_integrity_invariant(doc)
               + check_durability_invariant(doc)
+              + check_scrub_invariant(doc)
               + check_c10k_invariant(doc))
     if errors or baseline_path is None:
         return errors

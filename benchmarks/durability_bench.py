@@ -1,0 +1,106 @@
+"""Durability A/B/C: negotiated commit-policy cost + scrub throughput.
+
+Moves the same payload through one persistent ``mt`` session three
+times, once per negotiated at-rest policy — ``none`` (page cache owns
+the bytes), ``fsync`` (file fsync before the final ack), ``atomic``
+(temp file + fsync + rename + dir fsync before the ack) — and reports
+put MB/s plus each row's ratio against the ``none`` twin
+(``gain_vs_none``). Both ends negotiate integrity too, so every arm
+pays the same CRC cost and the delta isolates the commit sequence.
+
+The scrub rows measure the at-rest verification loop on the store the
+atomic arm just wrote (data file + ``.xdfs-manifest`` sidecar):
+
+* ``unthrottled`` — a full :class:`~repro.cluster.scrub.Scrubber` pass
+  with no rate limit: the CRC re-read ceiling of this host.
+* ``throttled`` — the same pass capped at ``limit_mb_s``; the row
+  carries the configured limit so ``check_json.py`` can enforce the
+  baseline-free invariant that a throttled pass NEVER exceeds its
+  budget (``SCRUB_RATE_SLACK`` absorbs the final-chunk rounding).
+
+fsync latency is container-fs dependent and swings run to run, so the
+cross-run regression gate for this section is loose; the tight checks
+are the same-run ratios and the rate-limit invariant.
+"""
+from __future__ import annotations
+
+import os
+import shutil
+import tempfile
+import time
+from pathlib import Path
+from typing import List
+
+ENGINE = "mt"
+N_CHANNELS = 2
+BLOCK = 1 << 17
+BATCH_FRAMES = 8
+POLICIES = ("none", "fsync", "atomic")
+LIMIT_MB_S = 50  # throttled scrub budget; well under any host's CRC rate
+
+
+def _best(fn, repeats: int) -> float:
+    return max(fn() for _ in range(repeats))
+
+
+def run(smoke: bool = False) -> List[dict]:
+    from repro.cluster.scrub import Scrubber
+    from repro.core.api import XdfsClient, XdfsServer
+
+    size = (8 if smoke else 32) << 20
+    repeats = 2 if smoke else 3
+    tmp = Path(tempfile.mkdtemp(prefix="xdfs_durability_"))
+    src = tmp / "src.bin"
+    src.write_bytes(os.urandom(size))
+
+    measured = {}  # policy -> put mb_s
+    for policy in POLICIES:
+        root = tmp / policy
+        with XdfsServer(engine=ENGINE, root=str(root),
+                        durability=policy) as srv:
+            with XdfsClient.connect(srv.address, n_channels=N_CHANNELS,
+                                    engine=ENGINE, block_size=BLOCK,
+                                    batch_frames=BATCH_FRAMES,
+                                    integrity=True,
+                                    durability=policy) as cli:
+
+                def put_once() -> float:
+                    t0 = time.perf_counter()
+                    cli.put(str(src), "bench.bin").result()
+                    return size / (time.perf_counter() - t0) / 1e6
+
+                measured[policy] = _best(put_once, repeats)
+
+    rows = []
+    for policy in POLICIES:
+        mb_s = measured[policy]
+        rows.append({
+            "mode": "put", "path": policy, "block_kb": BLOCK >> 10,
+            "size_mb": size >> 20, "mb_s": round(mb_s, 1),
+            "gain_vs_none": round(mb_s / measured["none"], 3),
+        })
+
+    # scrub the atomic arm's store: bench.bin + its manifest sidecar
+    store = str(tmp / "atomic")
+    for path_name, limit in (("unthrottled", 0),
+                             ("throttled", LIMIT_MB_S)):
+        scrubber = Scrubber(store, rate_limit=limit * 1e6 or None)
+        t0 = time.perf_counter()
+        report = scrubber.scrub_once()
+        elapsed = time.perf_counter() - t0
+        mb_s = report.bytes / elapsed / 1e6 if elapsed > 0 else 0.0
+        rows.append({
+            "mode": "scrub", "path": path_name, "block_kb": BLOCK >> 10,
+            "size_mb": report.bytes >> 20, "mb_s": round(mb_s, 1),
+            "limit_mb_s": limit, "verified": report.verified,
+            "corrupt": len(report.corrupt),
+        })
+
+    for row in rows:
+        print(",".join(f"{k}={v}" for k, v in row.items()), flush=True)
+    shutil.rmtree(tmp, ignore_errors=True)
+    return rows
+
+
+if __name__ == "__main__":
+    run(smoke=True)

@@ -148,6 +148,12 @@ def main() -> None:
     print("== section 0g: c10k session storm (loop vs threads) ==", flush=True)
     sections["c10k"] = session_reuse.run_c10k(smoke=args.smoke or args.quick)
 
+    print("== section 0h: at-rest durability policies + scrub ==", flush=True)
+    from benchmarks import durability_bench
+
+    sections["durability"] = durability_bench.run(
+        smoke=args.smoke or args.quick)
+
     if args.smoke:
         if args.json:
             write_json(args.json, sections)

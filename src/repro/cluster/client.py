@@ -35,7 +35,7 @@ from repro.cluster.wire import (
 from repro.core.api import SessionPool
 from repro.core.faults import RetryPolicy
 from repro.core.integrity import block_crc
-from repro.core.session import DEFAULT_BLOCK
+from repro.core.session import BusyError, DEFAULT_BLOCK, DiskFullError
 
 DEFAULT_CLUSTER_BLOCK = 4 << 20
 
@@ -54,21 +54,29 @@ class ClusterClient:
                  session_block: int = DEFAULT_BLOCK,
                  pool: Optional[SessionPool] = None,
                  policy: Optional[RetryPolicy] = None,
-                 connect_timeout: float = 10.0):
+                 connect_timeout: float = 10.0,
+                 integrity: bool = True,
+                 durability=0):
         self.block_size = block_size
         # one policy drives every deadline/retry decision: metanode dials,
         # metanode requests (including failover rotation), and the bounded
         # put re-plan loop
         self.policy = policy or RetryPolicy(connect_timeout=connect_timeout)
         self._ctrl = ControlChannel(meta_address, policy=self.policy)
+        # integrity sessions by default: every block put leaves a CRC
+        # manifest sidecar at the data node, which is what the scrubber
+        # verifies at rest; ``durability`` is the requested commit policy
+        # (the node's own floor still applies)
         self.pool = pool or SessionPool(
             n_channels=n_channels, engine=engine,
             block_size=min(session_block, block_size),
-            batch_frames=batch_frames)
+            batch_frames=batch_frames, integrity=integrity,
+            durability=durability)
         self._owns_pool = pool is None
         self.stats: Dict[str, int] = {
             "puts": 0, "gets": 0, "blocks_written": 0, "blocks_read": 0,
             "replica_failovers": 0, "degraded_blocks": 0, "replans": 0,
+            "busy_retries": 0, "disk_full_refusals": 0,
         }
 
     # -- metanode control --------------------------------------------------
@@ -131,6 +139,17 @@ class ClusterClient:
                     fut.result()
                     achieved[i].append(node["node_id"])
                     self.stats["blocks_written"] += 1
+                except DiskFullError:
+                    # typed refusal, not a transport fault: the session
+                    # survives, so keep the pooled connection but steer the
+                    # re-plan away from the full node
+                    failed_nodes.add(node["node_id"])
+                    self.stats["disk_full_refusals"] += 1
+                except BusyError:
+                    # transient admission pushback: the node is healthy, so
+                    # do NOT exclude it from the re-plan — the replan loop's
+                    # backoff is the retry delay it asked for
+                    self.stats["busy_retries"] += 1
                 except Exception:  # noqa: BLE001
                     failed_nodes.add(node["node_id"])
                     self.pool.invalidate((node["host"], node["port"]))
@@ -240,6 +259,9 @@ class ClusterClient:
             return None
         try:
             data = fut.result().data
+        except BusyError:
+            self.stats["busy_retries"] += 1
+            return None  # failover reads the block from another holder
         except Exception:  # noqa: BLE001
             return None
         if len(data) != blk["length"] or _crc(data) != blk["crc32"]:

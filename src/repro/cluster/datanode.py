@@ -42,6 +42,7 @@ from pathlib import Path
 from typing import Dict, List, Optional, Tuple
 
 from repro.cluster.leader import ControlChannel
+from repro.cluster.scrub import Scrubber
 from repro.cluster.wire import (
     CMD_DROP,
     CMD_REPLICATE,
@@ -51,7 +52,9 @@ from repro.cluster.wire import (
     block_name,
 )
 from repro.core.api import SessionPool, XdfsServer
+from repro.core.engines.base import store_free_bytes
 from repro.core.faults import RetryPolicy
+from repro.core.resume import ManifestSidecar, ResumeSidecar, sweep_sidecars
 
 BLOCK_PREFIX = "blk_"
 BLOCK_SUFFIX = ".bin"
@@ -73,7 +76,12 @@ class DataNode:
                  n_channels: int = 2, batch_frames: int = 1,
                  pool: Optional[SessionPool] = None,
                  connect_timeout: float = 10.0,
-                 policy: Optional[RetryPolicy] = None):
+                 policy: Optional[RetryPolicy] = None,
+                 durability: int = 0,
+                 capacity_bytes: Optional[int] = None,
+                 scrub_rate: Optional[float] = None,
+                 scrub_interval: Optional[float] = None,
+                 clock=None, scrub_sleep=None):
         # two attempts preserves the historical redial-once behaviour;
         # pass a policy to trade it for deeper backoff
         self.policy = policy or RetryPolicy(attempts=2,
@@ -85,12 +93,32 @@ class DataNode:
         self.heartbeat_interval = heartbeat_interval
         self.auto_heartbeat = auto_heartbeat
         self.server = XdfsServer(engine=engine, root=str(self.root),
-                                 host=host)
+                                 host=host, durability=durability,
+                                 capacity_bytes=capacity_bytes)
+        self.capacity_bytes = capacity_bytes
+        # at-rest verification: a rate-limited pass over the store pairing
+        # block files with their .xdfs-manifest sidecars; injectable
+        # clock/sleep keep chaos tests deterministic
+        import time as _time
+
+        self.scrubber = Scrubber(str(self.root), rate_limit=scrub_rate,
+                                 clock=clock or _time.monotonic,
+                                 sleep=scrub_sleep or _time.sleep)
+        self.scrub_interval = scrub_interval
+        self._scrub_thread: Optional[threading.Thread] = None
+        # blocks the scrubber condemned: excluded from block reports
+        # (the MetaNode treats them as gone and re-replicates) and
+        # advertised under "corrupt" until the drop command lands
+        self._corrupt: set = set()
         # node-to-node transport: one pooled session per peer, so many
-        # re-replication copies to the same survivor share a negotiation
+        # re-replication copies to the same survivor share a negotiation.
+        # integrity=True: a re-replicated block lands with a manifest at
+        # the target, so the rebuilt replica is scrubbable too
         self.pool = pool or SessionPool(n_channels=n_channels,
                                         engine=engine,
-                                        batch_frames=batch_frames)
+                                        batch_frames=batch_frames,
+                                        integrity=True,
+                                        durability=durability)
         self._owns_pool = pool is None
         self._hb_thread: Optional[threading.Thread] = None
         self._stop = threading.Event()
@@ -98,7 +126,8 @@ class DataNode:
         self.stats: Dict[str, int] = {
             "heartbeats": 0, "replicated_out": 0, "dropped": 0,
             "command_errors": 0, "reregisters": 0, "fenced_commands": 0,
-            "errors_dropped": 0,
+            "errors_dropped": 0, "scrub_passes": 0, "scrub_corrupt": 0,
+            "sidecars_swept": 0,
         }
 
     @property
@@ -110,6 +139,9 @@ class DataNode:
 
     def start(self) -> "DataNode":
         self.root.mkdir(parents=True, exist_ok=True)
+        # a crashed transfer leaves orphan sidecars and atomic-commit temp
+        # files; no session is live at startup, so sweeping is safe
+        self.stats["sidecars_swept"] += len(sweep_sidecars(str(self.root)))
         self.server.start()
         self.register()
         if self.auto_heartbeat:
@@ -117,6 +149,11 @@ class DataNode:
                 target=self._heartbeat_loop,
                 name=f"heartbeat-{self.node_id}", daemon=True)
             self._hb_thread.start()
+        if self.scrub_interval is not None:
+            self._scrub_thread = threading.Thread(
+                target=self._scrub_loop,
+                name=f"scrub-{self.node_id}", daemon=True)
+            self._scrub_thread.start()
         return self
 
     @property
@@ -133,6 +170,8 @@ class DataNode:
         self.server.abort()
         if self._hb_thread is not None:
             self._hb_thread.join(5.0)
+        if self._scrub_thread is not None:
+            self._scrub_thread.join(5.0)
         if self._owns_pool:
             self.pool.close()
 
@@ -158,11 +197,43 @@ class DataNode:
         })
 
     def block_ids(self) -> List[str]:
-        """The store's ground truth, scanned fresh for every report."""
+        """The store's ground truth, scanned fresh for every report.
+        Blocks the scrubber condemned are EXCLUDED — the MetaNode must
+        not count a corrupt replica as a live copy."""
         out = []
         for p in self.root.glob(f"{BLOCK_PREFIX}*{BLOCK_SUFFIX}"):
-            out.append(p.name[len(BLOCK_PREFIX):-len(BLOCK_SUFFIX)])
+            bid = p.name[len(BLOCK_PREFIX):-len(BLOCK_SUFFIX)]
+            if bid not in self._corrupt:
+                out.append(bid)
         return sorted(out)
+
+    def free_bytes(self) -> int:
+        """Advertised store headroom (statvfs, or the synthetic capacity
+        minus current usage when ``capacity_bytes`` is set)."""
+        return store_free_bytes(str(self.root), self.capacity_bytes)
+
+    # -- scrubbing ---------------------------------------------------------
+
+    def scrub_once(self):
+        """One deterministic scrub pass; condemned block ids feed the
+        next heartbeat (and stay condemned until the drop lands)."""
+        report = self.scrubber.scrub_once()
+        self.stats["scrub_passes"] += 1
+        for path in report.corrupt + report.missing:
+            name = os.path.basename(path)
+            if name.startswith(BLOCK_PREFIX) and name.endswith(BLOCK_SUFFIX):
+                bid = name[len(BLOCK_PREFIX):-len(BLOCK_SUFFIX)]
+                if bid not in self._corrupt:
+                    self._corrupt.add(bid)
+                    self.stats["scrub_corrupt"] += 1
+        return report
+
+    def _scrub_loop(self) -> None:
+        while not self._stop.wait(self.scrub_interval):
+            try:
+                self.scrub_once()
+            except Exception as e:  # noqa: BLE001 - scrub must not die
+                self._note_error(e)
 
     def heartbeat_once(self) -> List[dict]:
         """Send one heartbeat + block report; execute every command the
@@ -171,7 +242,10 @@ class DataNode:
         restarted blank, or a freshly promoted standby whose journal
         predates our registration — answers ``unregistered``; recover by
         re-registering and beating again. Returns the executed commands."""
-        body = {"node_id": self.node_id, "blocks": self.block_ids()}
+        body = {"node_id": self.node_id, "blocks": self.block_ids(),
+                "free_bytes": self.free_bytes()}
+        if self._corrupt:
+            body["corrupt"] = sorted(self._corrupt)
         try:
             reply = self._meta_request(ClusterMsg.HEARTBEAT, body)
         except ClusterError as e:
@@ -235,8 +309,14 @@ class DataNode:
             raise
 
     def _drop(self, block_id: str) -> None:
+        path = self.root / block_name(block_id)
         try:
-            os.unlink(self.root / block_name(block_id))
+            os.unlink(path)
             self.stats["dropped"] += 1
         except FileNotFoundError:
             pass
+        # GC the block's transfer state with it: a dangling sidecar would
+        # make the scrubber report the block as "missing" forever
+        ResumeSidecar(str(path)).clear()
+        ManifestSidecar(str(path)).clear()
+        self._corrupt.discard(block_id)

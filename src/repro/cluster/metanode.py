@@ -136,6 +136,9 @@ class NodeInfo:
     host: str
     port: int
     blocks: Set[str] = field(default_factory=set)
+    # soft state, refreshed by every heartbeat and deliberately NOT
+    # journaled: after a recovery it re-derives within one beat
+    free_bytes: Optional[int] = None
 
     @property
     def address(self) -> Tuple[str, int]:
@@ -188,7 +191,8 @@ class MetaNode:
             "re_replications": 0, "rebalance_moves": 0, "nodes_died": 0,
             "journal_records": 0, "snapshots": 0, "replayed_records": 0,
             "syncs_served": 0, "syncs_applied": 0, "promotions": 0,
-            "errors_dropped": 0,
+            "errors_dropped": 0, "corrupt_reported": 0,
+            "full_nodes_avoided": 0,
         }
         self.errors: deque = deque(maxlen=ERROR_BUFFER)
         # -- durability ------------------------------------------------
@@ -657,9 +661,28 @@ class MetaNode:
             for blk in report - node.blocks:
                 self.locations.setdefault(blk, set()).add(node_id)
             node.blocks = report
+            if body.get("free_bytes") is not None:
+                node.free_bytes = int(body["free_bytes"])
             for blk in report:
                 self._inflight.pop((blk, node_id), None)
                 self.lost_blocks.discard(blk)
+            # scrub verdicts: evict the condemned replica from the
+            # location index explicitly — the block-report diff above
+            # cannot be relied on, because a replica the client committed
+            # optimistically may never have appeared in ``node.blocks``
+            # (put and condemn within one beat interval). Then command
+            # the node to reclaim the bad file; the next tick
+            # re-replicates from a surviving good holder
+            for blk in body.get("corrupt", ()):
+                blk = str(blk)
+                self.stats["corrupt_reported"] += 1
+                node.blocks.discard(blk)
+                holders = self.locations.get(blk)
+                if holders is not None:
+                    holders.discard(node_id)
+                    if not holders:
+                        del self.locations[blk]
+                self._enqueue(node_id, {"op": CMD_DROP, "block_id": blk})
             self._settle_pending_drops()
             cmds = self._commands.get(node_id, [])
             self._commands[node_id] = []
@@ -766,6 +789,16 @@ class MetaNode:
                     alive = pref
             if not alive:
                 raise ClusterError("no live data nodes to place on")
+            # disk pressure: steer around nodes that advertised too little
+            # free space for even one block of this put, unless that would
+            # leave nothing to place on (a degraded plan still lets the
+            # other replicas land; the full node refuses with disk_full)
+            free = {n: self.nodes[n].free_bytes for n in alive}
+            roomy = placement.filter_roomy(alive, free,
+                                           min(block_size, max(size, 1)))
+            if len(roomy) < len(alive):
+                self.stats["full_nodes_avoided"] += len(alive) - len(roomy)
+                alive = roomy
             rf = min(self.replication, len(alive))
             load = {n: len(self.nodes[n].blocks) for n in alive}
             n_blocks = (size + block_size - 1) // block_size

@@ -24,6 +24,20 @@ class Move:
     dst: str
 
 
+def filter_roomy(nodes: Sequence[str], free: Mapping[str, int],
+                 need: int) -> List[str]:
+    """The nodes with at least ``need`` advertised free bytes.
+
+    ``free`` maps node id -> heartbeat-advertised free space (``None`` =
+    the node has not said, which counts as roomy — refusing to place on
+    a node for silence would brick a fresh cluster). When EVERY node is
+    too full the original list comes back unchanged: a doomed-but-typed
+    ``disk_full`` refusal beats an unplaceable put, and the caller's
+    stats can tell the difference."""
+    roomy = [n for n in nodes if free.get(n) is None or free[n] >= need]
+    return roomy if roomy else list(nodes)
+
+
 def choose_replicas(load: Mapping[str, int], k: int,
                     exclude: Iterable[str] = ()) -> List[str]:
     """The ``k`` least-loaded nodes not in ``exclude`` (load = blocks

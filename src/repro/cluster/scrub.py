@@ -1,0 +1,145 @@
+"""Background scrubber: re-verify data at rest against its manifests.
+
+A put's bytes are CRC-verified as they cross the wire (integrity mode)
+and committed with the negotiated durability policy, but nothing ever
+re-reads a block after its pwritev lands — silent bit-rot surfaces only
+when a client happens to fetch the bad replica. The :class:`Scrubber`
+closes that gap: it walks a store directory pairing each data file with
+its at-rest manifest (``<path>.xdfs-manifest``, written by a successful
+integrity put), re-computes per-block CRC32s via the same libdeflate
+path the wire uses (``integrity.block_crc``), and reports what it finds:
+
+* ``corrupt`` — a data file whose bytes no longer match its manifest
+  (or whose size drifted from the recorded one);
+* ``missing`` — a manifest with no data file (the file vanished out
+  from under its at-rest truth);
+* ``unverified`` — data files with no manifest (non-integrity puts):
+  counted, never flagged.
+
+The scrubber never competes with foreground transfers: reads are capped
+at ``rate_limit`` bytes/sec by a token-bucket pause between chunks, with
+an injectable ``clock``/``sleep`` pair so tests drive whole passes on a
+fake clock. One *pass* is bounded work (one walk of the store); callers
+own the cadence — the :class:`~repro.cluster.datanode.DataNode` runs a
+pass per scrub interval and folds the verdicts into its heartbeats,
+where the MetaNode turns corrupt replicas into drop + re-replicate
+repair commands.
+"""
+from __future__ import annotations
+
+import os
+import time
+from dataclasses import dataclass, field
+from typing import Callable, List, Optional
+
+from repro.core.integrity import crc32_update
+from repro.core.resume import MANIFEST_SUFFIX, ManifestSidecar
+
+# read unit: big enough to amortize syscalls, small enough that the
+# rate-limit pause granularity stays fine-grained
+SCRUB_CHUNK = 1 << 20
+
+
+@dataclass
+class ScrubReport:
+    """One pass's verdicts (paths are data-file paths, not sidecars)."""
+
+    corrupt: List[str] = field(default_factory=list)
+    missing: List[str] = field(default_factory=list)
+    verified: int = 0  # files whose every manifest block matched
+    unverified: int = 0  # data files with no manifest to check against
+    bytes: int = 0  # data bytes actually read and CRC'd
+
+
+class Scrubber:
+    """Rate-limited at-rest verification of one store directory."""
+
+    def __init__(self, root: str, rate_limit: Optional[float] = None,
+                 clock: Callable[[], float] = time.monotonic,
+                 sleep: Callable[[float], None] = time.sleep,
+                 chunk: int = SCRUB_CHUNK):
+        self.root = str(root)
+        self.rate_limit = rate_limit  # bytes/sec; None = unthrottled
+        self._clock = clock
+        self._sleep = sleep
+        self.chunk = max(1, int(chunk))
+        # token-bucket state: the time before which the next read must wait
+        self._resume_at = 0.0
+
+    # -- rate limiting -----------------------------------------------------
+
+    def _throttle(self, n_bytes: int) -> None:
+        """Charge ``n_bytes`` against the budget; sleep off any debt."""
+        if not self.rate_limit or n_bytes <= 0:
+            return
+        now = self._clock()
+        start = max(now, self._resume_at)
+        self._resume_at = start + n_bytes / self.rate_limit
+        if self._resume_at > now:
+            self._sleep(self._resume_at - now)
+
+    # -- verification ------------------------------------------------------
+
+    def verify_file(self, path: str) -> Optional[bool]:
+        """``True`` = every manifest block matches, ``False`` = corrupt
+        or missing data, ``None`` = no manifest (nothing to check)."""
+        loaded = ManifestSidecar(path).load_any()
+        if loaded is None:
+            return None
+        size, _block_size, manifest = loaded
+        try:
+            if os.path.getsize(path) != size:
+                return False
+            with open(path, "rb", buffering=0) as f:
+                for off in sorted(manifest.blocks):
+                    length, want = manifest.blocks[off]
+                    f.seek(off)
+                    crc = 0
+                    left = length
+                    while left > 0:
+                        piece = f.read(min(self.chunk, left))
+                        if not piece:
+                            return False  # short read: truncated file
+                        crc = crc32_update(crc, piece)
+                        left -= len(piece)
+                        self._last_pass_bytes += len(piece)
+                        self._throttle(len(piece))
+                    if crc != want:
+                        return False
+        except OSError:
+            return False
+        return True
+
+    def scrub_once(self) -> ScrubReport:
+        """One full pass over the store. Deterministic order (sorted
+        walk) so fake-clock tests know exactly what a pass reads."""
+        report = ScrubReport()
+        self._last_pass_bytes = 0
+        for dirpath, dirs, files in os.walk(self.root):
+            dirs.sort()
+            names = set(files)
+            for name in sorted(files):
+                if not name.endswith(MANIFEST_SUFFIX):
+                    continue
+                data_name = name[: -len(MANIFEST_SUFFIX)]
+                data_path = os.path.join(dirpath, data_name)
+                if data_name not in names:
+                    report.missing.append(data_path)
+                    continue
+                ok = self.verify_file(data_path)
+                if ok:
+                    report.verified += 1
+                elif ok is False:
+                    report.corrupt.append(data_path)
+        # data files with no manifest: present, just not verifiable
+        for dirpath, dirs, files in os.walk(self.root):
+            names = set(files)
+            for name in files:
+                if (not name.endswith(MANIFEST_SUFFIX)
+                        and f"{name}{MANIFEST_SUFFIX}" not in names
+                        and ".xdfs-" not in name):
+                    report.unverified += 1
+        report.bytes = self._last_pass_bytes
+        return report
+
+    _last_pass_bytes = 0

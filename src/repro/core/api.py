@@ -141,11 +141,21 @@ class XdfsServer:
                  idle_timeout: Optional[float] = None,
                  clock=time.monotonic,
                  drr_quantum: Optional[int] = None,
-                 turn_budget: Optional[int] = None):
+                 turn_budget: Optional[int] = None,
+                 durability: Union[int, str] = 0,
+                 capacity_bytes: Optional[int] = None):
         from repro.core import evloop
+        from repro.core.engines.base import durability_byte
 
         self.engine = get_engine(engine)  # fail fast on unknown engines
         self.root = root
+        # server-side durability FLOOR: every put commits with at least
+        # this policy, whatever the client negotiated ("none"/"fsync"/
+        # "atomic" or the wire byte)
+        self.durability = durability_byte(durability)
+        # synthetic store capacity (bytes) for disk-pressure tests and
+        # quota-limited stores; None = trust statvfs
+        self.capacity_bytes = capacity_bytes
         self.host = host
         self._port = port
         self.pool_slots = pool_slots
@@ -450,7 +460,9 @@ class XdfsServer:
             # the channels and count the session as closed
             sess = ServerSession(socks, neg, self.engine, self.root,
                                  self.pool_slots, splice=self.splice,
-                                 io_timeout=self.io_timeout)
+                                 io_timeout=self.io_timeout,
+                                 durability=self.durability,
+                                 capacity_bytes=self.capacity_bytes)
             sess.run()
         except BaseException as e:  # noqa: BLE001 - keep the server alive
             self.errors.append(e)
@@ -633,7 +645,8 @@ class XdfsClient:
                 splice: bool = False, batch_frames: int = 1,
                 integrity: bool = False,
                 io_timeout: Optional[float] = None,
-                connect_deadline: Optional[float] = None) -> "XdfsClient":
+                connect_deadline: Optional[float] = None,
+                durability: Union[int, str] = 0) -> "XdfsClient":
         """``tuning`` — negotiated socket knobs (TCP_NODELAY + SO_SNDBUF /
         SO_RCVBUF); carried in the Negotiation so the server applies the
         same values to its side of every channel. ``splice`` — opt this
@@ -647,9 +660,15 @@ class XdfsClient:
         bound applied to every in-flight operation (typed ``TimeoutError``
         instead of a hang). ``connect_deadline`` — wall-clock budget for
         the WHOLE multi-channel handshake, on top of the per-socket
-        ``timeout``."""
+        ``timeout``. ``durability`` — requested at-rest policy for puts
+        ("none"/"fsync"/"atomic" or the wire byte); the server commits
+        with the STRONGER of this and its own configured floor before
+        the final ACK."""
+        from repro.core.engines.base import durability_byte
+
         eng = get_engine(engine)
         tuning = tuning or SocketTuning()
+        durability = durability_byte(durability)
         batch_frames = max(1, min(int(batch_frames), MAX_BATCH_FRAMES))
         deadline = (Deadline(connect_deadline)
                     if connect_deadline is not None else None)
@@ -671,7 +690,7 @@ class XdfsClient:
                         "", "", file_size=0,
                         so_sndbuf=tuning.sndbuf, so_rcvbuf=tuning.rcvbuf,
                         so_nodelay=tuning.nodelay, batch_frames=batch_frames,
-                        integrity=integrity,
+                        integrity=integrity, durability=durability,
                     ))
         except BaseException:
             for s in socks:
@@ -1002,7 +1021,8 @@ class SessionPool:
                  tuning: Optional[SocketTuning] = None,
                  timeout: float = HANDSHAKE_TIMEOUT,
                  integrity: bool = False,
-                 io_timeout: Optional[float] = None):
+                 io_timeout: Optional[float] = None,
+                 durability: Union[int, str] = 0):
         self.n_channels = n_channels
         self.engine = engine
         self.block_size = block_size
@@ -1011,9 +1031,11 @@ class SessionPool:
         self.timeout = timeout
         self.integrity = integrity
         self.io_timeout = io_timeout
+        self.durability = durability
         self._lock = threading.Lock()
         self._sessions: Dict[Tuple[str, int], XdfsClient] = {}
-        self.stats: Dict[str, int] = {"connects": 0, "reuses": 0}
+        self.stats: Dict[str, int] = {"connects": 0, "reuses": 0,
+                                      "stale_redials": 0}
 
     def lease(self, address: Tuple[str, int]) -> XdfsClient:
         """The pooled session for ``address``, dialing one if needed.
@@ -1033,10 +1055,26 @@ class SessionPool:
                 block_size=self.block_size, timeout=self.timeout,
                 tuning=self.tuning, batch_frames=self.batch_frames,
                 integrity=self.integrity, io_timeout=self.io_timeout,
+                durability=self.durability,
             )
             self._sessions[address] = cli
             self.stats["connects"] += 1
             return cli
+
+    def execute(self, address: Tuple[str, int], fn):
+        """Run ``fn(client)`` on the pooled session for ``address``,
+        absorbing ONE stale-session failure. A peer that restarted at the
+        same address leaves the pooled session looking healthy until its
+        first use raises a connection-level error — invalidate, redial
+        once, and re-run; a second failure propagates (the peer is
+        actually down, not just restarted)."""
+        cli = self.lease(address)
+        try:
+            return fn(cli)
+        except (ConnectionError, TimeoutError, OSError):
+            self.invalidate(address)
+            self.stats["stale_redials"] += 1
+            return fn(self.lease(address))
 
     def invalidate(self, address: Tuple[str, int]) -> None:
         """Drop the pooled session for a peer (e.g. after a transfer

@@ -64,6 +64,67 @@ ACK = b"\x06"
 IOV_MAX = 512
 SENDFILE = hasattr(os, "sendfile")
 
+# At-rest durability policy for received files, negotiated as the final
+# Negotiation tail byte (header.Negotiation.durability). Wire bytes are
+# ordered by strength so the server can apply max(client, server floor).
+DURABILITY_NONE = 0  # close + ACK; the page cache owns the bytes
+DURABILITY_FSYNC = 1  # fsync the sink before the final ACK
+DURABILITY_ATOMIC = 2  # temp file + fsync + os.replace + dir fsync pre-ACK
+DURABILITY_NAMES = ("none", "fsync", "atomic")
+# receive-side temp files of atomic-mode sinks: <path>.xdfs-tmp.<pid>
+TMP_INFIX = ".xdfs-tmp."
+
+
+def durability_byte(policy) -> int:
+    """Normalize a durability policy (name or wire byte) to its byte."""
+    if isinstance(policy, str):
+        try:
+            return DURABILITY_NAMES.index(policy)
+        except ValueError:
+            raise ValueError(
+                f"unknown durability policy {policy!r}; "
+                f"expected one of {DURABILITY_NAMES}") from None
+    b = int(policy)
+    if not 0 <= b < len(DURABILITY_NAMES):
+        raise ValueError(f"unknown durability byte {b}")
+    return b
+
+
+def fsync_dir(path: str) -> None:
+    """fsync a directory so a just-landed ``os.replace`` survives power
+    loss (best-effort: some filesystems refuse O_RDONLY dir fsync)."""
+    try:
+        fd = os.open(path or ".", os.O_RDONLY)
+    except OSError:
+        return
+    try:
+        os.fsync(fd)
+    except OSError:
+        pass
+    finally:
+        os.close(fd)
+
+
+def store_free_bytes(root: str, capacity_bytes: Optional[int] = None) -> int:
+    """Bytes available for new data under ``root``. With a configured
+    ``capacity_bytes`` (quota'd stores, deterministic tests) it is the
+    capacity minus bytes currently stored under the root; otherwise the
+    filesystem's own free space (``statvfs``)."""
+    if capacity_bytes is not None:
+        used = 0
+        for dirpath, _dirs, files in os.walk(root):
+            for name in files:
+                try:
+                    used += os.lstat(os.path.join(dirpath, name)).st_size
+                except OSError:
+                    pass
+        return max(0, capacity_bytes - used)
+    try:
+        st = os.statvfs(root)
+    except OSError:
+        return 1 << 62  # unprobeable store: never refuse on a guess
+    return st.f_bavail * st.f_frsize
+
 # the one definition of which frame events end a channel's file stream
 END_EVENTS = (ChannelEvent.EOFR, ChannelEvent.EOFT)
 
@@ -775,14 +836,31 @@ class Sink:
     into memory, or discards them. The zero-copy write-out is
     :meth:`writev_views`: trimmed views of registered pool memory go
     straight into ``os.pwritev`` — the pool slots they reference are
-    released by the caller only after the write lands."""
+    released by the caller only after the write lands.
 
-    def __init__(self, path: Optional[str], size: int, capture: bool = False):
+    ``durability`` is the negotiated at-rest policy. Engines call
+    :meth:`commit` after their final flush and BEFORE the final ACK:
+    ``fsync`` syncs the file, ``atomic`` lands every block in a private
+    temp file (``<path>.xdfs-tmp.<pid>``) that commit fsyncs and
+    ``os.replace``s over the final path (+ directory fsync) — an acked
+    file can never be half-present after power loss, and a crash before
+    commit leaves any previous complete version untouched. ``close``
+    without commit unlinks an atomic sink's temp file."""
+
+    def __init__(self, path: Optional[str], size: int, capture: bool = False,
+                 durability=DURABILITY_NONE):
         self.path = path
         self.size = size
         self.capture = capture
+        self.durability = durability_byte(durability)
+        self.committed = False
+        if path and self.durability >= DURABILITY_ATOMIC:
+            self._write_path = f"{path}{TMP_INFIX}{os.getpid()}"
+        else:
+            self._write_path = path
         if path:
-            self._fd = os.open(path, os.O_WRONLY | os.O_CREAT, 0o644)
+            self._fd = os.open(self._write_path,
+                               os.O_WRONLY | os.O_CREAT, 0o644)
             os.ftruncate(self._fd, size)
             self._cap = None
         else:
@@ -807,7 +885,11 @@ class Sink:
     def open_worker(self) -> "Sink":
         if self.capture:
             raise ValueError("capture sinks cannot be shared with forked workers")
-        return Sink(self.path, self.size)
+        # workers write the PARENT's write path (the temp file in atomic
+        # mode — never a per-worker temp) and carry no commit/cleanup
+        # duty: the owning sink alone fsyncs/renames after every worker
+        # is reaped
+        return Sink(self._write_path, self.size)
 
     def write_at(self, offset: int, data) -> None:
         if self._fd >= 0:
@@ -866,9 +948,33 @@ class Sink:
             [(off, memoryview(blk)[:ln]) for off, ln, blk in blocks]
         )
 
+    def commit(self) -> None:
+        """Make the received bytes durable per the sink's policy — engines
+        call this after the final flush and before the final ACK, so the
+        ACK is a durability promise, not just a delivery one."""
+        if self._fd < 0 or self.durability == DURABILITY_NONE:
+            self.committed = True
+            return
+        os.fsync(self._fd)
+        if self.durability >= DURABILITY_ATOMIC and self._write_path != self.path:
+            os.close(self._fd)
+            self._fd = -1
+            os.replace(self._write_path, self.path)
+            fsync_dir(os.path.dirname(os.path.abspath(self.path)))
+        self.committed = True
+
     def close(self):
         if self._fd >= 0:
             os.close(self._fd)
+            self._fd = -1
+        if (self.durability >= DURABILITY_ATOMIC and not self.committed
+                and self._write_path != self.path):
+            # aborted transfer: discard the temp file; a previous complete
+            # version at the final path survives untouched
+            try:
+                os.unlink(self._write_path)
+            except OSError:
+                pass
 
 
 @dataclass

@@ -25,6 +25,7 @@ from __future__ import annotations
 import json
 import os
 import socket
+import struct
 from typing import List, Optional
 
 from repro.core.autotune import SpliceArbiter
@@ -229,14 +230,37 @@ def _child_receive(s, wsink: Sink, block_size: int, use_splice: bool,
             spl.close()
 
 
-def _read_all(fd: int) -> bytes:
-    """Drain a pipe to EOF (a child's crcs list can exceed one pipe read)."""
-    chunks = []
-    while True:
-        part = os.read(fd, 65536)
+def _write_msg(fd: int, payload: bytes) -> None:
+    """Length-prefixed write (loops: a big crcs list exceeds PIPE_BUF)."""
+    data = struct.pack("<Q", len(payload)) + payload
+    off = 0
+    while off < len(data):
+        off += os.write(fd, data[off:])
+
+
+def _read_msg(fd: int) -> bytes:
+    """Read one length-prefixed message. Exact-count framing, NOT
+    read-to-EOF: other threads of this process fork too (the in-process
+    server's mp sender children), and their children inherit this pipe's
+    write end — an EOF wait would deadlock against a sender child that is
+    itself blocked waiting for the ACK this read gates."""
+    chunks: List[bytes] = []
+    need = 8
+    while need:
+        part = os.read(fd, need)
         if not part:
-            return b"".join(chunks)
+            return b""  # child died before reporting
         chunks.append(part)
+        need -= len(part)
+    (length,) = struct.unpack("<Q", b"".join(chunks))
+    chunks, need = [], length
+    while need:
+        part = os.read(fd, min(need, 65536))
+        if not part:
+            return b""
+        chunks.append(part)
+        need -= len(part)
+    return b"".join(chunks)
 
 
 def mp_receive(
@@ -272,16 +296,18 @@ def mp_receive(
                                        batch_frames, arbiter_factory,
                                        io_timeout)
                 wsink.close()
-                os.write(w_cnt, json.dumps(child).encode())
+                _write_msg(w_cnt, json.dumps(child).encode())
                 os.close(w_cnt)
-                send_all(s, ACK)
+                # the PARENT acks after reaping every child and committing
+                # the sink — a child acking its own stripe could promise
+                # durability for bytes a sibling then fails to land
                 os._exit(0)
             except BaseException as e:  # noqa: BLE001 - reported over pipe
                 kind = ("timeout" if isinstance(e, TimeoutError)
                         else "protocol" if isinstance(e, ProtocolError)
                         else "other")
                 try:
-                    os.write(w_cnt, json.dumps(
+                    _write_msg(w_cnt, json.dumps(
                         {"error": str(e) or type(e).__name__,
                          "kind": kind}).encode())
                     os.close(w_cnt)
@@ -292,7 +318,7 @@ def mp_receive(
         procs.append((pid, r_cnt))
     failure = None
     for pid, r_cnt in procs:
-        raw = _read_all(r_cnt)
+        raw = _read_msg(r_cnt)
         os.close(r_cnt)
         _, status = os.waitpid(pid, 0)
         if os.waitstatus_to_exitcode(status) != 0:
@@ -320,6 +346,12 @@ def mp_receive(
                 crc_acc.add(off, ln, crc)
     if failure is not None:
         raise failure
+    # fsync(fd) flushes the whole inode, so the parent's commit covers
+    # every child's writes to the shared (temp) path
+    sink.commit()
+    for s in socks:
+        s.settimeout(io_timeout)
+        send_all(s, ACK)
     return stats
 
 

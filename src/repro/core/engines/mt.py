@@ -408,6 +408,7 @@ def mt_receive(
     dt.join()
     if errors:
         raise errors[0]  # don't ACK a broken stream
+    sink.commit()  # durability barrier: bytes are safe BEFORE the ACK
     for s in socks:
         send_all(s, ACK)
     return stats

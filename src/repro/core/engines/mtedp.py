@@ -118,6 +118,7 @@ def mtedp_receive(
             )
         else:
             assert fsm.done, f"conformance: receiver FSM ended in {fsm.state}"
+    sink.commit()  # durability barrier: bytes are safe BEFORE the ACK
     for s in socks:
         s.settimeout(io_timeout)  # None = blocking without a deadline
         send_all(s, ACK)

@@ -41,6 +41,7 @@ slab datapath, byte for byte.
 """
 from __future__ import annotations
 
+import errno
 import json
 import os
 import selectors
@@ -54,12 +55,16 @@ from typing import Dict, List, Optional, Tuple
 from repro.core.autotune import ChannelTuner
 from repro.core.engines.base import (
     ACK,
+    DURABILITY_ATOMIC,
+    DURABILITY_FSYNC,
     FrameBuilder,
     Sink,
     SlabChannel,
     Source,
     advance_iovec,
+    durability_byte,
     slab_span,
+    store_free_bytes,
 )
 from repro.core.fsm import FSM_BUILDERS
 from repro.core.header import (
@@ -71,10 +76,11 @@ from repro.core.header import (
     ProtocolError,
 )
 from repro.core.integrity import CrcManifest, IntegrityError
-from repro.core.resume import ResumeSidecar, throttled_autosave
+from repro.core.resume import ManifestSidecar, ResumeSidecar, throttled_autosave
 from repro.core.session import (
     CTRL_CHANNEL,
     MAX_BATCH_FRAMES,
+    DiskFullError,
     SessionError,
     SessionStats,
     resolve_path,
@@ -109,7 +115,8 @@ HS_STATES: Tuple[str, ...] = (HS_HELLO, HS_NEG_LEN, HS_NEG_BODY, HS_PARKED)
 ERR_BUSY = "busy"           # over max_sessions at admission
 ERR_DRAINING = "draining"   # server is stopping; finishes in-flight only
 ERR_IDLE = "idle"           # evicted after idle_timeout of inactivity
-ERR_KINDS: Tuple[str, ...] = (ERR_BUSY, ERR_DRAINING, ERR_IDLE)
+ERR_DISK_FULL = "disk_full"  # put refused: store cannot fit the file
+ERR_KINDS: Tuple[str, ...] = (ERR_BUSY, ERR_DRAINING, ERR_IDLE, ERR_DISK_FULL)
 
 _NEG_LEN = struct.Struct("<I")
 
@@ -282,6 +289,10 @@ class LoopSession:
         self.n = neg.n_channels
         self.root = server.root
         self.integrity = bool(neg.integrity)
+        # stronger of the client's requested policy and the server floor
+        self.durability = max(durability_byte(getattr(server, "durability", 0)),
+                              min(int(neg.durability), DURABILITY_ATOMIC))
+        self.capacity_bytes = getattr(server, "capacity_bytes", None)
         self.batch = max(1, min(int(neg.batch_frames), MAX_BATCH_FRAMES))
         self.reject_kind = reject_kind
         self.stats = SessionStats()
@@ -309,6 +320,7 @@ class LoopSession:
         self._sink: Optional[Sink] = None
         self._crc_acc: Optional[CrcManifest] = None
         self._sidecar: Optional[ResumeSidecar] = None
+        self._path: Optional[str] = None
         self._file_size = 0
         self._block_size = neg.block_size
         # send-transfer state
@@ -504,7 +516,10 @@ class LoopSession:
                     ChannelEvent.EXCEPTION,
                     {"error": f"unexpected control event {ev!r}"})
         except SessionError as e:
-            self._send_ctrl_frame(ChannelEvent.EXCEPTION, {"error": str(e)})
+            payload = {"error": str(e)}
+            if e.kind is not None:
+                payload["kind"] = e.kind
+            self._send_ctrl_frame(ChannelEvent.EXCEPTION, payload)
 
     def _dispatch_reject(self, hdr: ChannelHeader) -> None:
         if hdr.event == ChannelEvent.EOFT:
@@ -532,18 +547,32 @@ class LoopSession:
     def _start_put(self, meta: dict, resume: bool = False) -> None:
         size = int(meta["size"])
         block_size = int(meta.get("block_size", self.neg.block_size))
+        if size and self.root is not None:
+            free = store_free_bytes(self.root, self.capacity_bytes)
+            if size > free:
+                raise DiskFullError(
+                    f"store has {free} bytes free; refusing {size}-byte put")
+        # a resume-put fills holes of the final file in place, so atomic
+        # degrades to fsync for that one operation (session.py idiom)
+        durability = (min(self.durability, DURABILITY_FSYNC) if resume
+                      else self.durability)
+        atomic = durability >= DURABILITY_ATOMIC
         try:
             path = resolve_path(self.root, meta.get("remote"), for_write=True)
-            sink = Sink(path, size)
+            sink = Sink(path, size, durability=durability)
         except OSError as e:
+            if e.errno == errno.ENOSPC:
+                raise DiskFullError(f"cannot open {meta.get('remote')!r}: {e}")
             raise SessionError(f"cannot open {meta.get('remote')!r}: {e}")
         sidecar = (ResumeSidecar(path)
                    if self.integrity and path is not None else None)
         crc_acc: Optional[CrcManifest] = None
         if self.integrity:
+            # no mid-transfer autosave under atomic: resume state would
+            # describe blocks living in a temp file an abort discards
             crc_acc = CrcManifest(
                 autosave=throttled_autosave(sidecar, size, block_size)
-                if sidecar is not None else None)
+                if sidecar is not None and not atomic else None)
         reply = {"ok": True}
         if resume:
             prev = sidecar.load(size, block_size) if sidecar is not None else None
@@ -563,6 +592,7 @@ class LoopSession:
         self._sink = sink
         self._sidecar = sidecar
         self._crc_acc = crc_acc
+        self._path = path
         self._file_size = size
         self._block_size = block_size
         self._chans = [SlabChannel(self._slabs.slab(i), block_size)
@@ -632,10 +662,13 @@ class LoopSession:
         self.fsm.step("eofr_flush")
         self.stats.files += 1
         sink, self._sink = self._sink, None
+        # durability barrier: the negotiated policy lands the bytes (fsync,
+        # or temp fsync + rename + dir fsync) BEFORE the ACK is queued
+        sink.commit()
         sink.close()
         if self.integrity:
             self._verify_ctx = (self._crc_acc, self._sidecar,
-                                self._file_size, self._block_size)
+                                self._file_size, self._block_size, self._path)
         self._chans = None
         self._eof = None
         self.state = ST_CTRL
@@ -647,7 +680,7 @@ class LoopSession:
         self._maybe_finish_close()
 
     def _finish_verify(self, fin: dict) -> None:
-        crc_acc, sidecar, size, block_size = self._verify_ctx
+        crc_acc, sidecar, size, block_size, path = self._verify_ctx
         self._verify_ctx = None
         if sidecar is not None:
             sidecar.save(size, block_size, crc_acc)
@@ -666,6 +699,10 @@ class LoopSession:
                               f"!= server 0x{mine:08x}",
                      "kind": "integrity"})
             else:
+                if path is not None:
+                    # at-rest truth next to the committed bytes, for the
+                    # scrubber to verify against (session.py idiom)
+                    ManifestSidecar(path).save(size, block_size, crc_acc)
                 self._send_ctrl_frame(ChannelEvent.CONM,
                                       {"ok": True, "file_crc": mine})
         self._crc_acc = None
@@ -816,9 +853,17 @@ class LoopSession:
         if self.closed:
             return
         if self.state == ST_RECV and self._sink is not None:
+            if self._sink.durability >= DURABILITY_ATOMIC:
+                # the uncommitted temp is discarded with the sink: clear
+                # any resume state claiming its blocks
+                if self._sidecar is not None:
+                    try:
+                        self._sidecar.clear()
+                    except OSError:
+                        pass
             # the stream died mid-file: persist what WAS verified so the
             # client can RESUME over a fresh connection
-            if (self._sidecar is not None and self._crc_acc is not None
+            elif (self._sidecar is not None and self._crc_acc is not None
                     and len(self._crc_acc)):
                 try:
                     self._sidecar.save(self._file_size, self._block_size,

@@ -19,6 +19,7 @@ growing ad-hoc retry loops:
 """
 from __future__ import annotations
 
+import os
 import random
 import socket
 import threading
@@ -338,6 +339,66 @@ class FaultyProxy:
 
     def __exit__(self, *exc) -> None:
         self.close()
+
+
+# ---------------------------------------------------------------------------
+# at-rest fault injectors (durability / scrub tests)
+
+
+def inject_bit_rot(path: str, offset: Optional[int] = None) -> int:
+    """Flip one byte of ``path`` in place (XOR 0xFF) — silent at-rest
+    corruption that only a scrub or a CRC-checked read can see. Returns
+    the offset rotted (default: the middle byte). The mtime is restored
+    so the rot is invisible to timestamp-based change detection, exactly
+    like a real decayed sector."""
+    st = os.stat(path)
+    if st.st_size == 0:
+        raise ValueError(f"cannot rot an empty file: {path!r}")
+    off = st.st_size // 2 if offset is None else offset
+    with open(path, "r+b") as f:
+        f.seek(off)
+        byte = f.read(1)
+        f.seek(off)
+        f.write(bytes([byte[0] ^ 0xFF]))
+    os.utime(path, ns=(st.st_atime_ns, st.st_mtime_ns))
+    return off
+
+
+def simulate_power_loss(root: str) -> List[str]:
+    """What a crash-with-power-cut leaves in a store directory: every
+    in-flight atomic temp (``*.xdfs-tmp.*``) vanishes — those bytes were
+    never fsynced under their final name, so a real power loss gives no
+    guarantee they survive. Committed files are untouched (the atomic
+    commit fsynced them before the ACK). Returns the removed paths."""
+    from repro.core.engines.base import TMP_INFIX
+
+    removed: List[str] = []
+    for dirpath, _dirs, files in os.walk(root):
+        for name in files:
+            if TMP_INFIX in name:
+                full = os.path.join(dirpath, name)
+                try:
+                    os.unlink(full)
+                    removed.append(full)
+                except OSError:
+                    pass
+    return removed
+
+
+def write_ballast(root: str, capacity_bytes: int, leave: int) -> str:
+    """Fill a capacity-capped store so exactly ``leave`` bytes remain
+    free (drives the ``disk_full`` preflight deterministically in tests
+    — no real ENOSPC needed). Returns the ballast file's path."""
+    from repro.core.engines.base import store_free_bytes
+
+    path = os.path.join(root, "ballast.bin")
+    free = store_free_bytes(root, capacity_bytes)
+    size = max(0, free - leave)
+    with open(path, "wb") as f:
+        if size:
+            f.seek(size - 1)
+            f.write(b"\0")
+    return path
 
 
 class Trigger:

@@ -140,6 +140,12 @@ class Negotiation:
     # trailer (FLAG_BLOCK_CRC) and the put/get completes with a file-level
     # manifest check. False (or an absent tail) = the unchecked datapath.
     integrity: bool = False
+    # negotiated at-rest durability policy for received files: 0 = none,
+    # 1 = fsync before ACK, 2 = fsync + atomic rename (engines/base.py
+    # DURABILITY_* constants). The receiving server applies the MAX of
+    # this request and its own configured floor; 0 (or an absent tail)
+    # = the unsynced datapath.
+    durability: int = 0
 
     def pack(self) -> bytes:
         rn = self.remote_name.encode()
@@ -155,7 +161,8 @@ class Negotiation:
                 + struct.pack("<II?", self.so_sndbuf, self.so_rcvbuf,
                               self.so_nodelay)
                 + struct.pack("<H", self.batch_frames)
-                + struct.pack("<B", 1 if self.integrity else 0))
+                + struct.pack("<B", 1 if self.integrity else 0)
+                + struct.pack("<B", self.durability))
 
     @classmethod
     def unpack(cls, buf) -> "Negotiation":
@@ -190,8 +197,10 @@ class Negotiation:
             batch = max(1, batch)
         # integrity tail optional: pre-integrity blobs mean no trailers
         integrity = len(buf) >= p + 12 and bool(buf[p + 11])
+        # durability tail optional: pre-durability blobs mean unsynced
+        durability = buf[p + 12] if len(buf) >= p + 13 else 0
         return cls(session, n, bs, win, rn, ln, ver, comp, fsize, creds,
-                   sndbuf, rcvbuf, nodelay, batch, integrity)
+                   sndbuf, rcvbuf, nodelay, batch, integrity, durability)
 
 
 def new_session_id() -> bytes:

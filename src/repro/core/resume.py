@@ -28,6 +28,7 @@ from typing import Callable, Optional, Tuple
 from repro.core.integrity import CrcManifest
 
 SIDECAR_SUFFIX = ".xdfs-resume"
+MANIFEST_SUFFIX = ".xdfs-manifest"
 
 # floor between two autosaves of the same transfer: each autosave dumps
 # the WHOLE growing manifest, so a pure per-N-blocks cadence costs
@@ -57,8 +58,10 @@ class ResumeSidecar:
 
     __slots__ = ("path",)
 
+    SUFFIX = SIDECAR_SUFFIX
+
     def __init__(self, data_path: str):
-        self.path = str(data_path) + SIDECAR_SUFFIX
+        self.path = str(data_path) + self.SUFFIX
 
     def exists(self) -> bool:
         return os.path.exists(self.path)
@@ -109,3 +112,47 @@ class ResumeSidecar:
             os.unlink(self.path)
         except FileNotFoundError:
             pass
+
+
+class ManifestSidecar(ResumeSidecar):
+    """The at-rest truth for a COMMITTED file (``<path>.xdfs-manifest``).
+
+    Same JSON schema and atomic-replace discipline as the resume sidecar,
+    but the lifecycle is inverted: a resume sidecar describes a transfer
+    that DIDN'T finish (and is cleared on success), while a manifest is
+    written only after a successful integrity put commits, and stays next
+    to the data file so the scrubber (``cluster/scrub.py``) can re-verify
+    the bytes long after the writing session is gone.
+    """
+
+    __slots__ = ()
+
+    SUFFIX = MANIFEST_SUFFIX
+
+
+def sweep_sidecars(root: str) -> list:
+    """GC orphaned transfer state under ``root``: sidecars whose data file
+    is gone and abandoned atomic-commit temp files (``*.xdfs-tmp.<pid>``
+    left by a transfer that died before its ``os.replace``). Returns the
+    list of removed paths; IO errors skip the entry (a live transfer may
+    own it)."""
+    from repro.core.engines.base import TMP_INFIX
+
+    removed = []
+    for dirpath, _dirs, files in os.walk(root):
+        names = set(files)
+        for name in files:
+            full = os.path.join(dirpath, name)
+            stale = False
+            for suffix in (SIDECAR_SUFFIX, MANIFEST_SUFFIX):
+                if name.endswith(suffix):
+                    stale = name[: -len(suffix)] not in names
+            if TMP_INFIX in name:
+                stale = True
+            if stale:
+                try:
+                    os.unlink(full)
+                    removed.append(full)
+                except OSError:
+                    pass
+    return removed

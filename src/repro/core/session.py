@@ -35,6 +35,7 @@ supports it.
 """
 from __future__ import annotations
 
+import errno
 import json
 import os
 import socket
@@ -43,6 +44,12 @@ from dataclasses import dataclass, field
 from typing import Dict, Optional, Tuple
 
 from repro.core.engines import Engine, RecvStats, Sink, Source, recv_exact, send_all
+from repro.core.engines.base import (
+    DURABILITY_ATOMIC,
+    DURABILITY_FSYNC,
+    durability_byte,
+    store_free_bytes,
+)
 from repro.core.fsm import FSM_BUILDERS, Machine
 from repro.core.header import (
     HEADER_SIZE,
@@ -52,7 +59,7 @@ from repro.core.header import (
     ProtocolError,
 )
 from repro.core.integrity import CrcManifest, IntegrityError
-from repro.core.resume import ResumeSidecar, throttled_autosave
+from repro.core.resume import ManifestSidecar, ResumeSidecar, throttled_autosave
 
 CTRL_CHANNEL = 0
 DEFAULT_BLOCK = 1 << 20
@@ -62,7 +69,13 @@ MAX_BATCH_FRAMES = 64
 
 
 class SessionError(ProtocolError):
-    """A control-level session failure (bad request, remote exception)."""
+    """A control-level session failure (bad request, remote exception).
+
+    ``kind`` is the typed EXCEPTION discriminator carried on the wire
+    (``integrity`` / ``busy`` / ``draining`` / ``disk_full``); ``None``
+    for untyped failures."""
+
+    kind: Optional[str] = None
 
 
 class IntegrityFailure(SessionError):
@@ -70,11 +83,23 @@ class IntegrityFailure(SessionError):
     or whole-file CRC mismatch). The session itself survives — the caller
     can RESUME the same transfer to re-fetch the bad blocks."""
 
+    kind = "integrity"
+
 
 class BusyError(SessionError):
     """The server refused the session at admission (over ``max_sessions``
     or draining for shutdown). Typed so callers can distinguish back-off
     and retry-elsewhere from a protocol failure."""
+
+    kind = "busy"
+
+
+class DiskFullError(SessionError):
+    """The server refused a put for lack of store space (preflight check
+    or ENOSPC opening the sink). The session survives — callers re-plan
+    the placement around the full node."""
+
+    kind = "disk_full"
 
 
 @dataclass(frozen=True)
@@ -139,6 +164,8 @@ def recv_ctrl(sock: socket.socket) -> Tuple[ChannelHeader, dict]:
             raise IntegrityFailure(msg)
         if payload.get("kind") in ("busy", "draining"):
             raise BusyError(msg)
+        if payload.get("kind") == "disk_full":
+            raise DiskFullError(msg)
         raise SessionError(msg)
     return hdr, payload
 
@@ -218,12 +245,22 @@ class ServerSession:
 
     def __init__(self, socks, neg: Negotiation, engine: Engine,
                  root: Optional[str], pool_slots: int = 32,
-                 splice: bool = False, io_timeout: Optional[float] = None):
+                 splice: bool = False, io_timeout: Optional[float] = None,
+                 durability: int = 0, capacity_bytes: Optional[int] = None):
         self.socks = list(socks)
         self.neg = neg
         self.engine = engine
         self.root = root
         self.integrity = bool(neg.integrity)
+        # effective at-rest policy = the STRONGER of the client's request
+        # and the server's configured floor (unknown wire bytes clamp to
+        # atomic rather than failing the handshake)
+        self.durability = max(durability_byte(durability),
+                              min(int(neg.durability), DURABILITY_ATOMIC))
+        # synthetic store capacity for the disk-pressure path (None =
+        # trust statvfs); puts that cannot fit are refused with a typed
+        # ``disk_full`` EXCEPTION before any byte moves
+        self.capacity_bytes = capacity_bytes
         # splice moves payload bytes kernel-side where no CPU can see them,
         # so it cannot verify trailers — integrity sessions stay in userspace
         self.splice = splice and not self.integrity
@@ -278,8 +315,11 @@ class ServerSession:
                     send_ctrl(ctrl, ChannelEvent.EXCEPTION, self.neg.session,
                               {"error": f"unexpected control event {hdr.event!r}"})
             except SessionError as e:
+                payload = {"error": str(e)}
+                if e.kind is not None:
+                    payload["kind"] = e.kind
                 send_ctrl(ctrl, ChannelEvent.EXCEPTION, self.neg.session,
-                          {"error": str(e)})
+                          payload)
             finally:
                 if self.io_timeout is not None:
                     # transfer deadlines must not bound the idle wait for
@@ -303,18 +343,33 @@ class ServerSession:
     def _handle_put(self, ctrl, meta: dict, resume: bool = False) -> None:
         size = int(meta["size"])
         block_size = int(meta.get("block_size", self.neg.block_size))
+        if size and self.root is not None:
+            free = store_free_bytes(self.root, self.capacity_bytes)
+            if size > free:
+                raise DiskFullError(
+                    f"store has {free} bytes free; refusing {size}-byte put")
+        # a resume-put fills holes of the partially-landed FINAL file in
+        # place — incompatible with whole-file temp+rename, so atomic
+        # degrades to fsync for that one operation
+        durability = (min(self.durability, DURABILITY_FSYNC) if resume
+                      else self.durability)
+        atomic = durability >= DURABILITY_ATOMIC
         try:
             path = resolve_path(self.root, meta.get("remote"), for_write=True)
-            sink = Sink(path, size)
+            sink = Sink(path, size, durability=durability)
         except OSError as e:
+            if e.errno == errno.ENOSPC:
+                raise DiskFullError(f"cannot open {meta.get('remote')!r}: {e}")
             raise SessionError(f"cannot open {meta.get('remote')!r}: {e}")
         sidecar = (ResumeSidecar(path)
                    if self.integrity and path is not None else None)
         crc_acc: Optional[CrcManifest] = None
         if self.integrity:
+            # no mid-transfer autosave under atomic: resume state would
+            # describe blocks living in a temp file that an abort discards
             crc_acc = CrcManifest(
                 autosave=throttled_autosave(sidecar, size, block_size)
-                if sidecar is not None else None)
+                if sidecar is not None and not atomic else None)
         reply = {"ok": True}
         if resume:
             prev = sidecar.load(size, block_size) if sidecar is not None else None
@@ -351,21 +406,27 @@ class ServerSession:
                 crc_acc=crc_acc, io_timeout=self.io_timeout,
             )
         except BaseException:
-            # the stream died mid-file: persist what WAS verified so the
-            # client can RESUME over a fresh connection
-            if sidecar is not None and crc_acc is not None and len(crc_acc):
-                sidecar.save(size, block_size, crc_acc)
+            if sidecar is not None:
+                if atomic:
+                    # the uncommitted temp file is discarded with the sink:
+                    # any recorded blocks no longer exist at the final path
+                    sidecar.clear()
+                elif crc_acc is not None and len(crc_acc):
+                    # the stream died mid-file: persist what WAS verified so
+                    # the client can RESUME over a fresh connection
+                    sidecar.save(size, block_size, crc_acc)
             raise
         finally:
             sink.close()
         self.stats.files += 1
         self.stats.absorb(st)
         if self.integrity:
-            self._verify_put(ctrl, crc_acc, sidecar, size, block_size)
+            self._verify_put(ctrl, crc_acc, sidecar, size, block_size, path)
 
     def _verify_put(self, ctrl, crc_acc: CrcManifest,
                     sidecar: Optional[ResumeSidecar],
-                    size: int, block_size: int) -> None:
+                    size: int, block_size: int,
+                    path: Optional[str] = None) -> None:
         """End-of-put manifest exchange: the client reports its whole-file
         CRC; the server folds its verified-block manifest and answers ok or
         a typed integrity EXCEPTION (keeping the sidecar either way — on
@@ -389,6 +450,10 @@ class ServerSession:
                                 f"!= server 0x{mine:08x}",
                        "kind": "integrity"})
             return
+        if path is not None:
+            # the at-rest truth: a complete, client-confirmed manifest next
+            # to the committed bytes, for the scrubber to verify against
+            ManifestSidecar(path).save(size, block_size, crc_acc)
         send_ctrl(ctrl, ChannelEvent.CONM, self.neg.session,
                   {"ok": True, "file_crc": mine})
 

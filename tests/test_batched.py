@@ -360,6 +360,27 @@ def test_batched_session_zero_materialization(engine, tmp_path):
     assert (tmp_path / f"b_{engine}.bin").read_bytes() == data
 
 
+def test_batched_counters_server_mode_parity(xdfs_server, tmp_path):
+    """Counter parity across server modes: the slab-datapath counters
+    (recv_calls, writev_calls, bytes) must surface in ``XdfsServer.stats``
+    whether sessions run on dedicated threads or on the shared event-loop
+    core, which absorbs per-session counters on close."""
+    data = os.urandom((1 << 17) + 917)
+    src = tmp_path / "in.bin"
+    src.write_bytes(data)
+    with xdfs_server(root=str(tmp_path / "store")) as srv:
+        with XdfsClient.connect(srv.address, n_channels=2,
+                                block_size=1 << 16, batch_frames=4) as cli:
+            cli.put(str(src), "out.bin").result()
+            cli.get("out.bin", str(tmp_path / "back.bin")).result()
+        srv.wait_closed_sessions(1, timeout=60)
+        assert not srv.errors, srv.errors
+        assert srv.stats["recv_calls"] > 0, "slab receive counter missing"
+        assert srv.stats["bytes"] >= len(data)
+        assert srv.stats["sessions_closed"] >= 1
+    assert (tmp_path / "back.bin").read_bytes() == data
+
+
 def test_batch_frames_negotiation_clamped(tmp_path):
     """An absurd requested depth is clamped to MAX_BATCH_FRAMES on both
     ends (it also bounds the per-sendmsg iovec well under IOV_MAX)."""

@@ -305,7 +305,8 @@ def test_session_pool_reuses_and_invalidates(tmp_path):
             a = pool.lease(srv.address)
             a.put(None, "x.bin", data=b"hello").result()
             assert pool.lease(srv.address) is a
-            assert pool.stats == {"connects": 1, "reuses": 1}
+            assert pool.stats == {"connects": 1, "reuses": 1,
+                                  "stale_redials": 0}
             pool.invalidate(srv.address)
             b = pool.lease(srv.address)
             assert b is not a and pool.stats["connects"] == 2

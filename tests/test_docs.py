@@ -169,7 +169,8 @@ def test_evloop_error_kind_table_matches_module():
     )
     for kind, exc in ((evloop.ERR_BUSY, "BusyError"),
                       (evloop.ERR_DRAINING, "BusyError"),
-                      (evloop.ERR_IDLE, "SessionError")):
+                      (evloop.ERR_IDLE, "SessionError"),
+                      (evloop.ERR_DISK_FULL, "DiskFullError")):
         assert re.search(rf"^\|\s*`{kind}`\s*\|.*\|\s*`{exc}`\s*\|", sub,
                          re.M), f"kind {kind!r} must document raising {exc}"
 
@@ -267,6 +268,51 @@ def test_epoch_fencing_documented():
     for code in (ERR_NOT_LEADER, ERR_UNREGISTERED):
         assert f"`{code}`" in text, (
             f"documented error code {code!r} drifted from wire.py"
+        )
+
+
+def test_durability_tail_documented():
+    """The negotiation's durability tail is wire contract: the `<B` row,
+    every policy byte value, and the floor rule must be documented."""
+    from repro.core.engines.base import DURABILITY_NAMES
+
+    text = _arch_text()
+    assert re.search(r"\|\s*durability tail\s*\|\s*`<B`\s*\|\s*durability",
+                     text), "durability negotiation tail row missing"
+    for byte, name in enumerate(DURABILITY_NAMES):
+        assert f"{name} (`{byte}`)" in text, (
+            f"durability policy {name!r} (byte {byte}) missing from the "
+            f"at-rest policy table"
+        )
+    assert "max(server floor, client request)" in text, (
+        "the durability floor rule must be documented verbatim"
+    )
+
+
+def test_data_at_rest_durability_documented():
+    """The Data-at-rest durability section is normative: the atomic
+    commit sequence, the sidecar/temp-file names, and the scrub-and-
+    repair heartbeat fields must match the code's constants."""
+    from repro.cluster.wire import CMD_DROP
+    from repro.core.engines.base import TMP_INFIX
+    from repro.core.resume import MANIFEST_SUFFIX
+
+    text = _cluster_section()
+    assert "### Data-at-rest durability" in text
+    assert f"`<path>{MANIFEST_SUFFIX}`" in text, (
+        "documented manifest sidecar suffix drifted from "
+        "resume.MANIFEST_SUFFIX"
+    )
+    assert f"<path>{TMP_INFIX}" in text, (
+        "documented atomic temp-file infix drifted from base.TMP_INFIX"
+    )
+    # the commit sequence is the crash-consistency contract
+    assert "`os.replace(temp, path)`" in text
+    assert "`fsync(dir)`" in text
+    # scrub-and-repair loop: heartbeat fields and the repair command
+    for token in ("`corrupt`", "`free_bytes`", f"`{CMD_DROP}`"):
+        assert token in text, (
+            f"Data-at-rest durability section missing {token}"
         )
 
 

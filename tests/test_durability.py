@@ -1,0 +1,577 @@
+"""Data-at-rest durability matrix: crash-consistent commits, the
+negotiated fsync policy, scrub-and-repair, and disk-full degradation.
+
+Three layers under test:
+
+* the **commit contract** — under the ``atomic`` policy an acked put is
+  fully on disk under its final name (temp + fsync + rename + dir fsync
+  BEFORE the ACK), an aborted one leaves the previous version untouched,
+  and a successful integrity put persists its CRC manifest as the
+  at-rest truth;
+* the **scrub-and-repair loop** — a rate-limited
+  :class:`~repro.cluster.scrub.Scrubber` re-reads blocks against their
+  manifests, condemned replicas leave the block report, and the
+  MetaNode drops + re-replicates them back to full ``rf``;
+* **degradation under disk pressure** — a full store refuses puts with
+  the typed ``disk_full`` kind (session survives), heartbeats advertise
+  free space, placement avoids nearly-full nodes, and the client
+  re-plans around refusals.
+
+Select with ``-m durability`` (the CI fault-matrix job runs
+``fault or chaos or durability``).
+"""
+import os
+import time
+from concurrent.futures import Future
+
+import pytest
+
+from repro.cluster import ClusterClient, DataNode, MetaNode
+from repro.cluster.scrub import Scrubber
+from repro.core.api import SessionPool, XdfsClient
+from repro.core.engines.base import (
+    DURABILITY_ATOMIC,
+    DURABILITY_FSYNC,
+    DURABILITY_NONE,
+    Sink,
+    TMP_INFIX,
+    durability_byte,
+    store_free_bytes,
+)
+from repro.core.faults import (
+    ChaosHarness,
+    RetryPolicy,
+    inject_bit_rot,
+    simulate_power_loss,
+    write_ballast,
+)
+from repro.core.header import Negotiation, new_session_id
+from repro.core.resume import (
+    MANIFEST_SUFFIX,
+    ManifestSidecar,
+    ResumeSidecar,
+    sweep_sidecars,
+)
+from repro.core.session import BusyError, DiskFullError, SessionError
+
+pytestmark = pytest.mark.durability
+
+T = 0.5  # heartbeat timeout driving the cluster scenarios
+
+
+def _await(pred, timeout=30.0, msg="condition"):
+    deadline = time.monotonic() + timeout
+    while time.monotonic() < deadline:
+        if pred():
+            return
+        time.sleep(0.05)
+    raise AssertionError(f"timed out waiting for {msg}")
+
+
+def _deep_policy():
+    return RetryPolicy(attempts=8, base_delay=0.05, max_delay=0.5,
+                       connect_timeout=2.0, io_timeout=5.0)
+
+
+def _no_temps(root):
+    return not [p for p in os.listdir(str(root)) if TMP_INFIX in p]
+
+
+# ---------------------------------------------------------------------------
+# policy negotiation + Sink commit contract
+# ---------------------------------------------------------------------------
+
+
+def test_durability_byte_normalizes_names_and_bytes():
+    assert durability_byte("none") == DURABILITY_NONE == 0
+    assert durability_byte("fsync") == DURABILITY_FSYNC == 1
+    assert durability_byte("atomic") == DURABILITY_ATOMIC == 2
+    assert durability_byte(1) == 1
+    with pytest.raises(ValueError):
+        durability_byte("paranoid")
+    with pytest.raises(ValueError):
+        durability_byte(7)
+
+
+def test_negotiation_durability_tail_optional():
+    """The durability byte is the final Negotiation tail: present blobs
+    roundtrip it, pre-durability blobs (one byte shorter) decode as 0."""
+    neg = Negotiation(new_session_id(), 2, 1 << 16, 1 << 20, "r", "l",
+                      durability=DURABILITY_ATOMIC)
+    blob = neg.pack()
+    assert Negotiation.unpack(blob).durability == DURABILITY_ATOMIC
+    legacy = Negotiation.unpack(blob[:-1])  # sender predates the tail
+    assert legacy.durability == DURABILITY_NONE
+    assert legacy.integrity == neg.integrity
+
+
+def test_sink_atomic_commit_replaces_previous_version(tmp_path):
+    p = tmp_path / "f.bin"
+    p.write_bytes(b"old-version")
+    # aborted transfer: close without commit discards the temp and the
+    # previous complete version survives untouched
+    sink = Sink(str(p), 5, durability="atomic")
+    sink.write_at(0, b"hello")
+    sink.close()
+    assert p.read_bytes() == b"old-version"
+    assert _no_temps(tmp_path)
+    # committed transfer: temp fsynced and renamed over the final path
+    sink = Sink(str(p), 5, durability="atomic")
+    sink.write_at(0, b"hello")
+    sink.commit()
+    sink.close()
+    assert p.read_bytes() == b"hello"
+    assert _no_temps(tmp_path)
+
+
+def test_put_atomic_leaves_manifest_and_no_temp(xdfs_server, tmp_path):
+    """An atomic integrity put commits before the ACK: once the future
+    resolves the file is final-named, temp-free, and its CRC manifest
+    sidecar verifies against the bytes on disk (both server modes)."""
+    data = os.urandom((1 << 17) + 313)
+    root = tmp_path / "srv"
+    with xdfs_server(engine="mtedp", root=str(root),
+                     durability="atomic") as srv:
+        with XdfsClient.connect(srv.address, n_channels=2,
+                                block_size=1 << 15, integrity=True,
+                                durability="atomic") as cli:
+            cli.put(None, "x.bin", data=data).result()
+            assert (root / "x.bin").read_bytes() == data
+            assert _no_temps(root)
+            loaded = ManifestSidecar(str(root / "x.bin")).load_any()
+            assert loaded is not None and loaded[0] == len(data)
+            assert Scrubber(str(root)).verify_file(str(root / "x.bin"))
+        srv.wait_closed_sessions(1, timeout=60)
+        assert not srv.errors, srv.errors
+
+
+def test_client_floor_negotiation_stronger_wins(tmp_path):
+    """A client requesting atomic against a no-floor server still gets
+    the atomic commit (MAX of request and floor) — observable as a
+    same-path overwrite that never exposes a torn file."""
+    data = os.urandom(1 << 16)
+    root = tmp_path / "srv"
+    from repro.core.api import XdfsServer
+
+    with XdfsServer(engine="mt", root=str(root)) as srv:
+        with XdfsClient.connect(srv.address, n_channels=2,
+                                block_size=1 << 14, integrity=True,
+                                durability="atomic") as cli:
+            cli.put(None, "x.bin", data=data).result()
+            assert (root / "x.bin").read_bytes() == data
+            assert _no_temps(root)
+            assert ManifestSidecar(str(root / "x.bin")).load_any() is not None
+
+
+def test_resume_put_on_atomic_server_keeps_file_intact(tmp_path):
+    """Resume-mode puts degrade atomic -> fsync (hole-filling re-puts
+    are incompatible with temp+rename): a no-op resume re-put of an
+    already-complete file must NOT replace it with a sparse temp."""
+    data = os.urandom((1 << 16) + 77)
+    root = tmp_path / "srv"
+    from repro.core.api import XdfsServer
+
+    with XdfsServer(engine="mtedp", root=str(root),
+                    durability="atomic") as srv:
+        with XdfsClient.connect(srv.address, n_channels=2,
+                                block_size=1 << 14, integrity=True) as cli:
+            cli.put(None, "x.bin", data=data).result()
+            cli.put(None, "x.bin", data=data, resume=True).result()
+        assert (root / "x.bin").read_bytes() == data
+        assert _no_temps(root)
+
+
+# ---------------------------------------------------------------------------
+# sidecar hygiene
+# ---------------------------------------------------------------------------
+
+
+def test_sweep_sidecars_gcs_orphans_and_temps(tmp_path):
+    from repro.core.integrity import CrcManifest
+
+    live = tmp_path / "live.bin"
+    live.write_bytes(b"data")
+    manifest = CrcManifest()
+    manifest.add(0, 4, 123)
+    ManifestSidecar(str(live)).save(4, 4, manifest)
+    (tmp_path / f"gone.bin{MANIFEST_SUFFIX}").write_bytes(b"{}")
+    (tmp_path / "gone2.bin.xdfs-resume").write_bytes(b"{}")
+    (tmp_path / f"part.bin{TMP_INFIX}123").write_bytes(b"junk")
+    removed = sweep_sidecars(str(tmp_path))
+    assert len(removed) == 3
+    assert live.exists()
+    assert ManifestSidecar(str(live)).load_any() is not None
+    assert _no_temps(tmp_path)
+
+
+def test_delete_gcs_both_sidecars(tmp_path):
+    """A datanode drop removes the block AND its transfer state — a
+    dangling manifest would make the scrubber report it missing forever."""
+    meta = MetaNode(replication=1, heartbeat_timeout=T,
+                    tick_interval=0.1).start()
+    node = DataNode(meta.address, str(tmp_path / "n0"), node_id="n0",
+                    heartbeat_interval=0.05).start()
+    cli = ClusterClient(meta.address, block_size=32 << 10,
+                        policy=_deep_policy())
+    try:
+        cli.put("f.bin", data=os.urandom(48 << 10))
+        store = tmp_path / "n0"
+        blks = list(store.glob("blk_*.bin"))
+        assert blks and all(
+            ManifestSidecar(str(b)).load_any() is not None for b in blks)
+        cli.delete("f.bin")
+        _await(lambda: not list(store.glob("blk_*.bin")),
+               msg="blocks dropped")
+        _await(lambda: not list(store.glob(f"*{MANIFEST_SUFFIX}")),
+               msg="manifest sidecars dropped")
+        assert node.scrub_once().missing == []
+    finally:
+        cli.close()
+        node.stop()
+        meta.stop()
+
+
+# ---------------------------------------------------------------------------
+# scrubber
+# ---------------------------------------------------------------------------
+
+
+def _integrity_put(root, name, data):
+    from repro.core.api import XdfsServer
+
+    with XdfsServer(engine="mtedp", root=str(root)) as srv:
+        with XdfsClient.connect(srv.address, n_channels=2,
+                                block_size=1 << 15, integrity=True) as cli:
+            cli.put(None, name, data=data).result()
+
+
+def test_scrubber_verifies_detects_rot_and_missing(tmp_path):
+    data = os.urandom((1 << 17) + 11)
+    _integrity_put(tmp_path, "good.bin", data)
+    _integrity_put(tmp_path, "rot.bin", data)
+    _integrity_put(tmp_path, "gone.bin", data)
+    os.unlink(tmp_path / "gone.bin")
+    inject_bit_rot(str(tmp_path / "rot.bin"))
+    (tmp_path / "naked.bin").write_bytes(b"no manifest")
+    report = Scrubber(str(tmp_path)).scrub_once()
+    assert report.verified == 1
+    assert report.corrupt == [str(tmp_path / "rot.bin")]
+    assert report.missing == [str(tmp_path / "gone.bin")]
+    assert report.unverified == 1
+    # good fully re-read, rot read up to (and including) the bad block —
+    # verification stops at the first mismatch
+    assert report.bytes > len(data)
+
+
+def test_bit_rot_is_mtime_invisible(tmp_path):
+    p = tmp_path / "f.bin"
+    p.write_bytes(os.urandom(4096))
+    before = os.stat(p)
+    off = inject_bit_rot(str(p))
+    after = os.stat(p)
+    assert 0 <= off < 4096
+    assert after.st_mtime_ns == before.st_mtime_ns
+
+
+def test_scrubber_rate_limit_paces_reads(tmp_path):
+    """Baseline-free invariant: a pass over N bytes at rate R sleeps at
+    least N/R seconds (token bucket, injectable clock — no wall time)."""
+    data = os.urandom(1 << 18)
+    _integrity_put(tmp_path, "f.bin", data)
+    t = {"now": 0.0}
+    slept = []
+
+    def clock():
+        return t["now"]
+
+    def sleep(d):
+        slept.append(d)
+        t["now"] += d
+
+    rate = 64 << 10  # 64 KiB/s against a 256 KiB file
+    scr = Scrubber(str(tmp_path), rate_limit=rate, clock=clock, sleep=sleep)
+    report = scr.scrub_once()
+    assert report.verified == 1 and report.bytes >= len(data)
+    assert sum(slept) >= report.bytes / rate * 0.99
+    # unthrottled pass on the same store never sleeps
+    slept.clear()
+    Scrubber(str(tmp_path), clock=clock, sleep=sleep).scrub_once()
+    assert slept == []
+
+
+# ---------------------------------------------------------------------------
+# disk-full degradation
+# ---------------------------------------------------------------------------
+
+
+def test_put_disk_full_typed_and_session_survives(xdfs_server, tmp_path):
+    """An oversized put is refused with the typed ``disk_full`` kind
+    BEFORE any bytes stream, and the session keeps serving (both server
+    modes)."""
+    root = tmp_path / "srv"
+    with xdfs_server(engine="mtedp", root=str(root),
+                     capacity_bytes=32 << 10) as srv:
+        with XdfsClient.connect(srv.address, n_channels=2,
+                                block_size=8 << 10) as cli:
+            with pytest.raises(DiskFullError):
+                cli.put(None, "big.bin", data=os.urandom(64 << 10)).result()
+            cli.put(None, "small.bin", data=b"fits").result()
+            assert cli.get_bytes("small.bin").result().data == b"fits"
+    assert not (root / "big.bin").exists()
+
+
+def test_store_free_bytes_capacity_mode(tmp_path):
+    assert store_free_bytes(str(tmp_path), 1 << 20) == 1 << 20
+    (tmp_path / "a.bin").write_bytes(b"x" * 1000)
+    assert store_free_bytes(str(tmp_path), 1 << 20) == (1 << 20) - 1000
+    # statvfs mode reports real headroom
+    assert store_free_bytes(str(tmp_path)) > 0
+
+
+def test_cluster_put_replans_around_full_node(tmp_path):
+    """A node that fills up AFTER advertising headroom refuses with
+    ``disk_full``; the client counts the refusal, excludes the node,
+    re-plans, and the put lands elsewhere. Once the next heartbeat
+    advertises the low free space, placement avoids the node upfront."""
+    cap = 1 << 20
+    meta = MetaNode(replication=1, heartbeat_timeout=10.0,
+                    tick_interval=0.2).start()
+    n_full = DataNode(meta.address, str(tmp_path / "full"), node_id="full",
+                      auto_heartbeat=False, capacity_bytes=cap).start()
+    n_ok = DataNode(meta.address, str(tmp_path / "ok"), node_id="ok",
+                    auto_heartbeat=False).start()
+    cli = ClusterClient(meta.address, block_size=64 << 10,
+                        policy=RetryPolicy(attempts=4, base_delay=0.01,
+                                           connect_timeout=2.0,
+                                           io_timeout=5.0))
+    try:
+        n_full.heartbeat_once()  # advertises ~1 MiB free
+        n_ok.heartbeat_once()
+        write_ballast(str(tmp_path / "full"), cap, leave=1024)
+        assert n_full.free_bytes() <= 1024
+        data = os.urandom(256 << 10)
+        cli.put("f.bin", data=data)
+        assert cli.get("f.bin") == data
+        assert cli.stats["disk_full_refusals"] > 0
+        assert cli.stats["replans"] >= 1
+        assert not list((tmp_path / "full").glob("blk_*.bin"))
+        # next beat tells the metanode the truth; placement now avoids
+        # the full node without burning a client refusal round
+        n_full.heartbeat_once()
+        n_ok.heartbeat_once()
+        before = cli.stats["disk_full_refusals"]
+        cli.put("g.bin", data=os.urandom(128 << 10))
+        assert cli.stats["disk_full_refusals"] == before
+        assert meta.stats["full_nodes_avoided"] > 0
+    finally:
+        cli.close()
+        n_full.stop()
+        n_ok.stop()
+        meta.stop()
+
+
+# ---------------------------------------------------------------------------
+# client retry semantics (busy + restarted-node redial)
+# ---------------------------------------------------------------------------
+
+
+def test_cluster_put_retries_busy_node(tmp_path, monkeypatch):
+    """A ``busy`` refusal is transient admission pushback: the client
+    backs off and retries the SAME node (no exclusion, no pool
+    invalidation) and counts the round in ``busy_retries``."""
+    meta = MetaNode(replication=1, heartbeat_timeout=T,
+                    tick_interval=0.1).start()
+    node = DataNode(meta.address, str(tmp_path / "n0"), node_id="n0",
+                    heartbeat_interval=0.05).start()
+    cli = ClusterClient(meta.address, block_size=64 << 10,
+                        policy=RetryPolicy(attempts=4, base_delay=0.01,
+                                           connect_timeout=2.0,
+                                           io_timeout=5.0))
+    state = {"refused": 0}
+    orig = XdfsClient.put
+
+    def busy_once(self, *args, **kwargs):
+        if state["refused"] == 0:
+            state["refused"] += 1
+            fut = Future()
+            fut.set_exception(BusyError("session admission pushback"))
+            return fut
+        return orig(self, *args, **kwargs)
+
+    monkeypatch.setattr(XdfsClient, "put", busy_once)
+    data = os.urandom(96 << 10)
+    try:
+        cli.put("f.bin", data=data)
+        assert cli.stats["busy_retries"] == 1
+        assert cli.stats["replans"] >= 1
+        assert cli.pool.stats["connects"] == 1  # never invalidated
+        monkeypatch.setattr(XdfsClient, "put", orig)
+        assert cli.get("f.bin") == data
+    finally:
+        cli.close()
+        node.stop()
+        meta.stop()
+
+
+def test_session_pool_redials_restarted_server(tmp_path):
+    """A datanode that restarted at the same address leaves the pool
+    holding a dead session: ``execute`` detects the stale lease,
+    invalidates, and redials exactly once."""
+    from repro.core.api import XdfsServer
+
+    data = os.urandom(32 << 10)
+    srv = XdfsServer(engine="mtedp", root=str(tmp_path / "a")).start()
+    addr = srv.address
+    pool = SessionPool(n_channels=2)
+    try:
+        pool.execute(addr, lambda c: c.put(None, "x.bin", data=data).result())
+        srv.abort()
+        srv = XdfsServer(engine="mtedp", root=str(tmp_path / "a"),
+                         port=addr[1]).start()
+        out = pool.execute(
+            addr, lambda c: c.get_bytes("x.bin").result().data)
+        assert out == data
+        assert pool.stats["stale_redials"] == 1
+        assert pool.stats["connects"] == 2
+    finally:
+        pool.close()
+        srv.stop()
+
+
+# ---------------------------------------------------------------------------
+# exception typing
+# ---------------------------------------------------------------------------
+
+
+def test_typed_exception_kinds():
+    assert DiskFullError.kind == "disk_full"
+    assert issubclass(DiskFullError, SessionError)
+    assert issubclass(BusyError, SessionError)
+
+
+# ---------------------------------------------------------------------------
+# chaos acceptance scenarios
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.chaos
+def test_datanode_abort_mid_put_atomic_no_acked_block_lost(tmp_path):
+    """Kill a datanode (abort(): sockets severed, in-flight sessions
+    die) in the middle of a striped put stream under the atomic policy,
+    then restart it on the same store: every block acked before the
+    crash is present and CRC-valid, no temp files survive, and every
+    acked put is readable."""
+    meta = MetaNode(replication=2, heartbeat_timeout=T,
+                    tick_interval=0.1).start()
+    nodes = [
+        DataNode(meta.address, str(tmp_path / f"n{i}"), node_id=f"n{i}",
+                 heartbeat_interval=0.05, durability=DURABILITY_ATOMIC,
+                 policy=RetryPolicy(attempts=3, base_delay=0.05,
+                                    connect_timeout=2.0, io_timeout=5.0))
+        .start()
+        for i in range(3)
+    ]
+    cli = ClusterClient(meta.address, block_size=32 << 10,
+                        policy=_deep_policy(),
+                        durability=DURABILITY_ATOMIC)
+    acked = {}
+    try:
+        with ChaosHarness() as chaos:
+            chaos.when(lambda: cli.stats["blocks_written"] >= 6,
+                       nodes[0].kill, name="datanode crash mid-put")
+            for i in range(6):
+                data = os.urandom(96 << 10)
+                cli.put(f"f{i}.bin", data=data)
+                acked[f"f{i}.bin"] = data
+            chaos.wait()
+        # restart the crashed node on ITS OWN store directory
+        nodes[0] = DataNode(meta.address, str(tmp_path / "n0"),
+                            node_id="n0", heartbeat_interval=0.05,
+                            durability=DURABILITY_ATOMIC).start()
+        assert _no_temps(tmp_path / "n0")  # startup sweep GC'd partials
+        # every surviving block file in the restarted store is CRC-valid
+        # against its committed manifest: the crash lost only unacked work
+        report = nodes[0].scrub_once()
+        assert report.corrupt == [] and report.missing == []
+        for name, data in acked.items():  # no acked put lost
+            assert cli.get(name) == data
+    finally:
+        cli.close()
+        for n in nodes:
+            n.stop()
+        meta.stop()
+
+
+@pytest.mark.chaos
+def test_bit_rot_scrubbed_dropped_and_rereplicated(tmp_path):
+    """Rot one replica at rest: the node's scrub condemns it, the
+    heartbeat reports it, the MetaNode drops the bad copy and heals the
+    block back to full rf from a good holder — and a client read is
+    byte-identical with ZERO failovers (it never touches a bad replica)."""
+    meta = MetaNode(replication=2, heartbeat_timeout=T,
+                    tick_interval=0.1).start()
+    nodes = [
+        DataNode(meta.address, str(tmp_path / f"n{i}"), node_id=f"n{i}",
+                 heartbeat_interval=0.05)
+        .start()
+        for i in range(3)
+    ]
+    cli = ClusterClient(meta.address, block_size=64 << 10,
+                        policy=_deep_policy())
+    data = os.urandom(128 << 10)
+    try:
+        cli.put("f.bin", data=data)
+        victim = next(n for n in nodes
+                      if list((tmp_path / n.node_id).glob("blk_*.bin")))
+        blk = sorted((tmp_path / victim.node_id).glob("blk_*.bin"))[0]
+        inject_bit_rot(str(blk))
+        assert victim.scrub_once().corrupt == [str(blk)]
+        assert victim.stats["scrub_corrupt"] == 1
+        _await(lambda: meta.stats["corrupt_reported"] >= 1,
+               msg="corrupt replica reported")
+
+        def healed():
+            intact = 0
+            for n in nodes:
+                root = tmp_path / n.node_id
+                for p in root.glob("blk_*.bin"):
+                    if Scrubber(str(root)).verify_file(str(p)):
+                        intact += 1
+            # 2 blocks x rf=2, every surviving copy intact
+            bad = [p for n in nodes
+                   for p in (tmp_path / n.node_id).glob("blk_*.bin")
+                   if not Scrubber(
+                       str(tmp_path / n.node_id)).verify_file(str(p))]
+            return intact >= 4 and not bad
+
+        _await(healed, msg="re-replication back to full rf")
+        with ClusterClient(meta.address, block_size=64 << 10,
+                           policy=_deep_policy()) as reader:
+            assert reader.get("f.bin") == data
+            assert reader.stats["replica_failovers"] == 0
+            assert reader.stats["busy_retries"] == 0
+    finally:
+        cli.close()
+        for n in nodes:
+            n.stop()
+        meta.stop()
+
+
+@pytest.mark.chaos
+def test_power_loss_after_abandoned_atomic_put(tmp_path):
+    """A power cut mid-transfer leaves only the atomic temp; the
+    simulated loss removes it (those bytes were never promised), the
+    committed previous version survives, and the startup sweep leaves a
+    clean store."""
+    p = tmp_path / "f.bin"
+    p.write_bytes(b"committed-version")
+    sink = Sink(str(p), 64, durability="atomic")
+    sink.write_at(0, b"half-written junk")
+    os.close(sink._fd)  # crash: no commit, no close bookkeeping
+    sink._fd = -1
+    sink.committed = True  # neuter close(); the "crash" already happened
+    assert not _no_temps(tmp_path)
+    removed = simulate_power_loss(str(tmp_path))
+    assert len(removed) == 1 and TMP_INFIX in removed[0]
+    assert p.read_bytes() == b"committed-version"
+    assert sweep_sidecars(str(tmp_path)) == []

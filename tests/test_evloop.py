@@ -388,4 +388,5 @@ def test_evloop_error_kinds_are_stable():
     assert evloop.ERR_BUSY == "busy"
     assert evloop.ERR_DRAINING == "draining"
     assert evloop.ERR_IDLE == "idle"
-    assert set(evloop.ERR_KINDS) == {"busy", "draining", "idle"}
+    assert evloop.ERR_DISK_FULL == "disk_full"
+    assert set(evloop.ERR_KINDS) == {"busy", "draining", "idle", "disk_full"}

@@ -230,24 +230,28 @@ def test_negotiation_carries_tuning_roundtrip():
 
     assert SocketTuning.from_negotiation(back) == SocketTuning(
         nodelay=False, sndbuf=123456, rcvbuf=654321)
+    # pre-durability blobs (no trailing policy byte) default to none
+    pre_dur = Negotiation.unpack(neg.pack()[:-1])
+    assert pre_dur.durability == 0
+    assert pre_dur.batch_frames == 16 and pre_dur.so_nodelay is False
     # pre-integrity blobs (no trailing flag byte) mean no CRC trailers
-    pre_crc = Negotiation.unpack(neg.pack()[:-1])
+    pre_crc = Negotiation.unpack(neg.pack()[:-2])
     assert pre_crc.integrity is False
     assert pre_crc.batch_frames == 16 and pre_crc.so_nodelay is False
     # pre-batching blobs (no <H batch tail) default to the per-frame path
-    pre_batch = Negotiation.unpack(neg.pack()[:-3])
+    pre_batch = Negotiation.unpack(neg.pack()[:-4])
     assert pre_batch.batch_frames == 1
     assert pre_batch.so_sndbuf == 123456 and pre_batch.so_nodelay is False
     # blobs without the nodelay byte parse with nodelay defaulting on
-    mid = Negotiation.unpack(neg.pack()[:-4])
+    mid = Negotiation.unpack(neg.pack()[:-5])
     assert mid.so_sndbuf == 123456 and mid.so_nodelay is True
     # v1 blobs without any tuning tail still parse (defaults 0 / on / 1)
-    legacy = Negotiation.unpack(neg.pack()[:-12])
+    legacy = Negotiation.unpack(neg.pack()[:-13])
     assert legacy.so_sndbuf == 0 and legacy.so_rcvbuf == 0
     assert legacy.so_nodelay is True and legacy.batch_frames == 1
     assert legacy.n_channels == 4
     # a wire value of 0 means "no batching", not a zero-depth batch
-    zeroed = Negotiation.unpack(neg.pack()[:-3] + b"\x00\x00")
+    zeroed = Negotiation.unpack(neg.pack()[:-4] + b"\x00\x00")
     assert zeroed.batch_frames == 1
 
 
